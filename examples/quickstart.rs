@@ -1,0 +1,78 @@
+//! Quickstart: schedule a network on an MCM with Scope and compare against
+//! the three baselines — the 60-second tour of the public API.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+
+use scope::arch::McmConfig;
+use scope::baselines::run_all;
+use scope::config::SimOptions;
+use scope::model::zoo;
+use scope::util::table::{f3, Table};
+
+fn main() -> Result<()> {
+    // 1. Pick a workload from the zoo and a package scale (Table III
+    //    platform at 64 chiplets).
+    let net = zoo::resnet18();
+    let mcm = McmConfig::paper_default(64);
+    let opts = SimOptions { samples: 64, ..Default::default() };
+    println!(
+        "workload: {} ({} layers, {:.1} GMACs, {:.1} MB weights)",
+        net.name,
+        net.len(),
+        net.total_macs() as f64 / 1e9,
+        net.total_weight_bytes() as f64 / 1e6
+    );
+    println!(
+        "platform: {} chiplets ({}x{} mesh), {:.0} GMAC/s/chiplet peak\n",
+        mcm.chiplets,
+        mcm.mesh.width,
+        mcm.mesh.height,
+        mcm.chiplet.peak_macs_per_sec() / 1e9
+    );
+
+    // 2. Run all four schedulers (sequential, full pipeline, segmented,
+    //    Scope) through the same cost model.
+    let results = run_all(&net, &mcm, &opts);
+    let best = results.iter().map(|r| r.throughput()).fold(0.0, f64::max);
+    let mut t = Table::new(
+        "methods",
+        &["method", "samples/s", "normalized", "J/batch"],
+    );
+    for r in &results {
+        t.row(vec![
+            r.method.clone(),
+            if r.eval.is_valid() { f3(r.throughput()) } else { "invalid".into() },
+            if r.eval.is_valid() { f3(r.throughput() / best) } else { "-".into() },
+            if r.eval.is_valid() {
+                f3(r.eval.energy.total_pj() * 1e-12)
+            } else {
+                "-".into()
+            },
+        ]);
+    }
+    println!("{t}\n");
+
+    // 3. Inspect the Scope schedule itself: merged clusters, regions,
+    //    WSP→ISP partitions.
+    let scope_result = results.last().unwrap();
+    if let Some(sched) = &scope_result.schedule {
+        for (si, seg) in sched.segments.iter().enumerate() {
+            print!("segment {si}: ");
+            for j in 0..seg.n_clusters() {
+                let (lo, hi) = seg.cluster_range(j);
+                print!("[{}L×{}c] ", hi - lo, seg.regions[j]);
+            }
+            println!();
+        }
+        println!(
+            "\n{} clusters over {} layers — merged pipeline in action",
+            sched.total_clusters(),
+            net.len()
+        );
+    }
+    Ok(())
+}

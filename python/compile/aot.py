@@ -1,0 +1,246 @@
+"""AOT emitter: lower the L2 model (with its L1 Pallas kernels) to HLO text.
+
+HLO *text* -- NOT ``lowered.compile().serialize()`` and NOT serialized
+HloModuleProto -- is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which the rust side's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Run once at build time (``make artifacts``); python is never on the rust
+request path.  Emits into ``artifacts/``:
+
+  scopenet_cluster{i}.hlo.txt      one module per pipeline cluster
+  scopenet_cluster{i}.params.bin   that cluster's weights (f32 LE, in the
+                                   manifest's parameter order)
+  scopenet_full.hlo.txt/.params.bin  golden whole-network module
+  model.hlo.txt                    alias of the full module (Makefile stamp)
+  scopenet_*_isp{j}of{W}.hlo.txt/.params.bin
+                                   ISP channel-shard modules (functional
+                                   partitioning demo)
+  matmul_pe_MxKxN.hlo.txt          standalone L1 kernel (runtime microbench)
+  golden_inputs.bin/.golden_outputs.bin
+                                   little-endian f32 validation tensors,
+                                   outputs computed with the pure-jnp
+                                   reference path (cross-checks the kernel
+                                   at the artifact level)
+  manifest.json                    shapes + file index for the rust loader
+
+Weights enter each module as runtime parameters, not baked constants: the
+rust coordinator owns the weight state (paper §III-B), and xla_extension
+0.5.1 miscompiles Pallas interpret loops over large constants (verified by
+bisection — constants-variant modules return all-zero activations).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import matmul_pe as kmm
+
+GOLDEN_BATCH = 4
+GOLDEN_SEED = 42
+MICRO_MKN = (64, 72, 128)  # standalone kernel artifact shape (M, K, N)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fn(fn, in_shapes: list[tuple[int, ...]]) -> str:
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in in_shapes]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def _write(outdir: pathlib.Path, name: str, text: str) -> str:
+    path = outdir / name
+    path.write_text(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+    return name
+
+
+def _write_params(
+    outdir: pathlib.Path, stem: str, arrays: list[jax.Array]
+) -> tuple[str, list[dict]]:
+    """Write a module's parameter arrays (f32 LE, concatenated in calling
+    order) and return (filename, per-param metadata)."""
+    fname = f"{stem}.params.bin"
+    with open(outdir / fname, "wb") as f:
+        for a in arrays:
+            np.asarray(a, dtype="<f4").tofile(f)
+    meta = [{"shape": list(a.shape)} for a in arrays]
+    print(f"  wrote {outdir / fname} ({len(arrays)} tensors)")
+    return fname, meta
+
+
+def build_artifacts(outdir: pathlib.Path, seed: int = 0) -> dict:
+    outdir.mkdir(parents=True, exist_ok=True)
+    params = model.init_params(seed)
+    io_shapes = model.cluster_io_shapes()
+    manifest: dict = {
+        "seed": seed,
+        "input_shape": list(model.INPUT_SHAPE),
+        "num_classes": model.NUM_CLASSES,
+        "golden_batch": GOLDEN_BATCH,
+        "clusters": [],
+        "isp": {"cluster": model.ISP_CLUSTER, "ways": model.ISP_WAYS, "layers": []},
+        "micro": {},
+    }
+
+    # --- per-cluster modules -------------------------------------------------
+    for idx, members in enumerate(model.CLUSTERS):
+        in_shape, out_shape = io_shapes[idx]
+        fn, names = model.cluster_fn_weights_in(idx)
+        weights = [params[n] for n in names]
+        stem = f"scopenet_cluster{idx}"
+        fname = _write(
+            outdir,
+            f"{stem}.hlo.txt",
+            lower_fn(fn, [in_shape] + [tuple(w.shape) for w in weights]),
+        )
+        params_file, params_meta = _write_params(outdir, stem, weights)
+        manifest["clusters"].append(
+            {
+                "index": idx,
+                "members": list(members),
+                "file": fname,
+                "params_file": params_file,
+                "params": params_meta,
+                "input_shape": list(in_shape),
+                "output_shape": list(out_shape),
+            }
+        )
+
+    # --- golden full module --------------------------------------------------
+    full_fn_p, full_names = model.full_fn_weights_in()
+    full_weights = [params[n] for n in full_names]
+    full_text = lower_fn(
+        full_fn_p, [model.INPUT_SHAPE] + [tuple(w.shape) for w in full_weights]
+    )
+    full_params_file, full_params_meta = _write_params(
+        outdir, "scopenet_full", full_weights
+    )
+    manifest["full"] = {
+        "file": _write(outdir, "scopenet_full.hlo.txt", full_text),
+        "params_file": full_params_file,
+        "params": full_params_meta,
+        "input_shape": list(model.INPUT_SHAPE),
+        "output_shape": [model.NUM_CLASSES],
+    }
+    _write(outdir, "model.hlo.txt", full_text)  # Makefile stamp / alias
+
+    # --- ISP shard modules (functional partitioning demo) -------------------
+    isp_members = [
+        m for m in model.CLUSTERS[model.ISP_CLUSTER] if m != "head"
+    ]
+    shard_in = io_shapes[model.ISP_CLUSTER][0]
+    for layer in isp_members:
+        shards = []
+        shard_params = []
+        layer_out = None
+        fn = model.isp_shard_fn_weights_in(layer)
+        for j in range(model.ISP_WAYS):
+            w, b = model.isp_shard_params(params, layer, j)
+            out = jax.eval_shape(
+                fn,
+                jax.ShapeDtypeStruct(shard_in, jnp.float32),
+                jax.ShapeDtypeStruct(w.shape, jnp.float32),
+                jax.ShapeDtypeStruct(b.shape, jnp.float32),
+            )[0]
+            layer_out = tuple(out.shape)
+            stem = f"scopenet_{layer}_isp{j}of{model.ISP_WAYS}"
+            shards.append(
+                _write(
+                    outdir,
+                    f"{stem}.hlo.txt",
+                    lower_fn(fn, [shard_in, tuple(w.shape), tuple(b.shape)]),
+                )
+            )
+            pfile, pmeta = _write_params(outdir, stem, [w, b])
+            shard_params.append({"params_file": pfile, "params": pmeta})
+        full_out = (layer_out[0], layer_out[1], layer_out[2] * model.ISP_WAYS)
+        manifest["isp"]["layers"].append(
+            {
+                "layer": layer,
+                "files": shards,
+                "shard_params": shard_params,
+                "input_shape": list(shard_in),
+                "shard_output_shape": list(layer_out),
+                "full_output_shape": list(full_out),
+            }
+        )
+        # next layer in the cluster consumes the gathered full activation
+        shard_in = full_out
+
+    # --- standalone L1 kernel (runtime microbench) ---------------------------
+    m, k, n = MICRO_MKN
+    manifest["micro"] = {
+        "file": _write(
+            outdir,
+            f"matmul_pe_{m}x{k}x{n}.hlo.txt",
+            lower_fn(lambda x, w: (kmm.matmul_pe(x, w),), [(m, k), (k, n)]),
+        ),
+        "m": m,
+        "k": k,
+        "n": n,
+    }
+
+    # --- golden tensors (reference path, cross-checks pallas artifacts) -----
+    key = jax.random.PRNGKey(GOLDEN_SEED)
+    xs = jax.random.normal(key, (GOLDEN_BATCH, *model.INPUT_SHAPE), jnp.float32)
+    ref = model.full_fn(params, use_pallas=False)
+    ys = jnp.stack([ref(xs[i])[0] for i in range(GOLDEN_BATCH)])
+    np.asarray(xs, dtype="<f4").tofile(outdir / "golden_inputs.bin")
+    np.asarray(ys, dtype="<f4").tofile(outdir / "golden_outputs.bin")
+    print(f"  wrote golden tensors: {xs.shape} -> {ys.shape}")
+
+    (outdir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"  wrote {outdir / 'manifest.json'}")
+    return manifest
+
+
+def self_check(seed: int = 0) -> None:
+    """Composition check: clusters chained == full network (pallas path)."""
+    params = model.init_params(seed)
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(key, model.INPUT_SHAPE, jnp.float32)
+    chained = x
+    for idx in range(len(model.CLUSTERS)):
+        (chained,) = jax.jit(model.cluster_fn(params, idx))(chained)
+    (full,) = jax.jit(model.full_fn(params))(x)
+    np.testing.assert_allclose(chained, full, rtol=1e-5, atol=1e-5)
+    print("  self-check OK: cluster chain == full network")
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts", help="artifact directory")
+    ap.add_argument("--out", default=None,
+                    help="(compat) path of the full-model stamp file")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--check", action="store_true", help="run the self-check only")
+    args = ap.parse_args(argv)
+    if args.check:
+        self_check(args.seed)
+        return
+    outdir = pathlib.Path(args.out).parent if args.out else pathlib.Path(args.outdir)
+    print(f"AOT: emitting artifacts into {outdir.resolve()}")
+    build_artifacts(outdir, args.seed)
+    print("AOT: done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Layer-1 Pallas kernels for the Scope chiplet compute hot-spot.
+
+``matmul_pe`` — the weight-stationary PE-array matmul (the hot-spot).
+``conv`` — im2col convolution layered on matmul_pe.
+``ref`` — pure-jnp oracles (never pallas).
+"""
+
+from . import conv, matmul_pe, ref  # noqa: F401

@@ -1,0 +1,82 @@
+"""Convolution on the PE-array kernel via im2col.
+
+The paper's chiplets execute conv layers as weight-stationary matmuls over
+an im2col-style unrolling (output pixels x (Cin*Kh*Kw) reduction).  We do
+the same: ``im2col`` lays out patches so the reduction ordering matches a
+``(Kh, Kw, Cin, Cout) -> (Kh*Kw*Cin, Cout)`` weight reshape, then the L1
+Pallas kernel does the matmul.  ``conv2d_pe`` is what the L2 model calls.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import matmul_pe as mm
+
+
+def out_size(size: int, k: int, stride: int, pad: int) -> int:
+    """Output spatial extent of a conv/pool window sweep."""
+    return (size + 2 * pad - k) // stride + 1
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int = 1, pad: int = 0) -> jax.Array:
+    """Unroll (H, W, C) into (Ho*Wo, Kh*Kw*C) patch rows.
+
+    Patch element ordering is (ki, kj) major, channel minor -- identical to
+    flattening a (Kh, Kw, C, Cout) weight tensor over its first three axes,
+    so ``im2col(x) @ w.reshape(-1, Cout)`` equals the convolution.
+    """
+    if x.ndim != 3:
+        raise ValueError(f"im2col expects (H, W, C), got {x.shape}")
+    h, w, c = x.shape
+    ho, wo = out_size(h, kh, stride, pad), out_size(w, kw, stride, pad)
+    xp = jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+    patches = []
+    for ki in range(kh):
+        for kj in range(kw):
+            patches.append(
+                jax.lax.slice(
+                    xp,
+                    (ki, kj, 0),
+                    (ki + (ho - 1) * stride + 1, kj + (wo - 1) * stride + 1, c),
+                    (stride, stride, 1),
+                )
+            )
+    # (Ho, Wo, Kh*Kw, C) -> (Ho*Wo, Kh*Kw*C)
+    stacked = jnp.stack(patches, axis=2)
+    return stacked.reshape(ho * wo, kh * kw * c)
+
+
+def conv2d_pe(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array | None = None,
+    *,
+    stride: int = 1,
+    pad: int = 0,
+    relu: bool = False,
+) -> jax.Array:
+    """2-D convolution through the Pallas PE-array kernel.
+
+    Args:
+      x: (H, W, Cin) activation (single sample -- the pipeline streams
+         samples one at a time, per the paper's per-sample cluster pipeline).
+      w: (Kh, Kw, Cin, Cout) weights.
+      b: optional (Cout,) bias.
+      stride/pad: symmetric conv geometry.
+      relu: fuse the chiplet's ReLU epilogue.
+
+    Returns:
+      (Ho, Wo, Cout) float32.
+    """
+    if w.ndim != 4:
+        raise ValueError(f"conv2d_pe expects (Kh,Kw,Cin,Cout) weights, got {w.shape}")
+    kh, kw, cin, cout = w.shape
+    if x.shape[-1] != cin:
+        raise ValueError(f"channel mismatch: x {x.shape} vs w {w.shape}")
+    h, wdim, _ = x.shape
+    ho, wo = out_size(h, kh, stride, pad), out_size(wdim, kw, stride, pad)
+    cols = im2col(x, kh, kw, stride, pad)
+    y = mm.matmul_pe_bias_act(cols, w.reshape(kh * kw * cin, cout), b, relu=relu)
+    return y.reshape(ho, wo, cout)

@@ -1,0 +1,156 @@
+"""Layer-1 Pallas kernel: the chiplet PE-array matmul.
+
+This kernel is the compute hot-spot of the whole stack.  Its tiling mirrors
+one Scope chiplet (Table III of the paper) under the weight-stationary
+dataflow:
+
+  * the N dimension (output channels) is tiled by ``bn`` = 128, matching the
+    16 PEs x 8 lanes = 128 lane-level output channels of a chiplet (and,
+    conveniently, the MXU width on a real TPU);
+  * the K dimension (the Cin*Kh*Kw reduction) is tiled by ``bk`` = 8,
+    matching the 8 MACs per lane that reduce along input channels;
+  * the M dimension (output pixels) streams through the array in strips of
+    ``bm`` rows, playing the role of the temporal pixel loop.
+
+BlockSpec expresses the HBM<->VMEM schedule: one (bm, bk) activation strip
+and one (bk, bn) weight tile are resident per grid step -- the analogue of
+the paper's global-buffer / per-PE weight-buffer residency.  ``interpret=True``
+is mandatory here: the artifacts must run on the CPU PJRT client (real-TPU
+lowering emits a Mosaic custom-call the CPU plugin cannot execute).
+
+Correctness oracle: ``kernels.ref.matmul_ref`` (pure jnp), enforced by
+``python/tests/test_kernel.py`` (hypothesis sweeps shapes and seeds).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Chiplet-derived default tile sizes (see module docstring / DESIGN.md
+# "Hardware-Adaptation").
+PE_LANES = 128  # 4x4 PEs * 8 lanes: spatial output-channel slots
+MACS_PER_LANE = 8  # reduction width per lane
+DEFAULT_BM = 8  # pixel strip streamed per grid step
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _mm_kernel(x_ref, w_ref, o_ref):
+    """One grid step: multiply-accumulate a (bm,bk) x (bk,bn) tile pair.
+
+    Grid axis 2 walks the reduction; the output block is revisited for every
+    k step (index map ignores k), so we accumulate in place, initialising on
+    the first step -- exactly how a weight-stationary PE accumulates partial
+    sums across input-channel tiles.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_pe(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = PE_LANES,
+    bk: int = MACS_PER_LANE,
+) -> jax.Array:
+    """Compute ``x @ w`` with the PE-array tiling.
+
+    Args:
+      x: (M, K) float32 activations (output pixels x reduction).
+      w: (K, N) float32 weights (reduction x output channels).
+      bm/bn/bk: tile sizes; defaults mirror the paper's chiplet.
+
+    Returns:
+      (M, N) float32, bit-accumulated in f32 (the paper accumulates in
+      24-bit; f32 strictly contains that range).
+    """
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"matmul_pe expects 2-D operands, got {x.shape} @ {w.shape}")
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"reduction mismatch: {x.shape} @ {w.shape}")
+
+    # Pad every dimension to its tile multiple; the quantization waste this
+    # padding represents is exactly the utilization loss the L3 cost model
+    # charges (cost/compute.rs uses the same ceil arithmetic).
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w.astype(jnp.float32), ((0, kp - k), (0, np_ - n)))
+
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU-PJRT execution path; see module docstring
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def matmul_pe_bias_act(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array | None = None,
+    *,
+    relu: bool = False,
+    bm: int = DEFAULT_BM,
+    bn: int = PE_LANES,
+    bk: int = MACS_PER_LANE,
+) -> jax.Array:
+    """matmul_pe followed by the chiplet's post-processing path (bias+ReLU).
+
+    The paper's chiplet aggregates PE partial sums on the NoC and applies
+    activation on the way to the global buffer; here that epilogue is plain
+    jnp fused by XLA into the same HLO module.
+    """
+    y = matmul_pe(x, w, bm=bm, bn=bn, bk=bk)
+    if b is not None:
+        y = y + b[None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def vmem_footprint_bytes(bm: int = DEFAULT_BM, bn: int = PE_LANES, bk: int = MACS_PER_LANE) -> int:
+    """Estimated resident VMEM bytes per grid step (f32).
+
+    One activation strip + one weight tile + one output block.  Used by the
+    perf pass (EXPERIMENTS.md SPerf) to check the tiling against the 1 MiB
+    chiplet weight-buffer budget it stands in for.
+    """
+    return 4 * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_utilization_estimate(m: int, k: int, n: int,
+                             bm: int = DEFAULT_BM, bn: int = PE_LANES,
+                             bk: int = MACS_PER_LANE) -> float:
+    """Fraction of issued MACs that are useful for an (m,k,n) problem.
+
+    This is the same ceil-quantization the L3 compute cost model charges;
+    surfaced here so pytest can assert the two layers agree.
+    """
+    useful = m * k * n
+    issued = _ceil_to(m, bm) * _ceil_to(k, bk) * _ceil_to(n, bn)
+    return useful / issued

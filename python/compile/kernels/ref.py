@@ -1,0 +1,51 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Never calls pallas; this is the trusted reference the hypothesis sweeps in
+``python/tests/test_kernel.py`` compare against.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Plain f32 matmul."""
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def conv2d_ref(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array | None = None,
+    *,
+    stride: int = 1,
+    pad: int = 0,
+    relu: bool = False,
+) -> jax.Array:
+    """Reference conv via lax.conv_general_dilated (NHWC / HWIO)."""
+    y = jax.lax.conv_general_dilated(
+        x[None].astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )[0]
+    if b is not None:
+        y = y + b[None, None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def maxpool2_ref(x: jax.Array) -> jax.Array:
+    """2x2/stride-2 max pool over (H, W, C); H and W must be even."""
+    h, w, c = x.shape
+    return jnp.max(x.reshape(h // 2, 2, w // 2, 2, c), axis=(1, 3))
+
+
+def gap_ref(x: jax.Array) -> jax.Array:
+    """Global average pool (H, W, C) -> (C,)."""
+    return jnp.mean(x, axis=(0, 1))

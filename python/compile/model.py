@@ -1,0 +1,325 @@
+"""Layer-2 JAX model: ScopeNet, the functional workload for the merged pipeline.
+
+ScopeNet is a small Darknet-style CNN whose layers are grouped into the same
+kind of *clusters* the Scope scheduler produces (a cluster = a set of merged
+layers executed by one chiplet region).  ``aot.py`` lowers
+
+  * one HLO module per cluster               -> the units the rust
+    coordinator pipelines across regions,
+  * one HLO module for the whole network     -> the golden reference the
+    coordinator checks its pipelined output against,
+  * ISP-sharded per-layer modules of one cluster -> the units for the
+    functional input-shared-partitioning demo (weights split on Cout,
+    activations replicated; the coordinator performs the Table-II
+    all-gather between the shards).
+
+Every conv/fc goes through the Layer-1 Pallas kernel (kernels.conv /
+kernels.matmul_pe), so the emitted HLO contains the kernel's tiling and the
+three layers of the stack are exercised by one artifact set.
+
+Weights are generated deterministically from a seed and enter the lowered
+modules as *runtime parameters* (``*_weights_in`` variants): the rust
+coordinator owns the weight state, mirroring the paper's distributed weight
+buffering (§III-B). (Also load-bearing: xla_extension 0.5.1 miscompiles
+Pallas interpret loops over large HLO constants — see
+``cluster_fn_weights_in``.)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv as kconv
+from .kernels import matmul_pe as kmm
+from .kernels import ref as kref
+
+# ---------------------------------------------------------------------------
+# Architecture description
+# ---------------------------------------------------------------------------
+
+#: Input geometry (H, W, C).  Small enough that interpret-mode pallas stays
+#: fast on CPU, deep enough to make a 3-stage merged pipeline meaningful.
+INPUT_SHAPE = (16, 16, 3)
+NUM_CLASSES = 10
+
+#: Conv layer table: (name, cout, k, stride, pad, pool_after)
+#: A "pool_after" layer ends with a 2x2/2 maxpool (fused into the same
+#: cluster stage, as the paper folds cheap layers into their cluster).
+CONV_LAYERS = (
+    ("conv1", 16, 3, 1, 1, False),
+    ("conv2", 16, 3, 1, 1, True),   # 16x16 -> 8x8
+    ("conv3", 32, 3, 1, 1, False),
+    ("conv4", 32, 3, 1, 1, True),   # 8x8 -> 4x4
+    ("conv5", 64, 3, 1, 1, False),
+)
+
+#: Cluster composition: the merged-pipeline grouping the coordinator runs.
+#: Mirrors a Scope schedule for this net: balanced MAC load per cluster.
+CLUSTERS = (
+    ("conv1", "conv2"),
+    ("conv3", "conv4"),
+    ("conv5", "head"),
+)
+
+#: The cluster whose layers are additionally emitted as ISP shards.
+ISP_CLUSTER = 1
+ISP_WAYS = 2
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_params(seed: int = 0) -> dict[str, jax.Array]:
+    """Deterministic He-style initialisation for all layers."""
+    key = jax.random.PRNGKey(seed)
+    params: dict[str, jax.Array] = {}
+    cin = INPUT_SHAPE[2]
+    for name, cout, k, _stride, _pad, _pool in CONV_LAYERS:
+        key, kw_, kb_ = jax.random.split(key, 3)
+        fan_in = k * k * cin
+        params[f"{name}.w"] = (
+            jax.random.normal(kw_, (k, k, cin, cout), jnp.float32)
+            * jnp.sqrt(2.0 / fan_in)
+        )
+        params[f"{name}.b"] = jax.random.normal(kb_, (cout,), jnp.float32) * 0.01
+        cin = cout
+    key, kw_, kb_ = jax.random.split(key, 3)
+    params["fc.w"] = (
+        jax.random.normal(kw_, (cin, NUM_CLASSES), jnp.float32)
+        * jnp.sqrt(2.0 / cin)
+    )
+    params["fc.b"] = jax.random.normal(kb_, (NUM_CLASSES,), jnp.float32) * 0.01
+    return params
+
+
+def _layer_table() -> dict[str, tuple]:
+    return {name: spec for spec in CONV_LAYERS for name in (spec[0],)}
+
+
+# ---------------------------------------------------------------------------
+# Layer application (pallas path and reference path)
+# ---------------------------------------------------------------------------
+
+
+def apply_conv(
+    params: dict[str, jax.Array],
+    name: str,
+    x: jax.Array,
+    *,
+    use_pallas: bool = True,
+    cout_slice: tuple[int, int] | None = None,
+) -> jax.Array:
+    """Run one named conv layer (+ fused pool if the table says so).
+
+    ``cout_slice=(lo, hi)`` applies ISP: only weights for output channels
+    [lo, hi) are used -- the input is the full activation (replicated), the
+    output is the channel shard, exactly the paper's input-shared
+    partitioning.
+    """
+    _, cout, k, stride, pad, pool = _layer_table()[name]
+    w, b = params[f"{name}.w"], params[f"{name}.b"]
+    if cout_slice is not None:
+        lo, hi = cout_slice
+        w, b = w[..., lo:hi], b[lo:hi]
+    fn = kconv.conv2d_pe if use_pallas else kref.conv2d_ref
+    y = fn(x, w, b, stride=stride, pad=pad, relu=True)
+    if pool:
+        y = kref.maxpool2_ref(y)
+    return y
+
+
+def apply_head(
+    params: dict[str, jax.Array], x: jax.Array, *, use_pallas: bool = True
+) -> jax.Array:
+    """Global average pool + fully connected classifier."""
+    pooled = kref.gap_ref(x)
+    if use_pallas:
+        y = kmm.matmul_pe_bias_act(pooled[None, :], params["fc.w"], params["fc.b"])
+        return y[0]
+    return kref.matmul_ref(pooled[None, :], params["fc.w"])[0] + params["fc.b"]
+
+
+def _apply_member(
+    params: dict[str, jax.Array], member: str, x: jax.Array, *, use_pallas: bool
+) -> jax.Array:
+    if member == "head":
+        return apply_head(params, x, use_pallas=use_pallas)
+    return apply_conv(params, member, x, use_pallas=use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# Cluster / full-network functions (what aot.py lowers)
+# ---------------------------------------------------------------------------
+
+
+def cluster_fn(
+    params: dict[str, jax.Array], cluster_idx: int, *, use_pallas: bool = True
+) -> Callable[[jax.Array], tuple[jax.Array]]:
+    """The function one pipeline region executes: its cluster's merged layers."""
+    members = CLUSTERS[cluster_idx]
+
+    def fn(x: jax.Array) -> tuple[jax.Array]:
+        for member in members:
+            x = _apply_member(params, member, x, use_pallas=use_pallas)
+        return (x,)
+
+    return fn
+
+
+def member_param_names(member: str) -> list[str]:
+    """Parameter tensors a layer consumes, in AOT calling order."""
+    if member == "head":
+        return ["fc.w", "fc.b"]
+    return [f"{member}.w", f"{member}.b"]
+
+
+def cluster_param_names(cluster_idx: int) -> list[str]:
+    """All parameter names of a cluster, in AOT calling order."""
+    names: list[str] = []
+    for member in CLUSTERS[cluster_idx]:
+        names.extend(member_param_names(member))
+    return names
+
+
+def cluster_fn_weights_in(
+    cluster_idx: int, *, use_pallas: bool = True
+) -> tuple[Callable[..., tuple[jax.Array]], list[str]]:
+    """Like :func:`cluster_fn`, but weights enter as *runtime parameters*
+    `fn(x, *weights)` instead of baked constants.
+
+    Two reasons: (a) architecturally, the rust coordinator owns the weight
+    state (the paper's distributed weight buffering lives at L3); (b) the
+    image's xla_extension 0.5.1 runtime miscompiles Pallas interpret loops
+    whose operands are large HLO constants (all-zero outputs) — verified by
+    bisection; weights-as-parameters sidesteps the bug. Returns
+    `(fn, param_names)`; callers pass arrays in `param_names` order.
+    """
+    members = CLUSTERS[cluster_idx]
+    names = cluster_param_names(cluster_idx)
+
+    def fn(x: jax.Array, *weights: jax.Array) -> tuple[jax.Array]:
+        assert len(weights) == len(names)
+        local = dict(zip(names, weights))
+        for member in members:
+            x = _apply_member(local, member, x, use_pallas=use_pallas)
+        return (x,)
+
+    return fn, names
+
+
+def full_fn_weights_in(
+    *, use_pallas: bool = True
+) -> tuple[Callable[..., tuple[jax.Array]], list[str]]:
+    """Whole network with weights as runtime parameters (see
+    :func:`cluster_fn_weights_in`)."""
+    all_names: list[str] = []
+    for idx in range(len(CLUSTERS)):
+        all_names.extend(cluster_param_names(idx))
+
+    def fn(x: jax.Array, *weights: jax.Array) -> tuple[jax.Array]:
+        assert len(weights) == len(all_names)
+        local = dict(zip(all_names, weights))
+        for members in CLUSTERS:
+            for member in members:
+                x = _apply_member(local, member, x, use_pallas=use_pallas)
+        return (x,)
+
+    return fn, all_names
+
+
+def full_fn(
+    params: dict[str, jax.Array], *, use_pallas: bool = True
+) -> Callable[[jax.Array], tuple[jax.Array]]:
+    """The whole network end to end (golden reference module)."""
+
+    def fn(x: jax.Array) -> tuple[jax.Array]:
+        for cluster_idx in range(len(CLUSTERS)):
+            (x,) = cluster_fn(params, cluster_idx, use_pallas=use_pallas)(x)
+        return (x,)
+
+    return fn
+
+
+def isp_shard_params(
+    params: dict[str, jax.Array], layer: str, shard: int, ways: int = ISP_WAYS
+) -> tuple[jax.Array, jax.Array]:
+    """The (w, b) slice an ISP shard owns: output channels [lo, hi)."""
+    _, cout, *_ = _layer_table()[layer]
+    if cout % ways:
+        raise ValueError(f"{layer}: cout={cout} not divisible into {ways} ISP shards")
+    width = cout // ways
+    lo, hi = shard * width, (shard + 1) * width
+    return params[f"{layer}.w"][..., lo:hi], params[f"{layer}.b"][lo:hi]
+
+
+def isp_shard_fn_weights_in(
+    layer: str, *, use_pallas: bool = True
+) -> Callable[..., tuple[jax.Array]]:
+    """ISP shard with its weight slice as runtime parameters:
+    `fn(x, w_shard, b_shard)`. The caller (aot.py / the coordinator) feeds
+    the slice from :func:`isp_shard_params`."""
+    spec = _layer_table()[layer]
+    _, _cout, _k, stride, pad, pool = spec
+
+    def fn(x: jax.Array, w: jax.Array, b: jax.Array) -> tuple[jax.Array]:
+        conv = kconv.conv2d_pe if use_pallas else kref.conv2d_ref
+        y = conv(x, w, b, stride=stride, pad=pad, relu=True)
+        if pool:
+            y = kref.maxpool2_ref(y)
+        return (y,)
+
+    return fn
+
+
+def isp_shard_fn(
+    params: dict[str, jax.Array],
+    layer: str,
+    shard: int,
+    ways: int = ISP_WAYS,
+    *,
+    use_pallas: bool = True,
+) -> Callable[[jax.Array], tuple[jax.Array]]:
+    """One ISP shard of one conv layer: full input, Cout/ways output channels.
+
+    The rust coordinator replicates the input to ``ways`` workers, runs each
+    shard, and concatenates the channel shards -- the Table-II
+    "(R-1) x Output" ISP->ISP all-gather, performed over its channel NoP.
+    """
+    _, cout, *_ = _layer_table()[layer]
+    if cout % ways:
+        raise ValueError(f"{layer}: cout={cout} not divisible into {ways} ISP shards")
+    width = cout // ways
+    lo, hi = shard * width, (shard + 1) * width
+
+    def fn(x: jax.Array) -> tuple[jax.Array]:
+        return (apply_conv(params, layer, x, use_pallas=use_pallas,
+                           cout_slice=(lo, hi)),)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Shape bookkeeping (consumed by aot.py for the artifact manifest)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def cluster_io_shapes() -> tuple[tuple[tuple[int, ...], tuple[int, ...]], ...]:
+    """(input_shape, output_shape) per cluster, computed by abstract eval."""
+    shapes = []
+    params = init_params(0)
+    x_shape: tuple[int, ...] = INPUT_SHAPE
+    for idx in range(len(CLUSTERS)):
+        out = jax.eval_shape(
+            lambda x, idx=idx: cluster_fn(params, idx, use_pallas=False)(x),
+            jax.ShapeDtypeStruct(x_shape, jnp.float32),
+        )[0]
+        shapes.append((x_shape, tuple(out.shape)))
+        x_shape = tuple(out.shape)
+    return tuple(shapes)

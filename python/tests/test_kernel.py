@@ -1,0 +1,163 @@
+"""L1 correctness: Pallas PE-array kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the compiled artifacts: everything
+the rust coordinator executes flows through ``matmul_pe``.  Hypothesis
+sweeps shapes (including every tile-boundary edge case) and seeds.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv as kconv
+from compile.kernels import matmul_pe as kmm
+from compile.kernels import ref as kref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+def _split(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+# ---------------------------------------------------------------------------
+# matmul_pe vs matmul_ref
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 40),
+    n=st.integers(1, 150),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref_hypothesis(m, k, n, seed):
+    kx, kw = _split(seed, 2)
+    x, w = _rand(kx, (m, k)), _rand(kw, (k, n))
+    got = kmm.matmul_pe(x, w)
+    want = kref.matmul_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 1, 1),              # degenerate
+        (8, 8, 128),            # exactly one tile
+        (16, 16, 256),          # multiple tiles, no padding
+        (9, 9, 129),            # one past every tile boundary
+        (7, 7, 127),            # one short of every tile boundary
+        (8, 27, 16),            # conv1-shaped reduction (3*3*3)
+        (256, 144, 16),         # pixel-heavy, ScopeNet conv1 geometry
+    ],
+)
+def test_matmul_tile_boundaries(m, k, n):
+    kx, kw = _split(m * 1000 + k * 10 + n, 2)
+    x, w = _rand(kx, (m, k)), _rand(kw, (k, n))
+    np.testing.assert_allclose(
+        kmm.matmul_pe(x, w), kref.matmul_ref(x, w), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_matmul_nondefault_tiles():
+    kx, kw = _split(3, 2)
+    x, w = _rand(kx, (10, 20)), _rand(kw, (20, 30))
+    got = kmm.matmul_pe(x, w, bm=4, bn=16, bk=4)
+    np.testing.assert_allclose(got, kref.matmul_ref(x, w), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_bias_relu_epilogue():
+    kx, kw, kb = _split(11, 3)
+    x, w, b = _rand(kx, (12, 24)), _rand(kw, (24, 48)), _rand(kb, (48,))
+    got = kmm.matmul_pe_bias_act(x, w, b, relu=True)
+    want = jnp.maximum(kref.matmul_ref(x, w) + b[None, :], 0.0)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    assert (np.asarray(got) >= 0).all()
+
+
+def test_matmul_rejects_bad_shapes():
+    x = jnp.zeros((4, 5))
+    with pytest.raises(ValueError):
+        kmm.matmul_pe(x, jnp.zeros((6, 7)))
+    with pytest.raises(ValueError):
+        kmm.matmul_pe(jnp.zeros((4,)), jnp.zeros((4, 4)))
+
+
+def test_mxu_utilization_estimate_bounds():
+    # Quantization estimate must be in (0, 1] and exact at tile multiples.
+    assert kmm.mxu_utilization_estimate(8, 8, 128) == 1.0
+    u = kmm.mxu_utilization_estimate(9, 9, 129)
+    assert 0.0 < u < 0.5  # everything just past a boundary: heavy waste
+    assert kmm.vmem_footprint_bytes() == 4 * (8 * 8 + 8 * 128 + 8 * 128)
+
+
+# ---------------------------------------------------------------------------
+# im2col + conv2d_pe vs lax conv
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    h=st.integers(4, 12),
+    w=st.integers(4, 12),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 20),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_matches_ref_hypothesis(h, w, cin, cout, k, stride, seed):
+    pad = k // 2
+    kx, kw_ = _split(seed, 2)
+    x = _rand(kx, (h, w, cin))
+    wt = _rand(kw_, (k, k, cin, cout))
+    got = kconv.conv2d_pe(x, wt, stride=stride, pad=pad)
+    want = kref.conv2d_ref(x, wt, stride=stride, pad=pad)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("stride,pad,k", [(1, 0, 1), (1, 1, 3), (2, 1, 3), (2, 2, 5)])
+def test_conv_geometries(stride, pad, k):
+    kx, kw_, kb = _split(stride * 100 + pad * 10 + k, 3)
+    x = _rand(kx, (11, 9, 4))
+    wt = _rand(kw_, (k, k, 4, 6))
+    b = _rand(kb, (6,))
+    got = kconv.conv2d_pe(x, wt, b, stride=stride, pad=pad, relu=True)
+    want = kref.conv2d_ref(x, wt, b, stride=stride, pad=pad, relu=True)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_im2col_ordering_matches_weight_reshape():
+    # The documented contract: im2col(x) @ w.reshape(-1, cout) == conv.
+    kx, kw_ = _split(5, 2)
+    x = _rand(kx, (6, 6, 3))
+    wt = _rand(kw_, (3, 3, 3, 7))
+    cols = kconv.im2col(x, 3, 3, stride=1, pad=1)
+    assert cols.shape == (36, 27)
+    got = (cols @ wt.reshape(27, 7)).reshape(6, 6, 7)
+    np.testing.assert_allclose(
+        got, kref.conv2d_ref(x, wt, stride=1, pad=1), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_conv_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        kconv.conv2d_pe(jnp.zeros((4, 4, 3)), jnp.zeros((3, 3, 5, 8)))
+    with pytest.raises(ValueError):
+        kconv.im2col(jnp.zeros((4, 4)), 3, 3)
+
+
+def test_out_size():
+    assert kconv.out_size(16, 3, 1, 1) == 16
+    assert kconv.out_size(16, 3, 2, 1) == 8
+    assert kconv.out_size(7, 3, 2, 0) == 3

@@ -1,0 +1,86 @@
+"""L2 correctness: ScopeNet clusters compose, shards gather, shapes hold."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(0)
+
+
+@pytest.fixture(scope="module")
+def sample():
+    return jax.random.normal(jax.random.PRNGKey(99), model.INPUT_SHAPE, jnp.float32)
+
+
+def test_init_params_deterministic():
+    a, b = model.init_params(0), model.init_params(0)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+    c = model.init_params(1)
+    assert any(not np.array_equal(a[k], c[k]) for k in a)
+
+
+def test_cluster_chain_equals_full_pallas(params, sample):
+    x = sample
+    for idx in range(len(model.CLUSTERS)):
+        (x,) = model.cluster_fn(params, idx)(x)
+    (full,) = model.full_fn(params)(sample)
+    np.testing.assert_allclose(x, full, rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_path_matches_reference_path(params, sample):
+    (got,) = model.full_fn(params, use_pallas=True)(sample)
+    (want,) = model.full_fn(params, use_pallas=False)(sample)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_cluster_io_shapes_consistent(params, sample):
+    shapes = model.cluster_io_shapes()
+    assert shapes[0][0] == model.INPUT_SHAPE
+    x = sample
+    for idx, (in_shape, out_shape) in enumerate(shapes):
+        assert tuple(x.shape) == in_shape
+        (x,) = model.cluster_fn(params, idx)(x)
+        assert tuple(x.shape) == out_shape
+    assert shapes[-1][1] == (model.NUM_CLASSES,)
+    # clusters must chain: each output feeds the next input
+    for (_, out_s), (in_s, _) in zip(shapes, shapes[1:]):
+        assert out_s == in_s
+
+
+def test_isp_shards_gather_to_full_layer(params):
+    # Run every ISP-emitted layer sharded and gathered; must equal unsharded.
+    in_shape = model.cluster_io_shapes()[model.ISP_CLUSTER][0]
+    x = jax.random.normal(jax.random.PRNGKey(3), in_shape, jnp.float32)
+    for layer in model.CLUSTERS[model.ISP_CLUSTER]:
+        if layer == "head":
+            continue
+        shards = [
+            model.isp_shard_fn(params, layer, j)(x)[0]
+            for j in range(model.ISP_WAYS)
+        ]
+        gathered = jnp.concatenate(shards, axis=-1)
+        want = model.apply_conv(params, layer, x)
+        np.testing.assert_allclose(gathered, want, rtol=1e-5, atol=1e-5)
+        x = want  # feed next layer, as the coordinator does
+
+
+def test_isp_shard_rejects_indivisible(params):
+    with pytest.raises(ValueError):
+        model.isp_shard_fn(params, "conv3", 0, ways=7)
+
+
+def test_head_is_classifier_shaped(params, sample):
+    (logits,) = model.full_fn(params)(sample)
+    assert logits.shape == (model.NUM_CLASSES,)
+    assert np.isfinite(np.asarray(logits)).all()

@@ -1,0 +1,106 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//!   A1 comp/comm overlap (Equ. 7's max() vs serial sum)
+//!   A2 §III-B distributed weight buffering (vs full replication)
+//!   A3 the cluster dimension itself (Scope vs clusters forced to 1 layer)
+//!   A4 region rebalancing (heuristic loop vs proportional seed only)
+//!
+//! Each row: throughput with the feature on/off and the ratio — the
+//! quantified version of the paper's qualitative claims.
+
+use scope::arch::McmConfig;
+use scope::config::SimOptions;
+use scope::model::zoo;
+use scope::pipeline::timeline::{eval_schedule, EvalContext};
+use scope::scope::{schedule_scope, schedule_scope_opts, SearchOptions};
+use scope::storage::StoragePolicy;
+use scope::util::table::{f3, Table};
+
+fn main() {
+    let fast = std::env::var("SCOPE_BENCH_FAST").is_ok();
+    let (net_name, chiplets) = if fast { ("darknet19", 64) } else { ("resnet50", 256) };
+    let net = zoo::by_name(net_name).unwrap();
+    let mcm = McmConfig::paper_default(chiplets);
+    let base_opts = SimOptions::default();
+
+    let mut t = Table::new(
+        &format!("ablations — {net_name} @ {chiplets} chiplets"),
+        &["ablation", "on (samples/s)", "off (samples/s)", "on/off"],
+    );
+
+    // A1: comp/comm overlap
+    let on = schedule_scope(&net, &mcm, &base_opts);
+    let no_overlap = SimOptions { overlap_comm: false, ..base_opts.clone() };
+    let off = schedule_scope(&net, &mcm, &no_overlap);
+    t.row(vec![
+        "A1 comp/comm overlap (Equ. 7)".into(),
+        f3(on.throughput()),
+        f3(off.throughput()),
+        f3(on.throughput() / off.throughput().max(1e-30)),
+    ]);
+
+    // A2: distributed weight buffering
+    let no_dist = SimOptions { distributed_weights: false, ..base_opts.clone() };
+    let off = schedule_scope(&net, &mcm, &no_dist);
+    t.row(vec![
+        "A2 distributed weights (§III-B)".into(),
+        f3(on.throughput()),
+        f3(off.throughput()),
+        f3(on.throughput() / off.throughput().max(1e-30)),
+    ]);
+
+    // A3: the cluster dimension — force one layer per cluster by capping
+    // the CMT row at N = L (max_clusters = usize::MAX keeps all rows; to
+    // disable merging we *only* allow the N = L row via max_region sweep).
+    // schedule_scope_opts with max_clusters=0 searches all rows; compare
+    // against a search capped to a single cluster per segment (full merge)
+    // and the per-layer extreme evaluated through the same machinery.
+    let merged_only = schedule_scope_opts(
+        &net,
+        &mcm,
+        &base_opts,
+        SearchOptions { max_clusters: 1, ..Default::default() },
+    );
+    t.row(vec![
+        "A3 cluster search (vs 1 cluster/segment)".into(),
+        f3(on.throughput()),
+        f3(merged_only.throughput()),
+        f3(on.throughput() / merged_only.throughput().max(1e-30)),
+    ]);
+
+    // A4: region rebalancing — re-evaluate Scope's schedule with its
+    // regions reset to the proportional seed (no improvement loop).
+    if let Some(sched) = &on.schedule {
+        let mut seeded = sched.clone();
+        for seg in &mut seeded.segments {
+            let loads: Vec<u64> = (0..seg.n_clusters())
+                .map(|j| {
+                    let (lo, hi) = seg.cluster_range(j);
+                    (lo..hi).map(|k| net.layers[k].macs()).sum()
+                })
+                .collect();
+            if let Some(regions) =
+                scope::scope::region_alloc::proportional_allocate(&loads, chiplets)
+            {
+                seg.regions = regions;
+            }
+        }
+        let ctx = EvalContext {
+            net: &net,
+            mcm: &mcm,
+            opts: &base_opts,
+            policy: StoragePolicy::Distributed,
+            dram_fallback: true,
+        };
+        let ev = eval_schedule(&ctx, &seeded);
+        t.row(vec![
+            "A4 region rebalance (vs proportional seed)".into(),
+            f3(on.throughput()),
+            f3(ev.throughput),
+            f3(on.throughput() / ev.throughput.max(1e-30)),
+        ]);
+    }
+
+    println!("{t}");
+    println!("\n[ablations] ratios > 1.0 quantify each design choice's contribution");
+}

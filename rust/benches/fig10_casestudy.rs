@@ -1,0 +1,28 @@
+//! Fig. 10 — the ResNet-152 @ 256-chiplet case study: (a) per-stage
+//! normalized compute (Scope's merged clusters are flatter → easier stage
+//! matching), (b) energy breakdown (totals roughly equivalent — the
+//! latency win comes from utilization, not energy).
+
+use scope::report::figures;
+
+fn main() {
+    let chiplets = if std::env::var("SCOPE_BENCH_FAST").is_ok() { 64 } else { 256 };
+    let t0 = std::time::Instant::now();
+    let r = figures::fig10("resnet152", chiplets, 64).expect("fig10");
+    println!("{}", r.balance);
+    println!();
+    println!("{}", r.energy);
+    println!(
+        "\n[fig10] resnet152@{chiplets} in {:.1}s — segments scope={} vs \
+         segmented={} (paper: 2 vs 3); balance CV scope={:.3} vs segmented={:.3}",
+        t0.elapsed().as_secs_f64(),
+        r.scope_segments,
+        r.segmented_segments,
+        r.scope_cv,
+        r.segmented_cv
+    );
+    assert!(
+        r.scope_cv <= r.segmented_cv * 1.05,
+        "Scope's stage balance must not be worse than segmented's"
+    );
+}

@@ -1,0 +1,31 @@
+//! Fig. 7 — normalized throughput of the four scheduling methods across
+//! every paper workload × MCM scale. Regenerates the full figure grid;
+//! set `SCOPE_BENCH_FAST=1` for a reduced grid during development.
+//!
+//! Paper shape to reproduce: Scope ≥ segmented ≥ {sequential at scale,
+//! full-pipeline on deep nets (invalid)}; maximum gain on the deepest
+//! network at the largest scale.
+
+use scope::report::figures;
+
+fn main() {
+    let fast = std::env::var("SCOPE_BENCH_FAST").is_ok();
+    let nets: Vec<&str> = if fast {
+        vec!["alexnet", "darknet19", "resnet50"]
+    } else {
+        vec![
+            "alexnet", "vgg16", "darknet19", "resnet18", "resnet34", "resnet50",
+            "resnet101", "resnet152",
+        ]
+    };
+    let scales: Vec<usize> = if fast { vec![16, 64] } else { vec![16, 64, 256] };
+    let t0 = std::time::Instant::now();
+    let table = figures::fig7(&nets, &scales, 64).expect("fig7");
+    println!("{table}");
+    println!(
+        "\n[fig7] {} cells in {:.1}s (paper headline: up to 1.73x vs SOTA \
+         at resnet152/256)",
+        nets.len() * scales.len(),
+        t0.elapsed().as_secs_f64()
+    );
+}

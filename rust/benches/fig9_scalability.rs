@@ -1,0 +1,19 @@
+//! Fig. 9 — scalability: fixed workload (ResNet-50), growing package
+//! (16 → 256 chiplets), throughput normalized to the 16-chiplet case per
+//! method.
+//!
+//! Paper shape to reproduce: Scope scales best; segmented scales slower;
+//! sequential saturates (or regresses) as NoP communication dominates;
+//! full pipeline lacks valid solutions at low chiplet counts.
+
+use scope::report::figures;
+
+fn main() {
+    let fast = std::env::var("SCOPE_BENCH_FAST").is_ok();
+    let scales: Vec<usize> =
+        if fast { vec![16, 32, 64] } else { vec![16, 32, 64, 128, 256] };
+    let t0 = std::time::Instant::now();
+    let table = figures::fig9("resnet50", &scales, 64).expect("fig9");
+    println!("{table}");
+    println!("\n[fig9] done in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,83 @@
+//! Runtime microbench — the L3 hot path over PJRT: standalone L1 kernel
+//! execute latency, per-cluster execute latency, and functional-pipeline
+//! throughput in the three topologies. This is the bench the §Perf pass
+//! iterates against.
+
+use scope::bench::{bench, humanize_secs, report};
+use scope::coordinator::{run_pipeline, PipelineMode};
+use scope::runtime::{Manifest, Runtime};
+
+fn main() {
+    let dir = Manifest::default_dir();
+    let Ok(manifest) = Manifest::load(&dir) else {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        std::process::exit(0); // bench is a no-op without artifacts
+    };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    println!("platform: {}\n", rt.platform());
+
+    let mut ms = Vec::new();
+
+    // --- L1 kernel execute -------------------------------------------------
+    let micro = &manifest.micro;
+    let exe = rt
+        .load_hlo(&micro.file, &[vec![micro.m, micro.k], vec![micro.k, micro.n]])
+        .expect("micro kernel");
+    let x = vec![1.0f32; micro.m * micro.k];
+    let w = vec![0.5f32; micro.k * micro.n];
+    ms.push(bench(
+        &format!("matmul_pe_{}x{}x{}", micro.m, micro.k, micro.n),
+        3,
+        20,
+        || {
+            let y = exe
+                .run(&[(&x, &[micro.m, micro.k]), (&w, &[micro.k, micro.n])])
+                .unwrap();
+            std::hint::black_box(y.len());
+        },
+    ));
+
+    // --- per-cluster execute -----------------------------------------------
+    let (xs, _) = manifest.golden().unwrap();
+    let mut act = xs[0].clone();
+    for c in &manifest.clusters {
+        let mut shapes = vec![c.input_shape.clone()];
+        shapes.extend(c.param_shapes.iter().cloned());
+        let exe = rt.load_hlo(&c.file, &shapes).expect("cluster module");
+        let params = Manifest::load_params(&c.params_file, &c.param_shapes).unwrap();
+        let input = act.clone();
+        let mut out_len = 0usize;
+        let m = bench(&format!("cluster{}", c.index), 2, 10, || {
+            let mut inputs: Vec<(&[f32], &[usize])> = vec![(&input, &c.input_shape[..])];
+            for (p, s) in params.iter().zip(&c.param_shapes) {
+                inputs.push((p, s));
+            }
+            let y = exe.run(&inputs).unwrap();
+            out_len = y.len();
+            std::hint::black_box(&y);
+        });
+        ms.push(m);
+        // feed the real activation forward so each cluster benches its own
+        // input distribution
+        let mut inputs: Vec<(&[f32], &[usize])> = vec![(&act, &c.input_shape[..])];
+        for (p, s) in params.iter().zip(&c.param_shapes) {
+            inputs.push((p, s));
+        }
+        act = exe.run(&inputs).unwrap();
+    }
+    println!("{}", report("runtime_micro — PJRT execute latency", &ms));
+
+    // --- pipeline throughput -----------------------------------------------
+    println!();
+    let samples = if std::env::var("SCOPE_BENCH_FAST").is_ok() { 16 } else { 64 };
+    for mode in [PipelineMode::Single, PipelineMode::Merged, PipelineMode::MergedIsp] {
+        let r = run_pipeline(&manifest, mode, samples).expect("pipeline");
+        assert!(r.numerics_ok(1e-3), "{}: {}", r.mode, r.max_abs_err);
+        println!(
+            "pipeline/{:<11} {:>8.1} samples/s   mean latency {}",
+            r.mode,
+            r.throughput(),
+            humanize_secs(r.mean_latency())
+        );
+    }
+}

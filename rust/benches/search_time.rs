@@ -1,0 +1,42 @@
+//! §V-B(1) — DSE cost: wall-clock time of the full Scope search across
+//! settings, plus the Equ. 8–9 space it replaces. The paper reports ≈1 h
+//! for ResNet-152 @ 256 on a laptop CPU; our analytic Forward() lands far
+//! under that while searching the same reduced space.
+
+use scope::arch::McmConfig;
+use scope::bench::{bench, report};
+use scope::config::SimOptions;
+use scope::model::zoo;
+use scope::report::figures;
+use scope::scope::schedule_scope;
+
+fn main() {
+    let fast = std::env::var("SCOPE_BENCH_FAST").is_ok();
+    let settings: Vec<(&str, usize)> = if fast {
+        vec![("alexnet", 16), ("resnet18", 64)]
+    } else {
+        vec![
+            ("alexnet", 16),
+            ("darknet19", 64),
+            ("resnet50", 256),
+            ("resnet152", 256),
+        ]
+    };
+    let opts = SimOptions::default();
+    let mut ms = Vec::new();
+    for (name, chiplets) in settings {
+        let net = zoo::by_name(name).unwrap();
+        let mcm = McmConfig::paper_default(chiplets);
+        let iters = if net.len() > 60 { 1 } else { 3 };
+        let m = bench(&format!("scope_search/{name}@{chiplets}"), 0, iters, || {
+            let r = schedule_scope(&net, &mcm, &opts);
+            assert!(r.eval.is_valid(), "{name}@{chiplets}: {:?}", r.eval.error);
+            std::hint::black_box(r.throughput());
+        });
+        ms.push(m);
+    }
+    println!("{}", report("search_time — full Scope DSE wall clock", &ms));
+    println!();
+    println!("{}", figures::space_table("resnet152", 256).expect("space"));
+    println!("\n[search_time] paper reference: ≈1 h for resnet152@256 on an i7-13700H");
+}

@@ -1,0 +1,30 @@
+//! Sensitivity study — the quantified version of the paper's §I motivation:
+//! NoP bandwidth (off-package links are the scaling bottleneck; ref. [6]
+//! reports NoP latency > compute latency at 32 chiplets) and DRAM bandwidth
+//! (§III-B: keep weights on-package or throughput collapses).
+//!
+//! Emits ASCII tables + CSVs under `target/reports/`.
+
+use scope::report::sensitivity::{dram_bandwidth_sweep, nop_bandwidth_sweep};
+
+fn main() {
+    let fast = std::env::var("SCOPE_BENCH_FAST").is_ok();
+    let (net, chiplets) = if fast { ("darknet19", 64) } else { ("resnet50", 256) };
+    let fracs = [1.0, 0.5, 0.25, 0.125, 0.0625];
+
+    let nop = nop_bandwidth_sweep(net, chiplets, 64, &fracs).expect("nop sweep");
+    println!("{}", nop.table);
+    nop.csv
+        .write(std::path::Path::new("target/reports/sensitivity_nop.csv"))
+        .expect("write csv");
+    println!();
+    let dram = dram_bandwidth_sweep(net, chiplets, 64, &fracs).expect("dram sweep");
+    println!("{}", dram.table);
+    dram.csv
+        .write(std::path::Path::new("target/reports/sensitivity_dram.csv"))
+        .expect("write csv");
+    println!(
+        "\n[sensitivity] CSVs under target/reports/ — NoP starvation hits the \
+         communication-bound methods hardest (the paper's §I motivation)"
+    );
+}

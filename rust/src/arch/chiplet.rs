@@ -1,0 +1,154 @@
+//! Chiplet micro-architecture model (paper Fig. 3(b), Table III).
+//!
+//! Each chiplet: a PE array (4×4 PEs × 8 lanes × 8 MACs = 1024 MAC/cycle)
+//! under the weight-stationary dataflow, a 64 KB-per-PE weight buffer
+//! (1 MiB/chiplet), a 64 KB global buffer staging activations, and an
+//! on-chip NoC aggregating PE partial sums.
+
+/// Static per-chiplet hardware parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChipletConfig {
+    /// Number of PEs in the array (paper: 4×4 = 16).
+    pub pes: u64,
+    /// Lanes per PE (paper: 8).
+    pub lanes_per_pe: u64,
+    /// MAC units per lane, reducing along input channels (paper: 8).
+    pub macs_per_lane: u64,
+    /// Weight buffer bytes per PE (paper: 64 KB).
+    pub weight_buf_per_pe: u64,
+    /// Global (activation) buffer bytes (paper: 64 KB).
+    pub global_buf: u64,
+    /// Clock frequency in Hz (paper: 800 MHz @ 28 nm).
+    pub freq_hz: f64,
+    /// Energy per 8-bit MAC in pJ (paper: 0.2 pJ).
+    pub mac_energy_pj: f64,
+    /// SRAM access energy per bit in pJ (documented assumption — the paper
+    /// synthesizes SRAM at 28 nm but does not publish the constant).
+    pub sram_pj_per_bit: f64,
+}
+
+impl ChipletConfig {
+    /// The paper's Table III chiplet.
+    pub fn paper_default() -> Self {
+        ChipletConfig {
+            pes: 16,
+            lanes_per_pe: 8,
+            macs_per_lane: 8,
+            weight_buf_per_pe: 64 * 1024,
+            global_buf: 64 * 1024,
+            freq_hz: 800e6,
+            mac_energy_pj: 0.2,
+            sram_pj_per_bit: 0.05,
+        }
+    }
+
+    /// Spatial output-channel slots: how many output channels compute in
+    /// parallel (PEs × lanes; paper: 128). This is the dimension ISP shards,
+    /// hence ISP's utilization penalty when `cout/R < 128`.
+    pub fn oc_slots(&self) -> u64 {
+        self.pes * self.lanes_per_pe
+    }
+
+    /// Peak MACs per cycle (paper: 1024).
+    pub fn macs_per_cycle(&self) -> u64 {
+        self.oc_slots() * self.macs_per_lane
+    }
+
+    /// Total on-chiplet weight capacity in bytes (paper: 1 MiB).
+    pub fn weight_capacity(&self) -> u64 {
+        self.pes * self.weight_buf_per_pe
+    }
+
+    /// Peak throughput in MAC/s.
+    pub fn peak_macs_per_sec(&self) -> f64 {
+        self.macs_per_cycle() as f64 * self.freq_hz
+    }
+}
+
+/// NoP (network-on-package) link parameters (Table III).
+#[derive(Clone, Debug, PartialEq)]
+pub struct NopConfig {
+    /// Aggregate NoP bandwidth per chiplet in bytes/s (paper: 100 GB/s).
+    pub bw_per_chiplet: f64,
+    /// Mesh ports per chiplet (2D mesh: 4); a single link carries
+    /// `bw_per_chiplet / ports`.
+    pub ports: u64,
+    /// Per-hop router+link latency in cycles (BookSim-style 4-cycle router).
+    pub hop_cycles: f64,
+    /// Energy per bit per hop in pJ (paper: 1.3 pJ/bit).
+    pub pj_per_bit_hop: f64,
+}
+
+impl NopConfig {
+    pub fn paper_default() -> Self {
+        NopConfig {
+            bw_per_chiplet: 100e9,
+            ports: 4,
+            hop_cycles: 4.0,
+            pj_per_bit_hop: 1.3,
+        }
+    }
+
+    /// Bytes per cycle a single mesh link moves at `freq_hz`.
+    pub fn link_bytes_per_cycle(&self, freq_hz: f64) -> f64 {
+        self.bw_per_chiplet / self.ports as f64 / freq_hz
+    }
+
+    /// Bytes per cycle of a chiplet's full injection bandwidth.
+    pub fn chiplet_bytes_per_cycle(&self, freq_hz: f64) -> f64 {
+        self.bw_per_chiplet / freq_hz
+    }
+}
+
+/// Main-memory model parameters (Table III: 128-bit LPDDR5, 100 GB/s total).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DramConfig {
+    /// Aggregate DRAM bandwidth in bytes/s, shared by the whole package.
+    pub bw_total: f64,
+    /// Achievable fraction of peak (row-buffer / refresh efficiency —
+    /// documented assumption standing in for Ramulator2).
+    pub efficiency: f64,
+    /// Energy per bit in pJ (documented assumption for LPDDR5).
+    pub pj_per_bit: f64,
+}
+
+impl DramConfig {
+    pub fn paper_default() -> Self {
+        DramConfig { bw_total: 100e9, efficiency: 0.85, pj_per_bit: 8.0 }
+    }
+
+    /// Effective bytes per cycle at `freq_hz`, shared package-wide.
+    pub fn bytes_per_cycle(&self, freq_hz: f64) -> f64 {
+        self.bw_total * self.efficiency / freq_hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_chiplet_derived_quantities() {
+        let c = ChipletConfig::paper_default();
+        assert_eq!(c.oc_slots(), 128);
+        assert_eq!(c.macs_per_cycle(), 1024);
+        assert_eq!(c.weight_capacity(), 1 << 20);
+        // 1024 MAC/cycle * 800 MHz = 819.2 GMAC/s
+        assert!((c.peak_macs_per_sec() - 819.2e9).abs() < 1e3);
+    }
+
+    #[test]
+    fn nop_link_bandwidth() {
+        let n = NopConfig::paper_default();
+        // 100 GB/s over 4 ports at 800 MHz = 31.25 B/cycle/link
+        assert!((n.link_bytes_per_cycle(800e6) - 31.25).abs() < 1e-9);
+        assert!((n.chiplet_bytes_per_cycle(800e6) - 125.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dram_effective_bandwidth() {
+        let d = DramConfig::paper_default();
+        // 100 GB/s * 0.85 at 800 MHz = 106.25 B/cycle
+        assert!((d.bytes_per_cycle(800e6) - 106.25).abs() < 1e-9);
+    }
+}

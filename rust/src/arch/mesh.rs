@@ -1,0 +1,211 @@
+//! 2D-mesh package geometry and ZigZag region placement.
+//!
+//! The paper arranges each pipeline region's chiplets contiguously along a
+//! ZigZag (boustrophedon) traversal of the mesh — "an approach adopted and
+//! validated by previous works" (Tangram). This module provides:
+//!
+//! * the ZigZag linearization `index ↔ (x, y)`,
+//! * the *cut width* between two adjacent regions (how many mesh links the
+//!   inter-region traffic can use in parallel), and
+//! * centroid hop distances (for NoP energy accounting).
+
+/// Package-level mesh geometry.
+///
+/// Geometry queries sit on the DSE's hottest path (`Forward()` calls them
+/// per layer), so everything derivable is precomputed at construction:
+/// zigzag coordinates, the inverse coordinate→index map, and coordinate
+/// prefix sums (O(1) centroids for contiguous zigzag ranges).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mesh {
+    pub width: usize,
+    pub height: usize,
+    /// zigzag index → (x, y)
+    coords: Vec<(u32, u32)>,
+    /// y·width + x → zigzag index
+    inv: Vec<u32>,
+    /// prefix sums of x and y along zigzag order (len = chiplets + 1)
+    prefix_x: Vec<u64>,
+    prefix_y: Vec<u64>,
+}
+
+impl Mesh {
+    fn build(width: usize, height: usize) -> Mesh {
+        let n = width * height;
+        let mut coords = Vec::with_capacity(n);
+        let mut inv = vec![0u32; n];
+        let mut prefix_x = Vec::with_capacity(n + 1);
+        let mut prefix_y = Vec::with_capacity(n + 1);
+        prefix_x.push(0);
+        prefix_y.push(0);
+        for idx in 0..n {
+            let y = idx / width;
+            let r = idx % width;
+            let x = if y % 2 == 0 { r } else { width - 1 - r };
+            coords.push((x as u32, y as u32));
+            inv[y * width + x] = idx as u32;
+            prefix_x.push(prefix_x[idx] + x as u64);
+            prefix_y.push(prefix_y[idx] + y as u64);
+        }
+        Mesh { width, height, coords, inv, prefix_x, prefix_y }
+    }
+
+    /// Near-square mesh for a chiplet count (power-of-two counts give exact
+    /// factorizations: 16→4×4, 32→8×4, 64→8×8, 128→16×8, 256→16×16).
+    pub fn for_chiplets(n: usize) -> Self {
+        assert!(n > 0);
+        let mut w = (n as f64).sqrt().ceil() as usize;
+        while n % w != 0 {
+            w += 1;
+        }
+        Mesh::build(w, n / w)
+    }
+
+    /// Explicit geometry (tests).
+    pub fn new(width: usize, height: usize) -> Self {
+        Mesh::build(width, height)
+    }
+
+    pub fn chiplets(&self) -> usize {
+        self.width * self.height
+    }
+
+    /// ZigZag linear index → (x, y) coordinate.
+    #[inline]
+    pub fn zigzag_coord(&self, idx: usize) -> (usize, usize) {
+        let (x, y) = self.coords[idx];
+        (x as usize, y as usize)
+    }
+
+    /// Manhattan distance between two zigzag indices.
+    pub fn hop_distance(&self, a: usize, b: usize) -> usize {
+        let (ax, ay) = self.zigzag_coord(a);
+        let (bx, by) = self.zigzag_coord(b);
+        ax.abs_diff(bx) + ay.abs_diff(by)
+    }
+
+    /// Number of direct mesh links between region A = `[a0, a0+an)` and
+    /// region B = `[b0, b0+bn)` (zigzag index ranges). This is the *cut
+    /// width* inter-region transfers can exploit in parallel. Membership
+    /// of a neighbour coordinate in B is an O(1) range test on its zigzag
+    /// index (regions are zigzag-contiguous), so the whole query is
+    /// O(an) with zero allocation — this sits in the DSE hot loop.
+    pub fn cut_width(&self, a0: usize, an: usize, b0: usize, bn: usize) -> usize {
+        debug_assert!(a0 + an <= self.chiplets() && b0 + bn <= self.chiplets());
+        let in_b = |x: usize, y: usize| -> bool {
+            let idx = self.inv[y * self.width + x] as usize;
+            (b0..b0 + bn).contains(&idx)
+        };
+        let mut links = 0usize;
+        for i in a0..a0 + an {
+            let (x, y) = self.zigzag_coord(i);
+            if x > 0 && in_b(x - 1, y) {
+                links += 1;
+            }
+            if x + 1 < self.width && in_b(x + 1, y) {
+                links += 1;
+            }
+            if y > 0 && in_b(x, y - 1) {
+                links += 1;
+            }
+            if y + 1 < self.height && in_b(x, y + 1) {
+                links += 1;
+            }
+        }
+        links
+    }
+
+    /// Mean Manhattan hop distance between the centroids of two zigzag
+    /// ranges (≥1 when ranges are disjoint) — used for NoP energy (pJ/bit
+    /// is charged per hop). O(1) via coordinate prefix sums.
+    pub fn centroid_hops(&self, a0: usize, an: usize, b0: usize, bn: usize) -> f64 {
+        let centroid = |s: usize, n: usize| {
+            let sx = (self.prefix_x[s + n] - self.prefix_x[s]) as f64;
+            let sy = (self.prefix_y[s + n] - self.prefix_y[s]) as f64;
+            (sx / n as f64, sy / n as f64)
+        };
+        let (ax, ay) = centroid(a0, an);
+        let (bx, by) = centroid(b0, bn);
+        ((ax - bx).abs() + (ay - by).abs()).max(1.0)
+    }
+
+    /// Mean intra-region hop distance of a zigzag range (ring-neighbour
+    /// steps) — used for all-gather energy within a region. Consecutive
+    /// zigzag indices are always mesh neighbours (boustrophedon order),
+    /// so this is exactly 1 for any range with ≥2 chiplets.
+    pub fn intra_hops(&self, _s: usize, n: usize) -> f64 {
+        if n <= 1 {
+            0.0
+        } else {
+            1.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factorizations() {
+        for (n, w, h) in [(16, 4, 4), (32, 6, 0), (64, 8, 8), (256, 16, 16)] {
+            let m = Mesh::for_chiplets(n);
+            assert_eq!(m.chiplets(), n);
+            if h > 0 {
+                assert_eq!((m.width, m.height), (w, h));
+            }
+        }
+        // 32 = 8×4 (first divisor ≥ ceil(sqrt(32)) = 6 is 8)
+        let m = Mesh::for_chiplets(32);
+        assert_eq!((m.width, m.height), (8, 4));
+    }
+
+    #[test]
+    fn zigzag_snakes() {
+        let m = Mesh::new(4, 4);
+        assert_eq!(m.zigzag_coord(0), (0, 0));
+        assert_eq!(m.zigzag_coord(3), (3, 0));
+        assert_eq!(m.zigzag_coord(4), (3, 1)); // row 1 reverses
+        assert_eq!(m.zigzag_coord(7), (0, 1));
+        assert_eq!(m.zigzag_coord(8), (0, 2));
+        // consecutive zigzag indices are always mesh neighbours
+        for i in 0..15 {
+            assert_eq!(m.hop_distance(i, i + 1), 1, "i={i}");
+        }
+    }
+
+    #[test]
+    fn zigzag_is_permutation() {
+        let m = Mesh::new(5, 3);
+        let mut seen = vec![false; 15];
+        for i in 0..15 {
+            let (x, y) = m.zigzag_coord(i);
+            assert!(!seen[y * 5 + x]);
+            seen[y * 5 + x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn cut_width_adjacent_ranges() {
+        let m = Mesh::new(4, 4);
+        // First row vs second row: 4 vertical links.
+        assert_eq!(m.cut_width(0, 4, 4, 4), 4);
+        // Single chiplet vs its zigzag successor: 1 link.
+        assert_eq!(m.cut_width(0, 1, 1, 1), 1);
+        // Disjoint non-adjacent ranges: 0 links.
+        assert_eq!(m.cut_width(0, 1, 8, 1), 0);
+        // Symmetry.
+        assert_eq!(m.cut_width(0, 6, 6, 5), m.cut_width(6, 5, 0, 6));
+    }
+
+    #[test]
+    fn centroid_and_intra_hops() {
+        let m = Mesh::new(4, 4);
+        assert!(m.centroid_hops(0, 4, 4, 4) >= 1.0);
+        assert_eq!(m.intra_hops(0, 1), 0.0);
+        // a full zigzag row has unit neighbour steps
+        assert_eq!(m.intra_hops(0, 4), 1.0);
+        // larger separation → more hops
+        assert!(m.centroid_hops(0, 2, 14, 2) > m.centroid_hops(0, 2, 2, 2));
+    }
+}

@@ -1,0 +1,60 @@
+//! MCM hardware model: chiplet micro-architecture, package mesh geometry,
+//! and the combined configuration consumed by the cost models.
+
+pub mod chiplet;
+pub mod mesh;
+
+pub use chiplet::{ChipletConfig, DramConfig, NopConfig};
+pub use mesh::Mesh;
+
+/// Full MCM platform description (paper Table III + package scale).
+#[derive(Clone, Debug, PartialEq)]
+pub struct McmConfig {
+    pub chiplets: usize,
+    pub mesh: Mesh,
+    pub chiplet: ChipletConfig,
+    pub nop: NopConfig,
+    pub dram: DramConfig,
+}
+
+impl McmConfig {
+    /// The paper's platform at a given package scale (16–256 chiplets).
+    pub fn paper_default(chiplets: usize) -> Self {
+        McmConfig {
+            chiplets,
+            mesh: Mesh::for_chiplets(chiplets),
+            chiplet: ChipletConfig::paper_default(),
+            nop: NopConfig::paper_default(),
+            dram: DramConfig::paper_default(),
+        }
+    }
+
+    /// Package-wide weight storage (bytes) available for resident weights.
+    pub fn package_weight_capacity(&self) -> u64 {
+        self.chiplet.weight_capacity() * self.chiplets as u64
+    }
+
+    /// Package peak compute in MAC/s.
+    pub fn peak_macs_per_sec(&self) -> f64 {
+        self.chiplet.peak_macs_per_sec() * self.chiplets as f64
+    }
+
+    /// Convert cycles → seconds at the chiplet clock.
+    pub fn cycles_to_secs(&self, cycles: f64) -> f64 {
+        cycles / self.chiplet.freq_hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults_scale() {
+        let m = McmConfig::paper_default(64);
+        assert_eq!(m.mesh.chiplets(), 64);
+        assert_eq!(m.package_weight_capacity(), 64 << 20);
+        assert!((m.peak_macs_per_sec() - 64.0 * 819.2e9).abs() < 1e6);
+        assert!((m.cycles_to_secs(800e6) - 1.0).abs() < 1e-12);
+    }
+}

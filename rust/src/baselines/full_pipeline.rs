@@ -1,0 +1,143 @@
+//! Fully-pipelined baseline (DNNBuilder / TGPA-style): one segment, every
+//! layer its own pipeline stage across the package, weights resident
+//! (replicated for WSP — no §III-B sharing). Needs `L ≤ C` and the weight
+//! buffers to hold every stage simultaneously; the paper notes it "even
+//! fails to be valid due to weight buffer overflow" on deep nets — our
+//! capacity check reproduces that.
+
+use crate::arch::McmConfig;
+use crate::config::SimOptions;
+use crate::model::Network;
+use crate::pipeline::schedule::{Schedule, SegmentSchedule};
+use crate::pipeline::timeline::{eval_schedule, EvalContext};
+use crate::scope::partition::transition_partitions;
+use crate::scope::region_alloc::{improve_regions, proportional_allocate};
+use crate::scope::MethodResult;
+use crate::storage::StoragePolicy;
+
+/// Schedule one segment `[lo, hi)` with one layer per cluster: proportional
+/// regions + rebalance, WSP→ISP transition sweep. Shared with the
+/// segmented baseline.
+pub fn per_layer_segment(
+    ctx: &EvalContext,
+    lo: usize,
+    hi: usize,
+    m: u64,
+) -> Option<(SegmentSchedule, f64)> {
+    let l = hi - lo;
+    let c = ctx.mcm.chiplets;
+    if l > c {
+        return None; // a stage per layer needs a chiplet per layer
+    }
+    let loads: Vec<u64> = (lo..hi).map(|k| ctx.net.layers[k].macs()).collect();
+    let mut best: Option<(SegmentSchedule, f64)> = None;
+    for idx in 0..=l {
+        let partitions = transition_partitions(l, idx);
+        let Some(regions) = proportional_allocate(&loads, c) else {
+            continue;
+        };
+        let seed = SegmentSchedule {
+            lo,
+            hi,
+            bounds: (lo..=hi).collect(),
+            regions,
+            partitions,
+        };
+        if let Some(found) = improve_regions(ctx, seed, m, 64) {
+            let better = best
+                .as_ref()
+                .map(|b| found.latency < b.1)
+                .unwrap_or(true);
+            if better {
+                best = Some((found.schedule, found.latency));
+            }
+        }
+    }
+    best
+}
+
+/// Evaluate the fully-pipelined baseline.
+pub fn schedule_full_pipeline(net: &Network, mcm: &McmConfig, opts: &SimOptions) -> MethodResult {
+    // Strict capacity: the paper reports full pipelining "failing to be
+    // valid due to weight buffer overflow" — no DRAM fallback here.
+    let ctx = EvalContext {
+        net,
+        mcm,
+        opts,
+        policy: StoragePolicy::Replicated,
+        dram_fallback: false,
+    };
+    if net.len() > mcm.chiplets {
+        return MethodResult::invalid(
+            "full_pipeline",
+            &format!("{} layers > {} chiplets", net.len(), mcm.chiplets),
+        );
+    }
+    match per_layer_segment(&ctx, 0, net.len(), opts.samples) {
+        None => MethodResult::invalid("full_pipeline", "no valid stage allocation"),
+        Some((seg, _lat)) => {
+            let schedule = Schedule { method: "full_pipeline".into(), segments: vec![seg] };
+            let eval = eval_schedule(&ctx, &schedule);
+            MethodResult {
+                method: "full_pipeline".into(),
+                schedule: Some(schedule),
+                eval,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::{alexnet, resnet152, scopenet, vgg16};
+
+    #[test]
+    fn shallow_net_pipelines_fine() {
+        let r = schedule_full_pipeline(
+            &scopenet(),
+            &McmConfig::paper_default(16),
+            &SimOptions::default(),
+        );
+        assert!(r.eval.is_valid(), "{:?}", r.eval.error);
+        let s = r.schedule.unwrap();
+        assert_eq!(s.segments.len(), 1);
+        assert_eq!(s.total_clusters(), scopenet().len());
+    }
+
+    #[test]
+    fn deep_net_fails_on_small_package() {
+        // ResNet-152: 156 layers > 64 chiplets → invalid, as in Fig. 7.
+        let r = schedule_full_pipeline(
+            &resnet152(),
+            &McmConfig::paper_default(64),
+            &SimOptions::default(),
+        );
+        assert!(!r.eval.is_valid());
+    }
+
+    #[test]
+    fn weight_overflow_invalidates() {
+        // VGG16 on 16 chiplets: one stage per layer means fc6's 102 MB
+        // replica cannot fit a 1 MiB chiplet buffer.
+        let r = schedule_full_pipeline(
+            &vgg16(),
+            &McmConfig::paper_default(16),
+            &SimOptions::default(),
+        );
+        assert!(!r.eval.is_valid());
+    }
+
+    #[test]
+    fn alexnet_16_feasibility_depends_on_capacity() {
+        let r = schedule_full_pipeline(
+            &alexnet(),
+            &McmConfig::paper_default(16),
+            &SimOptions::default(),
+        );
+        // fc6 (37.7 MB) sharded over its region must fit 1 MiB/chiplet; a
+        // 16-chiplet region cannot hold it even fully ISP → invalid, which
+        // matches the paper excluding full-pipeline at low chiplet counts.
+        assert!(!r.eval.is_valid());
+    }
+}

@@ -1,0 +1,86 @@
+//! Baseline schedulers the paper compares against (§V-A):
+//! fully sequential, fully pipelined, and segmented pipeline.
+
+pub mod full_pipeline;
+pub mod segmented;
+pub mod sequential;
+
+use crate::arch::McmConfig;
+use crate::config::SimOptions;
+use crate::model::Network;
+use crate::scope::{schedule_scope, MethodResult};
+
+pub use full_pipeline::schedule_full_pipeline;
+pub use segmented::schedule_segmented;
+pub use sequential::schedule_sequential;
+
+/// Method names in the paper's Fig. 7 legend order.
+pub const METHOD_NAMES: &[&str] =
+    &["sequential", "full_pipeline", "segmented", "scope"];
+
+/// Run one method by name.
+pub fn run_method(name: &str, net: &Network, mcm: &McmConfig, opts: &SimOptions) -> MethodResult {
+    match name {
+        "sequential" => schedule_sequential(net, mcm, opts),
+        "full_pipeline" => schedule_full_pipeline(net, mcm, opts),
+        "segmented" => schedule_segmented(net, mcm, opts),
+        "scope" => schedule_scope(net, mcm, opts),
+        other => MethodResult::invalid(other, "unknown method"),
+    }
+}
+
+/// Run all four methods (Fig. 7 / Fig. 9 drivers).
+pub fn run_all(net: &Network, mcm: &McmConfig, opts: &SimOptions) -> Vec<MethodResult> {
+    METHOD_NAMES
+        .iter()
+        .map(|m| run_method(m, net, mcm, opts))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::alexnet;
+
+    #[test]
+    fn all_methods_run_on_alexnet_16() {
+        let net = alexnet();
+        let mcm = McmConfig::paper_default(16);
+        let opts = SimOptions::default();
+        let results = run_all(&net, &mcm, &opts);
+        assert_eq!(results.len(), 4);
+        // sequential and segmented and scope must be valid here
+        for r in &results {
+            if r.method != "full_pipeline" {
+                assert!(r.eval.is_valid(), "{}: {:?}", r.method, r.eval.error);
+            }
+        }
+    }
+
+    #[test]
+    fn scope_at_least_matches_segmented() {
+        // Scope's search space strictly contains the segmented pipeline's
+        // (modulo the storage policy, which only helps).
+        let net = alexnet();
+        let mcm = McmConfig::paper_default(64);
+        let opts = SimOptions::default();
+        let seg = schedule_segmented(&net, &mcm, &opts);
+        let scope = schedule_scope(&net, &mcm, &opts);
+        assert!(scope.eval.is_valid());
+        if seg.eval.is_valid() {
+            assert!(
+                scope.throughput() >= seg.throughput() * 0.999,
+                "scope {} < segmented {}",
+                scope.throughput(),
+                seg.throughput()
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_method_is_invalid() {
+        let net = alexnet();
+        let r = run_method("nope", &net, &McmConfig::paper_default(16), &SimOptions::default());
+        assert!(!r.eval.is_valid());
+    }
+}

@@ -1,0 +1,82 @@
+//! Segmented-pipeline baseline (Tangram / DeepBurning-SEG / Gemini) — the
+//! paper's SOTA comparison: the chain splits into segments (same allocator
+//! as Scope, per §V-A fairness); within a segment every layer is its own
+//! pipeline stage; WSP weights are fully replicated (no §III-B sharing).
+
+use crate::arch::McmConfig;
+use crate::config::SimOptions;
+use crate::model::Network;
+use crate::pipeline::schedule::Schedule;
+use crate::pipeline::timeline::{eval_schedule, EvalContext};
+use crate::scope::{min_segments, segmenter, MethodResult};
+use crate::storage::StoragePolicy;
+
+use super::full_pipeline::per_layer_segment;
+
+/// How many segment counts past the capacity lower bound to explore
+/// (kept identical to Scope's slack for the §V-A fairness requirement).
+const SEGMENT_SLACK: usize = 3;
+
+/// Evaluate the segmented-pipeline baseline.
+pub fn schedule_segmented(net: &Network, mcm: &McmConfig, opts: &SimOptions) -> MethodResult {
+    let ctx = EvalContext {
+        net,
+        mcm,
+        opts,
+        policy: StoragePolicy::Replicated,
+        dram_fallback: true,
+    };
+    // Replication inflates footprints, so the capacity-driven lower bound
+    // is only a lower bound; invalid counts are rejected by evaluation.
+    let lo_s = min_segments(net, mcm).max(1);
+    // Per-layer stages additionally require each segment to have ≤ C
+    // layers: segment count must cover that too.
+    let lo_s = lo_s.max(net.len().div_ceil(mcm.chiplets));
+    let found = segmenter::search_segments_capped(
+        net,
+        lo_s,
+        lo_s + SEGMENT_SLACK,
+        mcm.chiplets, // per-layer stages: a segment cannot exceed C layers
+        |lo, hi| per_layer_segment(&ctx, lo, hi, opts.samples),
+    );
+    match found {
+        None => MethodResult::invalid("segmented", "no valid segmentation"),
+        Some((_bounds, segments, _lat)) => {
+            let schedule = Schedule { method: "segmented".into(), segments };
+            let eval = eval_schedule(&ctx, &schedule);
+            MethodResult { method: "segmented".into(), schedule: Some(schedule), eval }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::{alexnet, resnet50};
+
+    #[test]
+    fn segments_alexnet_16() {
+        let r = schedule_segmented(
+            &alexnet(),
+            &McmConfig::paper_default(16),
+            &SimOptions::default(),
+        );
+        assert!(r.eval.is_valid(), "{:?}", r.eval.error);
+        let s = r.schedule.unwrap();
+        // every cluster is a single layer
+        for seg in &s.segments {
+            assert_eq!(seg.n_clusters(), seg.n_layers());
+        }
+    }
+
+    #[test]
+    fn deep_net_needs_multiple_segments() {
+        let r = schedule_segmented(
+            &resnet50(),
+            &McmConfig::paper_default(64),
+            &SimOptions::default(),
+        );
+        assert!(r.eval.is_valid(), "{:?}", r.eval.error);
+        assert!(r.schedule.unwrap().segments.len() >= 54usize.div_ceil(64).max(1));
+    }
+}

@@ -1,0 +1,98 @@
+//! Minimal benchmark harness (criterion is not in the offline vendor set).
+//!
+//! Benches are plain `harness = false` binaries that time closures with
+//! warm-up + repeated measurement and print mean/stddev rows, then emit
+//! the paper-figure tables through `report::figures`.
+
+use std::time::Instant;
+
+use crate::util::stats;
+use crate::util::table::Table;
+
+/// One timed measurement series.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// Seconds per iteration.
+    pub samples: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        stats::stddev(&self.samples)
+    }
+}
+
+/// Time `f` with `warmup` discarded runs and `iters` measured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Measurement { name: name.to_string(), samples }
+}
+
+/// Render a set of measurements as a table.
+pub fn report(title: &str, measurements: &[Measurement]) -> Table {
+    let mut t = Table::new(title, &["bench", "mean", "stddev", "iters"]);
+    for m in measurements {
+        t.row(vec![
+            m.name.clone(),
+            humanize_secs(m.mean()),
+            humanize_secs(m.stddev()),
+            m.samples.len().to_string(),
+        ]);
+    }
+    t
+}
+
+/// Human-friendly seconds.
+pub fn humanize_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures() {
+        let m = bench("noop", 1, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(m.samples.len(), 5);
+        assert!(m.mean() >= 0.0);
+    }
+
+    #[test]
+    fn humanize() {
+        assert_eq!(humanize_secs(2.5), "2.500 s");
+        assert_eq!(humanize_secs(0.0025), "2.500 ms");
+        assert_eq!(humanize_secs(2.5e-6), "2.500 µs");
+        assert_eq!(humanize_secs(3e-9), "3.0 ns");
+    }
+
+    #[test]
+    fn report_renders() {
+        let m = bench("x", 0, 2, || {});
+        let t = report("t", &[m]);
+        assert!(t.render().contains("x"));
+    }
+}

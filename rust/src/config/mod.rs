@@ -1,0 +1,163 @@
+//! Configuration system: simulation options + platform overrides, loadable
+//! from a `key = value` config file and/or CLI flags.
+//!
+//! File format (no serde in the offline vendor set, so a deliberately small
+//! grammar): one `key = value` per line, `#` comments, sections ignored.
+//! Keys mirror the struct fields, e.g.:
+//!
+//! ```text
+//! # scope.cfg
+//! chiplets   = 256
+//! samples    = 64
+//! dram.bw    = 100e9
+//! nop.bw     = 100e9
+//! distributed_weights = true
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::arch::McmConfig;
+
+/// Evaluation options shared by every scheduler/bench.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimOptions {
+    /// Pipeline depth in samples (paper's `m` in Equ. 2; Fig. 7 uses a
+    /// batch large enough to amortize warm-up — we default to 64).
+    pub samples: u64,
+    /// Enable §III-B distributed weight buffering (Scope's storage scheme).
+    pub distributed_weights: bool,
+    /// Overlap computation and NoP communication (Equ. 7). On for every
+    /// method per the paper; exposed for the ablation bench.
+    pub overlap_comm: bool,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions { samples: 64, distributed_weights: true, overlap_comm: true }
+    }
+}
+
+/// A full experiment configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub mcm: McmConfig,
+    pub sim: SimOptions,
+}
+
+impl Config {
+    /// The paper's platform at a package scale, default sim options.
+    pub fn paper_default(chiplets: usize) -> Config {
+        Config { mcm: McmConfig::paper_default(chiplets), sim: SimOptions::default() }
+    }
+
+    /// Apply `key = value` overrides from a config file.
+    pub fn load_file(path: &Path, chiplets_hint: usize) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let kv = parse_kv(&text)?;
+        Config::from_kv(&kv, chiplets_hint)
+    }
+
+    /// Build from a parsed key/value map (also used by tests and CLI).
+    pub fn from_kv(kv: &BTreeMap<String, String>, chiplets_hint: usize) -> Result<Config> {
+        let chiplets = match kv.get("chiplets") {
+            Some(v) => parse_num(v)? as usize,
+            None => chiplets_hint,
+        };
+        let mut cfg = Config::paper_default(chiplets);
+        for (key, value) in kv {
+            match key.as_str() {
+                "chiplets" => {}
+                "samples" => cfg.sim.samples = parse_num(value)? as u64,
+                "distributed_weights" => cfg.sim.distributed_weights = parse_bool(value)?,
+                "overlap_comm" => cfg.sim.overlap_comm = parse_bool(value)?,
+                "freq" => cfg.mcm.chiplet.freq_hz = parse_num(value)?,
+                "mac_energy_pj" => cfg.mcm.chiplet.mac_energy_pj = parse_num(value)?,
+                "sram_pj_per_bit" => cfg.mcm.chiplet.sram_pj_per_bit = parse_num(value)?,
+                "weight_buf_per_pe" => {
+                    cfg.mcm.chiplet.weight_buf_per_pe = parse_num(value)? as u64
+                }
+                "nop.bw" => cfg.mcm.nop.bw_per_chiplet = parse_num(value)?,
+                "nop.pj_per_bit" => cfg.mcm.nop.pj_per_bit_hop = parse_num(value)?,
+                "nop.hop_cycles" => cfg.mcm.nop.hop_cycles = parse_num(value)?,
+                "dram.bw" => cfg.mcm.dram.bw_total = parse_num(value)?,
+                "dram.efficiency" => cfg.mcm.dram.efficiency = parse_num(value)?,
+                "dram.pj_per_bit" => cfg.mcm.dram.pj_per_bit = parse_num(value)?,
+                other => return Err(anyhow!("unknown config key {other:?}")),
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+/// Parse the `key = value` grammar.
+pub fn parse_kv(text: &str) -> Result<BTreeMap<String, String>> {
+    let mut out = BTreeMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() || line.starts_with('[') {
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+        out.insert(k.trim().to_string(), v.trim().to_string());
+    }
+    Ok(out)
+}
+
+fn parse_num(v: &str) -> Result<f64> {
+    v.parse::<f64>()
+        .map_err(|_| anyhow!("expected a number, got {v:?}"))
+}
+
+fn parse_bool(v: &str) -> Result<bool> {
+    match v {
+        "true" | "1" | "yes" => Ok(true),
+        "false" | "0" | "no" => Ok(false),
+        _ => Err(anyhow!("expected a bool, got {v:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_grammar() {
+        let kv = parse_kv("a = 1\n# comment\n[sec]\nb=x # trail\n\n").unwrap();
+        assert_eq!(kv["a"], "1");
+        assert_eq!(kv["b"], "x");
+        assert!(parse_kv("oops").is_err());
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let kv = parse_kv(
+            "chiplets = 64\nsamples = 16\nnop.bw = 50e9\ndistributed_weights = false\n",
+        )
+        .unwrap();
+        let cfg = Config::from_kv(&kv, 16).unwrap();
+        assert_eq!(cfg.mcm.chiplets, 64);
+        assert_eq!(cfg.sim.samples, 16);
+        assert_eq!(cfg.mcm.nop.bw_per_chiplet, 50e9);
+        assert!(!cfg.sim.distributed_weights);
+        // untouched fields keep paper defaults
+        assert_eq!(cfg.mcm.chiplet.macs_per_cycle(), 1024);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let kv = parse_kv("nonsense = 1\n").unwrap();
+        assert!(Config::from_kv(&kv, 16).is_err());
+    }
+
+    #[test]
+    fn hint_used_without_chiplets_key() {
+        let cfg = Config::from_kv(&BTreeMap::new(), 128).unwrap();
+        assert_eq!(cfg.mcm.chiplets, 128);
+    }
+}

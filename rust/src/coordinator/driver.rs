@@ -1,0 +1,232 @@
+//! The functional merged-pipeline driver: builds the stage topology from
+//! the artifact manifest, streams samples through it, and validates the
+//! outputs against the golden whole-network module.
+//!
+//! This is the end-to-end proof that the three layers compose: Pallas
+//! kernel (L1) → JAX cluster modules (L2, AOT HLO) → rust pipelined
+//! coordination (L3), with python nowhere on the request path.
+
+use std::sync::mpsc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::Manifest;
+
+use super::metrics::{LatencyTracker, PipelineReport};
+use super::worker::{
+    spawn_isp_stage, spawn_stage, IspLayerSpec, Packet, StageSpec, CHANNEL_DEPTH,
+};
+
+/// Pipeline topology to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PipelineMode {
+    /// One stage per cluster artifact — the merged pipeline.
+    Merged,
+    /// Merged, with the ISP cluster replaced by channel-sharded execution
+    /// (the functional ISP partitioning demo).
+    MergedIsp,
+    /// The whole network as a single stage (no pipelining) — the
+    /// sequential-execution reference point.
+    Single,
+}
+
+impl PipelineMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            PipelineMode::Merged => "merged",
+            PipelineMode::MergedIsp => "merged+isp",
+            PipelineMode::Single => "single",
+        }
+    }
+}
+
+fn cluster_spec(m: &Manifest, idx: usize) -> StageSpec {
+    let c = &m.clusters[idx];
+    StageSpec {
+        name: format!("cluster{}", c.index),
+        hlo: c.file.clone(),
+        params_file: c.params_file.clone(),
+        param_shapes: c.param_shapes.clone(),
+        input_shape: c.input_shape.clone(),
+        output_shape: c.output_shape.clone(),
+    }
+}
+
+fn full_spec(m: &Manifest) -> StageSpec {
+    StageSpec {
+        name: "full".into(),
+        hlo: m.full_file.clone(),
+        params_file: m.full_params_file.clone(),
+        param_shapes: m.full_param_shapes.clone(),
+        input_shape: m.input_shape.clone(),
+        output_shape: vec![m.num_classes],
+    }
+}
+
+fn isp_specs(m: &Manifest) -> Vec<IspLayerSpec> {
+    m.isp_layers
+        .iter()
+        .map(|e| IspLayerSpec {
+            layer: e.layer.clone(),
+            shards: e
+                .files
+                .iter()
+                .zip(&e.shard_params)
+                .map(|(f, (pf, ps))| (f.clone(), pf.clone(), ps.clone()))
+                .collect(),
+            input_shape: e.input_shape.clone(),
+            shard_output_shape: e.shard_output_shape.clone(),
+            full_output_shape: e.full_output_shape.clone(),
+        })
+        .collect()
+}
+
+/// Run `samples` inputs (golden inputs, cycled) through the pipeline and
+/// validate every output against the golden outputs.
+pub fn run_pipeline(m: &Manifest, mode: PipelineMode, samples: usize) -> Result<PipelineReport> {
+    if samples == 0 {
+        bail!("samples must be ≥ 1");
+    }
+    let (xs, ys) = m.golden()?;
+
+    // ---- build the stage chain ------------------------------------------
+    let (feed_tx, mut next_rx) = mpsc::sync_channel::<Packet>(CHANNEL_DEPTH);
+    let mut handles = Vec::new();
+    let mut stages = 0usize;
+    match mode {
+        PipelineMode::Single => {
+            let (tx, rx_out) = mpsc::sync_channel(CHANNEL_DEPTH);
+            handles.push(spawn_stage(full_spec(m), next_rx, tx));
+            next_rx = rx_out;
+            stages = 1;
+        }
+        PipelineMode::Merged | PipelineMode::MergedIsp => {
+            for idx in 0..m.clusters.len() {
+                let (tx, rx_out) = mpsc::sync_channel(CHANNEL_DEPTH);
+                if mode == PipelineMode::MergedIsp && idx == m.isp_cluster {
+                    handles.push(spawn_isp_stage(
+                        format!("cluster{idx}-isp"),
+                        isp_specs(m),
+                        next_rx,
+                        tx,
+                    ));
+                } else {
+                    handles.push(spawn_stage(cluster_spec(m, idx), next_rx, tx));
+                }
+                next_rx = rx_out;
+                stages += 1;
+            }
+        }
+    }
+    let sink = next_rx;
+
+    // ---- feed + collect ---------------------------------------------------
+    // Feeder thread so the bounded channels create real pipeline overlap;
+    // feed timestamps are shared with the collector for latency tracking.
+    let in_len: usize = m.input_shape.iter().product();
+    let feed_inputs: Vec<Vec<f32>> =
+        (0..samples).map(|i| xs[i % xs.len()].clone()).collect();
+    let tracker = std::sync::Arc::new(std::sync::Mutex::new(LatencyTracker::new(samples)));
+    let feeder = {
+        let tracker = tracker.clone();
+        let inputs = feed_inputs;
+        std::thread::spawn(move || -> Result<()> {
+            for (seq, x) in inputs.into_iter().enumerate() {
+                debug_assert_eq!(x.len(), in_len);
+                tracker.lock().unwrap().fed(seq);
+                feed_tx
+                    .send((seq, x))
+                    .map_err(|_| anyhow::anyhow!("pipeline hung up at sample {seq}"))?;
+            }
+            Ok(())
+        })
+    };
+
+    let mut max_abs_err = 0.0f64;
+    let mut received = 0usize;
+    while received < samples {
+        let Ok((seq, out)) = sink.recv() else {
+            break;
+        };
+        received += 1;
+        tracker.lock().unwrap().completed(seq);
+        let want = &ys[seq % ys.len()];
+        if out.len() != want.len() {
+            bail!("sample {seq}: output len {} ≠ {}", out.len(), want.len());
+        }
+        for (a, b) in out.iter().zip(want) {
+            max_abs_err = max_abs_err.max((a - b).abs() as f64);
+        }
+    }
+    let (wall, latencies) = {
+        let t = tracker.lock().unwrap();
+        (t.wall().as_secs_f64(), t.latencies.clone())
+    };
+    drop(sink);
+    feeder
+        .join()
+        .map_err(|_| anyhow::anyhow!("feeder panicked"))?
+        .context("feeder failed")?;
+    for h in handles {
+        h.join().map_err(|_| anyhow::anyhow!("stage panicked"))??;
+    }
+    if received != samples {
+        bail!("pipeline delivered {received} of {samples} samples");
+    }
+
+    Ok(PipelineReport {
+        mode: mode.name().to_string(),
+        samples,
+        stages,
+        latencies,
+        wall_secs: wall,
+        max_abs_err,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(&dir).unwrap())
+        } else {
+            eprintln!("skipping: artifacts not built");
+            None
+        }
+    }
+
+    #[test]
+    fn merged_pipeline_matches_golden() {
+        let Some(m) = manifest() else { return };
+        let r = run_pipeline(&m, PipelineMode::Merged, 8).unwrap();
+        assert_eq!(r.samples, 8);
+        assert_eq!(r.stages, 3);
+        assert!(r.numerics_ok(1e-3), "max_abs_err = {}", r.max_abs_err);
+        assert!(r.throughput() > 0.0);
+    }
+
+    #[test]
+    fn isp_sharded_pipeline_matches_golden() {
+        let Some(m) = manifest() else { return };
+        let r = run_pipeline(&m, PipelineMode::MergedIsp, 6).unwrap();
+        assert!(r.numerics_ok(1e-3), "max_abs_err = {}", r.max_abs_err);
+        assert_eq!(r.stages, 3);
+    }
+
+    #[test]
+    fn single_stage_matches_golden() {
+        let Some(m) = manifest() else { return };
+        let r = run_pipeline(&m, PipelineMode::Single, 4).unwrap();
+        assert!(r.numerics_ok(1e-3), "max_abs_err = {}", r.max_abs_err);
+        assert_eq!(r.stages, 1);
+    }
+
+    #[test]
+    fn zero_samples_rejected() {
+        let Some(m) = manifest() else { return };
+        assert!(run_pipeline(&m, PipelineMode::Merged, 0).is_err());
+    }
+}

@@ -1,0 +1,107 @@
+//! Pipeline execution metrics: per-sample latency, wall time, throughput,
+//! and numerical deviation versus the golden module.
+
+use std::time::{Duration, Instant};
+
+/// Report of one functional pipeline run.
+#[derive(Clone, Debug)]
+pub struct PipelineReport {
+    pub mode: String,
+    pub samples: usize,
+    pub stages: usize,
+    /// End-to-end latency per sample (seconds), in completion order.
+    pub latencies: Vec<f64>,
+    /// Wall-clock seconds from first feed to last completion.
+    pub wall_secs: f64,
+    /// Max |output − golden| across all samples.
+    pub max_abs_err: f64,
+}
+
+impl PipelineReport {
+    pub fn throughput(&self) -> f64 {
+        self.samples as f64 / self.wall_secs.max(1e-12)
+    }
+
+    pub fn mean_latency(&self) -> f64 {
+        crate::util::stats::mean(&self.latencies)
+    }
+
+    pub fn p99_latency(&self) -> f64 {
+        crate::util::stats::percentile(&self.latencies, 99.0)
+    }
+
+    /// Did every sample match the golden outputs to tolerance?
+    pub fn numerics_ok(&self, tol: f64) -> bool {
+        self.max_abs_err <= tol
+    }
+}
+
+/// Tracks in-flight samples by sequence number.
+#[derive(Debug)]
+pub struct LatencyTracker {
+    start: Instant,
+    feeds: Vec<Option<Instant>>,
+    pub latencies: Vec<f64>,
+}
+
+impl LatencyTracker {
+    pub fn new(samples: usize) -> LatencyTracker {
+        LatencyTracker {
+            start: Instant::now(),
+            feeds: vec![None; samples],
+            latencies: Vec::with_capacity(samples),
+        }
+    }
+
+    pub fn fed(&mut self, seq: usize) {
+        self.feeds[seq] = Some(Instant::now());
+    }
+
+    pub fn completed(&mut self, seq: usize) {
+        let t0 = self.feeds[seq].expect("completed before fed");
+        self.latencies.push(t0.elapsed().as_secs_f64());
+    }
+
+    pub fn wall(&self) -> Duration {
+        self.start.elapsed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracker_roundtrip() {
+        let mut t = LatencyTracker::new(2);
+        t.fed(0);
+        t.fed(1);
+        t.completed(0);
+        t.completed(1);
+        assert_eq!(t.latencies.len(), 2);
+        assert!(t.latencies.iter().all(|&l| l >= 0.0));
+    }
+
+    #[test]
+    fn report_stats() {
+        let r = PipelineReport {
+            mode: "merged".into(),
+            samples: 4,
+            stages: 3,
+            latencies: vec![0.1, 0.2, 0.3, 0.4],
+            wall_secs: 2.0,
+            max_abs_err: 1e-5,
+        };
+        assert_eq!(r.throughput(), 2.0);
+        assert!((r.mean_latency() - 0.25).abs() < 1e-12);
+        assert!(r.numerics_ok(1e-3));
+        assert!(!r.numerics_ok(1e-6));
+    }
+
+    #[test]
+    #[should_panic(expected = "completed before fed")]
+    fn completing_unfed_panics() {
+        let mut t = LatencyTracker::new(1);
+        t.completed(0);
+    }
+}

@@ -1,0 +1,10 @@
+//! The functional coordinator: runs a merged-pipeline schedule on real
+//! tensors — worker threads as chiplet regions, bounded channels as the
+//! NoP, AOT-compiled XLA modules as the cluster compute.
+
+pub mod driver;
+pub mod metrics;
+pub mod worker;
+
+pub use driver::{run_pipeline, PipelineMode};
+pub use metrics::PipelineReport;

@@ -1,0 +1,185 @@
+//! Pipeline stage workers: OS threads standing in for chiplet regions,
+//! bounded channels standing in for the NoP.
+//!
+//! Each worker owns a thread-local PJRT client + compiled executable
+//! (`PjRtLoadedExecutable` is not `Send`) and that stage's weights — the
+//! coordinator owns weight *placement*, mirroring §III-B.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{Manifest, Runtime};
+
+/// A tensor moving through the pipeline: (sequence number, data).
+pub type Packet = (usize, Vec<f32>);
+
+/// Channel depth — the "NoP buffer" between regions; small so backpressure
+/// is real (a stalled stage stalls its producer, as on the package).
+pub const CHANNEL_DEPTH: usize = 2;
+
+/// Everything a mono-cluster stage needs to run.
+#[derive(Clone, Debug)]
+pub struct StageSpec {
+    pub name: String,
+    pub hlo: PathBuf,
+    pub params_file: PathBuf,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+}
+
+impl StageSpec {
+    /// All module input shapes: activation first, then weights.
+    pub fn all_input_shapes(&self) -> Vec<Vec<usize>> {
+        let mut v = vec![self.input_shape.clone()];
+        v.extend(self.param_shapes.iter().cloned());
+        v
+    }
+}
+
+/// Spawn a mono-cluster stage worker: recv activation → execute → send.
+/// The thread exits when the input channel closes; errors propagate
+/// through the join handle.
+pub fn spawn_stage(
+    spec: StageSpec,
+    rx: Receiver<Packet>,
+    tx: SyncSender<Packet>,
+) -> JoinHandle<Result<()>> {
+    std::thread::spawn(move || -> Result<()> {
+        let rt = Runtime::cpu().with_context(|| format!("stage {}", spec.name))?;
+        let exe = rt.load_hlo(&spec.hlo, &spec.all_input_shapes())?;
+        let params = Manifest::load_params(&spec.params_file, &spec.param_shapes)?;
+        for (seq, act) in rx {
+            let mut inputs: Vec<(&[f32], &[usize])> =
+                vec![(&act, &spec.input_shape[..])];
+            for (p, s) in params.iter().zip(&spec.param_shapes) {
+                inputs.push((p, s));
+            }
+            let out = exe
+                .run(&inputs)
+                .with_context(|| format!("stage {} sample {seq}", spec.name))?;
+            if tx.send((seq, out)).is_err() {
+                break; // downstream hung up
+            }
+        }
+        Ok(())
+    })
+}
+
+/// One ISP-sharded layer inside a sharded stage.
+#[derive(Clone, Debug)]
+pub struct IspLayerSpec {
+    pub layer: String,
+    /// One (hlo, params_file, param_shapes) per shard.
+    pub shards: Vec<(PathBuf, PathBuf, Vec<Vec<usize>>)>,
+    pub input_shape: Vec<usize>,
+    pub shard_output_shape: Vec<usize>,
+    pub full_output_shape: Vec<usize>,
+}
+
+/// Concatenate per-shard channel slices into the full activation:
+/// shards hold NHWC tensors split on the channel axis.
+pub fn gather_channels(shards: &[Vec<f32>], shard_shape: &[usize]) -> Vec<f32> {
+    let c = *shard_shape.last().expect("empty shape");
+    let pixels: usize = shard_shape[..shard_shape.len() - 1].iter().product();
+    let ways = shards.len();
+    let mut out = vec![0.0f32; pixels * c * ways];
+    for p in 0..pixels {
+        for (s, shard) in shards.iter().enumerate() {
+            let dst = p * c * ways + s * c;
+            out[dst..dst + c].copy_from_slice(&shard[p * c..(p + 1) * c]);
+        }
+    }
+    out
+}
+
+/// Spawn an ISP-sharded stage: per sample, each layer runs as `ways`
+/// channel shards on the full (replicated) input — the Table II ISP→ISP
+/// pattern — and the shard halves are gathered before the next layer.
+///
+/// Shard executables live on this one thread (the CPU PJRT client already
+/// parallelizes internally; what we demonstrate is the *dataflow*:
+/// replicate → shard-compute → all-gather, with volumes exactly matching
+/// Table II).
+pub fn spawn_isp_stage(
+    name: String,
+    layers: Vec<IspLayerSpec>,
+    rx: Receiver<Packet>,
+    tx: SyncSender<Packet>,
+) -> JoinHandle<Result<()>> {
+    std::thread::spawn(move || -> Result<()> {
+        let rt = Runtime::cpu().with_context(|| format!("isp stage {name}"))?;
+        // compile every shard of every layer
+        let mut compiled = Vec::new();
+        for l in &layers {
+            let mut shard_exes = Vec::new();
+            for (hlo, pfile, pshapes) in &l.shards {
+                let mut shapes = vec![l.input_shape.clone()];
+                shapes.extend(pshapes.iter().cloned());
+                let exe = rt.load_hlo(hlo, &shapes)?;
+                let params = Manifest::load_params(pfile, pshapes)?;
+                shard_exes.push((exe, params, pshapes.clone()));
+            }
+            compiled.push(shard_exes);
+        }
+        for (seq, mut act) in rx {
+            for (l, shard_exes) in layers.iter().zip(&compiled) {
+                let mut halves = Vec::with_capacity(shard_exes.len());
+                for (exe, params, pshapes) in shard_exes {
+                    // input replicated to every shard (ISP)
+                    let mut inputs: Vec<(&[f32], &[usize])> =
+                        vec![(&act, &l.input_shape[..])];
+                    for (p, s) in params.iter().zip(pshapes) {
+                        inputs.push((p, s));
+                    }
+                    halves.push(exe.run(&inputs).with_context(|| {
+                        format!("isp {}.{} sample {seq}", name, l.layer)
+                    })?);
+                }
+                // ISP→ISP all-gather: (R−1)·Output volume
+                act = gather_channels(&halves, &l.shard_output_shape);
+            }
+            if tx.send((seq, act)).is_err() {
+                break;
+            }
+        }
+        Ok(())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_interleaves_channels() {
+        // 2 pixels, 2 channels per shard, 2 shards
+        let a = vec![1.0, 2.0, 5.0, 6.0]; // shard 0: pix0 ch0,1 / pix1 ch0,1
+        let b = vec![3.0, 4.0, 7.0, 8.0];
+        let out = gather_channels(&[a, b], &[2, 1, 2]);
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn gather_single_shard_is_identity() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(gather_channels(&[a.clone()], &[2, 2, 1]), a);
+    }
+
+    #[test]
+    fn stage_spec_shapes() {
+        let s = StageSpec {
+            name: "c0".into(),
+            hlo: "x".into(),
+            params_file: "p".into(),
+            param_shapes: vec![vec![3, 3], vec![4]],
+            input_shape: vec![8, 8, 3],
+            output_shape: vec![8, 8, 16],
+        };
+        assert_eq!(s.all_input_shapes().len(), 3);
+        assert_eq!(s.all_input_shapes()[0], vec![8, 8, 3]);
+    }
+}

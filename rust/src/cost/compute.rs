@@ -1,0 +1,144 @@
+//! Computation-phase cost model (paper Equ. 5) — the Timeloop substitute.
+//!
+//! Weight-stationary mapping on the Table III chiplet: output channels map
+//! spatially onto the PE×lane grid (128 slots), the reduction
+//! (Cin·Kh·Kw) onto the 8 MACs per lane, output pixels stream temporally.
+//! Per-chiplet latency is the exact tile count:
+//!
+//! ```text
+//! cycles = ceil(co_shard / 128) · ceil(red / 8) · px_shard
+//! ```
+//!
+//! which charges the paper's two utilization effects: ISP shrinks the
+//! output-channel dimension (`co/R < 128` wastes lanes — "ISP reduces the
+//! parallelizable weight dimension"), WSP shrinks pixels (px/R below one
+//! row rounds up — over-partitioning waste).
+
+use crate::arch::ChipletConfig;
+use crate::model::Layer;
+use crate::pipeline::schedule::Partition;
+use crate::util::ceil_div;
+
+/// Per-chiplet shard of a layer under a partitioning over `r` chiplets.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Shard {
+    /// Output channels computed by one chiplet.
+    pub co: u64,
+    /// Output pixels computed by one chiplet (pre-pool compute pixels).
+    pub px: u64,
+    /// Reduction length (never sharded under ISP/WSP).
+    pub red: u64,
+}
+
+/// The shard geometry of `layer` under partition `p` over `r` chiplets.
+///
+/// WSP shards whole output *rows* (halo geometry assumes contiguous bands),
+/// so the per-chiplet pixel count is `ceil(rows/r) · row_width`.
+pub fn shard(layer: &Layer, p: Partition, r: u64) -> Shard {
+    debug_assert!(r >= 1);
+    match p {
+        Partition::Isp => Shard {
+            co: ceil_div(layer.cout, r),
+            px: layer.pixels(),
+            red: layer.reduction(),
+        },
+        Partition::Wsp => Shard {
+            co: layer.cout,
+            px: ceil_div(layer.conv_hout(), r) * layer.conv_wout(),
+            red: layer.reduction(),
+        },
+    }
+}
+
+/// Computation-phase cycles on one chiplet (Equ. 5's `F_comp`).
+pub fn comp_cycles(layer: &Layer, p: Partition, r: u64, chip: &ChipletConfig) -> f64 {
+    let s = shard(layer, p, r);
+    let oc_tiles = ceil_div(s.co, chip.oc_slots());
+    let red_tiles = ceil_div(s.red.max(1), chip.macs_per_lane);
+    (oc_tiles * red_tiles * s.px) as f64
+}
+
+/// Hardware utilization of the partitioned layer: useful MACs over issued
+/// MAC slots across the region (reported in Fig. 10-style analyses).
+pub fn utilization(layer: &Layer, p: Partition, r: u64, chip: &ChipletConfig) -> f64 {
+    let cycles = comp_cycles(layer, p, r, chip);
+    if cycles == 0.0 {
+        return 0.0;
+    }
+    let useful = layer.macs() as f64;
+    let issued = cycles * chip.macs_per_cycle() as f64 * r as f64;
+    useful / issued
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Layer;
+
+    fn chip() -> ChipletConfig {
+        ChipletConfig::paper_default()
+    }
+
+    #[test]
+    fn unpartitioned_dense_layer_is_near_peak() {
+        // 128 out channels, reduction multiple of 8: perfect tiling.
+        let l = Layer::conv("c", 16, 16, 64, 128, 3, 1, 1);
+        let u = utilization(&l, Partition::Wsp, 1, &chip());
+        assert!((u - 1.0).abs() < 1e-9, "u={u}");
+        assert_eq!(
+            comp_cycles(&l, Partition::Wsp, 1, &chip()),
+            (64 * 9 / 8 * 256) as f64 // 1 oc-tile × 72 red-tiles × 256 px
+        );
+    }
+
+    #[test]
+    fn isp_loses_utilization_when_co_shard_small() {
+        // 128 channels over 4 chiplets = 32/chiplet: only 32 of 128 slots.
+        let l = Layer::conv("c", 16, 16, 64, 128, 3, 1, 1);
+        let u4 = utilization(&l, Partition::Isp, 4, &chip());
+        assert!((u4 - 0.25).abs() < 1e-9, "u4={u4}");
+        // WSP keeps full channel width: utilization stays 1 for 256px/4.
+        let w4 = utilization(&l, Partition::Wsp, 4, &chip());
+        assert!((w4 - 1.0).abs() < 1e-9, "w4={w4}");
+    }
+
+    #[test]
+    fn wsp_loses_utilization_when_overpartitioned() {
+        // 16 output rows over 32 chiplets: each still does ≥1 row; half the
+        // "region time" is wasted (px rounds to 1 row on every chiplet, but
+        // only 16 have work — cycles stay at 1 row each, so utilization
+        // halves at the region level).
+        let l = Layer::conv("c", 16, 16, 64, 128, 3, 1, 1);
+        let u = utilization(&l, Partition::Wsp, 32, &chip());
+        assert!((u - 0.5).abs() < 1e-9, "u={u}");
+    }
+
+    #[test]
+    fn comp_time_scales_down_with_chiplets() {
+        let l = Layer::conv("c", 56, 56, 256, 512, 3, 1, 1);
+        let t1 = comp_cycles(&l, Partition::Wsp, 1, &chip());
+        let t4 = comp_cycles(&l, Partition::Wsp, 4, &chip());
+        let t8 = comp_cycles(&l, Partition::Isp, 8, &chip());
+        assert!(t4 < t1 && (t1 / t4 - 4.0).abs() < 0.1);
+        assert!(t8 < t1);
+    }
+
+    #[test]
+    fn fc_layer_prefers_isp() {
+        // FC has one pixel: WSP cannot shard it at all.
+        let l = Layer::fc("fc", 4096, 4096);
+        let wsp = comp_cycles(&l, Partition::Wsp, 8, &chip());
+        let isp = comp_cycles(&l, Partition::Isp, 8, &chip());
+        assert_eq!(wsp, comp_cycles(&l, Partition::Wsp, 1, &chip()));
+        assert!(isp < wsp);
+    }
+
+    #[test]
+    fn shard_geometry() {
+        let l = Layer::conv("c", 8, 8, 16, 64, 3, 1, 1);
+        let s = shard(&l, Partition::Isp, 4);
+        assert_eq!((s.co, s.px), (16, 64));
+        let s = shard(&l, Partition::Wsp, 4);
+        assert_eq!((s.co, s.px), (64, 16)); // 2 rows of 8
+    }
+}

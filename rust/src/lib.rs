@@ -1,0 +1,29 @@
+//! # scope-mcm
+//!
+//! A reproduction of **"Scope: A Scalable Merged Pipeline Framework for
+//! Multi-Chip-Module NN Accelerators"** as a three-layer Rust + JAX + Pallas
+//! stack (AOT via xla/PJRT):
+//!
+//! * **Layer 3 (this crate)** — the Scope coordinator: MCM cost simulator,
+//!   merged-pipeline DSE (Algorithm 1), baselines, and a functional
+//!   pipelined executor over AOT-compiled XLA artifacts.
+//! * **Layer 2** — `python/compile/model.py`: the JAX model, lowered once
+//!   at build time.
+//! * **Layer 1** — `python/compile/kernels/`: the Pallas PE-array kernel.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index.
+
+pub mod arch;
+pub mod baselines;
+pub mod bench;
+pub mod cost;
+pub mod dse;
+pub mod config;
+pub mod coordinator;
+pub mod model;
+pub mod pipeline;
+pub mod report;
+pub mod runtime;
+pub mod scope;
+pub mod storage;
+pub mod util;

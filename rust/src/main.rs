@@ -1,0 +1,306 @@
+//! `scope` — CLI for the Scope merged-pipeline framework.
+//!
+//! Subcommands (see `scope help`):
+//!   info        network chain + workload stats
+//!   search      run the Scope DSE on one (net, scale) and print the schedule
+//!   compare     all four methods on one (net, scale)     [Fig. 7 cell]
+//!   sweep       networks × scales table                  [Fig. 7]
+//!   scaling     one network across scales                [Fig. 9]
+//!   exhaustive  exhaustive-vs-search validation          [Fig. 8]
+//!   casestudy   balance + energy breakdown               [Fig. 10]
+//!   space       Equ. 8–9 search-space counts
+//!   pipeline    run the functional AOT pipeline (PJRT)   [E2E]
+
+use anyhow::{anyhow, bail, Result};
+
+use scope::arch::McmConfig;
+use scope::baselines::run_all;
+use scope::config::{Config, SimOptions};
+use scope::coordinator::{run_pipeline, PipelineMode};
+use scope::dse::{ExhaustiveOptions, PartitionSpace};
+use scope::model::zoo;
+use scope::report::figures;
+use scope::runtime::Manifest;
+use scope::scope::schedule_scope;
+use scope::util::cli::Args;
+use scope::util::table::{eng, f3, Table};
+
+const HELP: &str = "\
+scope — merged pipeline framework for MCM NN accelerators (paper repro)
+
+USAGE: scope <subcommand> [flags]
+
+SUBCOMMANDS
+  info        --net <name>
+  search      --net <name> --chiplets <C> [--samples M]
+  compare     --net <name> --chiplets <C> [--samples M]
+  sweep       [--nets a,b,..] [--scales 16,64,256] [--samples M]
+  scaling     [--net resnet50] [--scales 16,32,64,128,256] [--samples M]
+  exhaustive  [--net alexnet] [--chiplets 16] [--full-partitions] [--max-visits N]
+  casestudy   [--net resnet152] [--chiplets 256] [--samples M]
+  space       [--net resnet152] [--chiplets 256]
+  pipeline    [--mode merged|isp|single|all] [--samples N] [--artifacts DIR]
+  sensitivity [--net resnet50] [--chiplets 256] [--knob nop|dram]
+  help
+
+COMMON FLAGS
+  --config <file>   key=value config file (see config/mod.rs)
+  --samples <M>     pipeline batch size m (default 64)
+
+NETWORKS: alexnet vgg16 darknet19 resnet18/34/50/101/152 scopenet
+";
+
+fn net_flag(args: &Args, default: &str) -> Result<String> {
+    let name = args.str_or("net", default);
+    if zoo::by_name(&name).is_none() {
+        bail!("unknown network {name:?}; options: {}", zoo::NAMES.join(" "));
+    }
+    Ok(name)
+}
+
+fn sim_options(args: &Args, chiplets: usize) -> Result<(McmConfig, SimOptions)> {
+    let cfg = match args.str_or("config", "").as_str() {
+        "" => Config::paper_default(chiplets),
+        path => Config::load_file(std::path::Path::new(path), chiplets)?,
+    };
+    let mut sim = cfg.sim;
+    sim.samples = args.usize_or("samples", sim.samples as usize)? as u64;
+    Ok((cfg.mcm, sim))
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let name = net_flag(args, "resnet50")?;
+    let net = zoo::by_name(&name).unwrap();
+    let mut t = Table::new(
+        &format!("{} — {} layers", net.name, net.len()),
+        &["#", "layer", "type", "out(h×w×c)", "MACs", "weights", "branch"],
+    );
+    for (i, l) in net.layers.iter().enumerate() {
+        let (h, w, c) = l.out_shape();
+        t.row(vec![
+            i.to_string(),
+            l.name.clone(),
+            format!("{:?}", l.kind),
+            format!("{h}×{w}×{c}"),
+            eng(l.macs() as f64),
+            eng(l.weight_bytes() as f64),
+            if l.branch { "yes" } else { "" }.into(),
+        ]);
+    }
+    println!("{t}");
+    println!(
+        "total: {} MACs, {} weight bytes",
+        eng(net.total_macs() as f64),
+        eng(net.total_weight_bytes() as f64)
+    );
+    Ok(())
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let name = net_flag(args, "alexnet")?;
+    let chiplets = args.usize_or("chiplets", 16)?;
+    let (mcm, sim) = sim_options(args, chiplets)?;
+    let net = zoo::by_name(&name).unwrap();
+    let r = schedule_scope(&net, &mcm, &sim);
+    match (&r.schedule, &r.eval.error) {
+        (Some(sched), None) => {
+            let mut t = Table::new(
+                &format!("Scope schedule — {name} on {chiplets} chiplets"),
+                &["segment", "cluster", "layers", "chiplets", "partitions"],
+            );
+            for (si, seg) in sched.segments.iter().enumerate() {
+                for j in 0..seg.n_clusters() {
+                    let (lo, hi) = seg.cluster_range(j);
+                    let parts: String = (lo..hi)
+                        .map(|k| match seg.partition(k) {
+                            scope::pipeline::Partition::Wsp => 'W',
+                            scope::pipeline::Partition::Isp => 'I',
+                        })
+                        .collect();
+                    t.row(vec![
+                        si.to_string(),
+                        j.to_string(),
+                        format!("[{lo},{hi})"),
+                        seg.regions[j].to_string(),
+                        parts,
+                    ]);
+                }
+            }
+            println!("{t}");
+            println!(
+                "throughput: {} samples/s | energy: {} J/batch | cycles: {}",
+                f3(r.throughput()),
+                f3(r.eval.energy.total_pj() * 1e-12),
+                eng(r.eval.total_cycles),
+            );
+        }
+        (_, err) => println!("no valid schedule: {err:?}"),
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let name = net_flag(args, "alexnet")?;
+    let chiplets = args.usize_or("chiplets", 16)?;
+    let (mcm, sim) = sim_options(args, chiplets)?;
+    let net = zoo::by_name(&name).unwrap();
+    let results = run_all(&net, &mcm, &sim);
+    let best = results.iter().map(|r| r.throughput()).fold(0.0, f64::max);
+    let mut t = Table::new(
+        &format!("{name} on {chiplets} chiplets, m={}", sim.samples),
+        &["method", "throughput (samples/s)", "normalized", "energy (J/batch)", "segments"],
+    );
+    for r in &results {
+        t.row(vec![
+            r.method.clone(),
+            if r.eval.is_valid() { f3(r.throughput()) } else { "invalid".into() },
+            if r.eval.is_valid() { f3(r.throughput() / best) } else { "-".into() },
+            if r.eval.is_valid() {
+                f3(r.eval.energy.total_pj() * 1e-12)
+            } else {
+                "-".into()
+            },
+            r.schedule
+                .as_ref()
+                .map(|s| s.segments.len().to_string())
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    println!("{t}");
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let nets = args.str_or(
+        "nets",
+        "alexnet,vgg16,darknet19,resnet18,resnet34,resnet50,resnet101,resnet152",
+    );
+    let nets: Vec<&str> = nets.split(',').map(str::trim).collect();
+    let scales = args.usize_list_or("scales", &[16, 64, 256])?;
+    let samples = args.usize_or("samples", 64)? as u64;
+    println!("{}", figures::fig7(&nets, &scales, samples)?);
+    Ok(())
+}
+
+fn cmd_scaling(args: &Args) -> Result<()> {
+    let name = net_flag(args, "resnet50")?;
+    let scales = args.usize_list_or("scales", &[16, 32, 64, 128, 256])?;
+    let samples = args.usize_or("samples", 64)? as u64;
+    println!("{}", figures::fig9(&name, &scales, samples)?);
+    Ok(())
+}
+
+fn cmd_exhaustive(args: &Args) -> Result<()> {
+    let name = net_flag(args, "alexnet")?;
+    let chiplets = args.usize_or("chiplets", 16)?;
+    let samples = args.usize_or("samples", 64)? as u64;
+    let ex = ExhaustiveOptions {
+        partition_space: if args.switch("full-partitions") {
+            PartitionSpace::Full
+        } else {
+            PartitionSpace::Transitions
+        },
+        max_visits: args.usize_or("max-visits", 0)? as u64,
+        ..Default::default()
+    };
+    let r = figures::fig8(&name, chiplets, samples, ex)?;
+    println!("{}", r.table);
+    println!("\nprocessing-time distribution (valid schedules):");
+    for line in &r.hist_lines {
+        println!("  {line}");
+    }
+    Ok(())
+}
+
+fn cmd_casestudy(args: &Args) -> Result<()> {
+    let name = net_flag(args, "resnet152")?;
+    let chiplets = args.usize_or("chiplets", 256)?;
+    let samples = args.usize_or("samples", 64)? as u64;
+    let r = figures::fig10(&name, chiplets, samples)?;
+    println!("{}", r.balance);
+    println!();
+    println!("{}", r.energy);
+    println!(
+        "\nsegments: scope={} segmented={} | compute-balance CV: scope={} segmented={}",
+        r.scope_segments,
+        r.segmented_segments,
+        f3(r.scope_cv),
+        f3(r.segmented_cv)
+    );
+    Ok(())
+}
+
+fn cmd_space(args: &Args) -> Result<()> {
+    let name = net_flag(args, "resnet152")?;
+    let chiplets = args.usize_or("chiplets", 256)?;
+    println!("{}", figures::space_table(&name, chiplets)?);
+    Ok(())
+}
+
+fn cmd_pipeline(args: &Args) -> Result<()> {
+    let dir = match args.str_or("artifacts", "").as_str() {
+        "" => Manifest::default_dir(),
+        p => p.into(),
+    };
+    let manifest = Manifest::load(&dir)?;
+    let samples = args.usize_or("samples", 32)?;
+    let modes: Vec<PipelineMode> = match args.str_or("mode", "all").as_str() {
+        "merged" => vec![PipelineMode::Merged],
+        "isp" => vec![PipelineMode::MergedIsp],
+        "single" => vec![PipelineMode::Single],
+        "all" => vec![PipelineMode::Single, PipelineMode::Merged, PipelineMode::MergedIsp],
+        other => bail!("unknown mode {other:?} (merged|isp|single|all)"),
+    };
+    let mut t = Table::new(
+        &format!("functional pipeline (PJRT CPU), {samples} samples"),
+        &["mode", "stages", "throughput (samples/s)", "mean latency", "max |err| vs golden", "numerics"],
+    );
+    for mode in modes {
+        let r = run_pipeline(&manifest, mode, samples)?;
+        t.row(vec![
+            r.mode.clone(),
+            r.stages.to_string(),
+            f3(r.throughput()),
+            scope::bench::humanize_secs(r.mean_latency()),
+            format!("{:.2e}", r.max_abs_err),
+            if r.numerics_ok(1e-3) { "OK".into() } else { "FAIL".into() },
+        ]);
+    }
+    println!("{t}");
+    Ok(())
+}
+
+fn cmd_sensitivity(args: &Args) -> Result<()> {
+    let name = net_flag(args, "resnet50")?;
+    let chiplets = args.usize_or("chiplets", 256)?;
+    let samples = args.usize_or("samples", 64)? as u64;
+    let fracs = [1.0, 0.5, 0.25, 0.125, 0.0625];
+    let sweep = match args.str_or("knob", "nop").as_str() {
+        "nop" => scope::report::sensitivity::nop_bandwidth_sweep(&name, chiplets, samples, &fracs)?,
+        "dram" => scope::report::sensitivity::dram_bandwidth_sweep(&name, chiplets, samples, &fracs)?,
+        other => bail!("unknown knob {other:?} (nop|dram)"),
+    };
+    println!("{}", sweep.table);
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("info") => cmd_info(&args),
+        Some("search") => cmd_search(&args),
+        Some("compare") => cmd_compare(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("scaling") => cmd_scaling(&args),
+        Some("exhaustive") => cmd_exhaustive(&args),
+        Some("casestudy") => cmd_casestudy(&args),
+        Some("space") => cmd_space(&args),
+        Some("pipeline") => cmd_pipeline(&args),
+        Some("sensitivity") => cmd_sensitivity(&args),
+        Some("help") | None => {
+            print!("{HELP}");
+            Ok(())
+        }
+        Some(other) => Err(anyhow!("unknown subcommand {other:?}; try `scope help`")),
+    }
+}

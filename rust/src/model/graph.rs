@@ -1,0 +1,144 @@
+//! The network chain: an ordered list of schedulable layers.
+//!
+//! The paper's pipeline model (and every baseline it compares against)
+//! schedules a *chain*; residual adds are element-wise and negligible, and
+//! projection shortcut convs are linearized into the chain at their block
+//! position (documented substitution — their compute/weights are charged,
+//! their side-edge communication is a small constant we fold into the main
+//! path).
+
+use super::layer::Layer;
+
+/// A feed-forward chain of layers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Network {
+    pub name: String,
+    /// Input feature map (h, w, c).
+    pub input: (u64, u64, u64),
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    pub fn new(name: &str, input: (u64, u64, u64), layers: Vec<Layer>) -> Network {
+        let net = Network { name: name.to_string(), input, layers };
+        net.validate().unwrap_or_else(|e| panic!("{}: {e}", net.name));
+        net
+    }
+
+    /// Structural validation: every layer's input must match its
+    /// predecessor's output (chain consistency).
+    pub fn validate(&self) -> Result<(), String> {
+        let (mut h, mut w, mut c) = self.input;
+        for (i, l) in self.layers.iter().enumerate() {
+            let expect_in = if l.kind == super::layer::LayerKind::Fc {
+                // FC consumes a flattened map.
+                (1, 1, h * w * c)
+            } else {
+                (h, w, c)
+            };
+            if (l.hin, l.win, l.cin) != expect_in {
+                return Err(format!(
+                    "layer {i} ({}): input {:?} != previous output {:?}",
+                    l.name,
+                    (l.hin, l.win, l.cin),
+                    expect_in
+                ));
+            }
+            // Branch layers (projection shortcuts) read the chain state but
+            // do not advance it; their output merges with the block output.
+            if !l.branch {
+                (h, w, c) = l.out_shape();
+            }
+        }
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// Total MACs for one sample.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Total weight bytes.
+    pub fn total_weight_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.weight_bytes()).sum()
+    }
+
+    /// Largest single-layer weight volume (full-pipeline feasibility).
+    pub fn max_layer_weight_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.weight_bytes()).max().unwrap_or(0)
+    }
+
+    /// Sub-chain view for a segment `[lo, hi)`.
+    pub fn slice(&self, lo: usize, hi: usize) -> &[Layer] {
+        &self.layers[lo..hi]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layer::Layer;
+
+    fn tiny() -> Network {
+        Network::new(
+            "tiny",
+            (8, 8, 3),
+            vec![
+                Layer::conv("c1", 8, 8, 3, 16, 3, 1, 1),
+                Layer::conv("c2", 8, 8, 16, 16, 3, 1, 1).with_pool(2, 2),
+                Layer::conv("c3", 4, 4, 16, 32, 3, 1, 1).with_gap(),
+                Layer::fc("fc", 32, 10),
+            ],
+        )
+    }
+
+    #[test]
+    fn chain_validates() {
+        let n = tiny();
+        assert_eq!(n.len(), 4);
+        assert!(n.validate().is_ok());
+        assert_eq!(n.layers.last().unwrap().out_shape(), (1, 1, 10));
+    }
+
+    #[test]
+    #[should_panic(expected = "input")]
+    fn mismatched_chain_panics() {
+        Network::new(
+            "bad",
+            (8, 8, 3),
+            vec![
+                Layer::conv("c1", 8, 8, 3, 16, 3, 1, 1),
+                Layer::conv("c2", 8, 8, 99, 16, 3, 1, 1),
+            ],
+        );
+    }
+
+    #[test]
+    fn totals() {
+        let n = tiny();
+        assert_eq!(
+            n.total_macs(),
+            n.layers.iter().map(|l| l.macs()).sum::<u64>()
+        );
+        assert!(n.total_weight_bytes() > 0);
+        assert_eq!(
+            n.max_layer_weight_bytes(),
+            n.layers.iter().map(|l| l.weight_bytes()).max().unwrap()
+        );
+    }
+
+    #[test]
+    fn fc_after_spatial_flattens() {
+        // c3 with GAP outputs (1,1,32); fc consumes 32 — validate() accepts.
+        let n = tiny();
+        assert_eq!(n.layers[2].out_shape(), (1, 1, 32));
+    }
+}

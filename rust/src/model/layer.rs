@@ -1,0 +1,253 @@
+//! NN layer IR and per-layer workload statistics.
+//!
+//! The scheduling model (paper §III) treats a network as a chain of layers,
+//! each with a compute load (MACs), a weight volume, activation volumes,
+//! and WSP halo geometry. All volumes are in *bytes* with the paper's 8-bit
+//! weights/activations (1 byte per element; accumulation width only affects
+//! on-chip partial sums, which never cross the NoP under ISP/WSP).
+//!
+//! Pooling that follows a conv is *fused* into that conv (`post_pool`), so
+//! the schedulable chain contains exactly the paper's layer counts
+//! (AlexNet = 8, ResNet-152 = 156 including projections and the FC): the
+//! pool shrinks the layer's *output* (what crosses the NoP) without adding
+//! weights or significant compute.
+
+/// Layer operator kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    /// 2-D convolution (1×1 / strided included).
+    Conv,
+    /// Fully connected (a 1×1 conv over a 1×1 map).
+    Fc,
+}
+
+/// One schedulable layer of the chain.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Input feature map: height, width, channels.
+    pub hin: u64,
+    pub win: u64,
+    pub cin: u64,
+    /// Kernel geometry.
+    pub kh: u64,
+    pub kw: u64,
+    pub stride: u64,
+    pub pad: u64,
+    /// Output channels.
+    pub cout: u64,
+    /// Fused trailing pool `(k, stride)`; `None` if absent. A global
+    /// average pool is `(hout, hout)`.
+    pub post_pool: Option<(u64, u64)>,
+    /// Side-branch layer (e.g. a ResNet projection shortcut): consumes the
+    /// chain state at its position but does not advance it — its output
+    /// merges element-wise with the main path (same dims as the block
+    /// output). Compute and weights are charged normally.
+    pub branch: bool,
+}
+
+impl Layer {
+    pub fn conv(name: &str, hin: u64, win: u64, cin: u64, cout: u64, k: u64, stride: u64, pad: u64) -> Layer {
+        Layer {
+            name: name.to_string(),
+            kind: LayerKind::Conv,
+            hin,
+            win,
+            cin,
+            kh: k,
+            kw: k,
+            stride,
+            pad,
+            cout,
+            post_pool: None,
+            branch: false,
+        }
+    }
+
+    pub fn fc(name: &str, cin: u64, cout: u64) -> Layer {
+        Layer {
+            name: name.to_string(),
+            kind: LayerKind::Fc,
+            hin: 1,
+            win: 1,
+            cin,
+            kh: 1,
+            kw: 1,
+            stride: 1,
+            pad: 0,
+            cout,
+            post_pool: None,
+            branch: false,
+        }
+    }
+
+    /// Mark as a side-branch (projection shortcut) layer.
+    pub fn as_branch(mut self) -> Layer {
+        self.branch = true;
+        self
+    }
+
+    /// Fuse a trailing `k×k / stride` pool into this layer.
+    pub fn with_pool(mut self, k: u64, stride: u64) -> Layer {
+        self.post_pool = Some((k, stride));
+        self
+    }
+
+    /// Fuse a global average pool (output becomes 1×1).
+    pub fn with_gap(self) -> Layer {
+        let h = self.conv_hout();
+        let w = self.conv_wout();
+        debug_assert_eq!(h, w, "GAP on non-square map");
+        self.with_pool(h, h.max(1))
+    }
+
+    /// Conv output height, before any fused pool.
+    pub fn conv_hout(&self) -> u64 {
+        (self.hin + 2 * self.pad - self.kh) / self.stride + 1
+    }
+
+    /// Conv output width, before any fused pool.
+    pub fn conv_wout(&self) -> u64 {
+        (self.win + 2 * self.pad - self.kw) / self.stride + 1
+    }
+
+    /// Final output height (after the fused pool, if any).
+    pub fn hout(&self) -> u64 {
+        match self.post_pool {
+            None => self.conv_hout(),
+            Some((k, s)) => (self.conv_hout().saturating_sub(k)) / s + 1,
+        }
+    }
+
+    /// Final output width (after the fused pool, if any).
+    pub fn wout(&self) -> u64 {
+        match self.post_pool {
+            None => self.conv_wout(),
+            Some((k, s)) => (self.conv_wout().saturating_sub(k)) / s + 1,
+        }
+    }
+
+    /// Output pixels the *compute* produces (pre-pool) — the
+    /// WSP-parallelizable dimension.
+    pub fn pixels(&self) -> u64 {
+        self.conv_hout() * self.conv_wout()
+    }
+
+    /// Reduction length per output element (the per-lane MAC dimension).
+    pub fn reduction(&self) -> u64 {
+        self.cin * self.kh * self.kw
+    }
+
+    /// Multiply-accumulates for one sample.
+    pub fn macs(&self) -> u64 {
+        self.pixels() * self.cout * self.reduction()
+    }
+
+    /// Weight bytes (8-bit elements; biases negligible and omitted, as in
+    /// the paper's storage analysis).
+    pub fn weight_bytes(&self) -> u64 {
+        self.cout * self.cin * self.kh * self.kw
+    }
+
+    /// Input activation bytes for one sample.
+    pub fn input_bytes(&self) -> u64 {
+        self.hin * self.win * self.cin
+    }
+
+    /// Output activation bytes for one sample, after the fused pool —
+    /// Table II's `Output` (what crosses region boundaries).
+    pub fn output_bytes(&self) -> u64 {
+        self.hout() * self.wout() * self.cout
+    }
+
+    /// WSP halo bytes for one sample when output rows are split into
+    /// `parts` contiguous bands: each internal boundary replicates the
+    /// overlapping input rows, `max(kh − stride, 0)` of them (Table II
+    /// `Halo`).
+    pub fn halo_bytes(&self, parts: u64) -> u64 {
+        if parts <= 1 {
+            return 0;
+        }
+        let overlap_rows = self.kh.saturating_sub(self.stride);
+        (parts - 1) * overlap_rows * self.win * self.cin
+    }
+
+    /// The scalar *parallelism* feature used by the cluster-merge DP
+    /// (paper §IV-B: layers merged into one cluster should have similar
+    /// parallelizable dimensions). We use compute output pixels — the
+    /// dimension a shared region shards spatially.
+    pub fn parallelism(&self) -> u64 {
+        self.pixels().max(1)
+    }
+
+    /// Output shape `(h, w, c)` after this layer (post pool).
+    pub fn out_shape(&self) -> (u64, u64, u64) {
+        (self.hout(), self.wout(), self.cout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_geometry() {
+        // ResNet stem: 224×224×3, 7×7/2 pad 3, 64 out → 112×112
+        let l = Layer::conv("stem", 224, 224, 3, 64, 7, 2, 3);
+        assert_eq!((l.conv_hout(), l.conv_wout()), (112, 112));
+        assert_eq!(l.macs(), 112 * 112 * 64 * 3 * 7 * 7);
+        assert_eq!(l.weight_bytes(), 64 * 3 * 7 * 7);
+        assert_eq!(l.output_bytes(), 112 * 112 * 64);
+    }
+
+    #[test]
+    fn fused_pool_shrinks_output_not_compute() {
+        // AlexNet conv1: 227×227×3, 11×11/4 → 55×55×96, then 3×3/2 pool → 27
+        let l = Layer::conv("conv1", 227, 227, 3, 96, 11, 4, 0).with_pool(3, 2);
+        assert_eq!(l.conv_hout(), 55);
+        assert_eq!(l.hout(), 27);
+        assert_eq!(l.macs(), 55 * 55 * 96 * 3 * 11 * 11); // pre-pool compute
+        assert_eq!(l.output_bytes(), 27 * 27 * 96); // post-pool NoP volume
+    }
+
+    #[test]
+    fn gap_collapses_to_1x1() {
+        let l = Layer::conv("c", 7, 7, 512, 512, 3, 1, 1).with_gap();
+        assert_eq!((l.hout(), l.wout()), (1, 1));
+        assert_eq!(l.output_bytes(), 512);
+    }
+
+    #[test]
+    fn fc_as_1x1() {
+        let l = Layer::fc("fc", 2048, 1000);
+        assert_eq!(l.macs(), 2048 * 1000);
+        assert_eq!(l.weight_bytes(), 2048 * 1000);
+        assert_eq!(l.pixels(), 1);
+        assert_eq!(l.output_bytes(), 1000);
+    }
+
+    #[test]
+    fn same_pad_conv_keeps_size() {
+        let l = Layer::conv("c", 56, 56, 64, 64, 3, 1, 1);
+        assert_eq!((l.conv_hout(), l.conv_wout()), (56, 56));
+    }
+
+    #[test]
+    fn halo_geometry() {
+        let l = Layer::conv("c", 56, 56, 64, 64, 3, 1, 1);
+        assert_eq!(l.halo_bytes(1), 0);
+        // 3×3/1: two overlap rows per boundary, three boundaries
+        assert_eq!(l.halo_bytes(4), 3 * 2 * 56 * 64);
+        // stride ≥ kernel → no overlap
+        let s = Layer::conv("s", 56, 56, 64, 64, 2, 2, 0);
+        assert_eq!(s.halo_bytes(4), 0);
+    }
+
+    #[test]
+    fn parallelism_is_compute_pixels() {
+        let l = Layer::conv("c", 28, 28, 256, 512, 3, 1, 1).with_pool(2, 2);
+        assert_eq!(l.parallelism(), 28 * 28);
+        assert_eq!(Layer::fc("fc", 10, 10).parallelism(), 1);
+    }
+}

@@ -1,0 +1,8 @@
+//! NN model IR: layers, the chain graph, and the workload zoo.
+
+pub mod graph;
+pub mod layer;
+pub mod zoo;
+
+pub use graph::Network;
+pub use layer::{Layer, LayerKind};

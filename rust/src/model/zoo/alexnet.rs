@@ -1,0 +1,61 @@
+//! AlexNet (Krizhevsky 2012), 227×227 single-tower variant: 5 convs + 3 FC
+//! = 8 schedulable layers (pools fused), the paper's exhaustive-search
+//! workload (Fig. 8: AlexNet on a 16-chiplet MCM).
+
+use crate::model::graph::Network;
+use crate::model::layer::Layer;
+
+pub fn alexnet() -> Network {
+    Network::new(
+        "alexnet",
+        (227, 227, 3),
+        vec![
+            Layer::conv("conv1", 227, 227, 3, 96, 11, 4, 0).with_pool(3, 2),
+            Layer::conv("conv2", 27, 27, 96, 256, 5, 1, 2).with_pool(3, 2),
+            Layer::conv("conv3", 13, 13, 256, 384, 3, 1, 1),
+            Layer::conv("conv4", 13, 13, 384, 384, 3, 1, 1),
+            Layer::conv("conv5", 13, 13, 384, 256, 3, 1, 1).with_pool(3, 2),
+            Layer::fc("fc6", 6 * 6 * 256, 4096),
+            Layer::fc("fc7", 4096, 4096),
+            Layer::fc("fc8", 4096, 1000),
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eight_layers() {
+        assert_eq!(alexnet().len(), 8);
+    }
+
+    #[test]
+    fn feature_map_chain() {
+        let n = alexnet();
+        assert_eq!(n.layers[0].out_shape(), (27, 27, 96));
+        assert_eq!(n.layers[1].out_shape(), (13, 13, 256));
+        assert_eq!(n.layers[4].out_shape(), (6, 6, 256));
+        assert_eq!(n.layers[7].out_shape(), (1, 1, 1000));
+    }
+
+    #[test]
+    fn total_macs_match_literature() {
+        // AlexNet ≈ 0.72 GMACs (≈1.45 GFLOPs); single-tower conv2 variant
+        // lands slightly above the grouped-conv original.
+        let g = alexnet().total_macs() as f64 / 1e9;
+        assert!((0.6..1.3).contains(&g), "got {g} GMACs");
+    }
+
+    #[test]
+    fn fc_weights_dominate() {
+        // Classic AlexNet property the WSP→ISP transition exploits: FC
+        // layers own >90% of the weights but <10% of the MACs.
+        let n = alexnet();
+        let fc_w: u64 = n.layers[5..].iter().map(|l| l.weight_bytes()).sum();
+        let fc_m: u64 = n.layers[5..].iter().map(|l| l.macs()).sum();
+        assert!(fc_w as f64 / n.total_weight_bytes() as f64 > 0.9);
+        assert!((fc_m as f64 / n.total_macs() as f64) < 0.1);
+    }
+}

@@ -1,0 +1,79 @@
+//! DarkNet-19 (Redmon & Farhadi, YOLO9000): 19 convs, alternating 3×3
+//! expansions and 1×1 bottlenecks, global-average-pool head.
+
+use crate::model::graph::Network;
+use crate::model::layer::Layer;
+
+pub fn darknet19() -> Network {
+    let mut layers = Vec::new();
+    let mut h = 224u64;
+    let mut cin = 3u64;
+    let mut idx = 0usize;
+    // (cout, kernel, pool_after)
+    let spec: &[(u64, u64, bool)] = &[
+        (32, 3, true),
+        (64, 3, true),
+        (128, 3, false),
+        (64, 1, false),
+        (128, 3, true),
+        (256, 3, false),
+        (128, 1, false),
+        (256, 3, true),
+        (512, 3, false),
+        (256, 1, false),
+        (512, 3, false),
+        (256, 1, false),
+        (512, 3, true),
+        (1024, 3, false),
+        (512, 1, false),
+        (1024, 3, false),
+        (512, 1, false),
+        (1024, 3, false),
+    ];
+    for &(cout, k, pool) in spec {
+        idx += 1;
+        let pad = k / 2;
+        let mut l = Layer::conv(&format!("conv{idx}"), h, h, cin, cout, k, 1, pad);
+        if pool {
+            l = l.with_pool(2, 2);
+            h /= 2;
+        }
+        layers.push(l);
+        cin = cout;
+    }
+    // conv19: 1×1 to 1000 classes, then GAP.
+    layers.push(Layer::conv("conv19", h, h, cin, 1000, 1, 1, 0).with_gap());
+    Network::new("darknet19", (224, 224, 3), layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nineteen_layers() {
+        assert_eq!(darknet19().len(), 19);
+    }
+
+    #[test]
+    fn macs_match_literature() {
+        // DarkNet-19 ≈ 2.8 GMACs (5.58 Bn ops).
+        let g = darknet19().total_macs() as f64 / 1e9;
+        assert!((2.4..3.3).contains(&g), "got {g} GMACs");
+    }
+
+    #[test]
+    fn head_is_global() {
+        let n = darknet19();
+        assert_eq!(n.layers.last().unwrap().out_shape(), (1, 1, 1000));
+    }
+
+    #[test]
+    fn bottlenecks_shrink_channels() {
+        let n = darknet19();
+        // conv4 is the 64-channel 1×1 bottleneck after the 128 expansion
+        assert_eq!(n.layers[3].cout, 64);
+        assert_eq!(n.layers[3].kh, 1);
+        assert_eq!(n.layers[2].cout, 128);
+    }
+}

@@ -1,0 +1,87 @@
+//! Network zoo: the paper's eight evaluation workloads
+//! (AlexNet, VGG16, DarkNet19, ResNet-18/34/50/101/152) plus ScopeNet,
+//! the small functional-path CNN matching `python/compile/model.py`.
+
+mod alexnet;
+mod darknet;
+mod resnet;
+mod scopenet;
+mod vgg;
+
+pub use alexnet::alexnet;
+pub use darknet::darknet19;
+pub use resnet::{resnet101, resnet152, resnet18, resnet34, resnet50};
+pub use scopenet::{scopenet, SCOPENET_CLUSTERS};
+pub use vgg::vgg16;
+
+use super::graph::Network;
+
+/// All paper workloads, in the paper's Fig. 7 order.
+pub fn paper_networks() -> Vec<Network> {
+    vec![
+        alexnet(),
+        vgg16(),
+        darknet19(),
+        resnet18(),
+        resnet34(),
+        resnet50(),
+        resnet101(),
+        resnet152(),
+    ]
+}
+
+/// Look a network up by CLI name.
+pub fn by_name(name: &str) -> Option<Network> {
+    match name.to_ascii_lowercase().as_str() {
+        "alexnet" => Some(alexnet()),
+        "vgg16" | "vgg" => Some(vgg16()),
+        "darknet19" | "darknet" => Some(darknet19()),
+        "resnet18" => Some(resnet18()),
+        "resnet34" => Some(resnet34()),
+        "resnet50" => Some(resnet50()),
+        "resnet101" => Some(resnet101()),
+        "resnet152" => Some(resnet152()),
+        "scopenet" => Some(scopenet()),
+        _ => None,
+    }
+}
+
+/// Names accepted by [`by_name`] (for CLI help and sweeps).
+pub const NAMES: &[&str] = &[
+    "alexnet", "vgg16", "darknet19", "resnet18", "resnet34", "resnet50",
+    "resnet101", "resnet152", "scopenet",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_networks_validate() {
+        for net in paper_networks() {
+            assert!(net.validate().is_ok(), "{}", net.name);
+            assert!(net.total_macs() > 0, "{}", net.name);
+        }
+    }
+
+    #[test]
+    fn by_name_covers_names() {
+        for name in NAMES {
+            assert!(by_name(name).is_some(), "{name}");
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn depth_ordering_matches_paper() {
+        // The paper's scalability claim orders networks by depth; our chains
+        // must reflect that.
+        let l = |n: &str| by_name(n).unwrap().len();
+        assert!(l("alexnet") < l("vgg16"));
+        assert!(l("vgg16") < l("resnet18") + 6); // comparable scale
+        assert!(l("resnet18") < l("resnet34"));
+        assert!(l("resnet34") < l("resnet50") + 20);
+        assert!(l("resnet50") < l("resnet101"));
+        assert!(l("resnet101") < l("resnet152"));
+    }
+}

@@ -1,0 +1,172 @@
+//! ResNet-18/34/50/101/152 (He et al. 2016), linearized for the chain
+//! scheduler: stem conv (fused 3×3/2 max-pool), every block conv in order,
+//! projection shortcut convs inserted at their block position, final FC
+//! (GAP fused into the last conv).
+//!
+//! Linearization is the documented substitution from DESIGN.md: residual
+//! adds are element-wise (no weights, negligible MACs) and the projection
+//! convs' compute/weights are fully charged in place.
+
+use crate::model::graph::Network;
+use crate::model::layer::Layer;
+
+/// Basic block (two 3×3 convs) — ResNet-18/34.
+fn push_basic(layers: &mut Vec<Layer>, tag: &str, h: u64, cin: u64, cout: u64, stride: u64) -> u64 {
+    let mut h = h;
+    if stride != 1 || cin != cout {
+        layers.push(Layer::conv(
+            &format!("{tag}.proj"),
+            h,
+            h,
+            cin,
+            cout,
+            1,
+            stride,
+            0,
+        ).as_branch());
+    }
+    layers.push(Layer::conv(&format!("{tag}.conv1"), h, h, cin, cout, 3, stride, 1));
+    h = layers.last().unwrap().hout();
+    layers.push(Layer::conv(&format!("{tag}.conv2"), h, h, cout, cout, 3, 1, 1));
+    h
+}
+
+/// Bottleneck block (1×1 down, 3×3, 1×1 up ×4) — ResNet-50/101/152.
+fn push_bottleneck(layers: &mut Vec<Layer>, tag: &str, h: u64, cin: u64, width: u64, stride: u64) -> u64 {
+    let cout = width * 4;
+    let mut h = h;
+    if stride != 1 || cin != cout {
+        layers.push(Layer::conv(
+            &format!("{tag}.proj"),
+            h,
+            h,
+            cin,
+            cout,
+            1,
+            stride,
+            0,
+        ).as_branch());
+    }
+    layers.push(Layer::conv(&format!("{tag}.conv1"), h, h, cin, width, 1, 1, 0));
+    // stride lives on the 3×3 (ResNet v1.5, the deployed convention)
+    layers.push(Layer::conv(&format!("{tag}.conv2"), h, h, width, width, 3, stride, 1));
+    h = layers.last().unwrap().hout();
+    layers.push(Layer::conv(&format!("{tag}.conv3"), h, h, width, cout, 1, 1, 0));
+    h
+}
+
+fn resnet(name: &str, blocks: [usize; 4], bottleneck: bool) -> Network {
+    let mut layers = vec![
+        // stem: 7×7/2 conv then fused max-pool: 224 → 112 → 56. The real
+        // net pads its 3×3/2 pool; our fused pools are unpadded, so we use
+        // the dimension-equivalent 2×2/2 window.
+        Layer::conv("stem", 224, 224, 3, 64, 7, 2, 3).with_pool(2, 2),
+    ];
+    let mut h = 56u64;
+    let mut cin = 64u64;
+    let widths = [64u64, 128, 256, 512];
+    for (stage, (&n, &width)) in blocks.iter().zip(widths.iter()).enumerate() {
+        for b in 0..n {
+            let stride = if stage > 0 && b == 0 { 2 } else { 1 };
+            let tag = format!("s{}b{}", stage + 1, b + 1);
+            if bottleneck {
+                h = push_bottleneck(&mut layers, &tag, h, cin, width, stride);
+                cin = width * 4;
+            } else {
+                h = push_basic(&mut layers, &tag, h, cin, width, stride);
+                cin = width;
+            }
+        }
+    }
+    // GAP fused into the final conv; FC classifier.
+    let last = layers.len() - 1;
+    layers[last] = layers[last].clone().with_gap();
+    layers.push(Layer::fc("fc", cin, 1000));
+    Network::new(name, (224, 224, 3), layers)
+}
+
+pub fn resnet18() -> Network {
+    resnet("resnet18", [2, 2, 2, 2], false)
+}
+
+pub fn resnet34() -> Network {
+    resnet("resnet34", [3, 4, 6, 3], false)
+}
+
+pub fn resnet50() -> Network {
+    resnet("resnet50", [3, 4, 6, 3], true)
+}
+
+pub fn resnet101() -> Network {
+    resnet("resnet101", [3, 4, 23, 3], true)
+}
+
+pub fn resnet152() -> Network {
+    resnet("resnet152", [3, 8, 36, 3], true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_counts() {
+        // convs + projections + fc
+        assert_eq!(resnet18().len(), 1 + 16 + 3 + 1);
+        assert_eq!(resnet34().len(), 1 + 32 + 3 + 1);
+        assert_eq!(resnet50().len(), 1 + 48 + 4 + 1);
+        assert_eq!(resnet101().len(), 1 + 99 + 4 + 1);
+        assert_eq!(resnet152().len(), 1 + 150 + 4 + 1);
+    }
+
+    #[test]
+    fn macs_match_literature() {
+        // Published GMACs: R18≈1.8, R34≈3.7, R50≈4.1, R101≈7.8, R152≈11.5.
+        // Projection-in-chain adds a small overhead; allow ±15%.
+        let cases = [
+            (resnet18(), 1.8),
+            (resnet34(), 3.7),
+            (resnet50(), 4.1),
+            (resnet101(), 7.8),
+            (resnet152(), 11.5),
+        ];
+        for (net, want) in cases {
+            let g = net.total_macs() as f64 / 1e9;
+            assert!(
+                (g / want - 1.0).abs() < 0.15,
+                "{}: got {g} GMACs, want ≈{want}", net.name
+            );
+        }
+    }
+
+    #[test]
+    fn weights_match_literature() {
+        // Parameters (≈bytes at 8-bit): R50≈25.6 M, R152≈60.2 M.
+        let r50 = resnet50().total_weight_bytes() as f64 / 1e6;
+        let r152 = resnet152().total_weight_bytes() as f64 / 1e6;
+        assert!((23.0..28.0).contains(&r50), "r50 {r50} MB");
+        assert!((55.0..65.0).contains(&r152), "r152 {r152} MB");
+    }
+
+    #[test]
+    fn stage_resolutions() {
+        let n = resnet50();
+        // stem output is 56×56; final conv (pre-GAP) runs at 7×7.
+        assert_eq!(n.layers[0].out_shape(), (56, 56, 64));
+        let last_conv = &n.layers[n.len() - 2];
+        assert_eq!(last_conv.conv_hout(), 7);
+        assert_eq!(last_conv.out_shape(), (1, 1, 2048));
+    }
+
+    #[test]
+    fn deeper_means_strictly_more_work() {
+        let macs: Vec<u64> = [resnet18(), resnet34(), resnet50(), resnet101(), resnet152()]
+            .iter()
+            .map(|n| n.total_macs())
+            .collect();
+        // 18<34, 50<101<152 (34→50 dips in MACs but grows in weights/depth)
+        assert!(macs[0] < macs[1]);
+        assert!(macs[2] < macs[3]);
+        assert!(macs[3] < macs[4]);
+    }
+}

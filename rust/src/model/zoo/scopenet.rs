@@ -1,0 +1,54 @@
+//! ScopeNet: the small functional-path CNN. MUST mirror
+//! `python/compile/model.py` exactly — the coordinator maps this chain onto
+//! the AOT cluster artifacts, and `rust/tests/` cross-checks the shapes
+//! against `artifacts/manifest.json`.
+
+use crate::model::graph::Network;
+use crate::model::layer::Layer;
+
+/// The cluster grouping the AOT artifacts are emitted with
+/// (`CLUSTERS` in python/compile/model.py): layer-index ranges.
+pub const SCOPENET_CLUSTERS: &[(usize, usize)] = &[(0, 2), (2, 4), (4, 6)];
+
+pub fn scopenet() -> Network {
+    Network::new(
+        "scopenet",
+        (16, 16, 3),
+        vec![
+            Layer::conv("conv1", 16, 16, 3, 16, 3, 1, 1),
+            Layer::conv("conv2", 16, 16, 16, 16, 3, 1, 1).with_pool(2, 2),
+            Layer::conv("conv3", 8, 8, 16, 32, 3, 1, 1),
+            Layer::conv("conv4", 8, 8, 32, 32, 3, 1, 1).with_pool(2, 2),
+            Layer::conv("conv5", 4, 4, 32, 64, 3, 1, 1).with_gap(),
+            Layer::fc("fc", 64, 10),
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_python_model() {
+        let n = scopenet();
+        assert_eq!(n.len(), 6);
+        assert_eq!(n.input, (16, 16, 3));
+        assert_eq!(n.layers[1].out_shape(), (8, 8, 16));
+        assert_eq!(n.layers[3].out_shape(), (4, 4, 32));
+        assert_eq!(n.layers[4].out_shape(), (1, 1, 64));
+        assert_eq!(n.layers[5].out_shape(), (1, 1, 10));
+    }
+
+    #[test]
+    fn clusters_cover_chain() {
+        let n = scopenet();
+        let mut covered = 0usize;
+        for &(lo, hi) in SCOPENET_CLUSTERS {
+            assert_eq!(lo, covered, "clusters must be contiguous");
+            assert!(hi > lo);
+            covered = hi;
+        }
+        assert_eq!(covered, n.len());
+    }
+}

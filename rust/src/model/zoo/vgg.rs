@@ -1,0 +1,62 @@
+//! VGG-16 (Simonyan & Zisserman 2014): 13 convs + 3 FC = 16 schedulable
+//! layers (pools fused into the last conv of each block).
+
+use crate::model::graph::Network;
+use crate::model::layer::Layer;
+
+pub fn vgg16() -> Network {
+    let mut layers = Vec::new();
+    let mut h = 224u64;
+    let mut cin = 3u64;
+    let blocks: &[(usize, u64)] =
+        &[(2, 64), (2, 128), (3, 256), (3, 512), (3, 512)];
+    for (b, &(convs, cout)) in blocks.iter().enumerate() {
+        for i in 0..convs {
+            let name = format!("conv{}_{}", b + 1, i + 1);
+            let mut l = Layer::conv(&name, h, h, cin, cout, 3, 1, 1);
+            if i == convs - 1 {
+                l = l.with_pool(2, 2);
+            }
+            layers.push(l);
+            cin = cout;
+        }
+        h /= 2;
+    }
+    layers.push(Layer::fc("fc6", 7 * 7 * 512, 4096));
+    layers.push(Layer::fc("fc7", 4096, 4096));
+    layers.push(Layer::fc("fc8", 4096, 1000));
+    Network::new("vgg16", (224, 224, 3), layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sixteen_layers() {
+        assert_eq!(vgg16().len(), 16);
+    }
+
+    #[test]
+    fn macs_match_literature() {
+        // VGG-16 ≈ 15.5 GMACs.
+        let g = vgg16().total_macs() as f64 / 1e9;
+        assert!((14.0..17.0).contains(&g), "got {g} GMACs");
+    }
+
+    #[test]
+    fn weights_match_literature() {
+        // ≈138 M parameters → 138 MB at 8-bit.
+        let mb = vgg16().total_weight_bytes() as f64 / 1e6;
+        assert!((130.0..145.0).contains(&mb), "got {mb} MB");
+    }
+
+    #[test]
+    fn block_output_sizes() {
+        let n = vgg16();
+        // End of block outputs: 112,56,28,14,7
+        assert_eq!(n.layers[1].out_shape(), (112, 112, 64));
+        assert_eq!(n.layers[3].out_shape(), (56, 56, 128));
+        assert_eq!(n.layers[12].out_shape(), (7, 7, 512));
+    }
+}

@@ -1,0 +1,11 @@
+//! Pipeline scheduling: schedule types and the timeline evaluator
+//! (Equ. 1–3, 7 of the paper).
+
+pub mod schedule;
+pub mod timeline;
+
+pub use schedule::{Partition, Schedule, SegmentSchedule};
+pub use timeline::{
+    eval_cluster, eval_layer, eval_schedule, eval_segment, ClusterEval,
+    EvalContext, LayerPhases, ScheduleEval, SegmentEval,
+};

@@ -1,0 +1,211 @@
+//! Schedule types: the (Segment, Cluster, Region, Partition) variables of
+//! the paper's Table I, as produced by the DSE and consumed by the
+//! timeline evaluator.
+
+use crate::model::Network;
+
+/// Intra-layer partitioning scheme (paper §II-B; OSP excluded as in the
+/// paper).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Partition {
+    /// Input-shared: inputs replicated, weights split on output channels.
+    Isp,
+    /// Weight-shared: inputs split spatially (rows), weights replicated.
+    Wsp,
+}
+
+/// One segment's deployment: clusters of merged layers, each mapped to a
+/// region (a contiguous ZigZag range of chiplets), plus per-layer
+/// partitions.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SegmentSchedule {
+    /// Layer range `[lo, hi)` in the network chain.
+    pub lo: usize,
+    pub hi: usize,
+    /// Cluster boundaries, ascending, within `[lo, hi]`:
+    /// cluster `j` spans `[bounds[j], bounds[j+1])`. `bounds[0] == lo`,
+    /// `bounds.last() == hi`.
+    pub bounds: Vec<usize>,
+    /// Chiplets per cluster's region; `regions.len() == n_clusters()`,
+    /// entries ≥ 1, sum ≤ package chiplet count.
+    pub regions: Vec<usize>,
+    /// Per-layer partition for layers `lo..hi`.
+    pub partitions: Vec<Partition>,
+}
+
+impl SegmentSchedule {
+    /// Every layer of `[lo, hi)` its own cluster (segmented-pipeline shape).
+    pub fn one_layer_per_cluster(lo: usize, hi: usize, regions: Vec<usize>, partitions: Vec<Partition>) -> Self {
+        let bounds = (lo..=hi).collect();
+        SegmentSchedule { lo, hi, bounds, regions, partitions }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    pub fn n_clusters(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// Layer range of cluster `j`.
+    pub fn cluster_range(&self, j: usize) -> (usize, usize) {
+        (self.bounds[j], self.bounds[j + 1])
+    }
+
+    /// Zigzag start index of cluster `j`'s region (regions packed in
+    /// cluster order from index 0).
+    pub fn region_start(&self, j: usize) -> usize {
+        self.regions[..j].iter().sum()
+    }
+
+    /// Cluster index owning global layer `k`.
+    pub fn layer_cluster(&self, k: usize) -> usize {
+        debug_assert!(k >= self.lo && k < self.hi);
+        // bounds is ascending; find the cluster whose range contains k.
+        match self.bounds.binary_search(&k) {
+            Ok(j) if j == self.n_clusters() => j - 1,
+            Ok(j) => j,
+            Err(j) => j - 1,
+        }
+    }
+
+    /// Partition of global layer `k`.
+    pub fn partition(&self, k: usize) -> Partition {
+        self.partitions[k - self.lo]
+    }
+
+    /// Structural sanity versus a network and package size.
+    pub fn validate(&self, net: &Network, chiplets: usize) -> Result<(), String> {
+        if self.lo >= self.hi || self.hi > net.len() {
+            return Err(format!("bad layer range [{}, {})", self.lo, self.hi));
+        }
+        if self.bounds.first() != Some(&self.lo) || self.bounds.last() != Some(&self.hi) {
+            return Err("bounds must span [lo, hi]".into());
+        }
+        if !self.bounds.windows(2).all(|w| w[0] < w[1]) {
+            return Err("bounds must be strictly ascending".into());
+        }
+        if self.regions.len() != self.n_clusters() {
+            return Err("regions.len() != n_clusters".into());
+        }
+        if self.regions.iter().any(|&r| r == 0) {
+            return Err("empty region".into());
+        }
+        let used: usize = self.regions.iter().sum();
+        if used > chiplets {
+            return Err(format!("{used} chiplets used > {chiplets} available"));
+        }
+        if self.partitions.len() != self.n_layers() {
+            return Err("partitions.len() != n_layers".into());
+        }
+        Ok(())
+    }
+}
+
+/// A whole-network schedule: sequentially executed segments (Equ. 1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Schedule {
+    /// Producing method (for reports): "sequential", "full_pipeline",
+    /// "segmented", "scope".
+    pub method: String,
+    pub segments: Vec<SegmentSchedule>,
+}
+
+impl Schedule {
+    pub fn validate(&self, net: &Network, chiplets: usize) -> Result<(), String> {
+        if self.segments.is_empty() {
+            return Err("no segments".into());
+        }
+        let mut expect = 0usize;
+        for (i, seg) in self.segments.iter().enumerate() {
+            if seg.lo != expect {
+                return Err(format!("segment {i} starts at {} ≠ {expect}", seg.lo));
+            }
+            seg.validate(net, chiplets).map_err(|e| format!("segment {i}: {e}"))?;
+            expect = seg.hi;
+        }
+        if expect != net.len() {
+            return Err(format!("segments cover {expect} of {} layers", net.len()));
+        }
+        Ok(())
+    }
+
+    /// Total cluster count across segments (reporting).
+    pub fn total_clusters(&self) -> usize {
+        self.segments.iter().map(|s| s.n_clusters()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::scopenet;
+
+    fn seg() -> SegmentSchedule {
+        SegmentSchedule {
+            lo: 0,
+            hi: 6,
+            bounds: vec![0, 2, 4, 6],
+            regions: vec![4, 8, 4],
+            partitions: vec![Partition::Wsp; 6],
+        }
+    }
+
+    #[test]
+    fn cluster_accessors() {
+        let s = seg();
+        assert_eq!(s.n_clusters(), 3);
+        assert_eq!(s.cluster_range(1), (2, 4));
+        assert_eq!(s.region_start(0), 0);
+        assert_eq!(s.region_start(2), 12);
+        assert_eq!(s.layer_cluster(0), 0);
+        assert_eq!(s.layer_cluster(2), 1);
+        assert_eq!(s.layer_cluster(3), 1);
+        assert_eq!(s.layer_cluster(5), 2);
+    }
+
+    #[test]
+    fn validates_against_network() {
+        let net = scopenet();
+        let s = seg();
+        assert!(s.validate(&net, 16).is_ok());
+        assert!(s.validate(&net, 10).is_err()); // 16 chiplets used
+
+        let mut bad = seg();
+        bad.regions[0] = 0;
+        assert!(bad.validate(&net, 16).is_err());
+
+        let mut ragged = seg();
+        ragged.bounds = vec![0, 2, 2, 6];
+        assert!(ragged.validate(&net, 16).is_err());
+    }
+
+    #[test]
+    fn schedule_must_cover_chain() {
+        let net = scopenet();
+        let ok = Schedule { method: "scope".into(), segments: vec![seg()] };
+        assert!(ok.validate(&net, 16).is_ok());
+        assert_eq!(ok.total_clusters(), 3);
+
+        let mut gap = seg();
+        gap.hi = 5;
+        gap.bounds = vec![0, 2, 4, 5];
+        gap.partitions.pop();
+        let bad = Schedule { method: "scope".into(), segments: vec![gap] };
+        assert!(bad.validate(&net, 16).is_err());
+    }
+
+    #[test]
+    fn one_layer_per_cluster_shape() {
+        let s = SegmentSchedule::one_layer_per_cluster(
+            2,
+            5,
+            vec![1, 2, 3],
+            vec![Partition::Isp; 3],
+        );
+        assert_eq!(s.n_clusters(), 3);
+        assert_eq!(s.cluster_range(0), (2, 3));
+        assert_eq!(s.cluster_range(2), (4, 5));
+    }
+}

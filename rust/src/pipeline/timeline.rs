@@ -1,0 +1,402 @@
+//! The pipeline timeline evaluator — the `Forward()` of Algorithm 1 and
+//! the implementation of the paper's Equ. 1–3 and 7.
+//!
+//! * Layer time (Equ. 7): `T = T_pre + max(T_comm, T_comp)` (computation/
+//!   communication overlap; serial without `opts.overlap_comm`).
+//! * Cluster time (Equ. 3): sum over member layers.
+//! * Segment time (Equ. 2): `(m + N_cluster − 1) · max_j T_cluster(j)` —
+//!   the bottleneck stage paces the pipeline; `N−1` bubbles for warm-up.
+//! * System time (Equ. 1): segments run sequentially; each segment first
+//!   preloads its weights from DRAM (all methods buffer weights on-package
+//!   once per batch).
+
+use crate::arch::McmConfig;
+use crate::config::SimOptions;
+use crate::cost::{
+    comm_phase, comp_cycles, compute_energy, dram_transfer, ring_all_gather,
+    EnergyBreakdown, NopCost, RegionGeom,
+};
+use crate::model::Network;
+use crate::storage::{plan_cluster, LayerResidency, StoragePolicy};
+
+use super::schedule::{Schedule, SegmentSchedule};
+
+/// Everything an evaluation needs (threaded through the DSE hot loop).
+#[derive(Clone, Copy)]
+pub struct EvalContext<'a> {
+    pub net: &'a Network,
+    pub mcm: &'a McmConfig,
+    pub opts: &'a SimOptions,
+    pub policy: StoragePolicy,
+    /// Allow layers whose weights cannot stay resident to stream them from
+    /// DRAM in the preparation phase (Equ. 4's off-chip path). When false
+    /// (the fully-pipelined baseline), any overflow invalidates the
+    /// schedule — the paper's "weight buffer overflow" failure mode.
+    pub dram_fallback: bool,
+}
+
+/// One layer's phase timings (cycles) and energy (one sample).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LayerPhases {
+    pub pre: f64,
+    pub comp: f64,
+    pub comm: f64,
+    pub total: f64,
+    pub energy: EnergyBreakdown,
+}
+
+/// One cluster's per-sample evaluation.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterEval {
+    pub cycles: f64,
+    pub energy: EnergyBreakdown,
+    /// Peak per-chiplet weight footprint (bytes).
+    pub footprint: u64,
+    /// Total MACs in the cluster (Fig. 10a balance plots).
+    pub macs: u64,
+    /// Layers whose weights stream from DRAM every sample.
+    pub streamed_layers: usize,
+}
+
+/// One segment's evaluation for `m` samples.
+#[derive(Clone, Debug, Default)]
+pub struct SegmentEval {
+    pub clusters: Vec<ClusterEval>,
+    /// Bottleneck stage latency (cycles/sample).
+    pub stage_cycles: f64,
+    /// Pipelined latency for the batch, Equ. 2.
+    pub pipeline_cycles: f64,
+    /// Weight preload from DRAM (cycles + energy), once per batch.
+    pub preload_cycles: f64,
+    pub preload_energy_pj: f64,
+    /// Set when the segment violates a capacity constraint.
+    pub error: Option<String>,
+}
+
+/// A whole schedule's evaluation.
+#[derive(Clone, Debug, Default)]
+pub struct ScheduleEval {
+    pub segments: Vec<SegmentEval>,
+    /// End-to-end cycles for the batch (Equ. 1 + preloads).
+    pub total_cycles: f64,
+    /// Samples/second at the chiplet clock.
+    pub throughput: f64,
+    /// Total energy for the batch.
+    pub energy: EnergyBreakdown,
+    pub error: Option<String>,
+}
+
+impl ScheduleEval {
+    pub fn is_valid(&self) -> bool {
+        self.error.is_none()
+    }
+
+    fn invalid(reason: String) -> ScheduleEval {
+        ScheduleEval { error: Some(reason), ..Default::default() }
+    }
+}
+
+/// Region geometry of cluster `j` in a segment (regions are packed along
+/// the zigzag order from chiplet 0).
+fn region_of(seg: &SegmentSchedule, j: usize) -> RegionGeom {
+    RegionGeom { start: seg.region_start(j), n: seg.regions[j] }
+}
+
+/// Evaluate one layer (global index `k`) of a segment: Equ. 4–7.
+/// `residency`: how this layer's weights live on-chip (set by the
+/// cluster's residency plan).
+pub fn eval_layer(
+    ctx: &EvalContext,
+    seg: &SegmentSchedule,
+    k: usize,
+    residency: LayerResidency,
+) -> LayerPhases {
+    let layer = &ctx.net.layers[k];
+    let j = seg.layer_cluster(k);
+    let region = region_of(seg, j);
+    let r = region.n as u64;
+    let p = seg.partition(k);
+    let freq = ctx.mcm.chiplet.freq_hz;
+
+    // ---- preparation phase (Equ. 4) ----
+    let mut dram_pre_pj = 0.0f64;
+    let pre_cost: NopCost = match residency {
+        LayerResidency::Resident => NopCost::zero(),
+        LayerResidency::TiledExchange if r > 1 => {
+            // Distributed-WSP tile all-gather (§III-B): all chiplets
+            // assemble the full replica from the 1/R tiles.
+            ring_all_gather(
+                layer.weight_bytes() as f64,
+                &ctx.mcm.mesh,
+                &ctx.mcm.nop,
+                freq,
+                region,
+            )
+        }
+        LayerResidency::TiledExchange => NopCost::zero(),
+        LayerResidency::Streamed => {
+            // Off-chip path: one copy of the weights crosses the shared
+            // DRAM channel per sample.
+            let d = dram_transfer(layer.weight_bytes() as f64, &ctx.mcm.dram, freq, 1.0);
+            dram_pre_pj = d.energy_pj;
+            NopCost { cycles: d.cycles, energy_pj: 0.0, volume: d.bytes }
+        }
+    };
+
+    // ---- computation phase (Equ. 5) ----
+    let comp = comp_cycles(layer, p, r, &ctx.mcm.chiplet);
+
+    // ---- communication phase (Equ. 6 / Table II) ----
+    // Branch layers merge locally (element-wise add inside the block); the
+    // chain edge k → k+1 carries the activations.
+    let comm: NopCost = if layer.branch || k + 1 >= seg.hi {
+        // Last layer of the segment hands off on-package (the next segment
+        // reuses the same chiplets) — no NoP phase charged, same for all
+        // methods.
+        NopCost::zero()
+    } else {
+        let nj = seg.layer_cluster(k + 1);
+        comm_phase(
+            layer,
+            p,
+            region,
+            seg.partition(k + 1),
+            region_of(seg, nj),
+            &ctx.mcm.mesh,
+            &ctx.mcm.nop,
+            freq,
+        )
+    };
+
+    let overlapped = if ctx.opts.overlap_comm {
+        comm.cycles.max(comp)
+    } else {
+        comm.cycles + comp
+    };
+    let mut energy = compute_energy(layer, p, r, &ctx.mcm.chiplet);
+    energy.nop_pj += comm.energy_pj + pre_cost.energy_pj;
+    energy.dram_pj += dram_pre_pj;
+    LayerPhases {
+        pre: pre_cost.cycles,
+        comp,
+        comm: comm.cycles,
+        total: pre_cost.cycles + overlapped,
+        energy,
+    }
+}
+
+/// Evaluate one cluster (per sample): Equ. 3 plus the capacity footprint.
+pub fn eval_cluster(ctx: &EvalContext, seg: &SegmentSchedule, j: usize) -> ClusterEval {
+    let (lo, hi) = seg.cluster_range(j);
+    let layers = &ctx.net.layers[lo..hi];
+    let parts = &seg.partitions[lo - seg.lo..hi - seg.lo];
+    let plan = plan_cluster(
+        layers,
+        parts,
+        seg.regions[j] as u64,
+        ctx.policy,
+        ctx.mcm.chiplet.weight_capacity(),
+    );
+    let mut out = ClusterEval::default();
+    for k in lo..hi {
+        let ph = eval_layer(ctx, seg, k, plan.residency[k - lo]);
+        out.cycles += ph.total;
+        out.energy = out.energy.add(ph.energy);
+        out.macs += ctx.net.layers[k].macs();
+    }
+    out.footprint = plan.footprint;
+    out.streamed_layers = plan.streamed_count();
+    out
+}
+
+/// Evaluate one segment for `m` samples: Equ. 2 + preload + capacity.
+pub fn eval_segment(ctx: &EvalContext, seg: &SegmentSchedule, m: u64) -> SegmentEval {
+    let mut ev = SegmentEval::default();
+    for j in 0..seg.n_clusters() {
+        let c = eval_cluster(ctx, seg, j);
+        if c.streamed_layers > 0 && !ctx.dram_fallback && ev.error.is_none() {
+            ev.error = Some(format!(
+                "cluster {j}: weight buffer overflow ({} layers cannot stay resident)",
+                c.streamed_layers
+            ));
+        }
+        ev.clusters.push(c);
+    }
+    ev.stage_cycles = ev
+        .clusters
+        .iter()
+        .map(|c| c.cycles)
+        .fold(0.0, f64::max);
+    ev.pipeline_cycles =
+        (m as f64 + seg.n_clusters() as f64 - 1.0) * ev.stage_cycles;
+    // Segment weight preload: the whole segment's weights enter the package
+    // once per batch through the shared DRAM channel.
+    let seg_weights: u64 = ctx.net.layers[seg.lo..seg.hi]
+        .iter()
+        .map(|l| l.weight_bytes())
+        .sum();
+    let preload = dram_transfer(
+        seg_weights as f64,
+        &ctx.mcm.dram,
+        ctx.mcm.chiplet.freq_hz,
+        1.0,
+    );
+    ev.preload_cycles = preload.cycles;
+    ev.preload_energy_pj = preload.energy_pj;
+    ev
+}
+
+/// Evaluate a whole schedule for `opts.samples`: Equ. 1.
+pub fn eval_schedule(ctx: &EvalContext, sched: &Schedule) -> ScheduleEval {
+    if let Err(e) = sched.validate(ctx.net, ctx.mcm.chiplets) {
+        return ScheduleEval::invalid(e);
+    }
+    let m = ctx.opts.samples;
+    let mut out = ScheduleEval::default();
+    for seg in &sched.segments {
+        let ev = eval_segment(ctx, seg, m);
+        if let Some(e) = &ev.error {
+            if out.error.is_none() {
+                out.error = Some(e.clone());
+            }
+        }
+        out.total_cycles += ev.preload_cycles + ev.pipeline_cycles;
+        let per_sample: EnergyBreakdown = ev
+            .clusters
+            .iter()
+            .fold(EnergyBreakdown::zero(), |acc, c| acc.add(c.energy));
+        out.energy = out.energy.add(per_sample.scale(m as f64));
+        out.energy.dram_pj += ev.preload_energy_pj;
+        out.segments.push(ev);
+    }
+    if out.error.is_none() {
+        let secs = ctx.mcm.cycles_to_secs(out.total_cycles);
+        out.throughput = m as f64 / secs;
+    } else {
+        out.total_cycles = f64::INFINITY;
+        out.throughput = 0.0;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::McmConfig;
+    use crate::config::SimOptions;
+    use crate::model::zoo::scopenet;
+    use crate::pipeline::schedule::{Partition, Schedule, SegmentSchedule};
+
+    fn ctx<'a>(net: &'a Network, mcm: &'a McmConfig, opts: &'a SimOptions) -> EvalContext<'a> {
+        EvalContext {
+            net,
+            mcm,
+            opts,
+            policy: StoragePolicy::Distributed,
+            dram_fallback: true,
+        }
+    }
+
+    fn sched3() -> Schedule {
+        Schedule {
+            method: "scope".into(),
+            segments: vec![SegmentSchedule {
+                lo: 0,
+                hi: 6,
+                bounds: vec![0, 2, 4, 6],
+                regions: vec![6, 6, 4],
+                partitions: vec![Partition::Wsp; 6],
+            }],
+        }
+    }
+
+    #[test]
+    fn pipeline_beats_nothing_and_is_finite() {
+        let net = scopenet();
+        let mcm = McmConfig::paper_default(16);
+        let opts = SimOptions::default();
+        let ev = eval_schedule(&ctx(&net, &mcm, &opts), &sched3());
+        assert!(ev.is_valid(), "{:?}", ev.error);
+        assert!(ev.total_cycles.is_finite() && ev.total_cycles > 0.0);
+        assert!(ev.throughput > 0.0);
+        assert!(ev.energy.total_pj() > 0.0);
+        assert!(ev.energy.mac_pj > 0.0);
+    }
+
+    #[test]
+    fn equ2_bubble_arithmetic() {
+        let net = scopenet();
+        let mcm = McmConfig::paper_default(16);
+        let opts = SimOptions { samples: 10, ..Default::default() };
+        let c = ctx(&net, &mcm, &opts);
+        let seg = &sched3().segments[0];
+        let ev = eval_segment(&c, seg, 10);
+        // (m + N − 1) · max stage
+        assert!((ev.pipeline_cycles - 12.0 * ev.stage_cycles).abs() < 1e-9);
+        assert_eq!(ev.clusters.len(), 3);
+        let max = ev.clusters.iter().map(|x| x.cycles).fold(0.0, f64::max);
+        assert_eq!(ev.stage_cycles, max);
+    }
+
+    #[test]
+    fn more_samples_amortize_bubbles() {
+        let net = scopenet();
+        let mcm = McmConfig::paper_default(16);
+        let few = SimOptions { samples: 2, ..Default::default() };
+        let many = SimOptions { samples: 256, ..Default::default() };
+        let t_few = eval_schedule(&ctx(&net, &mcm, &few), &sched3()).throughput;
+        let t_many = eval_schedule(&ctx(&net, &mcm, &many), &sched3()).throughput;
+        assert!(t_many > t_few);
+    }
+
+    #[test]
+    fn overlap_helps() {
+        let net = scopenet();
+        let mcm = McmConfig::paper_default(16);
+        let on = SimOptions { overlap_comm: true, ..Default::default() };
+        let off = SimOptions { overlap_comm: false, ..Default::default() };
+        let t_on = eval_schedule(&ctx(&net, &mcm, &on), &sched3()).total_cycles;
+        let t_off = eval_schedule(&ctx(&net, &mcm, &off), &sched3()).total_cycles;
+        assert!(t_on <= t_off);
+    }
+
+    #[test]
+    fn invalid_schedule_reports() {
+        let net = scopenet();
+        let mcm = McmConfig::paper_default(4);
+        let opts = SimOptions::default();
+        // sched3 uses 16 chiplets, only 4 exist.
+        let ev = eval_schedule(&ctx(&net, &mcm, &opts), &sched3());
+        assert!(!ev.is_valid());
+        assert_eq!(ev.throughput, 0.0);
+    }
+
+    #[test]
+    fn distributed_policy_shrinks_footprint() {
+        let net = scopenet();
+        let mcm = McmConfig::paper_default(16);
+        let opts = SimOptions::default();
+        let seg = &sched3().segments[0];
+        let dist = EvalContext { policy: StoragePolicy::Distributed, ..ctx(&net, &mcm, &opts) };
+        let repl = EvalContext { policy: StoragePolicy::Replicated, ..ctx(&net, &mcm, &opts) };
+        let fd = eval_cluster(&dist, seg, 2).footprint;
+        let fr = eval_cluster(&repl, seg, 2).footprint;
+        assert!(fd <= fr);
+        // ... but pays a preparation phase
+        let pd = eval_layer(&dist, seg, 4, LayerResidency::TiledExchange);
+        let pr = eval_layer(&repl, seg, 4, LayerResidency::Resident);
+        assert!(pd.pre > 0.0);
+        assert_eq!(pr.pre, 0.0);
+    }
+
+    #[test]
+    fn last_layer_has_no_comm_phase() {
+        let net = scopenet();
+        let mcm = McmConfig::paper_default(16);
+        let opts = SimOptions::default();
+        let c = ctx(&net, &mcm, &opts);
+        let seg = &sched3().segments[0];
+        let ph = eval_layer(&c, seg, 5, LayerResidency::Resident);
+        assert_eq!(ph.comm, 0.0);
+    }
+}

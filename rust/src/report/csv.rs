@@ -1,0 +1,91 @@
+//! CSV emission for the figure regenerators — machine-readable twins of
+//! the ASCII tables (for plotting the paper's figures from bench output).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A CSV document under construction.
+#[derive(Clone, Debug, Default)]
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Csv {
+        Csv { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "csv row width");
+        self.rows.push(cells);
+        self
+    }
+
+    /// RFC-4180-ish escaping: quote fields containing comma/quote/newline.
+    fn escape(field: &str) -> String {
+        if field.contains([',', '"', '\n']) {
+            format!("\"{}\"", field.replace('"', "\"\""))
+        } else {
+            field.to_string()
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let line = |cells: &[String]| -> String {
+            cells.iter().map(|c| Csv::escape(c)).collect::<Vec<_>>().join(",")
+        };
+        out.push_str(&line(&self.header));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write to `path`, creating parent directories.
+    pub fn write(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.render())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_and_escapes() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(vec!["1".into(), "plain".into()]);
+        c.row(vec!["2".into(), "has,comma".into()]);
+        c.row(vec!["3".into(), "has\"quote".into()]);
+        let s = c.render();
+        assert!(s.starts_with("a,b\n1,plain\n"));
+        assert!(s.contains("2,\"has,comma\""));
+        assert!(s.contains("3,\"has\"\"quote\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "csv row width")]
+    fn ragged_rejected() {
+        Csv::new(&["a", "b"]).row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn writes_to_disk() {
+        let dir = std::env::temp_dir().join("scope_csv_test");
+        let path = dir.join("t.csv");
+        let mut c = Csv::new(&["x"]);
+        c.row(vec!["1".into()]);
+        c.write(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "x\n1\n");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

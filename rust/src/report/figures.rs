@@ -1,0 +1,323 @@
+//! Figure/table regenerators: one function per paper artifact (Fig. 7–10,
+//! the §V-B(1) search-space rows). Shared by the CLI, the examples, and
+//! the benches so every entry point prints the same rows the paper
+//! reports.
+
+use anyhow::{anyhow, Result};
+
+use crate::arch::McmConfig;
+use crate::baselines::{run_all, METHOD_NAMES};
+use crate::config::SimOptions;
+use crate::dse::{exhaustive_segment, q_total, scope_reduced_space, ExhaustiveOptions};
+use crate::model::zoo;
+use crate::pipeline::timeline::EvalContext;
+use crate::scope::{schedule_scope, search_segment, MethodResult, SearchOptions};
+use crate::storage::StoragePolicy;
+use crate::util::stats;
+use crate::util::table::{f3, Table};
+
+/// Fig. 7 row: normalized throughput of the four methods for one
+/// (network, scale) cell. Normalization: best method = 1.0 (the paper
+/// normalizes per group).
+pub fn fig7_cell(net_name: &str, chiplets: usize, samples: u64) -> Result<Vec<MethodResult>> {
+    let net = zoo::by_name(net_name).ok_or_else(|| anyhow!("unknown net {net_name}"))?;
+    let mcm = McmConfig::paper_default(chiplets);
+    let opts = SimOptions { samples, ..Default::default() };
+    Ok(run_all(&net, &mcm, &opts))
+}
+
+/// Fig. 7: normalized throughput across networks × scales × methods.
+pub fn fig7(nets: &[&str], scales: &[usize], samples: u64) -> Result<Table> {
+    let mut header = vec!["network", "chiplets"];
+    header.extend(METHOD_NAMES);
+    header.push("scope_vs_best_baseline");
+    let mut table = Table::new("Fig. 7 — normalized throughput", &header);
+    for net in nets {
+        for &c in scales {
+            let results = fig7_cell(net, c, samples)?;
+            let best = results
+                .iter()
+                .map(|r| r.throughput())
+                .fold(0.0, f64::max)
+                .max(1e-30);
+            let mut row = vec![net.to_string(), c.to_string()];
+            for r in &results {
+                row.push(if r.eval.is_valid() {
+                    f3(r.throughput() / best)
+                } else {
+                    "invalid".to_string()
+                });
+            }
+            let scope_tp = results.last().unwrap().throughput();
+            let best_baseline = results[..3]
+                .iter()
+                .map(|r| r.throughput())
+                .fold(0.0, f64::max);
+            row.push(if best_baseline > 0.0 {
+                format!("{:.2}x", scope_tp / best_baseline)
+            } else {
+                "-".into()
+            });
+            table.row(row);
+        }
+    }
+    Ok(table)
+}
+
+/// Fig. 8: exhaustive distribution vs the search algorithm's pick.
+pub struct Fig8Result {
+    pub table: Table,
+    pub hist_lines: Vec<String>,
+    pub scope_rank: f64,
+    pub valid: u64,
+    pub visited: u64,
+}
+
+pub fn fig8(
+    net_name: &str,
+    chiplets: usize,
+    samples: u64,
+    ex_opts: ExhaustiveOptions,
+) -> Result<Fig8Result> {
+    let net = zoo::by_name(net_name).ok_or_else(|| anyhow!("unknown net {net_name}"))?;
+    let mcm = McmConfig::paper_default(chiplets);
+    let opts = SimOptions { samples, ..Default::default() };
+    let ctx = EvalContext {
+        net: &net,
+        mcm: &mcm,
+        opts: &opts,
+        policy: StoragePolicy::Distributed,
+        dram_fallback: true,
+    };
+    let ex = exhaustive_segment(&ctx, 0, net.len(), samples, ex_opts);
+    let found = search_segment(&ctx, 0, net.len(), samples, SearchOptions::default())
+        .ok_or_else(|| anyhow!("search found nothing"))?;
+    let rank = ex.rank_of(found.latency * (1.0 + 1e-9));
+
+    let mut table = Table::new(
+        "Fig. 8 — search validation",
+        &["metric", "value"],
+    );
+    table.row(vec!["visited configs".into(), ex.visited.to_string()]);
+    table.row(vec!["valid configs".into(), ex.valid.to_string()]);
+    table.row(vec!["exhaustive best (cycles)".into(), f3(ex.best_latency)]);
+    table.row(vec!["scope search (cycles)".into(), f3(found.latency)]);
+    table.row(vec![
+        "scope rank (fraction better)".into(),
+        format!("{:.5} (paper: top 0.05% = 0.0005)", rank),
+    ]);
+    table.row(vec!["search evals".into(), found.evals.to_string()]);
+
+    // ASCII histogram (proportion per latency bucket — the Fig. 8 bars)
+    let hist = ex.histogram(20);
+    let props = hist.proportions();
+    let maxp = props.iter().copied().fold(0.0, f64::max).max(1e-12);
+    let width = (hist.hi - hist.lo) / props.len() as f64;
+    let mut lines = Vec::new();
+    for (i, p) in props.iter().enumerate() {
+        let bar = "#".repeat((p / maxp * 50.0).round() as usize);
+        lines.push(format!(
+            "{:>12.0} .. {:>12.0} | {:6.3}% {}",
+            hist.lo + i as f64 * width,
+            hist.lo + (i + 1) as f64 * width,
+            p * 100.0,
+            bar
+        ));
+    }
+    Ok(Fig8Result {
+        table,
+        hist_lines: lines,
+        scope_rank: rank,
+        valid: ex.valid,
+        visited: ex.visited,
+    })
+}
+
+/// Fig. 9: throughput scaling vs chiplet count, normalized to the smallest
+/// scale per method (the paper normalizes to 16 chiplets).
+pub fn fig9(net_name: &str, scales: &[usize], samples: u64) -> Result<Table> {
+    let mut header = vec!["method"];
+    let scale_labels: Vec<String> = scales.iter().map(|c| format!("{c} chiplets")).collect();
+    header.extend(scale_labels.iter().map(|s| s.as_str()));
+    let mut table = Table::new(
+        &format!("Fig. 9 — scalability ({net_name}, normalized to {} chiplets)", scales[0]),
+        &header,
+    );
+    let mut per_method: Vec<Vec<f64>> = vec![Vec::new(); METHOD_NAMES.len()];
+    for &c in scales {
+        let results = fig7_cell(net_name, c, samples)?;
+        for (i, r) in results.iter().enumerate() {
+            per_method[i].push(r.throughput());
+        }
+    }
+    for (i, name) in METHOD_NAMES.iter().enumerate() {
+        let base = per_method[i][0];
+        let mut row = vec![name.to_string()];
+        for &tp in &per_method[i] {
+            row.push(if tp <= 0.0 {
+                "invalid".into()
+            } else if base <= 0.0 {
+                format!("{} abs", f3(tp))
+            } else {
+                format!("{:.2}x", tp / base)
+            });
+        }
+        table.row(row);
+    }
+    Ok(table)
+}
+
+/// Fig. 10: the ResNet-152 @ 256 case study — (a) per-stage compute
+/// balance, (b) energy breakdown, Scope vs segmented.
+pub struct Fig10Result {
+    pub balance: Table,
+    pub energy: Table,
+    pub scope_cv: f64,
+    pub segmented_cv: f64,
+    pub scope_segments: usize,
+    pub segmented_segments: usize,
+}
+
+pub fn fig10(net_name: &str, chiplets: usize, samples: u64) -> Result<Fig10Result> {
+    let net = zoo::by_name(net_name).ok_or_else(|| anyhow!("unknown net {net_name}"))?;
+    let mcm = McmConfig::paper_default(chiplets);
+    let opts = SimOptions { samples, ..Default::default() };
+    let scope = schedule_scope(&net, &mcm, &opts);
+    let segmented = crate::baselines::schedule_segmented(&net, &mcm, &opts);
+
+    // Fig. 10a plots stage-matching quality: within each segment, how flat
+    // are the pipeline stages' *execution times*? (Equ. 2: the max stage
+    // paces the whole segment.) We report per-segment normalized stage
+    // cycles and the stage-weighted mean CV across segments.
+    let stage_balance = |r: &MethodResult| -> (Vec<f64>, f64) {
+        let mut all_norm = Vec::new();
+        let mut cv_acc = 0.0;
+        let mut weight_acc = 0.0;
+        for seg in &r.eval.segments {
+            let cycles: Vec<f64> = seg.clusters.iter().map(|c| c.cycles).collect();
+            let m = stats::mean(&cycles).max(1e-30);
+            all_norm.extend(cycles.iter().map(|c| c / m));
+            let w = cycles.len() as f64;
+            cv_acc += stats::cv(&cycles) * w;
+            weight_acc += w;
+        }
+        (all_norm, cv_acc / weight_acc.max(1.0))
+    };
+    let (scope_stages, scope_cv) = stage_balance(&scope);
+    let (seg_stages, seg_cv) = stage_balance(&segmented);
+    let mut balance = Table::new(
+        "Fig. 10a — normalized per-stage time within segments (mean = 1.0)",
+        &["method", "stages", "min", "mean", "max", "cv (weighted)"],
+    );
+    for (name, xs, cv) in [
+        ("scope", &scope_stages, scope_cv),
+        ("segmented", &seg_stages, seg_cv),
+    ] {
+        balance.row(vec![
+            name.into(),
+            xs.len().to_string(),
+            f3(xs.iter().copied().fold(f64::INFINITY, f64::min)),
+            "1.000".into(),
+            f3(xs.iter().copied().fold(0.0, f64::max)),
+            f3(cv),
+        ]);
+    }
+
+    let mut energy = Table::new(
+        "Fig. 10b — energy breakdown (normalized to Scope total)",
+        &["method", "MAC", "SRAM", "NoP", "DRAM", "total"],
+    );
+    let scope_total = scope.eval.energy.total_pj().max(1e-30);
+    for r in [&scope, &segmented] {
+        let e = &r.eval.energy;
+        energy.row(vec![
+            r.method.clone(),
+            f3(e.mac_pj / scope_total),
+            f3(e.sram_pj / scope_total),
+            f3(e.nop_pj / scope_total),
+            f3(e.dram_pj / scope_total),
+            f3(e.total_pj() / scope_total),
+        ]);
+    }
+
+    Ok(Fig10Result {
+        balance,
+        energy,
+        scope_cv,
+        segmented_cv: seg_cv,
+        scope_segments: scope.schedule.as_ref().map(|s| s.segments.len()).unwrap_or(0),
+        segmented_segments: segmented
+            .schedule
+            .as_ref()
+            .map(|s| s.segments.len())
+            .unwrap_or(0),
+    })
+}
+
+/// §V-B(1) / Equ. 8–9: search-space size rows.
+pub fn space_table(net_name: &str, chiplets: usize) -> Result<Table> {
+    let net = zoo::by_name(net_name).ok_or_else(|| anyhow!("unknown net {net_name}"))?;
+    let l = net.len() as u64;
+    let c = chiplets as u64;
+    let q = q_total(l, c);
+    let reduced = scope_reduced_space(l, 64);
+    let mut t = Table::new(
+        &format!("Equ. 8–9 — search space ({net_name}, {chiplets} chiplets)"),
+        &["quantity", "value"],
+    );
+    t.row(vec!["layers (L)".into(), l.to_string()]);
+    t.row(vec!["chiplets (C)".into(), c.to_string()]);
+    t.row(vec![
+        "Q_total (Equ. 9)".into(),
+        format!("≈10^{:.1}", q.log10()),
+    ]);
+    if q.log10() < 18.0 {
+        t.row(vec!["Q_total exact".into(), q.to_decimal()]);
+    }
+    t.row(vec![
+        "Scope reduced space".into(),
+        format!("≤ {} Forward() calls", reduced.to_decimal()),
+    ]);
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7_small_cell() {
+        let t = fig7(&["alexnet"], &[16], 8).unwrap();
+        let s = t.render();
+        assert!(s.contains("alexnet"));
+        assert!(s.contains("scope"));
+    }
+
+    #[test]
+    fn fig9_normalizes_to_first_scale() {
+        let t = fig9("scopenet", &[16, 32], 8).unwrap();
+        let s = t.render();
+        assert!(s.contains("1.00x"), "{s}");
+    }
+
+    #[test]
+    fn space_table_for_paper_setting() {
+        let t = space_table("resnet152", 256).unwrap();
+        let s = t.render();
+        assert!(s.contains("10^16"), "{s}"); // ≈10^164.x
+    }
+
+    #[test]
+    fn fig8_tiny() {
+        let r = fig8("scopenet", 8, 8, ExhaustiveOptions::default()).unwrap();
+        assert!(r.valid > 0);
+        assert!(r.scope_rank <= 0.10, "rank {}", r.scope_rank);
+        assert!(!r.hist_lines.is_empty());
+    }
+
+    #[test]
+    fn unknown_net_errors() {
+        assert!(fig7(&["nope"], &[16], 4).is_err());
+        assert!(space_table("nope", 16).is_err());
+    }
+}

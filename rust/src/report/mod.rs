@@ -1,0 +1,6 @@
+//! Report emission: figure/table regenerators, CSV twins, and sensitivity
+//! sweeps, shared by the CLI, examples, and benches.
+
+pub mod csv;
+pub mod figures;
+pub mod sensitivity;

@@ -1,0 +1,315 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes `artifacts/manifest.json`) and the rust coordinator (which loads
+//! the listed HLO-text modules).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One pipeline cluster's compiled module.
+#[derive(Clone, Debug)]
+pub struct ClusterArtifact {
+    pub index: usize,
+    pub members: Vec<String>,
+    pub file: PathBuf,
+    /// Weight tensors the module takes after the activation, in calling
+    /// order (file holds them concatenated, f32 LE).
+    pub params_file: PathBuf,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+}
+
+/// ISP channel-shard modules for one layer.
+#[derive(Clone, Debug)]
+pub struct IspLayerArtifact {
+    pub layer: String,
+    pub files: Vec<PathBuf>,
+    /// Per shard: (params file, parameter shapes).
+    pub shard_params: Vec<(PathBuf, Vec<Vec<usize>>)>,
+    pub input_shape: Vec<usize>,
+    pub shard_output_shape: Vec<usize>,
+    pub full_output_shape: Vec<usize>,
+}
+
+/// The standalone L1 kernel module (runtime microbench).
+#[derive(Clone, Debug)]
+pub struct MicroArtifact {
+    pub file: PathBuf,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub seed: usize,
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub golden_batch: usize,
+    pub clusters: Vec<ClusterArtifact>,
+    pub full_file: PathBuf,
+    pub full_params_file: PathBuf,
+    pub full_param_shapes: Vec<Vec<usize>>,
+    pub isp_ways: usize,
+    pub isp_cluster: usize,
+    pub isp_layers: Vec<IspLayerArtifact>,
+    pub micro: MicroArtifact,
+}
+
+fn shape(j: &Json, key: &str) -> Result<Vec<usize>> {
+    j.get(key)?.usize_list()
+}
+
+/// Parse a `"params": [{"shape": [...]}, ...]` list.
+fn param_shapes(j: &Json) -> Result<Vec<Vec<usize>>> {
+    j.get("params")?
+        .as_arr()?
+        .iter()
+        .map(|p| shape(p, "shape"))
+        .collect()
+}
+
+impl Manifest {
+    /// Default artifact directory: `$SCOPE_ARTIFACTS` or `<repo>/artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("SCOPE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| {
+                Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+            })
+    }
+
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut clusters = Vec::new();
+        for c in j.get("clusters")?.as_arr()? {
+            clusters.push(ClusterArtifact {
+                index: c.get("index")?.as_usize()?,
+                members: c
+                    .get("members")?
+                    .as_arr()?
+                    .iter()
+                    .map(|m| m.as_str().map(str::to_string))
+                    .collect::<Result<_>>()?,
+                file: dir.join(c.get("file")?.as_str()?),
+                params_file: dir.join(c.get("params_file")?.as_str()?),
+                param_shapes: param_shapes(c)?,
+                input_shape: shape(c, "input_shape")?,
+                output_shape: shape(c, "output_shape")?,
+            });
+        }
+        if clusters.is_empty() {
+            bail!("manifest has no clusters");
+        }
+        // chaining invariant
+        for w in clusters.windows(2) {
+            if w[0].output_shape != w[1].input_shape {
+                bail!(
+                    "cluster {} output {:?} != cluster {} input {:?}",
+                    w[0].index,
+                    w[0].output_shape,
+                    w[1].index,
+                    w[1].input_shape
+                );
+            }
+        }
+
+        let isp = j.get("isp")?;
+        let mut isp_layers = Vec::new();
+        for e in isp.get("layers")?.as_arr()? {
+            isp_layers.push(IspLayerArtifact {
+                layer: e.get("layer")?.as_str()?.to_string(),
+                files: e
+                    .get("files")?
+                    .as_arr()?
+                    .iter()
+                    .map(|f| Ok(dir.join(f.as_str()?)))
+                    .collect::<Result<_>>()?,
+                shard_params: e
+                    .get("shard_params")?
+                    .as_arr()?
+                    .iter()
+                    .map(|sp| {
+                        Ok((
+                            dir.join(sp.get("params_file")?.as_str()?),
+                            param_shapes(sp)?,
+                        ))
+                    })
+                    .collect::<Result<_>>()?,
+                input_shape: shape(e, "input_shape")?,
+                shard_output_shape: shape(e, "shard_output_shape")?,
+                full_output_shape: shape(e, "full_output_shape")?,
+            });
+        }
+
+        let micro = j.get("micro")?;
+        let manifest = Manifest {
+            dir: dir.to_path_buf(),
+            seed: j.get("seed")?.as_usize()?,
+            input_shape: shape(&j, "input_shape")?,
+            num_classes: j.get("num_classes")?.as_usize()?,
+            golden_batch: j.get("golden_batch")?.as_usize()?,
+            clusters,
+            full_file: dir.join(j.get("full")?.get("file")?.as_str()?),
+            full_params_file: dir.join(j.get("full")?.get("params_file")?.as_str()?),
+            full_param_shapes: param_shapes(j.get("full")?)?,
+            isp_ways: isp.get("ways")?.as_usize()?,
+            isp_cluster: isp.get("cluster")?.as_usize()?,
+            isp_layers,
+            micro: MicroArtifact {
+                file: dir.join(micro.get("file")?.as_str()?),
+                m: micro.get("m")?.as_usize()?,
+                k: micro.get("k")?.as_usize()?,
+                n: micro.get("n")?.as_usize()?,
+            },
+        };
+        manifest.check_files()?;
+        Ok(manifest)
+    }
+
+    fn check_files(&self) -> Result<()> {
+        let mut files: Vec<&PathBuf> =
+            vec![&self.full_file, &self.full_params_file, &self.micro.file];
+        files.extend(self.clusters.iter().map(|c| &c.file));
+        files.extend(self.clusters.iter().map(|c| &c.params_file));
+        for e in &self.isp_layers {
+            files.extend(e.files.iter());
+            files.extend(e.shard_params.iter().map(|(f, _)| f));
+        }
+        for f in files {
+            if !f.exists() {
+                bail!("artifact missing: {} (run `make artifacts`)", f.display());
+            }
+        }
+        Ok(())
+    }
+
+    /// Load a concatenated f32-LE parameter file into per-tensor vectors.
+    pub fn load_params(file: &Path, shapes: &[Vec<usize>]) -> Result<Vec<Vec<f32>>> {
+        let bytes =
+            std::fs::read(file).with_context(|| format!("reading {}", file.display()))?;
+        let total: usize = shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+        if bytes.len() != total * 4 {
+            bail!(
+                "{}: {} bytes, expected {} ({} tensors)",
+                file.display(),
+                bytes.len(),
+                total * 4,
+                shapes.len()
+            );
+        }
+        let mut out = Vec::with_capacity(shapes.len());
+        let mut off = 0usize;
+        for s in shapes {
+            let n: usize = s.iter().product();
+            out.push(
+                bytes[off * 4..(off + n) * 4]
+                    .chunks_exact(4)
+                    .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect(),
+            );
+            off += n;
+        }
+        Ok(out)
+    }
+
+    /// Load the golden input/output tensors (little-endian f32).
+    pub fn golden(&self) -> Result<(Vec<Vec<f32>>, Vec<Vec<f32>>)> {
+        let in_len: usize = self.input_shape.iter().product();
+        let out_len = self.num_classes;
+        let read = |name: &str, per: usize| -> Result<Vec<Vec<f32>>> {
+            let bytes = std::fs::read(self.dir.join(name))
+                .with_context(|| format!("reading {name}"))?;
+            if bytes.len() != self.golden_batch * per * 4 {
+                bail!(
+                    "{name}: {} bytes, expected {}",
+                    bytes.len(),
+                    self.golden_batch * per * 4
+                );
+            }
+            Ok(bytes
+                .chunks_exact(per * 4)
+                .map(|chunk| {
+                    chunk
+                        .chunks_exact(4)
+                        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                        .collect()
+                })
+                .collect())
+        };
+        Ok((read("golden_inputs.bin", in_len)?, read("golden_outputs.bin", out_len)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        Manifest::default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&Manifest::default_dir()).unwrap();
+        assert_eq!(m.clusters.len(), 3);
+        assert_eq!(m.input_shape, vec![16, 16, 3]);
+        assert_eq!(m.num_classes, 10);
+        assert_eq!(m.isp_ways, 2);
+        assert_eq!(m.isp_layers.len(), 2);
+        assert_eq!(m.clusters[0].input_shape, m.input_shape);
+        assert_eq!(m.clusters[2].output_shape, vec![m.num_classes]);
+        // params: conv layers have (w, b) each
+        assert_eq!(m.clusters[0].param_shapes.len(), 4); // conv1 w,b conv2 w,b
+        assert_eq!(m.clusters[0].param_shapes[0], vec![3, 3, 3, 16]);
+        assert_eq!(m.full_param_shapes.len(), 12);
+    }
+
+    #[test]
+    fn params_load_and_are_finite() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(&Manifest::default_dir()).unwrap();
+        let c0 = &m.clusters[0];
+        let ps = Manifest::load_params(&c0.params_file, &c0.param_shapes).unwrap();
+        assert_eq!(ps.len(), 4);
+        assert_eq!(ps[0].len(), 3 * 3 * 3 * 16);
+        assert!(ps.iter().flatten().all(|v| v.is_finite()));
+        // wrong shape list must error
+        assert!(Manifest::load_params(&c0.params_file, &[vec![1]]).is_err());
+    }
+
+    #[test]
+    fn golden_tensors_load() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(&Manifest::default_dir()).unwrap();
+        let (xs, ys) = m.golden().unwrap();
+        assert_eq!(xs.len(), m.golden_batch);
+        assert_eq!(ys.len(), m.golden_batch);
+        assert_eq!(xs[0].len(), 16 * 16 * 3);
+        assert_eq!(ys[0].len(), 10);
+        assert!(xs[0].iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(Manifest::load(Path::new("/nonexistent-dir-xyz")).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! AOT runtime: loads the HLO-text artifacts emitted by
+//! `python/compile/aot.py` and executes them via the PJRT C API (`xla`
+//! crate). Python never runs on this path.
+
+pub mod client;
+pub mod manifest;
+
+pub use client::{Executable, Runtime};
+pub use manifest::Manifest;

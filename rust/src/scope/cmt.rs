@@ -1,0 +1,135 @@
+//! Cluster Merge Table (CMT) generation — the `GenCMT` DP of Algorithm 1.
+//!
+//! Start with every layer its own cluster; iteratively merge the adjacent
+//! pair with the most similar *parallelism* (ratio offset
+//! `|p_i / p_{i+1} − 1|`, exactly the paper's pseudocode), recording the
+//! division for every cluster count `N ∈ {L, …, 1}`. Layers sharing a
+//! region want similar parallelizable dimensions, so similarity-driven
+//! merging prunes the exponential composition space to one candidate per
+//! `N` — the paper's exponential-to-linear reduction for the cluster
+//! dimension.
+
+use crate::model::Layer;
+
+/// Cluster divisions for every cluster count: `table[n]` (1-based `n`,
+/// `table[0]` unused) holds ascending boundaries spanning `[lo, hi]` with
+/// exactly `n` clusters.
+#[derive(Clone, Debug)]
+pub struct ClusterMergeTable {
+    pub lo: usize,
+    pub hi: usize,
+    table: Vec<Vec<usize>>,
+}
+
+impl ClusterMergeTable {
+    /// Bounds for `n` clusters (`1 ≤ n ≤ hi − lo`).
+    pub fn bounds(&self, n: usize) -> &[usize] {
+        &self.table[n]
+    }
+
+    pub fn max_clusters(&self) -> usize {
+        self.hi - self.lo
+    }
+}
+
+/// Mean parallelism of a cluster `[b0, b1)` (layer pixel counts).
+fn cluster_parallelism(layers: &[Layer], lo: usize, b0: usize, b1: usize) -> f64 {
+    let sum: u64 = (b0..b1).map(|k| layers[k - lo].parallelism()).sum();
+    sum as f64 / (b1 - b0) as f64
+}
+
+/// Build the CMT for the sub-chain `[lo, hi)` of `layers`
+/// (`layers.len() == hi − lo`).
+pub fn gen_cmt(layers: &[Layer], lo: usize, hi: usize) -> ClusterMergeTable {
+    let l = hi - lo;
+    assert_eq!(layers.len(), l);
+    assert!(l >= 1);
+    let mut table: Vec<Vec<usize>> = vec![Vec::new(); l + 1];
+    // N = L: every layer its own cluster.
+    let mut bounds: Vec<usize> = (lo..=hi).collect();
+    table[l] = bounds.clone();
+    for n in (2..=l).rev() {
+        // parallelism of each current cluster
+        let ps: Vec<f64> = (0..n)
+            .map(|j| cluster_parallelism(layers, lo, bounds[j], bounds[j + 1]))
+            .collect();
+        // adjacent ratio offset |p_j / p_{j+1} − 1|
+        let mut best_j = 0usize;
+        let mut best_off = f64::INFINITY;
+        for j in 0..n - 1 {
+            let off = (ps[j] / ps[j + 1] - 1.0).abs();
+            if off < best_off {
+                best_off = off;
+                best_j = j;
+            }
+        }
+        // merge clusters best_j and best_j+1: drop the shared boundary
+        bounds.remove(best_j + 1);
+        table[n - 1] = bounds.clone();
+    }
+    ClusterMergeTable { lo, hi, table }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::{alexnet, resnet50};
+    use crate::model::Layer;
+
+    #[test]
+    fn table_shape_invariants() {
+        let net = alexnet();
+        let cmt = gen_cmt(&net.layers, 0, net.len());
+        for n in 1..=net.len() {
+            let b = cmt.bounds(n);
+            assert_eq!(b.len(), n + 1, "n={n}");
+            assert_eq!(*b.first().unwrap(), 0);
+            assert_eq!(*b.last().unwrap(), net.len());
+            assert!(b.windows(2).all(|w| w[0] < w[1]));
+        }
+        assert_eq!(cmt.bounds(1), &[0, net.len()]);
+    }
+
+    #[test]
+    fn merges_are_nested_refinements() {
+        // Each CMT row must be obtainable from the next by removing exactly
+        // one boundary (the DP merges one adjacent pair per step).
+        let net = resnet50();
+        let cmt = gen_cmt(&net.layers, 0, net.len());
+        for n in 2..=net.len() {
+            let coarse = cmt.bounds(n - 1);
+            let fine = cmt.bounds(n);
+            assert!(coarse.iter().all(|b| fine.contains(b)), "n={n}");
+        }
+    }
+
+    #[test]
+    fn similar_parallelism_merges_first() {
+        // Three layers: two at 16×16 resolution, one at 4×4. The first
+        // merge must join the two similar ones.
+        let layers = vec![
+            Layer::conv("a", 16, 16, 8, 8, 3, 1, 1),
+            Layer::conv("b", 16, 16, 8, 8, 3, 1, 1).with_pool(4, 4),
+            Layer::conv("c", 4, 4, 8, 8, 3, 1, 1),
+        ];
+        let cmt = gen_cmt(&layers, 0, 3);
+        assert_eq!(cmt.bounds(2), &[0, 2, 3]); // {a,b} | {c}
+    }
+
+    #[test]
+    fn sub_chain_offsets() {
+        let net = alexnet();
+        let cmt = gen_cmt(&net.layers[2..6], 2, 6);
+        assert_eq!(cmt.bounds(1), &[2, 6]);
+        assert_eq!(cmt.bounds(4), &[2, 3, 4, 5, 6]);
+        assert_eq!(cmt.max_clusters(), 4);
+    }
+
+    #[test]
+    fn single_layer_chain() {
+        let net = alexnet();
+        let cmt = gen_cmt(&net.layers[0..1], 0, 1);
+        assert_eq!(cmt.bounds(1), &[0, 1]);
+        assert_eq!(cmt.max_clusters(), 1);
+    }
+}

@@ -1,0 +1,135 @@
+//! The Scope merged-pipeline scheduler — the paper's contribution.
+//!
+//! Pipeline: segment allocation (shared with the segmented baseline) →
+//! per-segment Algorithm 1 (CMT cluster DP × WSP→ISP transition × region
+//! heuristic) → whole-schedule evaluation under §III-B distributed weight
+//! buffering.
+
+pub mod cmt;
+pub mod partition;
+pub mod region_alloc;
+pub mod search;
+pub mod segmenter;
+
+use crate::arch::McmConfig;
+use crate::config::SimOptions;
+use crate::model::Network;
+use crate::pipeline::schedule::Schedule;
+use crate::pipeline::timeline::{eval_schedule, EvalContext, ScheduleEval};
+use crate::storage::StoragePolicy;
+use crate::util::ceil_div;
+
+pub use search::{search_segment, SearchOptions, SegmentSearch};
+
+/// A scheduling method's outcome (uniform across Scope and baselines).
+#[derive(Clone, Debug)]
+pub struct MethodResult {
+    pub method: String,
+    pub schedule: Option<Schedule>,
+    pub eval: ScheduleEval,
+}
+
+impl MethodResult {
+    pub fn invalid(method: &str, reason: &str) -> MethodResult {
+        MethodResult {
+            method: method.to_string(),
+            schedule: None,
+            eval: ScheduleEval {
+                error: Some(reason.to_string()),
+                total_cycles: f64::INFINITY,
+                ..Default::default()
+            },
+        }
+    }
+
+    pub fn throughput(&self) -> f64 {
+        self.eval.throughput
+    }
+}
+
+/// Capacity-driven lower bound on the segment count: a segment's weights
+/// must fit the package under the distributed policy (≈ one copy total).
+pub fn min_segments(net: &Network, mcm: &McmConfig) -> usize {
+    let cap = mcm.package_weight_capacity();
+    ceil_div(net.total_weight_bytes(), cap.max(1)) as usize
+}
+
+/// How many segment counts past the lower bound to explore.
+const SEGMENT_SLACK: usize = 3;
+
+/// Schedule `net` with Scope and evaluate it.
+pub fn schedule_scope(net: &Network, mcm: &McmConfig, opts: &SimOptions) -> MethodResult {
+    schedule_scope_opts(net, mcm, opts, SearchOptions::default())
+}
+
+/// [`schedule_scope`] with explicit search knobs (ablation benches).
+pub fn schedule_scope_opts(
+    net: &Network,
+    mcm: &McmConfig,
+    opts: &SimOptions,
+    sopts: SearchOptions,
+) -> MethodResult {
+    let policy = if opts.distributed_weights {
+        StoragePolicy::Distributed
+    } else {
+        StoragePolicy::Replicated
+    };
+    let ctx = EvalContext { net, mcm, opts, policy, dram_fallback: true };
+    let lo_s = min_segments(net, mcm).max(1);
+    let found = segmenter::search_segments_from(net, lo_s, lo_s + SEGMENT_SLACK, |lo, hi| {
+        search_segment(&ctx, lo, hi, opts.samples, sopts)
+            .map(|s| (s.schedule, s.latency))
+    });
+    match found {
+        None => MethodResult::invalid("scope", "no valid segmentation"),
+        Some((_bounds, segments, _lat)) => {
+            let schedule = Schedule { method: "scope".into(), segments };
+            let eval = eval_schedule(&ctx, &schedule);
+            MethodResult { method: "scope".into(), schedule: Some(schedule), eval }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::{alexnet, resnet18};
+
+    #[test]
+    fn scope_schedules_alexnet_16() {
+        let net = alexnet();
+        let mcm = McmConfig::paper_default(16);
+        let opts = SimOptions::default();
+        let r = schedule_scope(&net, &mcm, &opts);
+        assert!(r.eval.is_valid(), "{:?}", r.eval.error);
+        assert!(r.throughput() > 0.0);
+        let sched = r.schedule.unwrap();
+        assert!(sched.validate(&net, 16).is_ok());
+    }
+
+    #[test]
+    fn min_segments_capacity_math() {
+        let net = resnet18(); // ~11.5 MB weights
+        let mcm16 = McmConfig::paper_default(16); // 16 MiB package
+        let mcm64 = McmConfig::paper_default(64);
+        assert_eq!(min_segments(&net, &mcm16), 1);
+        assert_eq!(min_segments(&net, &mcm64), 1);
+        let vgg = crate::model::zoo::vgg16(); // ~138 MB
+        assert!(min_segments(&vgg, &mcm16) >= 8);
+        assert!(min_segments(&vgg, &McmConfig::paper_default(256)) == 1);
+    }
+
+    #[test]
+    fn scope_merges_clusters_on_deep_nets() {
+        // On a 16-chiplet package a deep-ish net must merge: fewer clusters
+        // than layers in at least one segment.
+        let net = resnet18();
+        let mcm = McmConfig::paper_default(16);
+        let opts = SimOptions::default();
+        let r = schedule_scope(&net, &mcm, &opts);
+        assert!(r.eval.is_valid(), "{:?}", r.eval.error);
+        let sched = r.schedule.unwrap();
+        let layers: usize = sched.segments.iter().map(|s| s.n_layers()).sum();
+        assert!(sched.total_clusters() < layers);
+    }
+}

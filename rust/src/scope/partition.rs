@@ -1,0 +1,78 @@
+//! Partition assignment: the single WSP→ISP transition point.
+//!
+//! The paper observes shallow layers have large activations (→ WSP: only
+//! halos cross the NoP) and deep layers large weights (→ ISP: weights stay
+//! sharded), and reduces the per-layer 2^L partition space to L+1
+//! transition points.
+
+use crate::pipeline::schedule::Partition;
+
+/// WSP for the first `idx` layers of an `l`-layer segment, ISP after.
+pub fn transition_partitions(l: usize, idx: usize) -> Vec<Partition> {
+    debug_assert!(idx <= l);
+    (0..l)
+        .map(|k| if k < idx { Partition::Wsp } else { Partition::Isp })
+        .collect()
+}
+
+/// Decode a bitmask into per-layer partitions (bit k set → layer k WSP) —
+/// used by the exhaustive search's full-space mode.
+pub fn mask_partitions(l: usize, mask: u64) -> Vec<Partition> {
+    debug_assert!(l <= 64);
+    (0..l)
+        .map(|k| {
+            if mask >> k & 1 == 1 {
+                Partition::Wsp
+            } else {
+                Partition::Isp
+            }
+        })
+        .collect()
+}
+
+/// True if `parts` is expressible as a WSP→ISP transition (Scope's reduced
+/// space) — used to measure how much of the full space the reduction keeps.
+pub fn is_transition(parts: &[Partition]) -> bool {
+    let first_isp = parts
+        .iter()
+        .position(|&p| p == Partition::Isp)
+        .unwrap_or(parts.len());
+    parts[first_isp..].iter().all(|&p| p == Partition::Isp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transition_shapes() {
+        let p = transition_partitions(4, 2);
+        assert_eq!(
+            p,
+            vec![Partition::Wsp, Partition::Wsp, Partition::Isp, Partition::Isp]
+        );
+        assert_eq!(transition_partitions(3, 0), vec![Partition::Isp; 3]);
+        assert_eq!(transition_partitions(3, 3), vec![Partition::Wsp; 3]);
+    }
+
+    #[test]
+    fn masks_roundtrip() {
+        let p = mask_partitions(4, 0b0011);
+        assert_eq!(
+            p,
+            vec![Partition::Wsp, Partition::Wsp, Partition::Isp, Partition::Isp]
+        );
+        assert!(is_transition(&p));
+        let q = mask_partitions(4, 0b0101);
+        assert!(!is_transition(&q));
+    }
+
+    #[test]
+    fn every_transition_is_a_transition() {
+        for l in 1..=8 {
+            for idx in 0..=l {
+                assert!(is_transition(&transition_partitions(l, idx)));
+            }
+        }
+    }
+}

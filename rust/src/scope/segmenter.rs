@@ -1,0 +1,232 @@
+//! Segment allocation, shared by the segmented-pipeline baseline and Scope
+//! (the paper evaluates both under "an identical segment allocation method
+//! ... to isolate performance gains solely to our novel contributions").
+//!
+//! For each candidate segment count `s`, split the chain into `s`
+//! contiguous parts with balanced weight volume (binary search over the
+//! max-weight threshold + greedy packing — optimal for minimizing the max),
+//! schedule each part with the supplied per-segment scheduler, sum the
+//! per-segment latencies (segments execute sequentially, Equ. 1), and keep
+//! the best valid segment count.
+
+use crate::model::Network;
+
+/// Boundaries of an `s`-way balanced-weight split of `[0, L)`:
+/// minimizes the maximum per-segment weight volume.
+pub fn balanced_split(net: &Network, s: usize) -> Vec<usize> {
+    balanced_split_capped(net, s, usize::MAX)
+}
+
+/// [`balanced_split`] with an additional per-segment layer-count cap
+/// (per-layer-stage methods need ≤ C layers in every segment).
+pub fn balanced_split_capped(net: &Network, s: usize, max_layers: usize) -> Vec<usize> {
+    let l = net.len();
+    assert!(s >= 1 && s <= l && max_layers >= 1);
+    let weights: Vec<u64> = net.layers.iter().map(|x| x.weight_bytes()).collect();
+    let total: u64 = weights.iter().sum();
+    let maxw: u64 = weights.iter().copied().max().unwrap_or(0);
+    // greedy packing under a weight cap AND the layer cap
+    let pack = |cap: u64| -> Vec<usize> {
+        let mut bounds = vec![0usize];
+        let (mut cur_w, mut cur_n) = (0u64, 0usize);
+        for (i, &w) in weights.iter().enumerate() {
+            if (cur_w + w > cap || cur_n + 1 > max_layers) && bounds.last() != Some(&i) {
+                bounds.push(i);
+                cur_w = 0;
+                cur_n = 0;
+            }
+            cur_w += w;
+            cur_n += 1;
+        }
+        bounds.push(l);
+        bounds
+    };
+    // binary search the smallest weight cap needing ≤ s bins
+    let (mut lo, mut hi) = (maxw, total);
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if pack(mid).len() - 1 <= s {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    let mut bounds = pack(lo);
+    // pad to exactly s segments by splitting the longest (greedy may need
+    // fewer); also split any segment still over the layer cap.
+    loop {
+        let over_cap = bounds.windows(2).position(|w| w[1] - w[0] > max_layers);
+        let need_more = bounds.len() - 1 < s;
+        let j = match over_cap {
+            Some(j) => j,
+            None if need_more => bounds
+                .windows(2)
+                .enumerate()
+                .max_by_key(|(_, w)| w[1] - w[0])
+                .map(|(j, _)| j)
+                .unwrap(),
+            None => break,
+        };
+        let (a, b) = (bounds[j], bounds[j + 1]);
+        if b - a < 2 {
+            break; // cannot split further
+        }
+        bounds.insert(j + 1, a + (b - a) / 2);
+    }
+    bounds
+}
+
+/// Result of scheduling one segment: the latency (cycles for the batch,
+/// incl. preload) and an opaque per-segment schedule.
+pub type SegResult<S> = Option<(S, f64)>;
+
+/// Pick the best segment count in `1..=max_segments` using
+/// `schedule_segment(lo, hi) → Option<(schedule, latency)>`.
+///
+/// Returns `(boundaries, schedules, total_latency)` of the winner.
+pub fn search_segments<S, F>(
+    net: &Network,
+    max_segments: usize,
+    schedule_segment: F,
+) -> Option<(Vec<usize>, Vec<S>, f64)>
+where
+    F: FnMut(usize, usize) -> SegResult<S>,
+{
+    search_segments_from(net, 1, max_segments, schedule_segment)
+}
+
+/// [`search_segments`] over an explicit count range `min..=max` (callers
+/// that know a capacity-driven lower bound skip provably invalid counts).
+pub fn search_segments_from<S, F>(
+    net: &Network,
+    min_segments: usize,
+    max_segments: usize,
+    schedule_segment: F,
+) -> Option<(Vec<usize>, Vec<S>, f64)>
+where
+    F: FnMut(usize, usize) -> SegResult<S>,
+{
+    search_segments_capped(net, min_segments, max_segments, usize::MAX, schedule_segment)
+}
+
+/// [`search_segments_from`] with a per-segment layer cap (per-layer-stage
+/// methods pass the chiplet count).
+pub fn search_segments_capped<S, F>(
+    net: &Network,
+    min_segments: usize,
+    max_segments: usize,
+    max_layers: usize,
+    mut schedule_segment: F,
+) -> Option<(Vec<usize>, Vec<S>, f64)>
+where
+    F: FnMut(usize, usize) -> SegResult<S>,
+{
+    let l = net.len();
+    let mut best: Option<(Vec<usize>, Vec<S>, f64)> = None;
+    for s in min_segments.max(1)..=max_segments.min(l) {
+        let bounds = balanced_split_capped(net, s, max_layers);
+        if bounds.len() - 1 != s {
+            continue; // couldn't materialize s segments
+        }
+        let mut schedules = Vec::with_capacity(s);
+        let mut total = 0.0f64;
+        let mut ok = true;
+        for w in bounds.windows(2) {
+            match schedule_segment(w[0], w[1]) {
+                Some((sched, lat)) => {
+                    schedules.push(sched);
+                    total += lat;
+                }
+                None => {
+                    ok = false;
+                    break;
+                }
+            }
+        }
+        if ok {
+            let better = best.as_ref().map(|b| total < b.2).unwrap_or(true);
+            if better {
+                best = Some((bounds, schedules, total));
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::{alexnet, resnet152, vgg16};
+
+    #[test]
+    fn split_shapes() {
+        let net = alexnet();
+        for s in 1..=4 {
+            let b = balanced_split(&net, s);
+            assert_eq!(b.len(), s + 1, "s={s}");
+            assert_eq!(*b.first().unwrap(), 0);
+            assert_eq!(*b.last().unwrap(), net.len());
+            assert!(b.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn split_balances_weights() {
+        let net = vgg16();
+        let b = balanced_split(&net, 3);
+        let seg_w = |lo: usize, hi: usize| -> u64 {
+            net.layers[lo..hi].iter().map(|l| l.weight_bytes()).sum()
+        };
+        let parts: Vec<u64> = b.windows(2).map(|w| seg_w(w[0], w[1])).collect();
+        let max = *parts.iter().max().unwrap();
+        // max segment must be under half the total for a 3-way split of a
+        // net whose largest layer is ~40% of weights (fc6).
+        let total: u64 = parts.iter().sum();
+        assert!(max < total, "no degenerate split");
+        assert!(max >= total / 3, "pigeonhole lower bound");
+        // the balanced max cannot exceed largest-layer + average
+        assert!(max <= net.max_layer_weight_bytes() + total / 3);
+    }
+
+    #[test]
+    fn deep_net_splits() {
+        let net = resnet152();
+        let b = balanced_split(&net, 3);
+        assert_eq!(b.len(), 4);
+    }
+
+    #[test]
+    fn search_picks_cheapest_count() {
+        // fake scheduler: cost = 100/segments + 10*segments (min at s=3..4)
+        let net = vgg16();
+        let (bounds, scheds, total) =
+            search_segments(&net, 6, |lo, hi| {
+                let span = (hi - lo) as f64;
+                Some(((lo, hi), span * span))
+            })
+            .unwrap();
+        // quadratic per-segment cost → more segments is better → s=6 wins
+        assert_eq!(bounds.len() - 1, 6);
+        assert_eq!(scheds.len(), 6);
+        assert!(total > 0.0);
+    }
+
+    #[test]
+    fn search_skips_invalid_counts() {
+        let net = alexnet();
+        // segments longer than 6 layers are unschedulable in this fake
+        // world, so s=1 (the whole 8-layer chain) must be skipped
+        let got = search_segments(&net, 3, |lo, hi| {
+            if hi - lo <= 6 {
+                Some(((lo, hi), 1.0))
+            } else {
+                None
+            }
+        });
+        let (bounds, _, _) = got.unwrap();
+        assert!(bounds.len() - 1 >= 2);
+
+        // nothing schedulable → None
+        assert!(search_segments::<(), _>(&net, 2, |_, _| None).is_none());
+    }
+}

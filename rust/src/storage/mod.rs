@@ -1,0 +1,310 @@
+//! Distributed weight buffering (paper §III-B) and capacity validation.
+//!
+//! A cluster's chiplets must hold its layers' weights on-package across the
+//! whole segment (DRAM re-fetch per sample would dominate). Footprint per
+//! chiplet depends on partition and storage policy:
+//!
+//! * ISP layer: weights are channel-sharded anyway → `ceil(W/R)` resident.
+//! * WSP layer, **replicated** policy (baselines): full `W` resident on
+//!   every chiplet, no preparation cost.
+//! * WSP layer, **distributed** policy (Scope §III-B): `ceil(W/R)` tile
+//!   resident; the full replica is materialized only during that layer's
+//!   turn via a NoP all-gather in the preparation phase, then dropped. The
+//!   steady-state footprint is `Σ tiles + max_l (W_l − tile_l)` (one
+//!   transient replica alive at a time).
+
+use crate::model::Layer;
+use crate::pipeline::schedule::Partition;
+use crate::util::ceil_div;
+
+/// Weight storage policy for WSP layers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StoragePolicy {
+    /// Full replica resident (no prep exchange) — baseline behaviour.
+    Replicated,
+    /// §III-B tiled residency + preparation-phase all-gather — Scope.
+    Distributed,
+}
+
+/// Resident weight tile of one layer per chiplet (bytes).
+pub fn resident_tile(layer: &Layer, p: Partition, r: u64, policy: StoragePolicy) -> u64 {
+    let w = layer.weight_bytes();
+    match (p, policy) {
+        (Partition::Isp, _) => ceil_div(w, r),
+        (Partition::Wsp, StoragePolicy::Distributed) => ceil_div(w, r),
+        (Partition::Wsp, StoragePolicy::Replicated) => w,
+    }
+}
+
+/// Transient extra bytes needed while `layer` is the one computing: under
+/// the distributed policy a WSP layer inflates its tile to the full matrix.
+pub fn transient_extra(layer: &Layer, p: Partition, r: u64, policy: StoragePolicy) -> u64 {
+    match (p, policy) {
+        (Partition::Wsp, StoragePolicy::Distributed) => {
+            layer.weight_bytes() - ceil_div(layer.weight_bytes(), r)
+        }
+        _ => 0,
+    }
+}
+
+/// Bytes each chiplet must *receive* over the NoP during the preparation
+/// phase of `layer` (Equ. 4's NoP side): the (R−1)/R missing share of a
+/// distributed WSP matrix. Zero for ISP or replicated WSP.
+pub fn prep_exchange_bytes(layer: &Layer, p: Partition, r: u64, policy: StoragePolicy) -> u64 {
+    transient_extra(layer, p, r, policy)
+}
+
+/// Peak per-chiplet weight footprint of a cluster (bytes): all resident
+/// tiles plus the largest single transient replica.
+pub fn cluster_footprint(
+    layers: &[Layer],
+    partitions: &[Partition],
+    r: u64,
+    policy: StoragePolicy,
+) -> u64 {
+    debug_assert_eq!(layers.len(), partitions.len());
+    let resident: u64 = layers
+        .iter()
+        .zip(partitions)
+        .map(|(l, &p)| resident_tile(l, p, r, policy))
+        .sum();
+    let transient = layers
+        .iter()
+        .zip(partitions)
+        .map(|(l, &p)| transient_extra(l, p, r, policy))
+        .max()
+        .unwrap_or(0);
+    resident + transient
+}
+
+/// How one layer's weights live on the region's chiplets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerResidency {
+    /// The full working copy is resident (ISP shard, or a WSP replica):
+    /// zero preparation cost.
+    Resident,
+    /// §III-B distributed tiles: `W/R` resident, the replica is assembled
+    /// by a NoP all-gather in the preparation phase (WSP + Distributed
+    /// policy only).
+    TiledExchange,
+    /// No on-chip copy: weights stream from DRAM every sample (Equ. 4's
+    /// off-chip path — "DRAM access significantly degrades performance").
+    Streamed,
+}
+
+/// Per-cluster storage plan chosen under the chiplet capacity.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResidencyPlan {
+    pub residency: Vec<LayerResidency>,
+    /// Peak per-chiplet footprint of the plan (bytes).
+    pub footprint: u64,
+}
+
+impl ResidencyPlan {
+    pub fn streamed_count(&self) -> usize {
+        self.residency
+            .iter()
+            .filter(|&&r| r == LayerResidency::Streamed)
+            .count()
+    }
+
+    pub fn fully_on_chip(&self) -> bool {
+        self.streamed_count() == 0
+    }
+}
+
+/// Build the residency plan for a cluster under `capacity` bytes/chiplet.
+///
+/// Greedy demotion: start every layer at its cheapest-prep state (full
+/// working copy resident), then while the footprint overflows, demote the
+/// most demanding layer one step — WSP replicas first demote to §III-B
+/// tiles (Distributed policy only), then to DRAM streaming. ISP shards go
+/// straight to streaming (they are already minimal on-chip).
+pub fn plan_cluster(
+    layers: &[Layer],
+    partitions: &[Partition],
+    r: u64,
+    policy: StoragePolicy,
+    capacity: u64,
+) -> ResidencyPlan {
+    debug_assert_eq!(layers.len(), partitions.len());
+    let n = layers.len();
+    // On-chip demand of a layer in a given state: (steady bytes, transient
+    // extra while it computes).
+    let demand = |i: usize, st: LayerResidency| -> (u64, u64) {
+        let w = layers[i].weight_bytes();
+        match (partitions[i], st) {
+            (_, LayerResidency::Streamed) => (0, 0),
+            (Partition::Isp, _) => (ceil_div(w, r), 0),
+            (Partition::Wsp, LayerResidency::Resident) => (w, 0),
+            (Partition::Wsp, LayerResidency::TiledExchange) => {
+                (ceil_div(w, r), w - ceil_div(w, r))
+            }
+        }
+    };
+    let next_state = |i: usize, cur: LayerResidency| -> Option<LayerResidency> {
+        match (partitions[i], policy, cur) {
+            (_, _, LayerResidency::Streamed) => None,
+            (Partition::Wsp, StoragePolicy::Distributed, LayerResidency::Resident) => {
+                Some(LayerResidency::TiledExchange)
+            }
+            (_, _, _) => Some(LayerResidency::Streamed),
+        }
+    };
+    // Incremental state: per-layer (steady, transient) demands, the steady
+    // sum, and the top-2 transients (so replacing the max is O(1)). This
+    // loop sits inside the DSE's Forward() — no allocation per candidate.
+    let mut plan = vec![LayerResidency::Resident; n];
+    let mut steady: Vec<u64> = (0..n).map(|i| demand(i, plan[i]).0).collect();
+    let mut trans: Vec<u64> = (0..n).map(|i| demand(i, plan[i]).1).collect();
+    let mut steady_sum: u64 = steady.iter().sum();
+    let top2 = |trans: &[u64]| -> (u64, u64) {
+        let (mut m1, mut m2) = (0u64, 0u64);
+        for &t in trans {
+            if t > m1 {
+                m2 = m1;
+                m1 = t;
+            } else if t > m2 {
+                m2 = t;
+            }
+        }
+        (m1, m2)
+    };
+    let (mut max1, mut max2) = top2(&trans);
+    loop {
+        let foot = steady_sum + max1;
+        if foot <= capacity {
+            return ResidencyPlan { residency: plan, footprint: foot };
+        }
+        // candidate demotions: O(1) footprint delta each
+        let mut best: Option<(u64, usize, LayerResidency)> = None;
+        for i in 0..n {
+            let Some(st) = next_state(i, plan[i]) else { continue };
+            let (ns, nt) = demand(i, st);
+            let new_steady = steady_sum - steady[i] + ns;
+            let new_max = if trans[i] == max1 {
+                max2.max(nt)
+            } else {
+                max1.max(nt)
+            };
+            let saving = foot.saturating_sub(new_steady + new_max);
+            if best.map(|b| saving > b.0).unwrap_or(true) {
+                best = Some((saving, i, st));
+            }
+        }
+        let (saving, i, st) = match best {
+            Some(b) => b,
+            None => return ResidencyPlan { residency: plan, footprint: 0 },
+        };
+        if saving == 0 {
+            // transient dominated by another layer: demote the largest
+            // remaining anyway so the loop always terminates
+            let j = (0..n)
+                .filter(|&j| plan[j] != LayerResidency::Streamed)
+                .max_by_key(|&j| steady[j] + trans[j]);
+            let Some(j) = j else {
+                return ResidencyPlan { residency: plan, footprint: 0 };
+            };
+            let st = next_state(j, plan[j]).unwrap();
+            let (ns, nt) = demand(j, st);
+            plan[j] = st;
+            steady_sum = steady_sum - steady[j] + ns;
+            steady[j] = ns;
+            trans[j] = nt;
+            (max1, max2) = top2(&trans);
+            continue;
+        }
+        let (ns, nt) = demand(i, st);
+        plan[i] = st;
+        steady_sum = steady_sum - steady[i] + ns;
+        steady[i] = ns;
+        trans[i] = nt;
+        (max1, max2) = top2(&trans);
+    }
+}
+
+/// Check a cluster against the chiplet weight-buffer capacity.
+pub fn cluster_fits(
+    layers: &[Layer],
+    partitions: &[Partition],
+    r: u64,
+    policy: StoragePolicy,
+    capacity: u64,
+) -> bool {
+    cluster_footprint(layers, partitions, r, policy) <= capacity
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Layer;
+
+    fn l(w_kb: u64) -> Layer {
+        // 1×1 conv with cin=1024, cout = w_kb: weight bytes = 1024·cout
+        Layer::conv("l", 8, 8, 1024, w_kb, 1, 1, 0)
+    }
+
+    #[test]
+    fn isp_always_sharded() {
+        let layer = l(512); // 512 KiB weights
+        for policy in [StoragePolicy::Replicated, StoragePolicy::Distributed] {
+            assert_eq!(
+                resident_tile(&layer, Partition::Isp, 4, policy),
+                layer.weight_bytes() / 4
+            );
+            assert_eq!(prep_exchange_bytes(&layer, Partition::Isp, 4, policy), 0);
+        }
+    }
+
+    #[test]
+    fn wsp_replicated_vs_distributed() {
+        let layer = l(512);
+        let w = layer.weight_bytes();
+        assert_eq!(
+            resident_tile(&layer, Partition::Wsp, 4, StoragePolicy::Replicated),
+            w
+        );
+        assert_eq!(
+            resident_tile(&layer, Partition::Wsp, 4, StoragePolicy::Distributed),
+            w / 4
+        );
+        assert_eq!(
+            prep_exchange_bytes(&layer, Partition::Wsp, 4, StoragePolicy::Distributed),
+            w - w / 4
+        );
+    }
+
+    #[test]
+    fn distributed_shrinks_multi_wsp_cluster_footprint() {
+        // Three 512 KiB WSP layers over 4 chiplets, 1 MiB capacity:
+        // replicated: 3 × 512 KiB = 1.5 MiB → overflow.
+        // distributed: 3 × 128 KiB + 384 KiB transient = 768 KiB → fits.
+        let layers = vec![l(512), l(512), l(512)];
+        let parts = vec![Partition::Wsp; 3];
+        let cap = 1 << 20;
+        assert!(!cluster_fits(&layers, &parts, 4, StoragePolicy::Replicated, cap));
+        assert!(cluster_fits(&layers, &parts, 4, StoragePolicy::Distributed, cap));
+    }
+
+    #[test]
+    fn footprint_monotone_in_chiplets() {
+        let layers = vec![l(512), l(256)];
+        let parts = vec![Partition::Wsp; 2];
+        let f2 = cluster_footprint(&layers, &parts, 2, StoragePolicy::Distributed);
+        let f8 = cluster_footprint(&layers, &parts, 8, StoragePolicy::Distributed);
+        assert!(f8 < f2);
+    }
+
+    #[test]
+    fn single_chiplet_has_no_exchange() {
+        let layer = l(512);
+        assert_eq!(
+            prep_exchange_bytes(&layer, Partition::Wsp, 1, StoragePolicy::Distributed),
+            0
+        );
+        assert_eq!(
+            cluster_footprint(&[layer.clone()], &[Partition::Wsp], 1, StoragePolicy::Distributed),
+            layer.weight_bytes()
+        );
+    }
+}

@@ -1,0 +1,222 @@
+//! Exact unsigned big integers, enough to evaluate the paper's Equ. 8–9
+//! search-space counts (`Q_total ≈ 8.27e164` for ResNet-152 on 256 chiplets)
+//! without floating-point overflow or an external bignum crate.
+//!
+//! Representation: little-endian base-2^32 limbs stored in u64 slots so
+//! products fit natively. Only the operations the DSE needs are implemented:
+//! add, mul-by-small, full mul, binomial coefficients, pow2, decimal/log10.
+
+const BASE: u64 = 1 << 32;
+
+/// Arbitrary-precision unsigned integer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BigUint {
+    /// Little-endian limbs, each < 2^32; no trailing zeros (canonical form).
+    limbs: Vec<u64>,
+}
+
+impl BigUint {
+    pub fn zero() -> Self {
+        BigUint { limbs: vec![] }
+    }
+
+    pub fn from_u64(v: u64) -> Self {
+        let mut n = BigUint { limbs: vec![v & (BASE - 1), v >> 32] };
+        n.trim();
+        n
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.limbs.is_empty()
+    }
+
+    fn trim(&mut self) {
+        while self.limbs.last() == Some(&0) {
+            self.limbs.pop();
+        }
+    }
+
+    /// `self + other`.
+    pub fn add(&self, other: &BigUint) -> BigUint {
+        let n = self.limbs.len().max(other.limbs.len());
+        let mut out = Vec::with_capacity(n + 1);
+        let mut carry = 0u64;
+        for i in 0..n {
+            let a = self.limbs.get(i).copied().unwrap_or(0);
+            let b = other.limbs.get(i).copied().unwrap_or(0);
+            let s = a + b + carry;
+            out.push(s & (BASE - 1));
+            carry = s >> 32;
+        }
+        if carry > 0 {
+            out.push(carry);
+        }
+        let mut r = BigUint { limbs: out };
+        r.trim();
+        r
+    }
+
+    /// `self * small` for a u64 multiplier.
+    pub fn mul_u64(&self, m: u64) -> BigUint {
+        self.mul(&BigUint::from_u64(m))
+    }
+
+    /// Schoolbook multiply — operand sizes here are ≤ ~20 limbs, so O(n²)
+    /// is more than fast enough.
+    pub fn mul(&self, other: &BigUint) -> BigUint {
+        if self.is_zero() || other.is_zero() {
+            return BigUint::zero();
+        }
+        let mut out = vec![0u64; self.limbs.len() + other.limbs.len()];
+        for (i, &a) in self.limbs.iter().enumerate() {
+            let mut carry = 0u64;
+            for (j, &b) in other.limbs.iter().enumerate() {
+                let cur = out[i + j] + a * b + carry;
+                out[i + j] = cur & (BASE - 1);
+                carry = cur >> 32;
+            }
+            let mut k = i + other.limbs.len();
+            while carry > 0 {
+                let cur = out[k] + carry;
+                out[k] = cur & (BASE - 1);
+                carry = cur >> 32;
+                k += 1;
+            }
+        }
+        let mut r = BigUint { limbs: out };
+        r.trim();
+        r
+    }
+
+    /// Exact division by a small divisor, returning (quotient, remainder).
+    /// Used by binomial() (which divides exactly) and decimal printing.
+    pub fn divmod_u64(&self, d: u64) -> (BigUint, u64) {
+        assert!(d > 0 && d < BASE, "divisor must be in (0, 2^32)");
+        let mut out = vec![0u64; self.limbs.len()];
+        let mut rem = 0u64;
+        for i in (0..self.limbs.len()).rev() {
+            let cur = (rem << 32) | self.limbs[i];
+            out[i] = cur / d;
+            rem = cur % d;
+        }
+        let mut q = BigUint { limbs: out };
+        q.trim();
+        (q, rem)
+    }
+
+    /// `2^e`.
+    pub fn pow2(e: u32) -> BigUint {
+        let mut limbs = vec![0u64; (e / 32) as usize];
+        limbs.push(1u64 << (e % 32));
+        BigUint { limbs }
+    }
+
+    /// Binomial coefficient C(n, k), exact.
+    pub fn binomial(n: u64, k: u64) -> BigUint {
+        if k > n {
+            return BigUint::zero();
+        }
+        let k = k.min(n - k);
+        let mut acc = BigUint::from_u64(1);
+        for i in 0..k {
+            // multiply by (n - i), divide by (i + 1): stays integral at
+            // every step because C(n, i+1) is an integer.
+            acc = acc.mul_u64(n - i);
+            let (q, r) = acc.divmod_u64(i + 1);
+            debug_assert_eq!(r, 0, "binomial must divide exactly");
+            acc = q;
+        }
+        acc
+    }
+
+    /// Decimal string (for reports).
+    pub fn to_decimal(&self) -> String {
+        if self.is_zero() {
+            return "0".to_string();
+        }
+        let mut digits = Vec::new();
+        let mut cur = self.clone();
+        while !cur.is_zero() {
+            let (q, r) = cur.divmod_u64(1_000_000_000);
+            digits.push(r);
+            cur = q;
+        }
+        let mut s = digits.pop().unwrap().to_string();
+        while let Some(d) = digits.pop() {
+            s.push_str(&format!("{d:09}"));
+        }
+        s
+    }
+
+    /// Approximate log10 (for the "O(10^164)" style report line).
+    pub fn log10(&self) -> f64 {
+        if self.is_zero() {
+            return f64::NEG_INFINITY;
+        }
+        let n = self.limbs.len();
+        let top = self.limbs[n - 1] as f64;
+        let next = if n >= 2 { self.limbs[n - 2] as f64 } else { 0.0 };
+        let mantissa = top + next / BASE as f64;
+        mantissa.log10() + 32.0 * (n - 1) as f64 * 2f64.log10()
+    }
+}
+
+impl std::fmt::Display for BigUint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.to_decimal())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_small() {
+        for v in [0u64, 1, 41, u32::MAX as u64, u64::MAX] {
+            assert_eq!(BigUint::from_u64(v).to_decimal(), v.to_string());
+        }
+    }
+
+    #[test]
+    fn add_mul_against_u128() {
+        let a = 0xDEAD_BEEF_u64;
+        let b = 0x1234_5678_9ABC_u64;
+        let big = BigUint::from_u64(a).mul(&BigUint::from_u64(b));
+        assert_eq!(big.to_decimal(), (a as u128 * b as u128).to_string());
+        let sum = BigUint::from_u64(u64::MAX).add(&BigUint::from_u64(u64::MAX));
+        assert_eq!(sum.to_decimal(), (2u128 * u64::MAX as u128).to_string());
+    }
+
+    #[test]
+    fn binomials_known_values() {
+        assert_eq!(BigUint::binomial(22, 7).to_decimal(), "170544");
+        assert_eq!(BigUint::binomial(7, 0).to_decimal(), "1");
+        assert_eq!(BigUint::binomial(7, 7).to_decimal(), "1");
+        assert_eq!(BigUint::binomial(5, 9).to_decimal(), "0");
+        // C(255, 127) has ~75 digits; verify via Pascal identity instead of
+        // a hard-coded constant: C(n,k) = C(n-1,k-1) + C(n-1,k).
+        let lhs = BigUint::binomial(255, 127);
+        let rhs = BigUint::binomial(254, 126).add(&BigUint::binomial(254, 127));
+        assert_eq!(lhs, rhs);
+    }
+
+    #[test]
+    fn pow2_and_log10() {
+        assert_eq!(BigUint::pow2(10).to_decimal(), "1024");
+        assert_eq!(BigUint::pow2(64).to_decimal(), "18446744073709551616");
+        let g = BigUint::pow2(332); // 2^332 ≈ 10^99.9
+        assert!((g.log10() - 332.0 * 2f64.log10()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn vandermonde_identity() {
+        // Σ_k C(7,k)·C(15,k) = C(22,7) — the AlexNet/16-chiplet space size
+        // used by the Fig. 8 exhaustive search.
+        let mut sum = BigUint::zero();
+        for k in 0..=7 {
+            sum = sum.add(&BigUint::binomial(7, k).mul(&BigUint::binomial(15, k)));
+        }
+        assert_eq!(sum, BigUint::binomial(22, 7));
+    }
+}

@@ -1,0 +1,156 @@
+//! Tiny CLI flag parser (the offline vendor set has no clap).
+//!
+//! Grammar: `scope <subcommand> [--flag value]... [--switch]...`
+//! Values may also be attached with `=`: `--chiplets=256`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line: a subcommand plus flag map.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    /// Flags the program looked up — used to report unknown flags.
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    // boolean switch
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the real process arguments.
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// String flag with default.
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.flags
+            .get(name)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    /// Required string flag.
+    pub fn str_req(&self, name: &str) -> Result<String> {
+        self.flags
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow!("missing required flag --{name}"))
+    }
+
+    /// usize flag with default.
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    /// f64 flag with default.
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects a number, got {v:?}")),
+        }
+    }
+
+    /// Boolean switch (present or `--name=true/false`).
+    pub fn switch(&self, name: &str) -> bool {
+        matches!(self.flags.get(name).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+
+    /// Comma-separated usize list, e.g. `--scales 16,64,256`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.flags.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| anyhow!("--{name}: bad element {p:?}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["search", "--net", "resnet152", "--chiplets=256", "--fast"]);
+        assert_eq!(a.subcommand.as_deref(), Some("search"));
+        assert_eq!(a.str_req("net").unwrap(), "resnet152");
+        assert_eq!(a.usize_or("chiplets", 16).unwrap(), 256);
+        assert!(a.switch("fast"));
+        assert!(!a.switch("slow"));
+    }
+
+    #[test]
+    fn lists_and_defaults() {
+        let a = parse(&["sweep", "--scales", "16,64,256"]);
+        assert_eq!(a.usize_list_or("scales", &[4]).unwrap(), vec![16, 64, 256]);
+        assert_eq!(a.usize_list_or("other", &[4]).unwrap(), vec![4]);
+        assert_eq!(a.str_or("net", "alexnet"), "alexnet");
+    }
+
+    #[test]
+    fn errors() {
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.usize_or("n", 1).is_err());
+        assert!(a.str_req("missing").is_err());
+        assert!(Args::parse(vec!["--".to_string()]).is_err());
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse(&["run", "file1", "file2"]);
+        assert_eq!(a.positional(), &["file1".to_string(), "file2".to_string()]);
+    }
+}

@@ -1,0 +1,50 @@
+//! In-crate substrates for functionality the offline vendor set lacks
+//! (no serde / clap / criterion / proptest / rand in the sandbox):
+//!
+//! * [`rng`] — xorshift PRNG (deterministic workloads & property tests)
+//! * [`stats`] — mean / variance / percentiles / histograms
+//! * [`bignum`] — exact unsigned big integers (Equ. 8–9 search-space counts)
+//! * [`json`] — minimal JSON parser + writer (artifact manifest, reports)
+//! * [`table`] — ASCII table printer for figure/bench output
+//! * [`cli`] — flag parser for the `scope` binary and examples
+
+pub mod bignum;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Round `a` up to a multiple of `m`.
+#[inline]
+pub fn ceil_to(a: u64, m: u64) -> u64 {
+    ceil_div(a, m) * m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn ceil_to_basics() {
+        assert_eq!(ceil_to(0, 8), 0);
+        assert_eq!(ceil_to(1, 8), 8);
+        assert_eq!(ceil_to(8, 8), 8);
+        assert_eq!(ceil_to(9, 8), 16);
+    }
+}

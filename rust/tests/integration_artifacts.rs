@@ -1,0 +1,157 @@
+//! Integration tests over the AOT artifact path: manifest ↔ model-zoo
+//! consistency, PJRT execution, and the functional coordinator.
+//!
+//! All tests no-op gracefully when `artifacts/` has not been built
+//! (CI-of-the-poor: `make artifacts` is a build step, not a test step).
+
+use scope::coordinator::{run_pipeline, PipelineMode};
+use scope::model::zoo::{scopenet, SCOPENET_CLUSTERS};
+use scope::runtime::{Manifest, Runtime};
+
+fn manifest() -> Option<Manifest> {
+    let dir = Manifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        Some(Manifest::load(&dir).expect("manifest must parse"))
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn manifest_matches_rust_zoo_model() {
+    // The rust scopenet() chain and the python ScopeNet that produced the
+    // artifacts must agree on every cluster boundary's activation shape.
+    let Some(m) = manifest() else { return };
+    let net = scopenet();
+    assert_eq!(m.clusters.len(), SCOPENET_CLUSTERS.len());
+    assert_eq!(
+        m.input_shape,
+        vec![net.input.0 as usize, net.input.1 as usize, net.input.2 as usize]
+    );
+    for (c, &(lo, hi)) in m.clusters.iter().zip(SCOPENET_CLUSTERS) {
+        let _ = lo;
+        let (h, w, ch) = net.layers[hi - 1].out_shape();
+        let want: Vec<usize> = if c.output_shape.len() == 1 {
+            vec![(h * w * ch) as usize]
+        } else {
+            vec![h as usize, w as usize, ch as usize]
+        };
+        assert_eq!(c.output_shape, want, "cluster {} output", c.index);
+    }
+}
+
+#[test]
+fn cluster_chain_equals_full_module() {
+    // Execute the three cluster modules in sequence and the monolithic
+    // module; outputs must agree bitwise-ish (same kernels, same order).
+    let Some(m) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let (xs, _) = m.golden().unwrap();
+    let mut act = xs[0].clone();
+    for c in &m.clusters {
+        let mut shapes = vec![c.input_shape.clone()];
+        shapes.extend(c.param_shapes.iter().cloned());
+        let exe = rt.load_hlo(&c.file, &shapes).unwrap();
+        let params = Manifest::load_params(&c.params_file, &c.param_shapes).unwrap();
+        let mut inputs: Vec<(&[f32], &[usize])> = vec![(&act, &c.input_shape[..])];
+        for (p, s) in params.iter().zip(&c.param_shapes) {
+            inputs.push((p, s));
+        }
+        act = exe.run(&inputs).unwrap();
+    }
+    let mut shapes = vec![m.input_shape.clone()];
+    shapes.extend(m.full_param_shapes.iter().cloned());
+    let full = rt.load_hlo(&m.full_file, &shapes).unwrap();
+    let params = Manifest::load_params(&m.full_params_file, &m.full_param_shapes).unwrap();
+    let mut inputs: Vec<(&[f32], &[usize])> = vec![(&xs[0], &m.input_shape[..])];
+    for (p, s) in params.iter().zip(&m.full_param_shapes) {
+        inputs.push((p, s));
+    }
+    let want = full.run(&inputs).unwrap();
+    assert_eq!(act.len(), want.len());
+    for (a, b) in act.iter().zip(&want) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn all_pipeline_modes_agree_with_golden() {
+    let Some(m) = manifest() else { return };
+    for mode in [PipelineMode::Single, PipelineMode::Merged, PipelineMode::MergedIsp] {
+        let r = run_pipeline(&m, mode, 5).unwrap();
+        assert!(
+            r.numerics_ok(1e-3),
+            "{}: max_abs_err {}",
+            r.mode,
+            r.max_abs_err
+        );
+        assert_eq!(r.samples, 5);
+        assert_eq!(r.latencies.len(), 5);
+        assert!(r.wall_secs > 0.0);
+    }
+}
+
+#[test]
+fn pipeline_handles_more_samples_than_golden_batch() {
+    // samples cycle through the golden inputs; 11 > 4 exercises the wrap.
+    let Some(m) = manifest() else { return };
+    let r = run_pipeline(&m, PipelineMode::Merged, 11).unwrap();
+    assert!(r.numerics_ok(1e-3));
+    assert_eq!(r.samples, 11);
+}
+
+#[test]
+fn isp_shard_modules_gather_to_cluster_output() {
+    // Run cluster1 monolithically and via the ISP shard modules + channel
+    // gather; both paths must produce the same activation.
+    let Some(m) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let (xs, _) = m.golden().unwrap();
+
+    // input to cluster 1 = output of cluster 0
+    let c0 = &m.clusters[0];
+    let mut shapes = vec![c0.input_shape.clone()];
+    shapes.extend(c0.param_shapes.iter().cloned());
+    let exe0 = rt.load_hlo(&c0.file, &shapes).unwrap();
+    let p0 = Manifest::load_params(&c0.params_file, &c0.param_shapes).unwrap();
+    let mut inputs: Vec<(&[f32], &[usize])> = vec![(&xs[0], &c0.input_shape[..])];
+    for (p, s) in p0.iter().zip(&c0.param_shapes) {
+        inputs.push((p, s));
+    }
+    let act1 = exe0.run(&inputs).unwrap();
+
+    // monolithic cluster 1
+    let c1 = &m.clusters[m.isp_cluster];
+    let mut shapes = vec![c1.input_shape.clone()];
+    shapes.extend(c1.param_shapes.iter().cloned());
+    let exe1 = rt.load_hlo(&c1.file, &shapes).unwrap();
+    let p1 = Manifest::load_params(&c1.params_file, &c1.param_shapes).unwrap();
+    let mut inputs: Vec<(&[f32], &[usize])> = vec![(&act1, &c1.input_shape[..])];
+    for (p, s) in p1.iter().zip(&c1.param_shapes) {
+        inputs.push((p, s));
+    }
+    let want = exe1.run(&inputs).unwrap();
+
+    // sharded path
+    let mut act = act1;
+    for e in &m.isp_layers {
+        let mut halves = Vec::new();
+        for (file, (pfile, pshapes)) in e.files.iter().zip(&e.shard_params) {
+            let mut shapes = vec![e.input_shape.clone()];
+            shapes.extend(pshapes.iter().cloned());
+            let exe = rt.load_hlo(file, &shapes).unwrap();
+            let params = Manifest::load_params(pfile, pshapes).unwrap();
+            let mut inputs: Vec<(&[f32], &[usize])> = vec![(&act, &e.input_shape[..])];
+            for (p, s) in params.iter().zip(pshapes) {
+                inputs.push((p, s));
+            }
+            halves.push(exe.run(&inputs).unwrap());
+        }
+        act = scope::coordinator::worker::gather_channels(&halves, &e.shard_output_shape);
+    }
+    assert_eq!(act.len(), want.len());
+    for (a, b) in act.iter().zip(&want) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+}

@@ -1,0 +1,165 @@
+//! Integration tests across the scheduling stack: the four methods, the
+//! segmenter, the DSE, and the cost model, exercised together on real
+//! zoo networks — the paper's qualitative claims as assertions.
+
+use scope::arch::McmConfig;
+use scope::baselines::{
+    run_all, schedule_full_pipeline, schedule_segmented, schedule_sequential,
+};
+use scope::config::SimOptions;
+use scope::model::zoo;
+use scope::scope::schedule_scope;
+
+fn opts() -> SimOptions {
+    SimOptions::default()
+}
+
+#[test]
+fn scope_is_never_worse_than_segmented() {
+    // Scope's search space contains the segmented pipeline's; its storage
+    // policy strictly relaxes capacity. Across a grid of settings Scope
+    // must match or beat the SOTA baseline (paper Fig. 7: "Scope
+    // consistently achieves optimal performance across all configurations").
+    for (net_name, chiplets) in [
+        ("alexnet", 16),
+        ("alexnet", 64),
+        ("darknet19", 64),
+        ("resnet18", 16),
+        ("resnet34", 64),
+        ("resnet50", 64),
+    ] {
+        let net = zoo::by_name(net_name).unwrap();
+        let mcm = McmConfig::paper_default(chiplets);
+        let scope_r = schedule_scope(&net, &mcm, &opts());
+        let seg_r = schedule_segmented(&net, &mcm, &opts());
+        assert!(scope_r.eval.is_valid(), "{net_name}@{chiplets}: {:?}", scope_r.eval.error);
+        if seg_r.eval.is_valid() {
+            assert!(
+                scope_r.throughput() >= seg_r.throughput() * 0.999,
+                "{net_name}@{chiplets}: scope {} < segmented {}",
+                scope_r.throughput(),
+                seg_r.throughput()
+            );
+        }
+    }
+}
+
+#[test]
+fn sequential_wins_or_ties_small_scale_loses_at_large_scale() {
+    // Paper: "Sequential execution exhibits better performance with fewer
+    // chiplets ... as the hardware scales, its performance significantly
+    // degrades and becomes the least efficient scheduling."
+    let net = zoo::resnet50();
+    let seq_256 = schedule_sequential(&net, &McmConfig::paper_default(256), &opts());
+    let scope_256 = schedule_scope(&net, &McmConfig::paper_default(256), &opts());
+    assert!(
+        scope_256.throughput() > seq_256.throughput() * 2.0,
+        "at 256 chiplets scope must dominate sequential ({} vs {})",
+        scope_256.throughput(),
+        seq_256.throughput()
+    );
+    // and the sequential/scope ratio must shrink with scale
+    let seq_16 = schedule_sequential(&net, &McmConfig::paper_default(16), &opts());
+    let scope_16 = schedule_scope(&net, &McmConfig::paper_default(16), &opts());
+    let ratio_16 = seq_16.throughput() / scope_16.throughput();
+    let ratio_256 = seq_256.throughput() / scope_256.throughput();
+    assert!(
+        ratio_256 < ratio_16,
+        "sequential's relative standing must degrade with scale ({ratio_16} → {ratio_256})"
+    );
+}
+
+#[test]
+fn full_pipeline_invalid_on_deep_nets_valid_on_shallow() {
+    // Paper Fig. 7: full pipelining "even fail[s] to be valid due to
+    // weight buffer overflow" on deep networks.
+    let deep = schedule_full_pipeline(
+        &zoo::resnet152(),
+        &McmConfig::paper_default(64),
+        &opts(),
+    );
+    assert!(!deep.eval.is_valid());
+    let shallow = schedule_full_pipeline(
+        &zoo::scopenet(),
+        &McmConfig::paper_default(16),
+        &opts(),
+    );
+    assert!(shallow.eval.is_valid(), "{:?}", shallow.eval.error);
+}
+
+#[test]
+fn scope_throughput_scales_with_chiplets() {
+    // Paper Fig. 9: Scope exhibits the best scalability. Monotone
+    // improvement across the scale sweep.
+    let net = zoo::darknet19();
+    let mut last = 0.0;
+    for chiplets in [16, 32, 64, 128] {
+        let r = schedule_scope(&net, &McmConfig::paper_default(chiplets), &opts());
+        assert!(r.eval.is_valid(), "@{chiplets}: {:?}", r.eval.error);
+        assert!(
+            r.throughput() > last,
+            "throughput must grow 16→128: {} then {}",
+            last,
+            r.throughput()
+        );
+        last = r.throughput();
+    }
+}
+
+#[test]
+fn scope_uses_fewer_or_equal_segments_than_segmented() {
+    // Paper Fig. 10 narrative: merging lets Scope cover the net in fewer
+    // segments (2 vs 3 on resnet152@256).
+    let net = zoo::resnet50();
+    let mcm = McmConfig::paper_default(64);
+    let scope_r = schedule_scope(&net, &mcm, &opts());
+    let seg_r = schedule_segmented(&net, &mcm, &opts());
+    let s_scope = scope_r.schedule.as_ref().unwrap().segments.len();
+    let s_seg = seg_r.schedule.as_ref().unwrap().segments.len();
+    assert!(s_scope <= s_seg, "scope {s_scope} segments > segmented {s_seg}");
+}
+
+#[test]
+fn schedules_respect_package_limits() {
+    for (net_name, chiplets) in [("alexnet", 16), ("resnet50", 64), ("vgg16", 256)] {
+        let net = zoo::by_name(net_name).unwrap();
+        let mcm = McmConfig::paper_default(chiplets);
+        for r in run_all(&net, &mcm, &opts()) {
+            if let Some(sched) = &r.schedule {
+                sched
+                    .validate(&net, chiplets)
+                    .unwrap_or_else(|e| panic!("{net_name}@{chiplets} {}: {e}", r.method));
+                for seg in &sched.segments {
+                    assert!(seg.regions.iter().sum::<usize>() <= chiplets);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn energy_comparable_latency_better() {
+    // Paper Fig. 10b: Scope and segmented have "roughly equivalent energy
+    // consumption and breakdown"; the win is throughput. Allow ±30%.
+    let net = zoo::resnet50();
+    let mcm = McmConfig::paper_default(256);
+    let scope_r = schedule_scope(&net, &mcm, &opts());
+    let seg_r = schedule_segmented(&net, &mcm, &opts());
+    assert!(scope_r.eval.is_valid() && seg_r.eval.is_valid());
+    let e_ratio = scope_r.eval.energy.total_pj() / seg_r.eval.energy.total_pj();
+    assert!(
+        (0.7..1.3).contains(&e_ratio),
+        "energy should be comparable, ratio = {e_ratio}"
+    );
+    assert!(scope_r.throughput() >= seg_r.throughput() * 0.999);
+}
+
+#[test]
+fn overlap_and_distribution_never_hurt() {
+    let net = zoo::darknet19();
+    let mcm = McmConfig::paper_default(64);
+    let on = schedule_scope(&net, &mcm, &opts());
+    let no_overlap = SimOptions { overlap_comm: false, ..opts() };
+    let off = schedule_scope(&net, &mcm, &no_overlap);
+    assert!(on.throughput() >= off.throughput() * 0.999, "overlap must help or tie");
+}

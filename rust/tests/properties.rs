@@ -1,0 +1,314 @@
+//! Property-based tests (in-crate xorshift driver — proptest is not in
+//! the offline vendor set): invariants of the cost models, schedule
+//! types, DSE algorithms, and storage planner over randomized inputs.
+
+use scope::arch::{ChipletConfig, McmConfig, Mesh};
+use scope::config::SimOptions;
+use scope::cost::{comp_cycles, shard, utilization};
+use scope::dse::{exhaustive_segment, ExhaustiveOptions};
+use scope::model::{Layer, Network};
+use scope::pipeline::schedule::{Partition, Schedule, SegmentSchedule};
+use scope::pipeline::timeline::{eval_schedule, EvalContext};
+use scope::scope::cmt::gen_cmt;
+use scope::scope::region_alloc::proportional_allocate;
+use scope::scope::segmenter::balanced_split;
+use scope::scope::{search_segment, SearchOptions};
+use scope::storage::{plan_cluster, LayerResidency, StoragePolicy};
+use scope::util::rng::Rng;
+
+const CASES: usize = 60;
+
+/// Random conv layer with valid geometry.
+fn rand_layer(rng: &mut Rng, idx: usize, hin: u64, cin: u64) -> Layer {
+    let k = *[1u64, 3, 5].get(rng.usize_in(0, 3)).unwrap();
+    let cout = 8 << rng.usize_in(0, 4); // 8..128
+    let pad = k / 2;
+    Layer::conv(&format!("l{idx}"), hin, hin, cin, cout, k, 1, pad)
+}
+
+/// Random chain network (spatial size halves occasionally via pools).
+fn rand_network(rng: &mut Rng) -> Network {
+    let depth = rng.usize_in(2, 9);
+    let mut h = 16u64 << rng.usize_in(0, 2); // 16/32/64
+    let mut c = 3u64;
+    let mut layers = Vec::new();
+    for i in 0..depth {
+        let mut l = rand_layer(rng, i, h, c);
+        if h >= 8 && rng.bool_with(0.3) {
+            l = l.with_pool(2, 2);
+        }
+        c = l.cout;
+        h = l.hout();
+        layers.push(l);
+    }
+    Network::new("rand", (layers[0].hin, layers[0].win, 3), layers)
+}
+
+#[test]
+fn prop_comp_cycles_monotone_in_chiplets() {
+    // More chiplets never increase the per-chiplet compute time.
+    let mut rng = Rng::new(1);
+    let chip = ChipletConfig::paper_default();
+    for i in 0..CASES {
+        let l = rand_layer(&mut rng, i, 16, 16);
+        for p in [Partition::Isp, Partition::Wsp] {
+            let mut last = f64::INFINITY;
+            for r in [1u64, 2, 4, 8, 16, 32] {
+                let c = comp_cycles(&l, p, r, &chip);
+                assert!(c <= last + 1e-9, "{l:?} {p:?} r={r}: {c} > {last}");
+                assert!(c >= 1.0, "at least one cycle");
+                last = c;
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_utilization_bounded_and_exact_at_r1() {
+    let mut rng = Rng::new(2);
+    let chip = ChipletConfig::paper_default();
+    for i in 0..CASES {
+        let l = rand_layer(&mut rng, i, 16, 32);
+        for p in [Partition::Isp, Partition::Wsp] {
+            for r in [1u64, 3, 7, 16] {
+                let u = utilization(&l, p, r, &chip);
+                assert!((0.0..=1.0 + 1e-9).contains(&u), "u={u}");
+            }
+        }
+        // shard at r=1 must cover the whole layer
+        let s = shard(&l, Partition::Isp, 1);
+        assert_eq!(s.co, l.cout);
+        assert_eq!(s.px, l.pixels());
+    }
+}
+
+#[test]
+fn prop_shard_work_conservation() {
+    // r * shard work ≥ total work (ceil waste only ever adds).
+    let mut rng = Rng::new(3);
+    for i in 0..CASES {
+        let l = rand_layer(&mut rng, i, 16, 16);
+        for p in [Partition::Isp, Partition::Wsp] {
+            for r in [2u64, 3, 5, 8] {
+                let s = shard(&l, p, r);
+                assert!(s.co * s.px * r >= l.cout * l.pixels() / 2, "gross sanity");
+                match p {
+                    Partition::Isp => assert!(s.co * r >= l.cout),
+                    Partition::Wsp => assert!(s.px * r >= l.pixels()),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_cmt_rows_are_nested_partitions() {
+    let mut rng = Rng::new(4);
+    for _ in 0..CASES {
+        let net = rand_network(&mut rng);
+        let cmt = gen_cmt(&net.layers, 0, net.len());
+        for n in 1..=net.len() {
+            let b = cmt.bounds(n);
+            assert_eq!(b.len(), n + 1);
+            assert!(b.windows(2).all(|w| w[0] < w[1]));
+        }
+        for n in 2..=net.len() {
+            let coarse = cmt.bounds(n - 1);
+            let fine = cmt.bounds(n);
+            assert!(coarse.iter().all(|x| fine.contains(x)));
+        }
+    }
+}
+
+#[test]
+fn prop_proportional_allocate_exact_and_positive() {
+    let mut rng = Rng::new(5);
+    for _ in 0..CASES * 4 {
+        let n = rng.usize_in(1, 9);
+        let loads: Vec<u64> = (0..n).map(|_| rng.gen_range(1000) + 1).collect();
+        let c = rng.usize_in(n, n + 60);
+        let a = proportional_allocate(&loads, c).unwrap();
+        assert_eq!(a.iter().sum::<usize>(), c);
+        assert!(a.iter().all(|&x| x >= 1));
+        // heavier loads never get fewer chiplets than a load 10x smaller
+        for i in 0..n {
+            for j in 0..n {
+                if loads[i] >= loads[j] * 10 {
+                    assert!(a[i] >= a[j], "loads {loads:?} alloc {a:?}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_balanced_split_covers_and_bounds() {
+    let mut rng = Rng::new(6);
+    for _ in 0..CASES {
+        let net = rand_network(&mut rng);
+        for s in 1..=net.len().min(4) {
+            let b = balanced_split(&net, s);
+            assert_eq!(*b.first().unwrap(), 0);
+            assert_eq!(*b.last().unwrap(), net.len());
+            assert!(b.windows(2).all(|w| w[0] < w[1]));
+            assert!(b.len() - 1 <= s);
+        }
+    }
+}
+
+#[test]
+fn prop_storage_plan_fits_capacity() {
+    let mut rng = Rng::new(7);
+    for _ in 0..CASES {
+        let net = rand_network(&mut rng);
+        let parts: Vec<Partition> = net
+            .layers
+            .iter()
+            .map(|_| if rng.bool_with(0.5) { Partition::Wsp } else { Partition::Isp })
+            .collect();
+        for policy in [StoragePolicy::Replicated, StoragePolicy::Distributed] {
+            for cap_kb in [64u64, 256, 1024] {
+                let r = 1 + rng.gen_range(8);
+                let plan =
+                    plan_cluster(&net.layers, &parts, r, policy, cap_kb * 1024);
+                assert!(
+                    plan.footprint <= cap_kb * 1024,
+                    "footprint {} > cap {}",
+                    plan.footprint,
+                    cap_kb * 1024
+                );
+                assert_eq!(plan.residency.len(), net.len());
+                // If everything fits fully replicated, the distributed
+                // planner must also keep everything on-chip (its Resident
+                // state has identical demand), i.e. it can only help.
+                if policy == StoragePolicy::Distributed {
+                    let repl = plan_cluster(
+                        &net.layers,
+                        &parts,
+                        r,
+                        StoragePolicy::Replicated,
+                        cap_kb * 1024,
+                    );
+                    if repl.streamed_count() == 0 {
+                        assert_eq!(plan.streamed_count(), 0);
+                    }
+                    // and a fully-on-chip distributed plan never uses more
+                    // bytes than the replicated one
+                    if plan.fully_on_chip() && repl.fully_on_chip() {
+                        assert!(plan.footprint <= repl.footprint);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_eval_is_finite_and_positive_for_valid_schedules() {
+    let mut rng = Rng::new(8);
+    let opts = SimOptions { samples: 8, ..Default::default() };
+    for _ in 0..CASES / 2 {
+        let net = rand_network(&mut rng);
+        let chiplets = 16usize;
+        let mcm = McmConfig::paper_default(chiplets);
+        let ctx = EvalContext {
+            net: &net,
+            mcm: &mcm,
+            opts: &opts,
+            policy: StoragePolicy::Distributed,
+            dram_fallback: true,
+        };
+        // random contiguous clustering + random regions summing to C
+        let l = net.len();
+        let n = rng.usize_in(1, l.min(chiplets) + 1);
+        let cmt = gen_cmt(&net.layers, 0, l);
+        let bounds = cmt.bounds(n).to_vec();
+        let loads: Vec<u64> = (0..n)
+            .map(|j| (bounds[j]..bounds[j + 1]).map(|k| net.layers[k].macs()).sum())
+            .collect();
+        let regions = proportional_allocate(&loads, chiplets).unwrap();
+        let partitions: Vec<Partition> = (0..l)
+            .map(|_| if rng.bool_with(0.5) { Partition::Wsp } else { Partition::Isp })
+            .collect();
+        let sched = Schedule {
+            method: "rand".into(),
+            segments: vec![SegmentSchedule { lo: 0, hi: l, bounds, regions, partitions }],
+        };
+        let ev = eval_schedule(&ctx, &sched);
+        assert!(ev.is_valid(), "{:?}", ev.error);
+        assert!(ev.total_cycles.is_finite() && ev.total_cycles > 0.0);
+        assert!(ev.throughput > 0.0);
+        assert!(ev.energy.total_pj() > 0.0);
+        // pipeline arithmetic: Equ. 2 exactly
+        let seg = &ev.segments[0];
+        let expect = (opts.samples as f64 + seg.clusters.len() as f64 - 1.0)
+            * seg.stage_cycles;
+        assert!((seg.pipeline_cycles - expect).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn prop_search_never_beaten_by_exhaustive_and_lands_near_top() {
+    // On random small nets, Algorithm 1 must (a) never beat the true
+    // optimum, (b) land within 10% of it — the quantitative version of
+    // the Fig. 8 claim at property scale.
+    let mut rng = Rng::new(9);
+    let opts = SimOptions { samples: 8, ..Default::default() };
+    for case in 0..6 {
+        let net = loop {
+            let n = rand_network(&mut rng);
+            if n.len() <= 5 {
+                break n;
+            }
+        };
+        let chiplets = 6usize;
+        let mcm = McmConfig::paper_default(chiplets);
+        let ctx = EvalContext {
+            net: &net,
+            mcm: &mcm,
+            opts: &opts,
+            policy: StoragePolicy::Distributed,
+            dram_fallback: true,
+        };
+        let ex = exhaustive_segment(&ctx, 0, net.len(), 8, ExhaustiveOptions::default());
+        let Some(found) = search_segment(&ctx, 0, net.len(), 8, SearchOptions::default())
+        else {
+            panic!("case {case}: search found nothing");
+        };
+        assert!(
+            found.latency >= ex.best_latency * (1.0 - 1e-9),
+            "case {case}: search {} beat exhaustive {}",
+            found.latency,
+            ex.best_latency
+        );
+        assert!(
+            found.latency <= ex.best_latency * 1.10,
+            "case {case}: search {} >10% off optimum {}",
+            found.latency,
+            ex.best_latency
+        );
+    }
+}
+
+#[test]
+fn prop_mesh_cut_width_symmetric_and_bounded() {
+    let mut rng = Rng::new(10);
+    for _ in 0..CASES {
+        let mesh = Mesh::for_chiplets(*[16usize, 32, 64].get(rng.usize_in(0, 3)).unwrap());
+        let total = mesh.chiplets();
+        let a0 = rng.usize_in(0, total - 1);
+        let an = rng.usize_in(1, total - a0);
+        let rest = total - (a0 + an);
+        if rest == 0 {
+            continue;
+        }
+        let b0 = a0 + an;
+        let bn = rng.usize_in(1, rest + 1);
+        let ab = mesh.cut_width(a0, an, b0, bn);
+        let ba = mesh.cut_width(b0, bn, a0, an);
+        assert_eq!(ab, ba, "cut width must be symmetric");
+        // zigzag-contiguous adjacent ranges always touch
+        assert!(ab >= 1, "adjacent zigzag ranges share ≥1 link");
+        assert!(ab <= 2 * (mesh.width + mesh.height), "cut bounded by perimeter");
+    }
+}
