@@ -15,7 +15,9 @@ use scope::util::table::{f3, Table};
 
 fn main() -> Result<()> {
     // 1. Pick a workload from the zoo and a package scale (Table III
-    //    platform at 64 chiplets).
+    //    platform at 64 chiplets). `SimOptions::threads` controls the DSE
+    //    worker pool (0 = one per core; the CLI exposes it as --threads);
+    //    the search result is bit-identical at every thread count.
     let net = zoo::resnet18();
     let mcm = McmConfig::paper_default(64);
     let opts = SimOptions { samples: 64, ..Default::default() };

@@ -4,14 +4,18 @@
 //! seconds, same machinery as the full AlexNet/16 bench.
 //!
 //! ```bash
-//! cargo run --release --example search_quality [chiplets]
+//! cargo run --release --example search_quality [chiplets] [threads]
 //! ```
+//!
+//! `threads` (0 = one worker per core, the default) fans both the
+//! exhaustive sweep and Algorithm 1 across the deterministic worker pool —
+//! the reported schedules are bit-identical at every thread count.
 
 use anyhow::Result;
 
 use scope::arch::McmConfig;
 use scope::config::SimOptions;
-use scope::dse::{exhaustive_segment, ExhaustiveOptions};
+use scope::dse::{exhaustive_segment, resolve_threads, ExhaustiveOptions};
 use scope::model::zoo;
 use scope::pipeline::timeline::EvalContext;
 use scope::scope::{search_segment, SearchOptions};
@@ -22,9 +26,13 @@ fn main() -> Result<()> {
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(8usize);
+    let threads = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0usize);
     let net = zoo::scopenet();
     let mcm = McmConfig::paper_default(chiplets);
-    let opts = SimOptions { samples: 64, ..Default::default() };
+    let opts = SimOptions { samples: 64, threads, ..Default::default() };
     let ctx = EvalContext {
         net: &net,
         mcm: &mcm,
@@ -34,10 +42,11 @@ fn main() -> Result<()> {
     };
 
     println!(
-        "exhaustive sweep: {} on {} chiplets ({} layers)…",
+        "exhaustive sweep: {} on {} chiplets ({} layers), {} worker threads…",
         net.name,
         chiplets,
-        net.len()
+        net.len(),
+        resolve_threads(threads)
     );
     let t0 = std::time::Instant::now();
     let ex = exhaustive_segment(&ctx, 0, net.len(), 64, ExhaustiveOptions::default());
@@ -53,10 +62,13 @@ fn main() -> Result<()> {
     let found = search_segment(&ctx, 0, net.len(), 64, SearchOptions::default())
         .expect("search result");
     println!(
-        "  Algorithm 1: {:.0} cycles after {} Forward() calls in {:.3}s",
+        "  Algorithm 1: {:.0} cycles after {} Forward() calls in {:.3}s \
+         (cluster cache: {} hits / {} misses)",
         found.latency,
         found.evals,
-        t1.elapsed().as_secs_f64()
+        t1.elapsed().as_secs_f64(),
+        found.cache_hits,
+        found.cache_misses
     );
 
     let rank = ex.rank_of(found.latency * (1.0 + 1e-9));

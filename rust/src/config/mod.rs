@@ -9,6 +9,7 @@
 //! # scope.cfg
 //! chiplets   = 256
 //! samples    = 64
+//! threads    = auto      # DSE worker threads (auto = one per core)
 //! dram.bw    = 100e9
 //! nop.bw     = 100e9
 //! distributed_weights = true
@@ -32,11 +33,20 @@ pub struct SimOptions {
     /// Overlap computation and NoP communication (Equ. 7). On for every
     /// method per the paper; exposed for the ablation bench.
     pub overlap_comm: bool,
+    /// Worker threads for the DSE candidate sweeps (0 = one per available
+    /// core). The parallel engine reduces in candidate order, so results
+    /// are bit-identical at every thread count.
+    pub threads: usize,
 }
 
 impl Default for SimOptions {
     fn default() -> Self {
-        SimOptions { samples: 64, distributed_weights: true, overlap_comm: true }
+        SimOptions {
+            samples: 64,
+            distributed_weights: true,
+            overlap_comm: true,
+            threads: 0,
+        }
     }
 }
 
@@ -74,6 +84,19 @@ impl Config {
                 "samples" => cfg.sim.samples = parse_num(value)? as u64,
                 "distributed_weights" => cfg.sim.distributed_weights = parse_bool(value)?,
                 "overlap_comm" => cfg.sim.overlap_comm = parse_bool(value)?,
+                "threads" => {
+                    cfg.sim.threads = if value == "auto" {
+                        0
+                    } else {
+                        let v = parse_num(value)?;
+                        if v < 0.0 || v.fract() != 0.0 {
+                            return Err(anyhow!(
+                                "threads expects a non-negative integer or 'auto', got {value:?}"
+                            ));
+                        }
+                        v as usize
+                    }
+                }
                 "freq" => cfg.mcm.chiplet.freq_hz = parse_num(value)?,
                 "mac_energy_pj" => cfg.mcm.chiplet.mac_energy_pj = parse_num(value)?,
                 "sram_pj_per_bit" => cfg.mcm.chiplet.sram_pj_per_bit = parse_num(value)?,
@@ -147,6 +170,19 @@ mod tests {
         assert!(!cfg.sim.distributed_weights);
         // untouched fields keep paper defaults
         assert_eq!(cfg.mcm.chiplet.macs_per_cycle(), 1024);
+    }
+
+    #[test]
+    fn threads_key_parses_counts_and_auto() {
+        let cfg = Config::from_kv(&parse_kv("threads = 8\n").unwrap(), 16).unwrap();
+        assert_eq!(cfg.sim.threads, 8);
+        let auto = Config::from_kv(&parse_kv("threads = auto\n").unwrap(), 16).unwrap();
+        assert_eq!(auto.sim.threads, 0);
+        assert_eq!(SimOptions::default().threads, 0);
+        assert!(Config::from_kv(&parse_kv("threads = lots\n").unwrap(), 16).is_err());
+        // negative / fractional counts must error, not silently truncate
+        assert!(Config::from_kv(&parse_kv("threads = -4\n").unwrap(), 16).is_err());
+        assert!(Config::from_kv(&parse_kv("threads = 2.7\n").unwrap(), 16).is_err());
     }
 
     #[test]

@@ -9,9 +9,20 @@
 //! Scope actually searches); `PartitionSpace::Full` sweeps all `2^L`
 //! masks — feasible for AlexNet-scale `L` (the paper also restricts the
 //! exhaustive comparison to "the smallest-scale setting").
+//!
+//! When no visit cap is set, the (cluster, region) composition pairs fan
+//! across the deterministic worker pool of [`super::parallel`] with
+//! cluster evaluations memoized in a shared
+//! [`EvalCache`](crate::pipeline::eval_cache::EvalCache); the reduction
+//! runs in enumeration order, so `best_schedule`, `best_latency`, and the
+//! latency population are bit-identical to the serial sweep. A nonzero
+//! `max_visits` keeps the serial path (the cap is an inherently sequential
+//! abort).
 
+use crate::dse::parallel::{par_map, resolve_threads};
+use crate::pipeline::eval_cache::{eval_segment_cached, EvalCache};
 use crate::pipeline::schedule::{Partition, SegmentSchedule};
-use crate::pipeline::timeline::{eval_segment, EvalContext};
+use crate::pipeline::timeline::EvalContext;
 use crate::scope::partition::{mask_partitions, transition_partitions};
 use crate::util::stats::Histogram;
 
@@ -94,6 +105,15 @@ fn for_each_composition<F: FnMut(&[usize]) -> bool>(total: usize, parts: usize, 
     rec(total, parts, &mut acc, f)
 }
 
+/// Per-task output of the parallel sweep: one (bounds, regions) pair
+/// evaluated against every partition assignment.
+struct TaskOut {
+    visited: u64,
+    valid: u64,
+    latencies: Vec<f64>,
+    best: Option<(f64, SegmentSchedule)>,
+}
+
 /// Run the exhaustive sweep over segment `[lo, hi)`.
 pub fn exhaustive_segment(
     ctx: &EvalContext,
@@ -113,6 +133,7 @@ pub fn exhaustive_segment(
             .map(|mask| mask_partitions(l, mask))
             .collect(),
     };
+    let cache = EvalCache::new();
     let mut res = ExhaustiveResult {
         valid: 0,
         visited: 0,
@@ -120,6 +141,86 @@ pub fn exhaustive_segment(
         best_schedule: None,
         latencies: Vec::new(),
     };
+
+    if opts.max_visits == 0 && resolve_threads(ctx.opts.threads) > 1 {
+        // ---- parallel path: one task per cluster composition (`bounds`);
+        // each worker streams its region compositions × partitions with
+        // O(1) extra memory, exactly as the serial loop would, and the
+        // reduction runs in enumeration order — bit-identical results.
+        // (Materializing (bounds, regions) pairs up front would allocate
+        // the whole grid — millions of pairs at large C.)
+        let mut tasks: Vec<Vec<usize>> = Vec::new();
+        for n in 1..=l.min(c) {
+            for_each_composition(l, n, &mut |layer_parts| {
+                let mut bounds = Vec::with_capacity(n + 1);
+                bounds.push(lo);
+                for &p in layer_parts {
+                    bounds.push(bounds.last().unwrap() + p);
+                }
+                tasks.push(bounds);
+                true
+            });
+        }
+        let outs: Vec<TaskOut> = par_map(ctx.opts.threads, tasks, |_, bounds| {
+            let n = bounds.len() - 1;
+            let mut out = TaskOut {
+                visited: 0,
+                valid: 0,
+                latencies: Vec::new(),
+                best: None,
+            };
+            for_each_composition(c, n, &mut |regions| {
+                for parts in &partitions {
+                    out.visited += 1;
+                    let seg = SegmentSchedule {
+                        lo,
+                        hi,
+                        bounds: bounds.clone(),
+                        regions: regions.to_vec(),
+                        partitions: parts.clone(),
+                    };
+                    let ev = eval_segment_cached(ctx, &seg, m, Some(&cache));
+                    if ev.error.is_some() {
+                        continue;
+                    }
+                    let lat = ev.preload_cycles + ev.pipeline_cycles;
+                    out.valid += 1;
+                    // Per-task prefix cap: the ordered reduction only ever
+                    // takes the first `keep_latencies` overall, and those
+                    // come from each task's own prefix — so capping here
+                    // bounds memory without changing the kept population.
+                    if out.latencies.len() < opts.keep_latencies {
+                        out.latencies.push(lat);
+                    }
+                    let better = out.best.as_ref().map(|b| lat < b.0).unwrap_or(true);
+                    if better {
+                        out.best = Some((lat, seg));
+                    }
+                }
+                true
+            });
+            out
+        });
+        for out in outs {
+            res.visited += out.visited;
+            res.valid += out.valid;
+            for lat in out.latencies {
+                if res.latencies.len() < opts.keep_latencies {
+                    res.latencies.push(lat);
+                }
+            }
+            if let Some((lat, seg)) = out.best {
+                if lat < res.best_latency {
+                    res.best_latency = lat;
+                    res.best_schedule = Some(seg);
+                }
+            }
+        }
+        return res;
+    }
+
+    // ---- serial path (also used whenever a visit cap is set: the cap is
+    // an inherently sequential abort) ----
     // cluster compositions: layer counts per cluster, for every n
     for n in 1..=l.min(c) {
         let completed = for_each_composition(l, n, &mut |layer_parts| {
@@ -143,7 +244,7 @@ pub fn exhaustive_segment(
                         regions: regions.to_vec(),
                         partitions: parts.clone(),
                     };
-                    let ev = eval_segment(ctx, &seg, m);
+                    let ev = eval_segment_cached(ctx, &seg, m, Some(&cache));
                     if ev.error.is_some() {
                         continue;
                     }
@@ -170,17 +271,24 @@ pub fn exhaustive_segment(
 impl ExhaustiveResult {
     /// Fraction of valid schedules strictly better than `latency`
     /// (the paper's "top 0.05%" is `rank_of(scope_latency) ≤ 0.0005`).
+    /// An empty population has no meaningful rank: returns `NaN` (which
+    /// deliberately fails any `rank <= bound` assertion downstream).
     pub fn rank_of(&self, latency: f64) -> f64 {
         if self.latencies.is_empty() {
-            return 0.0;
+            return f64::NAN;
         }
         let better = self.latencies.iter().filter(|&&x| x < latency).count();
         better as f64 / self.latencies.len() as f64
     }
 
     /// Processing-time histogram over the valid population (Fig. 8's
-    /// x-axis buckets).
+    /// x-axis buckets). An empty population yields an empty histogram over
+    /// a degenerate `[0, 1)` range rather than folding `±∞` bounds into
+    /// `Histogram::new`.
     pub fn histogram(&self, bins: usize) -> Histogram {
+        if self.latencies.is_empty() {
+            return Histogram::new(0.0, 1.0, bins);
+        }
         let lo = self.latencies.iter().copied().fold(f64::INFINITY, f64::min);
         let hi = self.latencies.iter().copied().fold(0.0f64, f64::max);
         let mut h = Histogram::new(lo, (hi * 1.0001).max(lo + 1.0), bins);
@@ -257,6 +365,45 @@ mod tests {
     }
 
     #[test]
+    fn parallel_sweep_is_bit_identical_to_serial() {
+        let net = scopenet();
+        let mcm = McmConfig::paper_default(8);
+        let serial_sim = SimOptions { samples: 4, threads: 1, ..Default::default() };
+        let ctx1 = EvalContext {
+            net: &net,
+            mcm: &mcm,
+            opts: &serial_sim,
+            policy: StoragePolicy::Distributed,
+            dram_fallback: true,
+        };
+        let serial = exhaustive_segment(&ctx1, 0, net.len(), 4, ExhaustiveOptions::default());
+        for threads in [2usize, 8] {
+            let par_sim = SimOptions { samples: 4, threads, ..Default::default() };
+            let ctx_n = EvalContext {
+                net: &net,
+                mcm: &mcm,
+                opts: &par_sim,
+                policy: StoragePolicy::Distributed,
+                dram_fallback: true,
+            };
+            let par =
+                exhaustive_segment(&ctx_n, 0, net.len(), 4, ExhaustiveOptions::default());
+            assert_eq!(serial.visited, par.visited, "threads={threads}");
+            assert_eq!(serial.valid, par.valid, "threads={threads}");
+            assert_eq!(
+                serial.best_latency.to_bits(),
+                par.best_latency.to_bits(),
+                "threads={threads}"
+            );
+            assert_eq!(serial.best_schedule, par.best_schedule, "threads={threads}");
+            assert_eq!(serial.latencies.len(), par.latencies.len());
+            for (a, b) in serial.latencies.iter().zip(&par.latencies) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
     fn visit_cap_respected() {
         let net = scopenet();
         let mcm = McmConfig::paper_default(8);
@@ -291,5 +438,25 @@ mod tests {
         assert_eq!(res.rank_of(2.5), 0.5);
         let h = res.histogram(4);
         assert_eq!(h.total, 4);
+    }
+
+    #[test]
+    fn empty_population_has_nan_rank_and_empty_histogram() {
+        // An all-invalid sweep used to report rank 0.0 ("best possible")
+        // and panic inside Histogram::new on ±∞ bounds.
+        let res = ExhaustiveResult {
+            valid: 0,
+            visited: 10,
+            best_latency: f64::INFINITY,
+            best_schedule: None,
+            latencies: vec![],
+        };
+        assert!(res.rank_of(123.0).is_nan());
+        assert!(!(res.rank_of(123.0) <= 0.05), "NaN must fail rank bounds");
+        let h = res.histogram(8);
+        assert_eq!(h.total, 0);
+        assert_eq!(h.counts.len(), 8);
+        assert!(h.proportions().iter().all(|&p| p == 0.0));
+        assert_eq!(h.frac_below(0.5), 0.0);
     }
 }

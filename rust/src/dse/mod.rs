@@ -1,10 +1,13 @@
-//! DSE validation: exact search-space counting (Equ. 8–9) and the
-//! exhaustive sweep used by the Fig. 8 comparison.
+//! DSE validation: exact search-space counting (Equ. 8–9), the exhaustive
+//! sweep used by the Fig. 8 comparison, and the deterministic parallel
+//! executor both sweeps (and Algorithm 1) fan candidates across.
 
 pub mod exhaustive;
+pub mod parallel;
 pub mod space;
 
 pub use exhaustive::{
     exhaustive_segment, ExhaustiveOptions, ExhaustiveResult, PartitionSpace,
 };
+pub use parallel::{par_map, resolve_threads};
 pub use space::{q_cluster_region, q_configs, q_total, scope_reduced_space};

@@ -1,0 +1,133 @@
+//! Deterministic parallel execution for the DSE candidate sweeps.
+//!
+//! The search (`scope::search::search_segment`) and the exhaustive sweep
+//! (`dse::exhaustive::exhaustive_segment`) both evaluate large numbers of
+//! *independent* candidates; this module fans them across a
+//! `std::thread::scope` worker pool with
+//!
+//! * a **sharded work queue** — one atomic cursor over the item list, so
+//!   workers self-balance regardless of per-candidate cost skew, and
+//! * an **ordered deterministic reduction** — results are reassembled in
+//!   input order before any comparison happens, so the winning schedule is
+//!   bit-identical to the serial sweep at every thread count.
+//!
+//! Determinism argument: every candidate evaluation is a pure function of
+//! its input (the shared [`EvalCache`](crate::pipeline::eval_cache) only
+//! memoizes those pure results), and all floating-point comparisons and
+//! tie-breaks run *after* the ordered reduction, in the same order the
+//! serial loop would visit them.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Resolve a thread-count knob: `0` means one worker per available core.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    }
+}
+
+/// Apply `f` to every item across `threads` scoped workers and return the
+/// results **in input order**. `threads = 0` uses one worker per core;
+/// `threads = 1` (or a single item) degenerates to the plain serial loop.
+///
+/// `f` receives `(index, item)` so callers can recover positional context
+/// without capturing it in the item type.
+pub fn par_map<T, R, F>(threads: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let n = items.len();
+    let workers = resolve_threads(threads).min(n.max(1));
+    if workers <= 1 {
+        return items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    // Sharded queue: items parked in per-slot cells, claimed via one
+    // atomic cursor. Workers build local (index, result) runs and merge
+    // once at the end, so the only contention is the cursor itself.
+    let slots: Vec<Mutex<Option<T>>> =
+        items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let cursor = AtomicUsize::new(0);
+    let collected: Mutex<Vec<(usize, R)>> = Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| {
+                let mut local: Vec<(usize, R)> = Vec::new();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let item = slots[i]
+                        .lock()
+                        .expect("queue slot poisoned")
+                        .take()
+                        .expect("slot claimed twice");
+                    local.push((i, f(i, item)));
+                }
+                if !local.is_empty() {
+                    collected.lock().expect("result sink poisoned").extend(local);
+                }
+            });
+        }
+    });
+    let mut pairs = collected.into_inner().expect("result sink poisoned");
+    debug_assert_eq!(pairs.len(), n);
+    // Ordered reduction: identical visit order to the serial loop.
+    pairs.sort_by_key(|&(i, _)| i);
+    pairs.into_iter().map(|(_, r)| r).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolves_auto_to_at_least_one() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+    }
+
+    #[test]
+    fn preserves_input_order_at_every_thread_count() {
+        let items: Vec<usize> = (0..257).collect();
+        let serial = par_map(1, items.clone(), |i, x| (i, x * 3));
+        for t in [2usize, 4, 8] {
+            let parallel = par_map(t, items.clone(), |i, x| (i, x * 3));
+            assert_eq!(serial, parallel, "threads={t}");
+        }
+        for (i, &(j, v)) in serial.iter().enumerate() {
+            assert_eq!(i, j);
+            assert_eq!(v, i * 3);
+        }
+    }
+
+    #[test]
+    fn handles_empty_and_single_item() {
+        let empty: Vec<u32> = vec![];
+        assert!(par_map(4, empty, |_, x: u32| x).is_empty());
+        assert_eq!(par_map(4, vec![7u32], |_, x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn skewed_workloads_still_complete() {
+        // Items with wildly different costs must all be processed once.
+        let items: Vec<usize> = (0..64).collect();
+        let out = par_map(8, items, |_, x| {
+            let mut acc = 0u64;
+            let spins = if x % 7 == 0 { 20_000 } else { 10 };
+            for k in 0..spins {
+                acc = acc.wrapping_add(k ^ x as u64);
+            }
+            std::hint::black_box(acc);
+            x
+        });
+        assert_eq!(out, (0..64).collect::<Vec<_>>());
+    }
+}

@@ -12,6 +12,15 @@
 //! * **Layer 1** — `python/compile/kernels/`: the Pallas PE-array kernel.
 //!
 //! See `DESIGN.md` for the system inventory and the per-experiment index.
+//!
+//! The DSE sweeps run on a deterministic parallel engine
+//! ([`dse::parallel`]) with memoized cluster evaluation
+//! ([`pipeline::eval_cache`]); `SimOptions::threads` controls the worker
+//! count and the result is bit-identical at every setting.
+
+// Hot-path cost functions take the full (layer, partition, region, mesh)
+// geometry as parameters by design.
+#![allow(clippy::too_many_arguments)]
 
 pub mod arch;
 pub mod baselines;

@@ -46,6 +46,8 @@ SUBCOMMANDS
 COMMON FLAGS
   --config <file>   key=value config file (see config/mod.rs)
   --samples <M>     pipeline batch size m (default 64)
+  --threads <N>     DSE worker threads; 'auto' = one per core (default).
+                    Results are bit-identical at every thread count.
 
 NETWORKS: alexnet vgg16 darknet19 resnet18/34/50/101/152 scopenet
 ";
@@ -65,6 +67,7 @@ fn sim_options(args: &Args, chiplets: usize) -> Result<(McmConfig, SimOptions)> 
     };
     let mut sim = cfg.sim;
     sim.samples = args.usize_or("samples", sim.samples as usize)? as u64;
+    sim.threads = args.threads_or(sim.threads)?;
     Ok((cfg.mcm, sim))
 }
 

@@ -1,0 +1,283 @@
+//! Memoized cluster evaluation — the DSE's dominant redundancy killer.
+//!
+//! Across the `(idx, N)` candidate sweep of Algorithm 1 and the exhaustive
+//! Fig. 8 enumeration, the same `(layer range, region geometry, partition
+//! slice)` cluster is re-evaluated thousands of times inside candidates
+//! that differ only in *other* clusters. [`EvalCache`] memoizes
+//! [`eval_cluster`] results behind a key capturing everything the cluster
+//! evaluation depends on, so each distinct cluster is costed exactly once
+//! per search.
+//!
+//! **Scope of validity:** a cache instance is only correct for one
+//! [`EvalContext`] configuration — the network, platform, storage policy,
+//! and `overlap_comm` flag are deliberately *not* part of the key (they
+//! are invariant across a single search). Create a fresh cache per
+//! search/sweep invocation; do not share one across contexts.
+//!
+//! **Determinism:** cached values are the exact `ClusterEval` structs the
+//! direct evaluator would produce (pure function of the key + context), so
+//! a cached search is bit-identical to an uncached one, at any thread
+//! count. Hit/miss counters are informational only — under concurrency two
+//! workers may both miss the same key and insert equal values, which is
+//! benign.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+use super::schedule::{Partition, SegmentSchedule};
+use super::timeline::{assemble_segment, eval_cluster, ClusterEval, EvalContext, SegmentEval};
+
+/// Everything a cluster evaluation depends on besides the (per-search
+/// constant) context: its global layer range, its region geometry, its
+/// layers' partitions, and — because the last layer's communication phase
+/// looks ahead — the next cluster's region geometry and first partition.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ClusterKey {
+    /// Global layer range `[lo, hi)` of the cluster.
+    lo: usize,
+    hi: usize,
+    /// Region geometry: zigzag start + chiplet count.
+    start: usize,
+    n: usize,
+    /// Partitions of layers `lo..hi`.
+    parts: Vec<Partition>,
+    /// `(next region start, next region size, partition of layer hi)` when
+    /// the cluster is not the segment's last — the hand-off edge the last
+    /// layer's `comm_phase` crosses. `None` for the final cluster (no NoP
+    /// phase is charged there).
+    next: Option<(usize, usize, Partition)>,
+}
+
+impl ClusterKey {
+    /// Key of cluster `j` inside `seg`.
+    pub fn of(seg: &SegmentSchedule, j: usize) -> ClusterKey {
+        let (lo, hi) = seg.cluster_range(j);
+        let parts = seg.partitions[lo - seg.lo..hi - seg.lo].to_vec();
+        let next = if hi < seg.hi {
+            // bounds are strictly ascending, so layer `hi` opens cluster j+1
+            Some((seg.region_start(j + 1), seg.regions[j + 1], seg.partition(hi)))
+        } else {
+            None
+        };
+        ClusterKey {
+            lo,
+            hi,
+            start: seg.region_start(j),
+            n: seg.regions[j],
+            parts,
+            next,
+        }
+    }
+}
+
+/// Thread-safe memo table for cluster evaluations (see module docs).
+#[derive(Debug, Default)]
+pub struct EvalCache {
+    map: RwLock<HashMap<ClusterKey, ClusterEval>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl EvalCache {
+    pub fn new() -> EvalCache {
+        EvalCache::default()
+    }
+
+    /// Cache lookups that returned a memoized cluster evaluation.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Cache lookups that had to run the evaluator.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Distinct clusters evaluated so far.
+    pub fn len(&self) -> usize {
+        self.map.read().expect("eval cache poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Memoized [`eval_cluster`].
+    pub fn eval_cluster(
+        &self,
+        ctx: &EvalContext,
+        seg: &SegmentSchedule,
+        j: usize,
+    ) -> ClusterEval {
+        let key = ClusterKey::of(seg, j);
+        if let Some(hit) = self
+            .map
+            .read()
+            .expect("eval cache poisoned")
+            .get(&key)
+            .cloned()
+        {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return hit;
+        }
+        let val = eval_cluster(ctx, seg, j);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.map
+            .write()
+            .expect("eval cache poisoned")
+            .insert(key, val.clone());
+        val
+    }
+}
+
+/// [`eval_segment`](super::timeline::eval_segment) routed through an
+/// optional cluster cache; `None` falls back to the direct evaluator.
+/// Shares the exact assembly path with the direct evaluator, so results
+/// are bit-identical.
+pub fn eval_segment_cached(
+    ctx: &EvalContext,
+    seg: &SegmentSchedule,
+    m: u64,
+    cache: Option<&EvalCache>,
+) -> SegmentEval {
+    match cache {
+        None => assemble_segment(ctx, seg, m, |j| eval_cluster(ctx, seg, j)),
+        Some(c) => assemble_segment(ctx, seg, m, |j| c.eval_cluster(ctx, seg, j)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::McmConfig;
+    use crate::config::SimOptions;
+    use crate::model::zoo::{alexnet, scopenet};
+    use crate::pipeline::timeline::eval_segment;
+    use crate::storage::StoragePolicy;
+
+    fn ctx<'a>(
+        net: &'a crate::model::Network,
+        mcm: &'a McmConfig,
+        opts: &'a SimOptions,
+    ) -> EvalContext<'a> {
+        EvalContext {
+            net,
+            mcm,
+            opts,
+            policy: StoragePolicy::Distributed,
+            dram_fallback: true,
+        }
+    }
+
+    fn seg6() -> SegmentSchedule {
+        SegmentSchedule {
+            lo: 0,
+            hi: 6,
+            bounds: vec![0, 2, 4, 6],
+            regions: vec![6, 6, 4],
+            partitions: vec![
+                Partition::Wsp,
+                Partition::Wsp,
+                Partition::Wsp,
+                Partition::Isp,
+                Partition::Isp,
+                Partition::Isp,
+            ],
+        }
+    }
+
+    #[test]
+    fn cached_segment_eval_is_bit_identical() {
+        let net = scopenet();
+        let mcm = McmConfig::paper_default(16);
+        let opts = SimOptions::default();
+        let c = ctx(&net, &mcm, &opts);
+        let seg = seg6();
+        let plain = eval_segment(&c, &seg, opts.samples);
+        let cache = EvalCache::new();
+        for _ in 0..3 {
+            let cached = eval_segment_cached(&c, &seg, opts.samples, Some(&cache));
+            assert_eq!(
+                plain.stage_cycles.to_bits(),
+                cached.stage_cycles.to_bits()
+            );
+            assert_eq!(
+                plain.pipeline_cycles.to_bits(),
+                cached.pipeline_cycles.to_bits()
+            );
+            assert_eq!(
+                plain.preload_cycles.to_bits(),
+                cached.preload_cycles.to_bits()
+            );
+            assert_eq!(plain.error, cached.error);
+            assert_eq!(plain.clusters.len(), cached.clusters.len());
+            for (a, b) in plain.clusters.iter().zip(&cached.clusters) {
+                assert_eq!(a.cycles.to_bits(), b.cycles.to_bits());
+                assert_eq!(a.footprint, b.footprint);
+                assert_eq!(a.macs, b.macs);
+                assert_eq!(a.streamed_layers, b.streamed_layers);
+                assert_eq!(a.energy, b.energy);
+            }
+        }
+        // 3 clusters, 3 passes: first pass misses, the rest hit.
+        assert_eq!(cache.misses(), 3);
+        assert_eq!(cache.hits(), 6);
+        assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn key_distinguishes_downstream_region_changes() {
+        // Cluster 0's comm phase crosses into cluster 1's region, so
+        // shrinking cluster 2 (and thereby moving nothing about cluster 0
+        // or 1) must reuse cluster 0's entry, while resizing cluster 1
+        // must not.
+        let seg_a = seg6();
+        let mut seg_b = seg6();
+        seg_b.regions = vec![6, 6, 2]; // cluster 2 shrinks
+        assert_eq!(ClusterKey::of(&seg_a, 0), ClusterKey::of(&seg_b, 0));
+        assert_ne!(ClusterKey::of(&seg_a, 1), ClusterKey::of(&seg_b, 1));
+
+        let mut seg_c = seg6();
+        seg_c.regions = vec![6, 4, 6]; // cluster 1 resized
+        assert_ne!(ClusterKey::of(&seg_a, 0), ClusterKey::of(&seg_c, 0));
+    }
+
+    #[test]
+    fn key_tracks_lookahead_partition() {
+        // Flipping the first partition of cluster 1 changes cluster 0's
+        // hand-off edge, so cluster 0's key must change too.
+        let seg_a = seg6();
+        let mut seg_b = seg6();
+        seg_b.partitions[2] = Partition::Isp;
+        assert_ne!(ClusterKey::of(&seg_a, 0), ClusterKey::of(&seg_b, 0));
+        // ... but cluster 2 (whose layers/edges are untouched) is shared.
+        assert_eq!(ClusterKey::of(&seg_a, 2), ClusterKey::of(&seg_b, 2));
+    }
+
+    #[test]
+    fn cache_shares_clusters_across_candidate_segments() {
+        // Two candidate segmentations of AlexNet sharing their first
+        // cluster (same layers, same region, same partitions, same
+        // hand-off) must hit the cache on the shared prefix.
+        let net = alexnet();
+        let mcm = McmConfig::paper_default(16);
+        let opts = SimOptions::default();
+        let c = ctx(&net, &mcm, &opts);
+        let a = SegmentSchedule {
+            lo: 0,
+            hi: 8,
+            bounds: vec![0, 2, 5, 8],
+            regions: vec![6, 5, 5],
+            partitions: vec![Partition::Wsp; 8],
+        };
+        let mut b = a.clone();
+        b.bounds = vec![0, 2, 6, 8]; // later boundary moved; cluster 0 identical
+        let cache = EvalCache::new();
+        eval_segment_cached(&c, &a, opts.samples, Some(&cache));
+        let misses_after_a = cache.misses();
+        eval_segment_cached(&c, &b, opts.samples, Some(&cache));
+        assert!(cache.hits() >= 1, "shared first cluster must hit");
+        assert!(cache.misses() > misses_after_a, "new clusters must miss");
+    }
+}

@@ -1,9 +1,12 @@
-//! Pipeline scheduling: schedule types and the timeline evaluator
-//! (Equ. 1–3, 7 of the paper).
+//! Pipeline scheduling: schedule types, the timeline evaluator
+//! (Equ. 1–3, 7 of the paper), and the memoized cluster-evaluation cache
+//! the DSE shares across candidates.
 
+pub mod eval_cache;
 pub mod schedule;
 pub mod timeline;
 
+pub use eval_cache::{eval_segment_cached, ClusterKey, EvalCache};
 pub use schedule::{Partition, Schedule, SegmentSchedule};
 pub use timeline::{
     eval_cluster, eval_layer, eval_schedule, eval_segment, ClusterEval,

@@ -211,9 +211,22 @@ pub fn eval_cluster(ctx: &EvalContext, seg: &SegmentSchedule, j: usize) -> Clust
 
 /// Evaluate one segment for `m` samples: Equ. 2 + preload + capacity.
 pub fn eval_segment(ctx: &EvalContext, seg: &SegmentSchedule, m: u64) -> SegmentEval {
+    assemble_segment(ctx, seg, m, |j| eval_cluster(ctx, seg, j))
+}
+
+/// [`eval_segment`] with the per-cluster evaluation supplied by the caller
+/// — the single assembly path shared by the direct evaluator and the
+/// memoized one (`pipeline::eval_cache`), so cached results are
+/// bit-identical by construction.
+pub(crate) fn assemble_segment<F: FnMut(usize) -> ClusterEval>(
+    ctx: &EvalContext,
+    seg: &SegmentSchedule,
+    m: u64,
+    mut cluster_eval: F,
+) -> SegmentEval {
     let mut ev = SegmentEval::default();
     for j in 0..seg.n_clusters() {
-        let c = eval_cluster(ctx, seg, j);
+        let c = cluster_eval(j);
         if c.streamed_layers > 0 && !ctx.dram_fallback && ev.error.is_none() {
             ev.error = Some(format!(
                 "cluster {j}: weight buffer overflow ({} layers cannot stay resident)",

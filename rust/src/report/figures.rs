@@ -107,6 +107,10 @@ pub fn fig8(
         format!("{:.5} (paper: top 0.05% = 0.0005)", rank),
     ]);
     table.row(vec!["search evals".into(), found.evals.to_string()]);
+    table.row(vec![
+        "cluster-cache hits/misses".into(),
+        format!("{}/{}", found.cache_hits, found.cache_misses),
+    ]);
 
     // ASCII histogram (proportion per latency bucket — the Fig. 8 bars)
     let hist = ex.histogram(20);

@@ -8,8 +8,9 @@
 //!    minLatency` loop. Converges in a few iterations (asserted by tests
 //!    and reported in EXPERIMENTS.md).
 
+use crate::pipeline::eval_cache::{eval_segment_cached, EvalCache};
 use crate::pipeline::schedule::SegmentSchedule;
-use crate::pipeline::timeline::{eval_segment, EvalContext};
+use crate::pipeline::timeline::EvalContext;
 
 /// Proportional-to-load initial allocation of `c` chiplets over cluster
 /// loads; every region ≥ 1. Returns `None` when `c < loads.len()`.
@@ -69,9 +70,15 @@ pub struct RegionSearch {
 }
 
 /// Evaluate `seg` and return (pipeline latency for m samples, per-cluster
-/// cycle list, validity).
-fn forward(ctx: &EvalContext, seg: &SegmentSchedule, m: u64) -> (f64, Vec<f64>, bool) {
-    let ev = eval_segment(ctx, seg, m);
+/// cycle list, validity). Cluster evaluations route through `cache` when
+/// one is supplied (bit-identical results either way).
+fn forward(
+    ctx: &EvalContext,
+    seg: &SegmentSchedule,
+    m: u64,
+    cache: Option<&EvalCache>,
+) -> (f64, Vec<f64>, bool) {
+    let ev = eval_segment_cached(ctx, seg, m, cache);
     let lat = ev.preload_cycles + ev.pipeline_cycles;
     let cluster_cycles = ev.clusters.iter().map(|c| c.cycles).collect();
     (lat, cluster_cycles, ev.error.is_none())
@@ -86,11 +93,25 @@ const PATIENCE: usize = 4;
 /// too few chiplets).
 pub fn improve_regions(
     ctx: &EvalContext,
-    mut seg: SegmentSchedule,
+    seg: SegmentSchedule,
     m: u64,
     max_iters: usize,
 ) -> Option<RegionSearch> {
-    let (mut lat, mut cluster_lat, mut valid) = forward(ctx, &seg, m);
+    improve_regions_cached(ctx, seg, m, max_iters, None)
+}
+
+/// [`improve_regions`] with cluster evaluations routed through a shared
+/// [`EvalCache`] — the DSE hot loop's entry point. Decisions are driven by
+/// the same (memoized) values the direct evaluator would produce, so the
+/// result is bit-identical with or without the cache.
+pub fn improve_regions_cached(
+    ctx: &EvalContext,
+    mut seg: SegmentSchedule,
+    m: u64,
+    max_iters: usize,
+    cache: Option<&EvalCache>,
+) -> Option<RegionSearch> {
+    let (mut lat, mut cluster_lat, mut valid) = forward(ctx, &seg, m, cache);
     let mut best: Option<RegionSearch> = valid.then(|| RegionSearch {
         schedule: seg.clone(),
         latency: lat,
@@ -118,7 +139,7 @@ pub fn improve_regions(
         };
         seg.regions[min_j] -= 1;
         seg.regions[max_j] += 1;
-        (lat, cluster_lat, valid) = forward(ctx, &seg, m);
+        (lat, cluster_lat, valid) = forward(ctx, &seg, m, cache);
         let improved = valid
             && best
                 .as_ref()
@@ -205,11 +226,59 @@ mod tests {
                 Partition::Isp,
             ],
         };
-        let (seed_lat, _, _) = super::forward(&ctx, &seg, opts.samples);
+        let (seed_lat, _, _) = super::forward(&ctx, &seg, opts.samples, None);
         let found = improve_regions(&ctx, seg, opts.samples, 64).unwrap();
         assert!(found.latency <= seed_lat);
         assert_eq!(found.schedule.regions.iter().sum::<usize>(), 16);
         // the paper's claim: few iterations
         assert!(found.iterations <= 16, "iters={}", found.iterations);
+    }
+
+    #[test]
+    fn cached_rebalance_is_bit_identical_to_uncached() {
+        let net = alexnet();
+        let mcm = McmConfig::paper_default(16);
+        let opts = SimOptions::default();
+        let ctx = EvalContext {
+            net: &net,
+            mcm: &mcm,
+            opts: &opts,
+            policy: StoragePolicy::Distributed,
+            dram_fallback: true,
+        };
+        let seg = SegmentSchedule {
+            lo: 0,
+            hi: 8,
+            bounds: vec![0, 3, 6, 8],
+            regions: vec![5, 6, 5],
+            partitions: vec![
+                Partition::Wsp,
+                Partition::Wsp,
+                Partition::Wsp,
+                Partition::Wsp,
+                Partition::Isp,
+                Partition::Isp,
+                Partition::Isp,
+                Partition::Isp,
+            ],
+        };
+        let plain = improve_regions(&ctx, seg.clone(), opts.samples, 64).unwrap();
+        let cache = EvalCache::new();
+        let cached =
+            improve_regions_cached(&ctx, seg.clone(), opts.samples, 64, Some(&cache))
+                .unwrap();
+        assert_eq!(plain.schedule, cached.schedule);
+        assert_eq!(plain.latency.to_bits(), cached.latency.to_bits());
+        assert_eq!(plain.iterations, cached.iterations);
+        assert!(cache.misses() > 0);
+        // A second identical run replays the same decision sequence and
+        // must be served entirely from the cache.
+        let misses_first = cache.misses();
+        let again =
+            improve_regions_cached(&ctx, seg, opts.samples, 64, Some(&cache)).unwrap();
+        assert_eq!(cache.misses(), misses_first, "replay must not re-evaluate");
+        assert!(cache.hits() > 0);
+        assert_eq!(again.schedule, cached.schedule);
+        assert_eq!(again.latency.to_bits(), cached.latency.to_bits());
     }
 }

@@ -5,13 +5,22 @@
 //! iterative rebalance of `region_alloc`. Total `Forward()` calls are
 //! O(L²·iters) — the exponential-to-linear reduction the paper claims
 //! (versus Equ. 9's `2^L · Σ Q`).
+//!
+//! The `(idx, N)` candidates are independent, so the sweep (and the
+//! boundary-refinement stage) fans across the deterministic worker pool of
+//! [`dse::parallel`](crate::dse::parallel), with cluster evaluations
+//! shared through a per-search [`EvalCache`] — the winning schedule is
+//! bit-identical to the serial search at every thread count
+//! (`SimOptions::threads`).
 
+use crate::dse::parallel::par_map;
+use crate::pipeline::eval_cache::EvalCache;
 use crate::pipeline::schedule::SegmentSchedule;
 use crate::pipeline::timeline::EvalContext;
 
 use super::cmt::gen_cmt;
 use super::partition::transition_partitions;
-use super::region_alloc::{improve_regions, proportional_allocate};
+use super::region_alloc::{improve_regions_cached, proportional_allocate, RegionSearch};
 
 /// Best schedule found for one segment, with search statistics.
 #[derive(Clone, Debug)]
@@ -19,8 +28,15 @@ pub struct SegmentSearch {
     pub schedule: SegmentSchedule,
     /// Pipelined latency (cycles, incl. preload) for `m` samples.
     pub latency: f64,
-    /// Number of `Forward()` evaluations spent.
+    /// Number of `Forward()` evaluations spent (counted identically with
+    /// and without the cluster cache).
     pub evals: usize,
+    /// Cluster evaluations served from the memo cache. Informational: the
+    /// split between hits and misses depends on worker interleaving, but
+    /// the search result never does.
+    pub cache_hits: usize,
+    /// Cluster evaluations that ran the cost model.
+    pub cache_misses: usize,
 }
 
 /// Tuning knobs (exposed for ablation benches).
@@ -30,6 +46,11 @@ pub struct SearchOptions {
     pub max_region_iters: usize,
     /// Restrict cluster counts to `1..=max_clusters` (0 = no cap).
     pub max_clusters: usize,
+    /// Force at least this many clusters, capped at the segment's maximum
+    /// (0 = no floor). `min_clusters = L` pins the search to the
+    /// one-layer-per-cluster shape — the genuine segmented-pipeline
+    /// baseline the merging tests compare against.
+    pub min_clusters: usize,
     /// Hill-climb cluster boundaries ±1 around the CMT winner (closes the
     /// residual gap between the CMT's single candidate per N and the true
     /// optimum — tightens the Fig. 8 rank at small extra cost).
@@ -38,7 +59,12 @@ pub struct SearchOptions {
 
 impl Default for SearchOptions {
     fn default() -> Self {
-        SearchOptions { max_region_iters: 64, max_clusters: 0, refine_bounds: true }
+        SearchOptions {
+            max_region_iters: 64,
+            max_clusters: 0,
+            min_clusters: 0,
+            refine_bounds: true,
+        }
     }
 }
 
@@ -51,6 +77,7 @@ fn eval_bounds(
     partitions: &[crate::pipeline::schedule::Partition],
     m: u64,
     max_region_iters: usize,
+    cache: Option<&EvalCache>,
 ) -> Option<(SegmentSchedule, f64, usize)> {
     let c = ctx.mcm.chiplets;
     let n = bounds.len() - 1;
@@ -69,7 +96,7 @@ fn eval_bounds(
         regions,
         partitions: partitions.to_vec(),
     };
-    let found = improve_regions(ctx, seed, m, max_region_iters)?;
+    let found = improve_regions_cached(ctx, seed, m, max_region_iters, cache)?;
     let iters = found.iterations + 1;
     Some((found.schedule, found.latency, iters))
 }
@@ -85,6 +112,7 @@ fn refine_boundaries(
     best: &mut SegmentSearch,
     m: u64,
     max_region_iters: usize,
+    cache: Option<&EvalCache>,
 ) {
     const MAX_PASSES: usize = 6;
     let l = best.schedule.n_layers();
@@ -110,6 +138,7 @@ fn refine_boundaries(
                     &best.schedule.partitions,
                     m,
                     max_region_iters,
+                    cache,
                 ) {
                     best.evals += evals;
                     if lat < best.latency {
@@ -141,6 +170,7 @@ fn refine_boundaries(
                 &parts,
                 m,
                 max_region_iters,
+                cache,
             ) {
                 best.evals += evals;
                 if lat < best.latency {
@@ -156,7 +186,21 @@ fn refine_boundaries(
     }
 }
 
+/// Outcome of one `(idx, N)` candidate in the sweep: the region seed can
+/// be infeasible (`Infeasible`, no `Forward()` spent), the rebalance can
+/// find nothing valid (`NoSchedule`, one `Forward()` spent), or a
+/// candidate schedule is produced.
+enum CandidateOutcome {
+    Infeasible,
+    NoSchedule,
+    Found(RegionSearch),
+}
+
 /// Run Algorithm 1 on the sub-chain `[lo, hi)`; `m` = batch size.
+///
+/// Parallelism comes from `ctx.opts.threads` (0 = one worker per core);
+/// results are reduced in candidate order, so the returned schedule and
+/// latency are bit-identical at every thread count.
 pub fn search_segment(
     ctx: &EvalContext,
     lo: usize,
@@ -168,6 +212,8 @@ pub fn search_segment(
     let c = ctx.mcm.chiplets;
     let layers = &ctx.net.layers[lo..hi];
     let cmt = gen_cmt(layers, lo, hi);
+    let cache = EvalCache::new();
+    let threads = ctx.opts.threads;
     let mut evals = 0usize;
     let n_max = {
         let cap = l.min(c);
@@ -177,45 +223,67 @@ pub fn search_segment(
             cap
         }
     };
-    // Every (idx, N) candidate is kept; the strongest few are then
-    // boundary-refined — the winning pair often isn't the pre-refine
-    // leader (see the Fig. 8 analysis in EXPERIMENTS.md).
-    let mut candidates: Vec<SegmentSearch> = Vec::new();
+    let n_min = if opts.min_clusters > 0 {
+        opts.min_clusters.min(n_max)
+    } else {
+        1
+    };
     // For deep segments, stride the transition sweep: the refinement stage
     // re-searches idx locally (±2), so a stride of ≤4 loses nothing while
     // cutting Forward() calls proportionally (§Perf change 3).
     let idx_step = (l / 48).clamp(1, 4);
+    // Candidate grid in the serial visit order; every (idx, N) pair is
+    // independent, so the evaluation fans across the worker pool.
+    let mut jobs: Vec<(usize, usize)> = Vec::new();
     for idx in (0..=l).step_by(idx_step) {
+        for n in n_min..=n_max {
+            jobs.push((idx, n));
+        }
+    }
+    let outcomes: Vec<CandidateOutcome> = par_map(threads, jobs, |_, (idx, n)| {
         let partitions = transition_partitions(l, idx);
-        for n in 1..=n_max {
-            let bounds = cmt.bounds(n).to_vec();
-            // proportional seed over cluster MAC loads
-            let loads: Vec<u64> = (0..n)
-                .map(|j| {
-                    (bounds[j]..bounds[j + 1])
-                        .map(|k| ctx.net.layers[k].macs())
-                        .sum()
-                })
-                .collect();
-            let Some(regions) = proportional_allocate(&loads, c) else {
-                continue;
-            };
-            let seed = SegmentSchedule {
-                lo,
-                hi,
-                bounds,
-                regions,
-                partitions: partitions.clone(),
-            };
-            if let Some(found) = improve_regions(ctx, seed, m, opts.max_region_iters) {
+        let bounds = cmt.bounds(n).to_vec();
+        // proportional seed over cluster MAC loads
+        let loads: Vec<u64> = (0..n)
+            .map(|j| {
+                (bounds[j]..bounds[j + 1])
+                    .map(|k| ctx.net.layers[k].macs())
+                    .sum()
+            })
+            .collect();
+        let Some(regions) = proportional_allocate(&loads, c) else {
+            return CandidateOutcome::Infeasible;
+        };
+        let seed = SegmentSchedule {
+            lo,
+            hi,
+            bounds,
+            regions,
+            partitions,
+        };
+        match improve_regions_cached(ctx, seed, m, opts.max_region_iters, Some(&cache)) {
+            Some(found) => CandidateOutcome::Found(found),
+            None => CandidateOutcome::NoSchedule,
+        }
+    });
+    // Ordered reduction — identical accounting and candidate order to the
+    // serial sweep. Every (idx, N) candidate is kept; the strongest few
+    // are then boundary-refined — the winning pair often isn't the
+    // pre-refine leader (see the Fig. 8 analysis in EXPERIMENTS.md).
+    let mut candidates: Vec<SegmentSearch> = Vec::new();
+    for outcome in outcomes {
+        match outcome {
+            CandidateOutcome::Infeasible => {}
+            CandidateOutcome::NoSchedule => evals += 1,
+            CandidateOutcome::Found(found) => {
                 evals += found.iterations + 1;
                 candidates.push(SegmentSearch {
                     schedule: found.schedule,
                     latency: found.latency,
                     evals: 0,
+                    cache_hits: 0,
+                    cache_misses: 0,
                 });
-            } else {
-                evals += 1;
             }
         }
     }
@@ -246,18 +314,24 @@ pub fn search_segment(
             }
         });
         candidates.truncate(REFINE_TOP_K.max(1));
-        for cand in candidates.iter_mut() {
+        // Each survivor refines independently — second parallel stage.
+        candidates = par_map(threads, candidates, |_, mut cand| {
             if cand.schedule.n_clusters() > 1 {
-                refine_boundaries(ctx, cand, m, opts.max_region_iters);
-                evals += cand.evals;
-                cand.evals = 0;
+                refine_boundaries(ctx, &mut cand, m, opts.max_region_iters, Some(&cache));
             }
+            cand
+        });
+        for cand in candidates.iter_mut() {
+            evals += cand.evals;
+            cand.evals = 0;
         }
         candidates.sort_by(|a, b| a.latency.partial_cmp(&b.latency).unwrap());
     }
     let mut best = candidates.into_iter().next();
     if let Some(b) = best.as_mut() {
         b.evals = evals;
+        b.cache_hits = cache.hits() as usize;
+        b.cache_misses = cache.misses() as usize;
     }
     best
 }
@@ -267,7 +341,7 @@ mod tests {
     use super::*;
     use crate::arch::McmConfig;
     use crate::config::SimOptions;
-    use crate::model::zoo::{alexnet, darknet19};
+    use crate::model::zoo::{alexnet, darknet19, scopenet};
     use crate::pipeline::timeline::{eval_segment, EvalContext};
     use crate::storage::StoragePolicy;
 
@@ -300,12 +374,15 @@ mod tests {
         assert!(found.latency.is_finite());
         // linear-complexity claim: evals ≲ (L+1)·L·(iters+1), far under 2^L·ΣQ
         assert!(found.evals <= (net.len() + 1) * net.len() * 65);
+        // the memo cache must be exercised by the sweep
+        assert!(found.cache_hits + found.cache_misses > 0);
     }
 
     #[test]
     fn merging_beats_or_matches_one_layer_per_cluster() {
         // Scope generalizes the segmented pipeline (N=L is *in* its search
-        // space), so its best must be ≤ the best pure per-layer split.
+        // space), so its best must be ≤ the best schedule found when the
+        // cluster count is pinned to one layer per cluster.
         let net = darknet19();
         let mcm = McmConfig::paper_default(64);
         let opts = SimOptions::default();
@@ -318,10 +395,39 @@ mod tests {
             0,
             net.len(),
             opts.samples,
-            SearchOptions { max_clusters: 0, ..Default::default() },
+            SearchOptions { min_clusters: net.len(), ..Default::default() },
         )
         .unwrap();
+        // the floor really forces the per-layer shape
+        assert_eq!(per_layer.schedule.n_clusters(), net.len());
         assert!(merged.latency <= per_layer.latency * 1.0001);
+    }
+
+    #[test]
+    fn min_clusters_floor_is_respected_and_capped() {
+        let net = alexnet();
+        let mcm = McmConfig::paper_default(16);
+        let opts = SimOptions::default();
+        let c = ctx(&net, &mcm, &opts);
+        let forced = search_segment(
+            &c,
+            0,
+            net.len(),
+            opts.samples,
+            SearchOptions { min_clusters: 5, refine_bounds: false, ..Default::default() },
+        )
+        .unwrap();
+        assert!(forced.schedule.n_clusters() >= 5);
+        // a floor above the maximum clamps instead of emptying the sweep
+        let clamped = search_segment(
+            &c,
+            2,
+            5,
+            opts.samples,
+            SearchOptions { min_clusters: 99, refine_bounds: false, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(clamped.schedule.n_clusters(), 3);
     }
 
     #[test]
@@ -335,5 +441,49 @@ mod tests {
         assert_eq!(found.schedule.lo, 2);
         assert_eq!(found.schedule.hi, 6);
         assert!(found.schedule.validate(&net, 16).is_ok());
+    }
+
+    #[test]
+    fn parallel_search_is_bit_identical_to_serial() {
+        // The acceptance bar of the parallel engine: same best schedule
+        // and bit-identical latency at 1, 2, and 8 threads, on both zoo
+        // networks the determinism spec names.
+        for net in [alexnet(), scopenet()] {
+            let mcm = McmConfig::paper_default(16);
+            let serial_opts = SimOptions { threads: 1, ..Default::default() };
+            let c = ctx(&net, &mcm, &serial_opts);
+            let baseline = search_segment(
+                &c,
+                0,
+                net.len(),
+                serial_opts.samples,
+                SearchOptions::default(),
+            )
+            .expect("serial result");
+            for threads in [2usize, 8] {
+                let par_opts = SimOptions { threads, ..Default::default() };
+                let pc = ctx(&net, &mcm, &par_opts);
+                let got = search_segment(
+                    &pc,
+                    0,
+                    net.len(),
+                    par_opts.samples,
+                    SearchOptions::default(),
+                )
+                .expect("parallel result");
+                assert_eq!(
+                    baseline.schedule, got.schedule,
+                    "{} @ {threads} threads: schedule drifted",
+                    net.name
+                );
+                assert_eq!(
+                    baseline.latency.to_bits(),
+                    got.latency.to_bits(),
+                    "{} @ {threads} threads: latency drifted",
+                    net.name
+                );
+                assert_eq!(baseline.evals, got.evals, "{}", net.name);
+            }
+        }
     }
 }

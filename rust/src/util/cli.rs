@@ -93,6 +93,19 @@ impl Args {
         }
     }
 
+    /// The shared `--threads <N|auto>` knob: absence maps to the given
+    /// default; `auto` (or `0`) forces auto-detection (one worker per
+    /// core), overriding any configured default.
+    pub fn threads_or(&self, default: usize) -> Result<usize> {
+        match self.flags.get("threads").map(|s| s.as_str()) {
+            None => Ok(default),
+            Some("auto") => Ok(0),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--threads expects an integer or 'auto', got {v:?}")),
+        }
+    }
+
     /// Boolean switch (present or `--name=true/false`).
     pub fn switch(&self, name: &str) -> bool {
         matches!(self.flags.get(name).map(|s| s.as_str()), Some("true") | Some("1"))
@@ -146,6 +159,14 @@ mod tests {
         assert!(a.usize_or("n", 1).is_err());
         assert!(a.str_req("missing").is_err());
         assert!(Args::parse(vec!["--".to_string()]).is_err());
+    }
+
+    #[test]
+    fn threads_flag_forms() {
+        assert_eq!(parse(&["x", "--threads", "4"]).threads_or(0).unwrap(), 4);
+        assert_eq!(parse(&["x", "--threads=auto"]).threads_or(2).unwrap(), 0);
+        assert_eq!(parse(&["x"]).threads_or(2).unwrap(), 2);
+        assert!(parse(&["x", "--threads", "many"]).threads_or(0).is_err());
     }
 
     #[test]

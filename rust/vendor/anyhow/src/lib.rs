@@ -1,0 +1,290 @@
+//! Minimal offline stand-in for the `anyhow` error-handling crate.
+//!
+//! The sandbox has no registry access, so this crate re-implements the
+//! subset of the real `anyhow` API the workspace uses: [`Error`],
+//! [`Result`], the [`Context`] extension trait for `Result`/`Option`, and
+//! the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! One deliberate divergence from upstream: this `Error` *does* implement
+//! [`std::error::Error`], which lets a single blanket [`Context`] impl
+//! cover both std errors and `anyhow::Result` chains. The cost is that
+//! there is no blanket `From<E: std::error::Error>` (it would collide with
+//! the reflexive `From<Error>`); instead `From` is implemented for the
+//! concrete std error types the workspace converts with `?`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A string-chain error: an outermost message plus optional causes.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+/// `std::result::Result` defaulted to [`Error`], as in the real crate.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// Capture a std error (message + its whole source chain).
+    pub fn from_std<E: StdError>(err: E) -> Error {
+        let mut msgs = vec![err.to_string()];
+        let mut src = err.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut chained: Option<Box<Error>> = None;
+        for msg in msgs.into_iter().rev() {
+            chained = Some(Box::new(Error { msg, source: chained }));
+        }
+        *chained.expect("at least one message")
+    }
+
+    /// The root cause's message (deepest link in the chain).
+    pub fn root_cause_msg(&self) -> &str {
+        let mut cur = self;
+        while let Some(s) = &cur.source {
+            cur = s;
+        }
+        &cur.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut src = &self.source;
+        if src.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(s) = src {
+            write!(f, "\n    {}", s.msg)?;
+            src = &s.source;
+        }
+        Ok(())
+    }
+}
+
+impl StdError for Error {
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.source
+            .as_ref()
+            .map(|s| s.as_ref() as &(dyn StdError + 'static))
+    }
+}
+
+// `?` conversions for the std error types the workspace produces. No
+// blanket impl (see module docs).
+macro_rules! impl_from {
+    ($($ty:ty),* $(,)?) => {
+        $(impl From<$ty> for Error {
+            fn from(e: $ty) -> Error {
+                Error::from_std(e)
+            }
+        })*
+    };
+}
+
+impl_from!(
+    std::io::Error,
+    std::str::Utf8Error,
+    std::string::FromUtf8Error,
+    std::num::ParseIntError,
+    std::num::ParseFloatError,
+    std::num::TryFromIntError,
+    std::fmt::Error,
+);
+
+impl From<String> for Error {
+    fn from(msg: String) -> Error {
+        Error { msg, source: None }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(msg: &str) -> Error {
+        Error::msg(msg)
+    }
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(...)` to
+/// `Result` and `Option`, mirroring the real crate's ergonomics.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from_std(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from_std(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any `Display` value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn macro_forms() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let n = 3;
+        let b = anyhow!("n = {n}");
+        assert_eq!(b.to_string(), "n = 3");
+        let c = anyhow!("n = {}", n + 1);
+        assert_eq!(c.to_string(), "n = 4");
+        let d = anyhow!(String::from("owned"));
+        assert_eq!(d.to_string(), "owned");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x != 1, "one is bad");
+            ensure!(x != 2);
+            if x == 3 {
+                bail!("three: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(0).unwrap(), 0);
+        assert_eq!(f(1).unwrap_err().to_string(), "one is bad");
+        assert!(f(2).unwrap_err().to_string().contains("x != 2"));
+        assert_eq!(f(3).unwrap_err().to_string(), "three: 3");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading config").unwrap_err();
+        assert_eq!(e.to_string(), "reading config");
+        assert_eq!(e.root_cause_msg(), "gone");
+
+        let o: Option<u8> = None;
+        let e = o.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+        assert_eq!(Some(5u8).context("fine").unwrap(), 5);
+    }
+
+    #[test]
+    fn context_chains_on_anyhow_results() {
+        fn inner() -> Result<()> {
+            bail!("root failure");
+        }
+        fn outer() -> Result<()> {
+            inner().context("outer layer")
+        }
+        let e = outer().unwrap_err();
+        assert_eq!(e.to_string(), "outer layer");
+        assert_eq!(e.root_cause_msg(), "root failure");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+        assert!(dbg.contains("root failure"), "{dbg}");
+    }
+
+    #[test]
+    fn question_mark_conversions() {
+        fn f() -> Result<u32> {
+            let n: u32 = "12".parse()?;
+            let s = std::str::from_utf8(b"ok")?;
+            assert_eq!(s, "ok");
+            Ok(n)
+        }
+        assert_eq!(f().unwrap(), 12);
+
+        fn g() -> Result<u32> {
+            let n: u32 = "nope".parse()?;
+            Ok(n)
+        }
+        assert!(g().is_err());
+    }
+
+    #[test]
+    fn std_error_impl_exposes_chain() {
+        let e = Error::msg("leaf").context("mid").context("top");
+        let mut msgs = vec![e.to_string()];
+        let mut src = StdError::source(&e);
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        assert_eq!(msgs, vec!["top", "mid", "leaf"]);
+    }
+}
