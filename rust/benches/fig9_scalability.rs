@@ -1,19 +1,42 @@
 //! Fig. 9 — scalability: fixed workload (ResNet-50), growing package
 //! (16 → 256 chiplets), throughput normalized to the 16-chiplet case per
-//! method.
+//! method — plus the ROADMAP's ResNet-152 64–144 chiplet sweep comparing
+//! the balanced segmenter against the global boundary DP.
 //!
 //! Paper shape to reproduce: Scope scales best; segmented scales slower;
 //! sequential saturates (or regresses) as NoP communication dominates;
 //! full pipeline lacks valid solutions at low chiplet counts.
+//!
+//! Env knobs: `SCOPE_BENCH_FAST` shrinks both sweeps; `SCOPE_SEGMENTER`
+//! (`balanced`|`dp`) selects the allocator for the main Fig. 9 table.
 
+use scope::bench::segmenter_from_env;
+use scope::config::SimOptions;
 use scope::report::figures;
 
 fn main() {
     let fast = std::env::var("SCOPE_BENCH_FAST").is_ok();
     let scales: Vec<usize> =
         if fast { vec![16, 32, 64] } else { vec![16, 32, 64, 128, 256] };
+    let sim = SimOptions { segmenter: segmenter_from_env(), ..Default::default() };
     let t0 = std::time::Instant::now();
-    let table = figures::fig9("resnet50", &scales, 64).expect("fig9");
+    let table = figures::fig9_opts("resnet50", &scales, &sim).expect("fig9");
     println!("{table}");
-    println!("\n[fig9] done in {:.1}s", t0.elapsed().as_secs_f64());
+    println!(
+        "\n[fig9] main sweep ({}) done in {:.1}s",
+        sim.segmenter.name(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    // Balanced-vs-DP segmenter comparison — the ResNet-152 deep-net sweep
+    // the boundary co-search was built for (64–144 chiplets; 100 and 144
+    // are the 10×10 and 12×12 meshes between the paper's power-of-two
+    // points). Fast mode keeps the same comparison on a small net.
+    let (cmp_net, cmp_scales): (&str, Vec<usize>) =
+        if fast { ("resnet18", vec![16, 32]) } else { ("resnet152", vec![64, 100, 144]) };
+    let t1 = std::time::Instant::now();
+    let cmp_sim = SimOptions::default();
+    let cmp = figures::fig9_segmenter_compare(cmp_net, &cmp_scales, &cmp_sim).expect("fig9 dp");
+    println!("\n{cmp}");
+    println!("\n[fig9] balanced-vs-dp ({cmp_net}) done in {:.1}s", t1.elapsed().as_secs_f64());
 }

@@ -9,7 +9,7 @@
 //! results. Cluster-cache hit rates come from `SegmentSearch` stats.
 
 use scope::arch::McmConfig;
-use scope::bench::{bench, report};
+use scope::bench::{bench, report, segmenter_from_env};
 use scope::config::SimOptions;
 use scope::dse::resolve_threads;
 use scope::model::zoo;
@@ -35,8 +35,11 @@ fn main() {
             ("resnet152", 256),
         ]
     };
-    let serial_opts = SimOptions { threads: 1, ..Default::default() };
-    let par_opts = SimOptions { threads: par_threads, ..Default::default() };
+    // `SCOPE_SEGMENTER=dp` times the boundary-DP path (same bit-identity
+    // bar: the serial and parallel runs must agree exactly).
+    let segmenter = segmenter_from_env();
+    let serial_opts = SimOptions { threads: 1, segmenter, ..Default::default() };
+    let par_opts = SimOptions { threads: par_threads, segmenter, ..Default::default() };
     let mut ms = Vec::new();
     let mut speedups: Vec<(String, f64)> = Vec::new();
     for (name, chiplets) in settings {

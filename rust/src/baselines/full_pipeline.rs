@@ -12,7 +12,7 @@ use crate::pipeline::schedule::{Schedule, SegmentSchedule};
 use crate::pipeline::timeline::{eval_schedule, EvalContext};
 use crate::scope::partition::transition_partitions;
 use crate::scope::region_alloc::{improve_regions, proportional_allocate};
-use crate::scope::MethodResult;
+use crate::scope::{search_segments_opts, MethodResult, SegmenterOptions, SegmenterReport};
 use crate::storage::StoragePolicy;
 
 /// Schedule one segment `[lo, hi)` with one layer per cluster: proportional
@@ -73,15 +73,23 @@ pub fn schedule_full_pipeline(net: &Network, mcm: &McmConfig, opts: &SimOptions)
             &format!("{} layers > {} chiplets", net.len(), mcm.chiplets),
         );
     }
-    match per_layer_segment(&ctx, 0, net.len(), opts.samples) {
+    // One mandatory segment, but still routed through the shared
+    // SegmentCost provider so every method uses the identical allocator
+    // path (§V-A); with min = max = 1 the balanced and DP allocators
+    // coincide on the single span [0, L).
+    let seg_opts = SegmenterOptions::from_sim(opts);
+    let provider = |lo: usize, hi: usize| per_layer_segment(&ctx, lo, hi, opts.samples);
+    let found = search_segments_opts(net, 1, 1, usize::MAX, opts.threads, seg_opts, &provider);
+    match found {
         None => MethodResult::invalid("full_pipeline", "no valid stage allocation"),
-        Some((seg, _lat)) => {
-            let schedule = Schedule { method: "full_pipeline".into(), segments: vec![seg] };
+        Some(r) => {
+            let schedule = Schedule { method: "full_pipeline".into(), segments: r.schedules };
             let eval = eval_schedule(&ctx, &schedule);
             MethodResult {
                 method: "full_pipeline".into(),
                 schedule: Some(schedule),
                 eval,
+                segmenter: Some(SegmenterReport::new(seg_opts, r.stats)),
             }
         }
     }

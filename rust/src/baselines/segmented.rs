@@ -8,7 +8,9 @@ use crate::config::SimOptions;
 use crate::model::Network;
 use crate::pipeline::schedule::Schedule;
 use crate::pipeline::timeline::{eval_schedule, EvalContext};
-use crate::scope::{min_segments, segmenter, MethodResult};
+use crate::scope::{
+    min_segments, search_segments_opts, MethodResult, SegmenterOptions, SegmenterReport,
+};
 use crate::storage::StoragePolicy;
 
 use super::full_pipeline::per_layer_segment;
@@ -32,19 +34,31 @@ pub fn schedule_segmented(net: &Network, mcm: &McmConfig, opts: &SimOptions) -> 
     // Per-layer stages additionally require each segment to have ≤ C
     // layers: segment count must cover that too.
     let lo_s = lo_s.max(net.len().div_ceil(mcm.chiplets));
-    let found = segmenter::search_segments_capped(
+    // Same segment allocator (balanced or DP, same window) as Scope —
+    // the paper's §V-A identical-allocator fairness; only the span
+    // scheduler differs (one pipeline stage per layer, replicated WSP).
+    let seg_opts = SegmenterOptions::from_sim(opts);
+    let provider = |lo: usize, hi: usize| per_layer_segment(&ctx, lo, hi, opts.samples);
+    let found = search_segments_opts(
         net,
         lo_s,
         lo_s + SEGMENT_SLACK,
         mcm.chiplets, // per-layer stages: a segment cannot exceed C layers
-        |lo, hi| per_layer_segment(&ctx, lo, hi, opts.samples),
+        opts.threads,
+        seg_opts,
+        &provider,
     );
     match found {
         None => MethodResult::invalid("segmented", "no valid segmentation"),
-        Some((_bounds, segments, _lat)) => {
-            let schedule = Schedule { method: "segmented".into(), segments };
+        Some(r) => {
+            let schedule = Schedule { method: "segmented".into(), segments: r.schedules };
             let eval = eval_schedule(&ctx, &schedule);
-            MethodResult { method: "segmented".into(), schedule: Some(schedule), eval }
+            MethodResult {
+                method: "segmented".into(),
+                schedule: Some(schedule),
+                eval,
+                segmenter: Some(SegmenterReport::new(seg_opts, r.stats)),
+            }
         }
     }
 }
@@ -67,6 +81,32 @@ mod tests {
         for seg in &s.segments {
             assert_eq!(seg.n_clusters(), seg.n_layers());
         }
+    }
+
+    #[test]
+    fn dp_segmenter_matches_or_beats_balanced_split() {
+        // VGG16 on 16 chiplets forces ~9+ segments (138 MB of replicated
+        // weights), so boundary placement really matters here.
+        use crate::scope::SegmenterKind;
+        let net = crate::model::zoo::vgg16();
+        let mcm = McmConfig::paper_default(16);
+        let bal = schedule_segmented(&net, &mcm, &SimOptions::default());
+        let dp = schedule_segmented(
+            &net,
+            &mcm,
+            &SimOptions { segmenter: SegmenterKind::Dp, dp_window: 2, ..Default::default() },
+        );
+        assert!(bal.eval.is_valid(), "{:?}", bal.eval.error);
+        assert!(dp.eval.is_valid(), "{:?}", dp.eval.error);
+        assert!(
+            dp.throughput() >= bal.throughput() * 0.999,
+            "dp {} < balanced {}",
+            dp.throughput(),
+            bal.throughput()
+        );
+        // spans shared across neighboring counts must hit the memo
+        let rep = dp.segmenter.unwrap();
+        assert!(rep.stats.hits + rep.stats.misses > 0);
     }
 
     #[test]

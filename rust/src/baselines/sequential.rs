@@ -17,7 +17,7 @@ use crate::cost::{
 use crate::model::Network;
 use crate::pipeline::schedule::Partition;
 use crate::pipeline::timeline::ScheduleEval;
-use crate::scope::MethodResult;
+use crate::scope::{search_segments_opts, MethodResult, SegmenterOptions, SegmenterReport};
 
 /// Best-of-ISP/WSP per layer over the full package.
 fn best_partition(
@@ -55,13 +55,23 @@ fn best_partition(
     best.unwrap()
 }
 
-/// Evaluate the sequential baseline.
-pub fn schedule_sequential(net: &Network, mcm: &McmConfig, opts: &SimOptions) -> MethodResult {
+/// Cycles + energy of running layers `[lo, hi)` sequentially over the
+/// whole package. The cost is a per-layer sum, so it is *additive* across
+/// spans: any segmentation of the chain yields the same total (asserted
+/// by tests) — sequential execution has no pipeline structure to gain
+/// from boundary placement.
+pub fn sequential_span(
+    net: &Network,
+    mcm: &McmConfig,
+    opts: &SimOptions,
+    lo: usize,
+    hi: usize,
+) -> (f64, EnergyBreakdown) {
     let m = opts.samples as f64;
     let freq = mcm.chiplet.freq_hz;
     let mut total_cycles = 0.0f64;
     let mut energy = EnergyBreakdown::zero();
-    for k in 0..net.len() {
+    for k in lo..hi {
         let layer = &net.layers[k];
         let (p, per_sample_cycles, comm) = best_partition(net, k, mcm, opts.overlap_comm);
         // weights stream from DRAM once per batch (full channel available —
@@ -73,6 +83,29 @@ pub fn schedule_sequential(net: &Network, mcm: &McmConfig, opts: &SimOptions) ->
         e.nop_pj += comm.energy_pj;
         energy = energy.add(e.scale(m));
     }
+    (total_cycles, energy)
+}
+
+/// Evaluate the sequential baseline.
+pub fn schedule_sequential(net: &Network, mcm: &McmConfig, opts: &SimOptions) -> MethodResult {
+    let m = opts.samples as f64;
+    // Routed through the shared SegmentCost provider like every other
+    // method (§V-A identical allocator). Because the span cost is
+    // additive, a single mandatory span loses nothing — the segmenter is
+    // a no-op here by construction, not by special-casing.
+    let seg_opts = SegmenterOptions::from_sim(opts);
+    let provider = |lo: usize, hi: usize| {
+        let (cycles, energy) = sequential_span(net, mcm, opts, lo, hi);
+        Some(((cycles, energy), cycles))
+    };
+    let found = search_segments_opts(net, 1, 1, usize::MAX, opts.threads, seg_opts, &provider);
+    let Some(r) = found else {
+        return MethodResult::invalid("sequential", "empty network");
+    };
+    let (total_cycles, energy) = r
+        .schedules
+        .iter()
+        .fold((0.0f64, EnergyBreakdown::zero()), |(c, e), &(sc, se)| (c + sc, e.add(se)));
     let secs = mcm.cycles_to_secs(total_cycles);
     MethodResult {
         method: "sequential".into(),
@@ -84,6 +117,7 @@ pub fn schedule_sequential(net: &Network, mcm: &McmConfig, opts: &SimOptions) ->
             energy,
             error: None,
         },
+        segmenter: Some(SegmenterReport::new(seg_opts, r.stats)),
     }
 }
 
@@ -100,6 +134,29 @@ mod tests {
             assert!(r.eval.is_valid());
             assert!(r.throughput() > 0.0, "c={c}");
         }
+    }
+
+    #[test]
+    fn span_costs_are_additive_across_boundaries() {
+        // The provider contract sequential relies on: splitting the chain
+        // anywhere must not change the summed cost (no pipeline structure).
+        let net = alexnet();
+        let mcm = McmConfig::paper_default(16);
+        let opts = SimOptions::default();
+        let (whole, e_whole) = sequential_span(&net, &mcm, &opts, 0, net.len());
+        for k in 1..net.len() {
+            let (a, ea) = sequential_span(&net, &mcm, &opts, 0, k);
+            let (b, eb) = sequential_span(&net, &mcm, &opts, k, net.len());
+            assert!(
+                ((a + b) - whole).abs() <= whole.abs() * 1e-12,
+                "split at {k}: {a} + {b} != {whole}"
+            );
+            let esum = ea.add(eb).total_pj();
+            assert!((esum - e_whole.total_pj()).abs() <= e_whole.total_pj() * 1e-12);
+        }
+        // and the provider route reports exactly the single-span totals
+        let r = schedule_sequential(&net, &mcm, &opts);
+        assert_eq!(r.eval.total_cycles.to_bits(), whole.to_bits());
     }
 
     #[test]

@@ -55,6 +55,18 @@ pub fn report(title: &str, measurements: &[Measurement]) -> Table {
     t
 }
 
+/// The `SCOPE_SEGMENTER` env knob shared by the benches: pick the segment
+/// allocator (`balanced` default, `dp`) without recompiling. Panics on an
+/// unknown value, listing the options — benches should fail loudly, not
+/// silently fall back.
+pub fn segmenter_from_env() -> crate::scope::SegmenterKind {
+    match std::env::var("SCOPE_SEGMENTER") {
+        Err(_) => crate::scope::SegmenterKind::Balanced,
+        Ok(v) => crate::scope::SegmenterKind::parse(&v)
+            .unwrap_or_else(|e| panic!("SCOPE_SEGMENTER: {e}")),
+    }
+}
+
 /// Human-friendly seconds.
 pub fn humanize_secs(s: f64) -> String {
     if s >= 1.0 {

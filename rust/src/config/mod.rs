@@ -10,6 +10,8 @@
 //! chiplets   = 256
 //! samples    = 64
 //! threads    = auto      # DSE worker threads (auto = one per core)
+//! segmenter  = dp        # segment allocator: balanced | dp (default balanced)
+//! dp_window  = 4         # DP boundary window ±W layers (0 = no prune)
 //! dram.bw    = 100e9
 //! nop.bw     = 100e9
 //! distributed_weights = true
@@ -21,6 +23,7 @@ use std::path::Path;
 use anyhow::{anyhow, Context, Result};
 
 use crate::arch::McmConfig;
+use crate::scope::SegmenterKind;
 
 /// Evaluation options shared by every scheduler/bench.
 #[derive(Clone, Debug, PartialEq)]
@@ -37,6 +40,16 @@ pub struct SimOptions {
     /// core). The parallel engine reduces in candidate order, so results
     /// are bit-identical at every thread count.
     pub threads: usize,
+    /// Segment-boundary allocator (config key `segmenter = balanced|dp`).
+    /// `balanced`: one balanced-weight split per segment count (the
+    /// paper's allocator). `dp`: global shortest-path DP over boundary
+    /// placements driven by the evaluated cost model — never worse than
+    /// `balanced`, at the cost of scheduling more candidate spans.
+    pub segmenter: SegmenterKind,
+    /// DP boundary window (config key `dp_window`): each internal
+    /// boundary may move ±W layers around the balanced seed. `0` = no
+    /// prune (explores every placement — O(L²) spans, small nets only).
+    pub dp_window: usize,
 }
 
 impl Default for SimOptions {
@@ -46,6 +59,8 @@ impl Default for SimOptions {
             distributed_weights: true,
             overlap_comm: true,
             threads: 0,
+            segmenter: SegmenterKind::Balanced,
+            dp_window: 4,
         }
     }
 }
@@ -96,6 +111,19 @@ impl Config {
                         }
                         v as usize
                     }
+                }
+                "segmenter" => {
+                    cfg.sim.segmenter =
+                        SegmenterKind::parse(value).map_err(|e| anyhow!("{e}"))?
+                }
+                "dp_window" => {
+                    let v = parse_num(value)?;
+                    if v < 0.0 || v.fract() != 0.0 {
+                        return Err(anyhow!(
+                            "dp_window expects a non-negative integer, got {value:?}"
+                        ));
+                    }
+                    cfg.sim.dp_window = v as usize;
                 }
                 "freq" => cfg.mcm.chiplet.freq_hz = parse_num(value)?,
                 "mac_energy_pj" => cfg.mcm.chiplet.mac_energy_pj = parse_num(value)?,
@@ -183,6 +211,24 @@ mod tests {
         // negative / fractional counts must error, not silently truncate
         assert!(Config::from_kv(&parse_kv("threads = -4\n").unwrap(), 16).is_err());
         assert!(Config::from_kv(&parse_kv("threads = 2.7\n").unwrap(), 16).is_err());
+    }
+
+    #[test]
+    fn segmenter_and_window_keys_parse_and_validate() {
+        let cfg =
+            Config::from_kv(&parse_kv("segmenter = dp\ndp_window = 6\n").unwrap(), 16).unwrap();
+        assert_eq!(cfg.sim.segmenter, SegmenterKind::Dp, "dp selected");
+        assert_eq!(cfg.sim.dp_window, 6);
+        let defaults = Config::from_kv(&BTreeMap::new(), 16).unwrap();
+        assert_eq!(defaults.sim.segmenter, SegmenterKind::Balanced);
+        assert_eq!(defaults.sim.dp_window, 4);
+        // unknown mode and bad windows error with the options listed
+        let err = Config::from_kv(&parse_kv("segmenter = genetic\n").unwrap(), 16)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("balanced") && err.contains("dp"), "{err}");
+        assert!(Config::from_kv(&parse_kv("dp_window = -1\n").unwrap(), 16).is_err());
+        assert!(Config::from_kv(&parse_kv("dp_window = 1.5\n").unwrap(), 16).is_err());
     }
 
     #[test]

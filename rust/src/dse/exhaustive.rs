@@ -268,6 +268,62 @@ pub fn exhaustive_segment(
     res
 }
 
+/// Exhaustively enumerate every segmentation of the chain `[0, l)` into
+/// `min..=max` contiguous segments of ≤ `max_layers` layers each, with
+/// span costs memoized (each distinct `(lo, hi)` costed once), and return
+/// the best `(bounds, total)` — the ground truth the DP segmenter
+/// ([`segment_dp`](crate::scope::segment_dp)) is validated against.
+///
+/// Totals accumulate left-to-right exactly like the DP's
+/// `best[k-1][j] + cost(j, i)` recurrence, so for identical boundary
+/// choices the two produce bit-identical sums. `span_cost` returning
+/// `None` marks a span unschedulable; segmentations using it are skipped.
+pub fn exhaustive_segmentations<F>(
+    l: usize,
+    min_segments: usize,
+    max_segments: usize,
+    max_layers: usize,
+    mut span_cost: F,
+) -> Option<(Vec<usize>, f64)>
+where
+    F: FnMut(usize, usize) -> Option<f64>,
+{
+    use std::collections::HashMap;
+    let mut memo: HashMap<(usize, usize), Option<f64>> = HashMap::new();
+    let mut best: Option<(Vec<usize>, f64)> = None;
+    for s in min_segments.max(1)..=max_segments.min(l) {
+        for_each_composition(l, s, &mut |parts| {
+            if parts.iter().any(|&p| p > max_layers) {
+                return true;
+            }
+            let mut bounds = Vec::with_capacity(s + 1);
+            bounds.push(0usize);
+            for &p in parts {
+                bounds.push(bounds.last().unwrap() + p);
+            }
+            let mut total = 0.0f64;
+            let mut ok = true;
+            for w in bounds.windows(2) {
+                let c = *memo
+                    .entry((w[0], w[1]))
+                    .or_insert_with(|| span_cost(w[0], w[1]));
+                match c {
+                    Some(c) => total += c,
+                    None => {
+                        ok = false;
+                        break;
+                    }
+                }
+            }
+            if ok && best.as_ref().map(|b| total < b.1).unwrap_or(true) {
+                best = Some((bounds, total));
+            }
+            true
+        });
+    }
+    best
+}
+
 impl ExhaustiveResult {
     /// Fraction of valid schedules strictly better than `latency`
     /// (the paper's "top 0.05%" is `rank_of(scope_latency) ≤ 0.0005`).
@@ -335,6 +391,58 @@ mod tests {
             seen < 3
         });
         assert_eq!(seen, 3);
+    }
+
+    #[test]
+    fn segmentation_enumeration_finds_known_optimum() {
+        // cost = span² → splitting as evenly and as often as allowed wins;
+        // l = 6 with s ≤ 3 → (2,2,2), total 12.
+        let best = exhaustive_segmentations(6, 1, 3, usize::MAX, |lo, hi| {
+            let d = (hi - lo) as f64;
+            Some(d * d)
+        })
+        .unwrap();
+        assert_eq!(best.0, vec![0, 2, 4, 6]);
+        assert_eq!(best.1, 12.0);
+        // with a layer cap of 2 only (2,2,2) survives at s=3
+        let capped = exhaustive_segmentations(6, 3, 3, 2, |lo, hi| {
+            let d = (hi - lo) as f64;
+            Some(d * d)
+        })
+        .unwrap();
+        assert_eq!(capped.0, vec![0, 2, 4, 6]);
+        // cost rewarding long spans flips the winner to one segment
+        let one = exhaustive_segmentations(6, 1, 3, usize::MAX, |lo, hi| {
+            Some(100.0 / (hi - lo) as f64)
+        })
+        .unwrap();
+        assert_eq!(one.0, vec![0, 6]);
+    }
+
+    #[test]
+    fn segmentation_enumeration_memoizes_and_skips_invalid() {
+        use std::collections::HashMap;
+        let mut calls: HashMap<(usize, usize), usize> = HashMap::new();
+        exhaustive_segmentations(7, 1, 4, usize::MAX, |lo, hi| {
+            *calls.entry((lo, hi)).or_insert(0) += 1;
+            Some((hi - lo) as f64)
+        })
+        .unwrap();
+        assert!(!calls.is_empty());
+        assert!(calls.values().all(|&n| n == 1), "{calls:?}");
+
+        // spans over 2 layers unschedulable → only s ≥ ceil(5/2) = 3 works
+        let r = exhaustive_segmentations(5, 1, 5, usize::MAX, |lo, hi| {
+            if hi - lo <= 2 {
+                Some(1.0)
+            } else {
+                None
+            }
+        })
+        .unwrap();
+        assert!(r.0.windows(2).all(|w| w[1] - w[0] <= 2));
+        // nothing schedulable → None
+        assert!(exhaustive_segmentations(4, 1, 2, usize::MAX, |_, _| None).is_none());
     }
 
     #[test]

@@ -21,7 +21,7 @@ use scope::dse::{ExhaustiveOptions, PartitionSpace};
 use scope::model::zoo;
 use scope::report::figures;
 use scope::runtime::Manifest;
-use scope::scope::schedule_scope;
+use scope::scope::{schedule_scope, SegmenterKind};
 use scope::util::cli::Args;
 use scope::util::table::{eng, f3, Table};
 
@@ -36,6 +36,7 @@ SUBCOMMANDS
   compare     --net <name> --chiplets <C> [--samples M]
   sweep       [--nets a,b,..] [--scales 16,64,256] [--samples M]
   scaling     [--net resnet50] [--scales 16,32,64,128,256] [--samples M]
+              [--compare-segmenters]   adds a balanced-vs-dp Scope table
   exhaustive  [--net alexnet] [--chiplets 16] [--full-partitions] [--max-visits N]
   casestudy   [--net resnet152] [--chiplets 256] [--samples M]
   space       [--net resnet152] [--chiplets 256]
@@ -48,6 +49,10 @@ COMMON FLAGS
   --samples <M>     pipeline batch size m (default 64)
   --threads <N>     DSE worker threads; 'auto' = one per core (default).
                     Results are bit-identical at every thread count.
+  --segmenter <S>   segment allocator: 'balanced' (default) or 'dp'
+                    (global boundary DP — never worse than balanced).
+  --dp-window <W>   DP boundary window ±W layers around the balanced seed
+                    (default 4; 0 = no prune, small nets only).
 
 NETWORKS: alexnet vgg16 darknet19 resnet18/34/50/101/152 scopenet
 ";
@@ -68,6 +73,10 @@ fn sim_options(args: &Args, chiplets: usize) -> Result<(McmConfig, SimOptions)> 
     let mut sim = cfg.sim;
     sim.samples = args.usize_or("samples", sim.samples as usize)? as u64;
     sim.threads = args.threads_or(sim.threads)?;
+    // validated up front: unknown modes abort before any scheduling runs
+    sim.segmenter = SegmenterKind::parse(&args.str_or("segmenter", sim.segmenter.name()))
+        .map_err(|e| anyhow!("--segmenter: {e}"))?;
+    sim.dp_window = args.usize_or("dp-window", sim.dp_window)?;
     Ok((cfg.mcm, sim))
 }
 
@@ -136,6 +145,18 @@ fn cmd_search(args: &Args) -> Result<()> {
                 f3(r.eval.energy.total_pj() * 1e-12),
                 eng(r.eval.total_cycles),
             );
+            if let Some(rep) = &r.segmenter {
+                let kind = match rep.kind {
+                    SegmenterKind::Dp => format!("dp (window ±{})", rep.dp_window),
+                    SegmenterKind::Balanced => "balanced".to_string(),
+                };
+                println!(
+                    "segmenter: {kind} | span cache: {} hits / {} misses ({:.0}% hit rate)",
+                    rep.stats.hits,
+                    rep.stats.misses,
+                    rep.stats.hit_rate() * 100.0,
+                );
+            }
         }
         (_, err) => println!("no valid schedule: {err:?}"),
     }
@@ -179,17 +200,28 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         "alexnet,vgg16,darknet19,resnet18,resnet34,resnet50,resnet101,resnet152",
     );
     let nets: Vec<&str> = nets.split(',').map(str::trim).collect();
+    // Validate every name up front: a typo must not fail mid-sweep after
+    // minutes of scheduling the networks before it.
+    for n in &nets {
+        if zoo::by_name(n).is_none() {
+            bail!("unknown network {n:?} in --nets; options: {}", zoo::NAMES.join(" "));
+        }
+    }
     let scales = args.usize_list_or("scales", &[16, 64, 256])?;
-    let samples = args.usize_or("samples", 64)? as u64;
-    println!("{}", figures::fig7(&nets, &scales, samples)?);
+    let (_, sim) = sim_options(args, scales.first().copied().unwrap_or(16))?;
+    println!("{}", figures::fig7_opts(&nets, &scales, &sim)?);
     Ok(())
 }
 
 fn cmd_scaling(args: &Args) -> Result<()> {
     let name = net_flag(args, "resnet50")?;
     let scales = args.usize_list_or("scales", &[16, 32, 64, 128, 256])?;
-    let samples = args.usize_or("samples", 64)? as u64;
-    println!("{}", figures::fig9(&name, &scales, samples)?);
+    let (_, sim) = sim_options(args, scales.first().copied().unwrap_or(16))?;
+    println!("{}", figures::fig9_opts(&name, &scales, &sim)?);
+    if args.switch("compare-segmenters") {
+        println!();
+        println!("{}", figures::fig9_segmenter_compare(&name, &scales, &sim)?);
+    }
     Ok(())
 }
 

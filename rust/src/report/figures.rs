@@ -20,21 +20,35 @@ use crate::util::table::{f3, Table};
 /// (network, scale) cell. Normalization: best method = 1.0 (the paper
 /// normalizes per group).
 pub fn fig7_cell(net_name: &str, chiplets: usize, samples: u64) -> Result<Vec<MethodResult>> {
+    fig7_cell_opts(net_name, chiplets, &SimOptions { samples, ..Default::default() })
+}
+
+/// [`fig7_cell`] under explicit simulation options (segmenter, threads, …).
+pub fn fig7_cell_opts(
+    net_name: &str,
+    chiplets: usize,
+    sim: &SimOptions,
+) -> Result<Vec<MethodResult>> {
     let net = zoo::by_name(net_name).ok_or_else(|| anyhow!("unknown net {net_name}"))?;
     let mcm = McmConfig::paper_default(chiplets);
-    let opts = SimOptions { samples, ..Default::default() };
-    Ok(run_all(&net, &mcm, &opts))
+    Ok(run_all(&net, &mcm, sim))
 }
 
 /// Fig. 7: normalized throughput across networks × scales × methods.
 pub fn fig7(nets: &[&str], scales: &[usize], samples: u64) -> Result<Table> {
+    fig7_opts(nets, scales, &SimOptions { samples, ..Default::default() })
+}
+
+/// [`fig7`] under explicit simulation options (the `sweep` subcommand's
+/// `--segmenter`/`--threads` path).
+pub fn fig7_opts(nets: &[&str], scales: &[usize], sim: &SimOptions) -> Result<Table> {
     let mut header = vec!["network", "chiplets"];
     header.extend(METHOD_NAMES);
     header.push("scope_vs_best_baseline");
     let mut table = Table::new("Fig. 7 — normalized throughput", &header);
     for net in nets {
         for &c in scales {
-            let results = fig7_cell(net, c, samples)?;
+            let results = fig7_cell_opts(net, c, sim)?;
             let best = results
                 .iter()
                 .map(|r| r.throughput())
@@ -140,6 +154,11 @@ pub fn fig8(
 /// Fig. 9: throughput scaling vs chiplet count, normalized to the smallest
 /// scale per method (the paper normalizes to 16 chiplets).
 pub fn fig9(net_name: &str, scales: &[usize], samples: u64) -> Result<Table> {
+    fig9_opts(net_name, scales, &SimOptions { samples, ..Default::default() })
+}
+
+/// [`fig9`] under explicit simulation options.
+pub fn fig9_opts(net_name: &str, scales: &[usize], sim: &SimOptions) -> Result<Table> {
     let mut header = vec!["method"];
     let scale_labels: Vec<String> = scales.iter().map(|c| format!("{c} chiplets")).collect();
     header.extend(scale_labels.iter().map(|s| s.as_str()));
@@ -149,7 +168,7 @@ pub fn fig9(net_name: &str, scales: &[usize], samples: u64) -> Result<Table> {
     );
     let mut per_method: Vec<Vec<f64>> = vec![Vec::new(); METHOD_NAMES.len()];
     for &c in scales {
-        let results = fig7_cell(net_name, c, samples)?;
+        let results = fig7_cell_opts(net_name, c, sim)?;
         for (i, r) in results.iter().enumerate() {
             per_method[i].push(r.throughput());
         }
@@ -167,6 +186,64 @@ pub fn fig9(net_name: &str, scales: &[usize], samples: u64) -> Result<Table> {
             });
         }
         table.row(row);
+    }
+    Ok(table)
+}
+
+/// Fig. 9 extension: Scope under the balanced segmenter vs the global DP
+/// segmenter across package scales (the ROADMAP's ResNet-152 64–144
+/// sweep). The DP column can only match or beat balanced — the ratio
+/// column quantifies what boundary co-search buys at each scale.
+pub fn fig9_segmenter_compare(net_name: &str, scales: &[usize], sim: &SimOptions) -> Result<Table> {
+    use crate::scope::SegmenterKind;
+    let mut table = Table::new(
+        &format!("Fig. 9+ — balanced vs DP segmenter ({net_name}, window ±{})", sim.dp_window),
+        &[
+            "chiplets",
+            "balanced (samples/s)",
+            "dp (samples/s)",
+            "dp/balanced",
+            "segments bal→dp",
+            "dp span cache (hit rate)",
+        ],
+    );
+    for &c in scales {
+        let bal_sim = SimOptions { segmenter: SegmenterKind::Balanced, ..sim.clone() };
+        let dp_sim = SimOptions { segmenter: SegmenterKind::Dp, ..sim.clone() };
+        let net = zoo::by_name(net_name).ok_or_else(|| anyhow!("unknown net {net_name}"))?;
+        let mcm = McmConfig::paper_default(c);
+        let bal = crate::scope::schedule_scope(&net, &mcm, &bal_sim);
+        let dp = crate::scope::schedule_scope(&net, &mcm, &dp_sim);
+        let segs = |r: &MethodResult| {
+            r.schedule
+                .as_ref()
+                .map(|s| s.segments.len().to_string())
+                .unwrap_or_else(|| "-".into())
+        };
+        let cache = dp
+            .segmenter
+            .as_ref()
+            .map(|rep| {
+                format!(
+                    "{}h/{}m ({:.0}%)",
+                    rep.stats.hits,
+                    rep.stats.misses,
+                    rep.stats.hit_rate() * 100.0
+                )
+            })
+            .unwrap_or_else(|| "-".into());
+        table.row(vec![
+            c.to_string(),
+            if bal.eval.is_valid() { f3(bal.throughput()) } else { "invalid".into() },
+            if dp.eval.is_valid() { f3(dp.throughput()) } else { "invalid".into() },
+            if bal.eval.is_valid() && dp.eval.is_valid() {
+                format!("{:.3}x", dp.throughput() / bal.throughput())
+            } else {
+                "-".into()
+            },
+            format!("{}→{}", segs(&bal), segs(&dp)),
+            cache,
+        ]);
     }
     Ok(table)
 }
@@ -302,6 +379,15 @@ mod tests {
         let t = fig9("scopenet", &[16, 32], 8).unwrap();
         let s = t.render();
         assert!(s.contains("1.00x"), "{s}");
+    }
+
+    #[test]
+    fn fig9_segmenter_compare_reports_dominance() {
+        let sim = SimOptions { samples: 8, ..Default::default() };
+        let t = fig9_segmenter_compare("scopenet", &[8, 16], &sim).unwrap();
+        let s = t.render();
+        assert!(s.contains("dp/balanced"), "{s}");
+        assert!(!s.contains("invalid"), "{s}");
     }
 
     #[test]

@@ -9,6 +9,7 @@ pub mod cmt;
 pub mod partition;
 pub mod region_alloc;
 pub mod search;
+pub mod segment_dp;
 pub mod segmenter;
 
 use crate::arch::McmConfig;
@@ -20,6 +21,10 @@ use crate::storage::StoragePolicy;
 use crate::util::ceil_div;
 
 pub use search::{search_segment, SearchOptions, SegmentSearch};
+pub use segment_dp::{
+    search_segments_opts, SegmentCost, SegmenterKind, SegmenterOptions, SegmenterReport,
+    SegmenterResult, SpanStats,
+};
 
 /// A scheduling method's outcome (uniform across Scope and baselines).
 #[derive(Clone, Debug)]
@@ -27,6 +32,9 @@ pub struct MethodResult {
     pub method: String,
     pub schedule: Option<Schedule>,
     pub eval: ScheduleEval,
+    /// How the segmentation was chosen (allocator kind, DP window,
+    /// span-cache hit statistics); `None` for invalid results.
+    pub segmenter: Option<SegmenterReport>,
 }
 
 impl MethodResult {
@@ -39,6 +47,7 @@ impl MethodResult {
                 total_cycles: f64::INFINITY,
                 ..Default::default()
             },
+            segmenter: None,
         }
     }
 
@@ -76,16 +85,36 @@ pub fn schedule_scope_opts(
     };
     let ctx = EvalContext { net, mcm, opts, policy, dram_fallback: true };
     let lo_s = min_segments(net, mcm).max(1);
-    let found = segmenter::search_segments_from(net, lo_s, lo_s + SEGMENT_SLACK, |lo, hi| {
-        search_segment(&ctx, lo, hi, opts.samples, sopts)
-            .map(|s| (s.schedule, s.latency))
-    });
+    let seg_opts = SegmenterOptions::from_sim(opts);
+    // In DP mode the segmenter fans *span* evaluations across the worker
+    // pool, so each span's inner Algorithm-1 search runs serially; the
+    // search result is bit-identical at every thread count either way.
+    let serial_sim = SimOptions { threads: 1, ..opts.clone() };
+    let serial_ctx = EvalContext { net, mcm, opts: &serial_sim, policy, dram_fallback: true };
+    let span_ctx = if seg_opts.kind == SegmenterKind::Dp { &serial_ctx } else { &ctx };
+    let provider = |lo: usize, hi: usize| {
+        search_segment(span_ctx, lo, hi, opts.samples, sopts).map(|s| (s.schedule, s.latency))
+    };
+    let found = search_segments_opts(
+        net,
+        lo_s,
+        lo_s + SEGMENT_SLACK,
+        usize::MAX,
+        opts.threads,
+        seg_opts,
+        &provider,
+    );
     match found {
         None => MethodResult::invalid("scope", "no valid segmentation"),
-        Some((_bounds, segments, _lat)) => {
-            let schedule = Schedule { method: "scope".into(), segments };
+        Some(r) => {
+            let schedule = Schedule { method: "scope".into(), segments: r.schedules };
             let eval = eval_schedule(&ctx, &schedule);
-            MethodResult { method: "scope".into(), schedule: Some(schedule), eval }
+            MethodResult {
+                method: "scope".into(),
+                schedule: Some(schedule),
+                eval,
+                segmenter: Some(SegmenterReport::new(seg_opts, r.stats)),
+            }
         }
     }
 }
@@ -117,6 +146,56 @@ mod tests {
         let vgg = crate::model::zoo::vgg16(); // ~138 MB
         assert!(min_segments(&vgg, &mcm16) >= 8);
         assert!(min_segments(&vgg, &McmConfig::paper_default(256)) == 1);
+    }
+
+    #[test]
+    fn dp_segmenter_never_worse_than_balanced() {
+        // The DP's boundary window is centred on the balanced seed, so its
+        // search space contains every segmentation the balanced sweep
+        // evaluates — its total latency can only match or improve.
+        let net = alexnet();
+        let mcm = McmConfig::paper_default(16);
+        let bal = schedule_scope(&net, &mcm, &SimOptions::default());
+        let dp_opts = SimOptions {
+            segmenter: SegmenterKind::Dp,
+            ..Default::default()
+        };
+        let dp = schedule_scope(&net, &mcm, &dp_opts);
+        assert!(bal.eval.is_valid() && dp.eval.is_valid());
+        assert!(
+            dp.throughput() >= bal.throughput() * 0.999,
+            "dp {} < balanced {}",
+            dp.throughput(),
+            bal.throughput()
+        );
+        let rep = dp.segmenter.expect("dp report");
+        assert_eq!(rep.kind, SegmenterKind::Dp);
+        assert!(rep.stats.misses > 0, "spans must have been scheduled");
+    }
+
+    #[test]
+    fn dp_segmenter_is_bit_identical_across_threads() {
+        let net = alexnet();
+        let mcm = McmConfig::paper_default(16);
+        let serial = schedule_scope(
+            &net,
+            &mcm,
+            &SimOptions { threads: 1, segmenter: SegmenterKind::Dp, ..Default::default() },
+        );
+        assert!(serial.eval.is_valid(), "{:?}", serial.eval.error);
+        for threads in [2usize, 8] {
+            let par = schedule_scope(
+                &net,
+                &mcm,
+                &SimOptions { threads, segmenter: SegmenterKind::Dp, ..Default::default() },
+            );
+            assert_eq!(serial.schedule, par.schedule, "{threads} threads: schedule drifted");
+            assert_eq!(
+                serial.eval.total_cycles.to_bits(),
+                par.eval.total_cycles.to_bits(),
+                "{threads} threads: latency drifted"
+            );
+        }
     }
 
     #[test]

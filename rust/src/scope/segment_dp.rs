@@ -1,0 +1,708 @@
+//! Global DP segmenter — joint boundary × schedule co-search.
+//!
+//! The legacy segmenter ([`super::segmenter`]) decides boundaries *before*
+//! scheduling: one balanced-weight split per segment count, scheduled and
+//! summed. The paper's core insight — deploying layers jointly relaxes the
+//! compute/communication/memory tradeoff — applies to the segment
+//! dimension too: boundary placement should be driven by the *evaluated*
+//! cost model, not a weight-balance proxy (cf. Stream's layer-fused DSE
+//! and the inter-layer scheduling exploration of arXiv:2312.09401).
+//!
+//! This module supplies that co-search:
+//!
+//! * [`SegmentCost`] — the provider abstraction: "schedule span `[lo, hi)`
+//!   with the method's real scheduler and return `(schedule, latency)`".
+//!   Scope plugs in the merged-pipeline search, the segmented/full-pipeline
+//!   baselines their per-layer-stage scheduler, and the sequential baseline
+//!   its additive per-layer cost — preserving the paper's §V-A
+//!   identical-allocator fairness.
+//! * [`SpanMemo`] — a span-level memo layered above the per-search
+//!   [`EvalCache`](crate::pipeline::eval_cache::EvalCache): each distinct
+//!   `(lo, hi)` span is scheduled exactly once per sweep, shared between
+//!   the balanced sweep and the DP (and across segment counts).
+//! * the shortest-path DP `best[k][i] = min_j best[k-1][j] + cost[j][i]`
+//!   over boundary positions, under min/max-segment and per-segment
+//!   layer-cap constraints, with a configurable span-window prune
+//!   (boundaries restricted to ±W layers around the balanced seed) so deep
+//!   nets (ResNet-152) stay tractable instead of evaluating all O(L²)
+//!   spans.
+//!
+//! **Parallelism & determinism:** the candidate span list is enumerated in
+//! a deterministic order, fanned across the worker pool of
+//! [`dse::parallel`](crate::dse::parallel), and the DP itself runs
+//! serially over the memoized costs — so the chosen boundaries, schedules,
+//! and total latency are bit-identical at every thread count (each span
+//! cost is a pure function of `(lo, hi)`). The DP's accumulation
+//! `best[k-1][j] + cost[j][i]` is exactly the left-associated sum the
+//! balanced sweep computes, so identical boundary choices produce
+//! bit-identical totals.
+//!
+//! **Dominance:** for every segment count the balanced sweep accepts, the
+//! seed boundaries lie inside the DP's window (the window is centred on
+//! them), so the DP's best total is never worse than the balanced sweep's
+//! — asserted by tests here, in the baselines, and across the zoo in
+//! `tests/segmenter_dp.rs`.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::config::SimOptions;
+use crate::dse::parallel::par_map;
+use crate::model::Network;
+
+use super::segmenter::{balanced_split_capped, SegResult};
+
+/// Which segment-boundary allocator to run (config key `segmenter`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SegmenterKind {
+    /// Legacy single-candidate balanced-weight split per segment count.
+    Balanced,
+    /// Global DP over boundary placements (this module).
+    Dp,
+}
+
+impl SegmenterKind {
+    /// Names accepted by [`SegmenterKind::parse`] (CLI help / validation).
+    pub const NAMES: &'static [&'static str] = &["balanced", "dp"];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SegmenterKind::Balanced => "balanced",
+            SegmenterKind::Dp => "dp",
+        }
+    }
+
+    /// Parse a CLI/config value; unknown values list the options.
+    pub fn parse(s: &str) -> Result<SegmenterKind, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "balanced" => Ok(SegmenterKind::Balanced),
+            "dp" => Ok(SegmenterKind::Dp),
+            other => Err(format!(
+                "unknown segmenter {other:?}; options: {}",
+                SegmenterKind::NAMES.join(" ")
+            )),
+        }
+    }
+}
+
+/// Segmenter knobs, threaded from [`SimOptions`] through every method.
+#[derive(Clone, Copy, Debug)]
+pub struct SegmenterOptions {
+    pub kind: SegmenterKind,
+    /// DP boundary window: each internal boundary may move ±`dp_window`
+    /// layers around the balanced seed position. `0` = no prune (every
+    /// placement is explored — O(L²) spans, small nets only).
+    pub dp_window: usize,
+}
+
+impl Default for SegmenterOptions {
+    fn default() -> Self {
+        SegmenterOptions { kind: SegmenterKind::Balanced, dp_window: 4 }
+    }
+}
+
+impl SegmenterOptions {
+    /// The segmenter knobs carried by a simulation configuration.
+    pub fn from_sim(sim: &SimOptions) -> SegmenterOptions {
+        SegmenterOptions { kind: sim.segmenter, dp_window: sim.dp_window }
+    }
+}
+
+/// Span-cache counters of one segmenter sweep (`SegmentSearch`-style).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpanStats {
+    /// Span requests served from the memo.
+    pub hits: usize,
+    /// Spans that ran the method's scheduler (== distinct spans costed).
+    pub misses: usize,
+}
+
+impl SpanStats {
+    /// Fraction of span requests served from the memo.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// How a method's segmentation was chosen (attached to `MethodResult`).
+#[derive(Clone, Copy, Debug)]
+pub struct SegmenterReport {
+    pub kind: SegmenterKind,
+    pub dp_window: usize,
+    pub stats: SpanStats,
+}
+
+impl SegmenterReport {
+    pub fn new(opts: SegmenterOptions, stats: SpanStats) -> SegmenterReport {
+        SegmenterReport { kind: opts.kind, dp_window: opts.dp_window, stats }
+    }
+}
+
+/// The segment-cost provider: schedule span `[lo, hi)` with the method's
+/// real scheduler, returning `(schedule, latency)` or `None` when the span
+/// is unschedulable. Implementations must be pure functions of `(lo, hi)`
+/// (the determinism guarantee rests on it) and `Sync` (spans fan across
+/// the worker pool).
+pub trait SegmentCost: Sync {
+    type Sched: Clone + Send;
+    fn cost(&self, lo: usize, hi: usize) -> SegResult<Self::Sched>;
+}
+
+impl<S, F> SegmentCost for F
+where
+    S: Clone + Send,
+    F: Fn(usize, usize) -> SegResult<S> + Sync,
+{
+    type Sched = S;
+    fn cost(&self, lo: usize, hi: usize) -> SegResult<S> {
+        self(lo, hi)
+    }
+}
+
+/// Span-level memo: each distinct `(lo, hi)` is scheduled exactly once per
+/// sweep. Values are the provider's exact results (pure function of the
+/// key), so a memoized sweep is bit-identical to an unmemoized one.
+#[derive(Debug)]
+pub struct SpanMemo<S> {
+    map: HashMap<(usize, usize), SegResult<S>>,
+    hits: usize,
+    misses: usize,
+}
+
+impl<S> Default for SpanMemo<S> {
+    fn default() -> Self {
+        SpanMemo { map: HashMap::new(), hits: 0, misses: 0 }
+    }
+}
+
+impl<S: Clone> SpanMemo<S> {
+    pub fn new() -> SpanMemo<S> {
+        SpanMemo::default()
+    }
+
+    pub fn stats(&self) -> SpanStats {
+        SpanStats { hits: self.hits, misses: self.misses }
+    }
+
+    /// Memoized span evaluation (serial path — the balanced sweep and the
+    /// DP's lookups).
+    pub fn get_or_eval<F>(&mut self, lo: usize, hi: usize, f: &mut F) -> SegResult<S>
+    where
+        F: FnMut(usize, usize) -> SegResult<S>,
+    {
+        if let Some(r) = self.map.get(&(lo, hi)) {
+            self.hits += 1;
+            return r.clone();
+        }
+        let r = f(lo, hi);
+        self.misses += 1;
+        self.map.insert((lo, hi), r.clone());
+        r
+    }
+
+    /// Evaluate every not-yet-cached span across the deterministic worker
+    /// pool ([`par_map`]) and store the results. Values are pure functions
+    /// of the key, so the fill order cannot affect any later lookup.
+    pub fn prefill<P>(&mut self, threads: usize, spans: &[(usize, usize)], provider: &P)
+    where
+        S: Send,
+        P: SegmentCost<Sched = S>,
+    {
+        let mut seen: HashSet<(usize, usize)> = HashSet::new();
+        let todo: Vec<(usize, usize)> = spans
+            .iter()
+            .copied()
+            .filter(|key| !self.map.contains_key(key) && seen.insert(*key))
+            .collect();
+        if todo.is_empty() {
+            return;
+        }
+        let results = par_map(threads, todo.clone(), |_, (lo, hi)| provider.cost(lo, hi));
+        for (key, r) in todo.into_iter().zip(results) {
+            self.misses += 1;
+            self.map.insert(key, r);
+        }
+    }
+}
+
+/// Winner of a segmenter sweep: boundaries, per-segment schedules, total
+/// latency (Equ. 1 sum), and span-cache statistics.
+#[derive(Clone, Debug)]
+pub struct SegmenterResult<S> {
+    pub bounds: Vec<usize>,
+    pub schedules: Vec<S>,
+    pub total_latency: f64,
+    pub stats: SpanStats,
+}
+
+/// The legacy balanced-weight sweep, routed through a span memo: for each
+/// segment count the balanced split is materialized, its spans scheduled
+/// (each distinct span once across *all* counts), and the cheapest total
+/// kept. Identical visit order, comparisons, and float accumulation to the
+/// pre-memo sweep — bit-identical results, fewer scheduler calls.
+pub fn balanced_sweep_memo<S, F>(
+    net: &Network,
+    min_segments: usize,
+    max_segments: usize,
+    max_layers: usize,
+    memo: &mut SpanMemo<S>,
+    schedule_segment: &mut F,
+) -> Option<(Vec<usize>, Vec<S>, f64)>
+where
+    S: Clone,
+    F: FnMut(usize, usize) -> SegResult<S>,
+{
+    let l = net.len();
+    let mut best: Option<(Vec<usize>, Vec<S>, f64)> = None;
+    for s in min_segments.max(1)..=max_segments.min(l) {
+        let bounds = balanced_split_capped(net, s, max_layers);
+        if bounds.len() - 1 != s {
+            continue; // couldn't materialize s segments
+        }
+        let mut schedules = Vec::with_capacity(s);
+        let mut total = 0.0f64;
+        let mut ok = true;
+        for w in bounds.windows(2) {
+            match memo.get_or_eval(w[0], w[1], schedule_segment) {
+                Some((sched, lat)) => {
+                    schedules.push(sched);
+                    total += lat;
+                }
+                None => {
+                    ok = false;
+                    break;
+                }
+            }
+        }
+        if ok && best.as_ref().map(|b| total < b.2).unwrap_or(true) {
+            best = Some((bounds, schedules, total));
+        }
+    }
+    best
+}
+
+/// One DP state: a boundary placed at `pos`, the cheapest total latency of
+/// any segmentation reaching it, and the index of its predecessor in the
+/// previous boundary level (for reconstruction).
+#[derive(Clone, Copy, Debug)]
+struct DpNode {
+    pos: usize,
+    total: f64,
+    parent: usize,
+}
+
+/// Allowed positions for each of the `s + 1` boundaries of an `s`-way
+/// split of `[0, l)`: boundary `k` must leave ≥ 1 layer per segment on
+/// both sides, and — when a window is set — sit within ±`window` of the
+/// balanced seed. `None` when no seed exists for this count (mirrors the
+/// balanced sweep skipping it; window `0` explores every placement and
+/// needs no seed).
+fn boundary_windows(
+    net: &Network,
+    s: usize,
+    max_layers: usize,
+    window: usize,
+) -> Option<Vec<Vec<usize>>> {
+    let l = net.len();
+    let mut allowed: Vec<Vec<usize>> = Vec::with_capacity(s + 1);
+    allowed.push(vec![0]);
+    if s >= 2 {
+        let seed = if window > 0 {
+            let b = balanced_split_capped(net, s, max_layers);
+            if b.len() - 1 != s {
+                return None;
+            }
+            Some(b)
+        } else {
+            None
+        };
+        for k in 1..s {
+            let mut lo = k; // k segments to the left need ≥ k layers
+            let mut hi = l - (s - k); // s−k segments to the right
+            if let Some(b) = &seed {
+                lo = lo.max(b[k].saturating_sub(window));
+                hi = hi.min(b[k].saturating_add(window));
+            }
+            if lo > hi {
+                return None;
+            }
+            allowed.push((lo..=hi).collect());
+        }
+    }
+    allowed.push(vec![l]);
+    Some(allowed)
+}
+
+/// The global DP sweep: prefetch every candidate span across the worker
+/// pool, then run `best[k][i] = min_j best[k-1][j] + cost(j, i)` per
+/// segment count and keep the cheapest total (ties keep the smaller
+/// count, then the smaller predecessor — the balanced sweep's order).
+fn dp_sweep<P: SegmentCost>(
+    net: &Network,
+    min_segments: usize,
+    max_segments: usize,
+    max_layers: usize,
+    threads: usize,
+    window: usize,
+    provider: &P,
+) -> Option<SegmenterResult<P::Sched>> {
+    let l = net.len();
+    let lo_s = min_segments.max(1);
+    let hi_s = max_segments.min(l);
+    if lo_s > hi_s {
+        return None;
+    }
+    let mut per_s: Vec<(usize, Vec<Vec<usize>>)> = Vec::new();
+    for s in lo_s..=hi_s {
+        if let Some(allowed) = boundary_windows(net, s, max_layers, window) {
+            per_s.push((s, allowed));
+        }
+    }
+    if per_s.is_empty() {
+        return None;
+    }
+    // Deterministic candidate span list across all counts (deduped), then
+    // one parallel fill — the DP below only ever hits the memo.
+    let mut seen: HashSet<(usize, usize)> = HashSet::new();
+    let mut spans: Vec<(usize, usize)> = Vec::new();
+    for (_, allowed) in &per_s {
+        for pair in allowed.windows(2) {
+            for &j in &pair[0] {
+                for &i in &pair[1] {
+                    if j < i && i - j <= max_layers && seen.insert((j, i)) {
+                        spans.push((j, i));
+                    }
+                }
+            }
+        }
+    }
+    let mut memo: SpanMemo<P::Sched> = SpanMemo::new();
+    memo.prefill(threads, &spans, provider);
+    let mut eval = |lo: usize, hi: usize| provider.cost(lo, hi);
+
+    let mut best: Option<(Vec<usize>, f64)> = None;
+    for (s, allowed) in &per_s {
+        // levels[k] = reachable boundary positions after placing k bounds
+        let mut levels: Vec<Vec<DpNode>> =
+            vec![vec![DpNode { pos: 0, total: 0.0, parent: usize::MAX }]];
+        let mut feasible = true;
+        for k in 1..=*s {
+            let prev = &levels[k - 1];
+            let mut cur: Vec<DpNode> = Vec::with_capacity(allowed[k].len());
+            for &i in &allowed[k] {
+                let mut node: Option<DpNode> = None;
+                for (pi, p) in prev.iter().enumerate() {
+                    if p.pos >= i || i - p.pos > max_layers {
+                        continue;
+                    }
+                    let Some((_, lat)) = memo.get_or_eval(p.pos, i, &mut eval) else {
+                        continue;
+                    };
+                    let total = p.total + lat;
+                    if node.as_ref().map(|n| total < n.total).unwrap_or(true) {
+                        node = Some(DpNode { pos: i, total, parent: pi });
+                    }
+                }
+                if let Some(n) = node {
+                    cur.push(n);
+                }
+            }
+            if cur.is_empty() {
+                feasible = false;
+                break;
+            }
+            levels.push(cur);
+        }
+        if !feasible {
+            continue;
+        }
+        // The last level holds the single end position `l`.
+        let end = levels[*s][0];
+        debug_assert_eq!(end.pos, l);
+        if best.as_ref().map(|b| end.total < b.1).unwrap_or(true) {
+            // reconstruct boundaries via parent pointers
+            let mut bounds = vec![l];
+            let mut node = end;
+            for level in levels[1..*s].iter().rev() {
+                node = level[node.parent];
+                bounds.push(node.pos);
+            }
+            bounds.push(0);
+            bounds.reverse();
+            best = Some((bounds, end.total));
+        }
+    }
+    let (bounds, total) = best?;
+    let schedules: Vec<P::Sched> = bounds
+        .windows(2)
+        .map(|w| {
+            memo.get_or_eval(w[0], w[1], &mut eval)
+                .expect("winning span vanished from the memo")
+                .0
+        })
+        .collect();
+    Some(SegmenterResult {
+        bounds,
+        schedules,
+        total_latency: total,
+        stats: memo.stats(),
+    })
+}
+
+/// Segmenter entry point shared by Scope and every baseline: pick the best
+/// segmentation of `net` into `min..=max` segments of ≤ `max_layers`
+/// layers, with spans costed by `provider` (the method's real scheduler)
+/// and the boundary allocator selected by `opts.kind`.
+pub fn search_segments_opts<P: SegmentCost>(
+    net: &Network,
+    min_segments: usize,
+    max_segments: usize,
+    max_layers: usize,
+    threads: usize,
+    opts: SegmenterOptions,
+    provider: &P,
+) -> Option<SegmenterResult<P::Sched>> {
+    match opts.kind {
+        SegmenterKind::Balanced => {
+            let mut memo = SpanMemo::new();
+            let mut eval = |lo: usize, hi: usize| provider.cost(lo, hi);
+            let got = balanced_sweep_memo(
+                net,
+                min_segments,
+                max_segments,
+                max_layers,
+                &mut memo,
+                &mut eval,
+            )?;
+            Some(SegmenterResult {
+                bounds: got.0,
+                schedules: got.1,
+                total_latency: got.2,
+                stats: memo.stats(),
+            })
+        }
+        SegmenterKind::Dp => dp_sweep(
+            net,
+            min_segments,
+            max_segments,
+            max_layers,
+            threads,
+            opts.dp_window,
+            provider,
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::exhaustive::exhaustive_segmentations;
+    use crate::model::zoo::{alexnet, vgg16};
+    use crate::scope::segmenter::search_segments_capped;
+
+    /// Deterministic, deliberately lumpy span cost: quadratic in span
+    /// length plus a (lo, hi)-dependent ripple, so the best boundaries sit
+    /// away from the balanced-weight seed.
+    fn fake_cost(lo: usize, hi: usize) -> f64 {
+        let span = (hi - lo) as f64;
+        span * span + ((lo * 7 + hi * 13) % 5) as f64 * 3.0
+    }
+
+    fn fake_provider(lo: usize, hi: usize) -> SegResult<(usize, usize)> {
+        Some(((lo, hi), fake_cost(lo, hi)))
+    }
+
+    fn dp_opts(window: usize) -> SegmenterOptions {
+        SegmenterOptions { kind: SegmenterKind::Dp, dp_window: window }
+    }
+
+    #[test]
+    fn kind_parse_roundtrip_and_errors() {
+        for name in SegmenterKind::NAMES {
+            let k = SegmenterKind::parse(name).unwrap();
+            assert_eq!(k.name(), *name);
+        }
+        assert_eq!(SegmenterKind::parse("DP").unwrap(), SegmenterKind::Dp);
+        let err = SegmenterKind::parse("genetic").unwrap_err();
+        assert!(err.contains("balanced") && err.contains("dp"), "{err}");
+    }
+
+    #[test]
+    fn balanced_opts_matches_legacy_sweep() {
+        let net = vgg16();
+        for (min_s, max_s, cap) in [(1, 5, usize::MAX), (2, 6, 4), (1, 3, 8)] {
+            let legacy = search_segments_capped(&net, min_s, max_s, cap, fake_provider);
+            let opts = SegmenterOptions { kind: SegmenterKind::Balanced, dp_window: 4 };
+            let new = search_segments_opts(&net, min_s, max_s, cap, 1, opts, &fake_provider);
+            match (legacy, new) {
+                (None, None) => {}
+                (Some((b, _, t)), Some(r)) => {
+                    assert_eq!(b, r.bounds);
+                    assert_eq!(t.to_bits(), r.total_latency.to_bits());
+                }
+                (a, b) => panic!("legacy {a:?} vs opts {:?}", b.map(|r| r.bounds)),
+            }
+        }
+    }
+
+    #[test]
+    fn dp_dominates_balanced_on_synthetic_costs() {
+        for net in [alexnet(), vgg16()] {
+            for window in [0usize, 1, 3] {
+                for cap in [usize::MAX, 6] {
+                    let bal = search_segments_opts(
+                        &net,
+                        1,
+                        4,
+                        cap,
+                        1,
+                        SegmenterOptions { kind: SegmenterKind::Balanced, dp_window: window },
+                        &fake_provider,
+                    );
+                    let dp =
+                        search_segments_opts(&net, 1, 4, cap, 1, dp_opts(window), &fake_provider);
+                    if let Some(b) = bal {
+                        let d = dp.expect("dp must cover the balanced candidate");
+                        assert!(
+                            d.total_latency <= b.total_latency,
+                            "{} window={window} cap={cap}: dp {} > balanced {}",
+                            net.name,
+                            d.total_latency,
+                            b.total_latency
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dp_unpruned_matches_exhaustive_enumeration() {
+        let net = alexnet();
+        for (min_s, max_s, cap) in [(1usize, 4usize, usize::MAX), (2, 3, 3)] {
+            let dp = search_segments_opts(&net, min_s, max_s, cap, 1, dp_opts(0), &fake_provider);
+            let ex = exhaustive_segmentations(net.len(), min_s, max_s, cap, &mut |lo, hi| {
+                Some(fake_cost(lo, hi))
+            });
+            match (dp, ex) {
+                (None, None) => {}
+                (Some(d), Some((ex_bounds, ex_total))) => {
+                    assert_eq!(
+                        d.total_latency.to_bits(),
+                        ex_total.to_bits(),
+                        "cap={cap}: dp {} vs exhaustive {}",
+                        d.total_latency,
+                        ex_total
+                    );
+                    // Boundary sets may differ only on exact ties; both
+                    // must re-sum (left-associated) to the optimal total.
+                    let resum = |b: &[usize]| {
+                        b.windows(2).fold(0.0f64, |acc, w| acc + fake_cost(w[0], w[1]))
+                    };
+                    assert_eq!(resum(&d.bounds).to_bits(), ex_total.to_bits(), "cap={cap}");
+                    assert_eq!(resum(&ex_bounds).to_bits(), ex_total.to_bits(), "cap={cap}");
+                }
+                (d, e) => panic!("dp {:?} vs exhaustive {e:?}", d.map(|r| r.bounds)),
+            }
+        }
+    }
+
+    #[test]
+    fn dp_respects_window_and_constraints() {
+        let net = vgg16();
+        let window = 1usize;
+        let cap = 5usize;
+        let r = search_segments_opts(&net, 2, 4, cap, 1, dp_opts(window), &fake_provider)
+            .expect("feasible");
+        let s = r.bounds.len() - 1;
+        assert!((2..=4).contains(&s));
+        assert_eq!(*r.bounds.first().unwrap(), 0);
+        assert_eq!(*r.bounds.last().unwrap(), net.len());
+        assert!(r.bounds.windows(2).all(|w| w[1] - w[0] >= 1 && w[1] - w[0] <= cap));
+        let seed = balanced_split_capped(&net, s, cap);
+        assert_eq!(seed.len(), s + 1, "seed must exist for the winning count");
+        for k in 1..s {
+            let d = r.bounds[k].abs_diff(seed[k]);
+            assert!(
+                d <= window,
+                "boundary {k} at {} vs seed {} (>±{window})",
+                r.bounds[k],
+                seed[k]
+            );
+        }
+        assert_eq!(r.schedules.len(), s);
+    }
+
+    #[test]
+    fn dp_skips_unschedulable_spans() {
+        let net = alexnet();
+        // spans longer than 3 layers are unschedulable in this fake world
+        let provider = |lo: usize, hi: usize| {
+            if hi - lo <= 3 {
+                Some(((lo, hi), fake_cost(lo, hi)))
+            } else {
+                None
+            }
+        };
+        let r = search_segments_opts(&net, 1, net.len(), usize::MAX, 1, dp_opts(0), &provider)
+            .expect("short spans are schedulable");
+        assert!(r.bounds.windows(2).all(|w| w[1] - w[0] <= 3));
+
+        // nothing schedulable → None
+        let none: Option<SegmenterResult<()>> = search_segments_opts(
+            &net,
+            1,
+            2,
+            usize::MAX,
+            1,
+            dp_opts(0),
+            &|_: usize, _: usize| -> SegResult<()> { None },
+        );
+        assert!(none.is_none());
+    }
+
+    #[test]
+    fn span_memo_counts_and_prefill_dedupe() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let calls = AtomicUsize::new(0);
+        let provider = |lo: usize, hi: usize| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            Some(((lo, hi), fake_cost(lo, hi)))
+        };
+        let mut memo: SpanMemo<(usize, usize)> = SpanMemo::new();
+        memo.prefill(2, &[(0, 2), (2, 4), (0, 2)], &provider);
+        assert_eq!(calls.load(Ordering::Relaxed), 2, "duplicate span must not re-run");
+        let mut eval = |lo: usize, hi: usize| provider.cost(lo, hi);
+        let a = memo.get_or_eval(0, 2, &mut eval).unwrap();
+        assert_eq!(a.0, (0, 2));
+        memo.get_or_eval(1, 3, &mut eval);
+        assert_eq!(calls.load(Ordering::Relaxed), 3);
+        let stats = memo.stats();
+        assert_eq!(stats.misses, 3);
+        assert_eq!(stats.hits, 1);
+        assert!((stats.hit_rate() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dp_is_thread_count_invariant() {
+        let net = vgg16();
+        let base = search_segments_opts(&net, 1, 5, usize::MAX, 1, dp_opts(2), &fake_provider)
+            .expect("result");
+        for threads in [2usize, 8] {
+            let got =
+                search_segments_opts(&net, 1, 5, usize::MAX, threads, dp_opts(2), &fake_provider)
+                    .expect("result");
+            assert_eq!(base.bounds, got.bounds, "threads={threads}");
+            assert_eq!(
+                base.total_latency.to_bits(),
+                got.total_latency.to_bits(),
+                "threads={threads}"
+            );
+            assert_eq!(base.stats, got.stats, "threads={threads}");
+        }
+    }
+}

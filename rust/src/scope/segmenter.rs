@@ -90,6 +90,7 @@ pub fn search_segments<S, F>(
     schedule_segment: F,
 ) -> Option<(Vec<usize>, Vec<S>, f64)>
 where
+    S: Clone,
     F: FnMut(usize, usize) -> SegResult<S>,
 {
     search_segments_from(net, 1, max_segments, schedule_segment)
@@ -104,6 +105,7 @@ pub fn search_segments_from<S, F>(
     schedule_segment: F,
 ) -> Option<(Vec<usize>, Vec<S>, f64)>
 where
+    S: Clone,
     F: FnMut(usize, usize) -> SegResult<S>,
 {
     search_segments_capped(net, min_segments, max_segments, usize::MAX, schedule_segment)
@@ -111,6 +113,13 @@ where
 
 /// [`search_segments_from`] with a per-segment layer cap (per-layer-stage
 /// methods pass the chiplet count).
+///
+/// Spans route through a [`SpanMemo`](super::segment_dp::SpanMemo):
+/// neighboring segment counts whose balanced splits share a `(lo, hi)`
+/// span schedule it once instead of from scratch. Results are
+/// bit-identical to the unmemoized sweep (span costs are pure functions
+/// of the range); callers that want the span-cache statistics or the DP
+/// allocator use [`search_segments_opts`](super::segment_dp::search_segments_opts).
 pub fn search_segments_capped<S, F>(
     net: &Network,
     min_segments: usize,
@@ -119,38 +128,18 @@ pub fn search_segments_capped<S, F>(
     mut schedule_segment: F,
 ) -> Option<(Vec<usize>, Vec<S>, f64)>
 where
+    S: Clone,
     F: FnMut(usize, usize) -> SegResult<S>,
 {
-    let l = net.len();
-    let mut best: Option<(Vec<usize>, Vec<S>, f64)> = None;
-    for s in min_segments.max(1)..=max_segments.min(l) {
-        let bounds = balanced_split_capped(net, s, max_layers);
-        if bounds.len() - 1 != s {
-            continue; // couldn't materialize s segments
-        }
-        let mut schedules = Vec::with_capacity(s);
-        let mut total = 0.0f64;
-        let mut ok = true;
-        for w in bounds.windows(2) {
-            match schedule_segment(w[0], w[1]) {
-                Some((sched, lat)) => {
-                    schedules.push(sched);
-                    total += lat;
-                }
-                None => {
-                    ok = false;
-                    break;
-                }
-            }
-        }
-        if ok {
-            let better = best.as_ref().map(|b| total < b.2).unwrap_or(true);
-            if better {
-                best = Some((bounds, schedules, total));
-            }
-        }
-    }
-    best
+    let mut memo = super::segment_dp::SpanMemo::new();
+    super::segment_dp::balanced_sweep_memo(
+        net,
+        min_segments,
+        max_segments,
+        max_layers,
+        &mut memo,
+        &mut schedule_segment,
+    )
 }
 
 #[cfg(test)]
@@ -209,6 +198,25 @@ mod tests {
         assert_eq!(bounds.len() - 1, 6);
         assert_eq!(scheds.len(), 6);
         assert!(total > 0.0);
+    }
+
+    #[test]
+    fn sweep_never_reevaluates_a_span() {
+        // Neighboring segment counts used to re-schedule identical
+        // (lo, hi) spans from scratch; the span memo must cost each
+        // distinct span exactly once across the whole sweep.
+        let net = resnet152();
+        let mut calls: std::collections::HashMap<(usize, usize), usize> =
+            std::collections::HashMap::new();
+        search_segments(&net, 8, |lo, hi| {
+            *calls.entry((lo, hi)).or_insert(0) += 1;
+            Some(((lo, hi), (hi - lo) as f64))
+        })
+        .unwrap();
+        assert!(!calls.is_empty());
+        for ((lo, hi), n) in calls {
+            assert_eq!(n, 1, "span [{lo}, {hi}) scheduled {n} times");
+        }
     }
 
     #[test]

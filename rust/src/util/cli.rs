@@ -106,6 +106,21 @@ impl Args {
         }
     }
 
+    /// String flag constrained to a fixed option set (matched
+    /// case-insensitively): unknown values error *up front*, listing the
+    /// accepted options, instead of failing mid-run.
+    pub fn str_choice_or(&self, name: &str, default: &str, options: &[&str]) -> Result<String> {
+        let v = self.str_or(name, default).to_ascii_lowercase();
+        if options.contains(&v.as_str()) {
+            Ok(v)
+        } else {
+            Err(anyhow!(
+                "--{name} expects one of [{}], got {v:?}",
+                options.join("|")
+            ))
+        }
+    }
+
     /// Boolean switch (present or `--name=true/false`).
     pub fn switch(&self, name: &str) -> bool {
         matches!(self.flags.get(name).map(|s| s.as_str()), Some("true") | Some("1"))
@@ -167,6 +182,25 @@ mod tests {
         assert_eq!(parse(&["x", "--threads=auto"]).threads_or(2).unwrap(), 0);
         assert_eq!(parse(&["x"]).threads_or(2).unwrap(), 2);
         assert!(parse(&["x", "--threads", "many"]).threads_or(0).is_err());
+    }
+
+    #[test]
+    fn choice_flags_validate_up_front() {
+        let a = parse(&["sweep", "--segmenter", "DP"]);
+        assert_eq!(
+            a.str_choice_or("segmenter", "balanced", &["balanced", "dp"]).unwrap(),
+            "dp"
+        );
+        // default applies when absent; bad values list the options
+        assert_eq!(
+            parse(&["sweep"]).str_choice_or("segmenter", "balanced", &["balanced", "dp"]).unwrap(),
+            "balanced"
+        );
+        let err = parse(&["sweep", "--segmenter", "genetic"])
+            .str_choice_or("segmenter", "balanced", &["balanced", "dp"])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("balanced|dp"), "{err}");
     }
 
     #[test]

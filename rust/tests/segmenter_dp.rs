@@ -1,0 +1,158 @@
+//! Integration tests for the global DP segmenter: dominance over the
+//! balanced-split sweep across the whole zoo, bit-identity across thread
+//! counts, and agreement with exhaustive boundary enumeration — the
+//! acceptance criteria of the boundary × schedule co-search.
+
+use scope::arch::McmConfig;
+use scope::baselines::schedule_segmented;
+use scope::config::SimOptions;
+use scope::dse::exhaustive::exhaustive_segmentations;
+use scope::model::zoo;
+use scope::pipeline::timeline::EvalContext;
+use scope::scope::{
+    schedule_scope, search_segment, search_segments_opts, SearchOptions, SegmenterKind,
+    SegmenterOptions,
+};
+use scope::storage::StoragePolicy;
+
+fn sim(segmenter: SegmenterKind, dp_window: usize) -> SimOptions {
+    SimOptions { samples: 8, segmenter, dp_window, ..Default::default() }
+}
+
+#[test]
+fn dp_never_worse_than_balanced_across_the_zoo() {
+    // Every zoo network at two package scales, through the segmented
+    // baseline's per-layer scheduler (the identical-allocator §V-A path —
+    // cheap enough to sweep the deep ResNets in a test). The DP's window
+    // contains the balanced seed, so it can only match or improve.
+    let mut nets = zoo::paper_networks();
+    nets.push(zoo::scopenet());
+    for net in &nets {
+        for chiplets in [16usize, 32] {
+            let mcm = McmConfig::paper_default(chiplets);
+            let bal = schedule_segmented(net, &mcm, &sim(SegmenterKind::Balanced, 1));
+            if !bal.eval.is_valid() {
+                continue; // nothing to dominate at this scale
+            }
+            let dp = schedule_segmented(net, &mcm, &sim(SegmenterKind::Dp, 1));
+            assert!(
+                dp.eval.is_valid(),
+                "{}@{chiplets}: dp invalid where balanced is valid: {:?}",
+                net.name,
+                dp.eval.error
+            );
+            assert!(
+                dp.throughput() >= bal.throughput() * 0.999,
+                "{}@{chiplets}: dp {} < balanced {}",
+                net.name,
+                dp.throughput(),
+                bal.throughput()
+            );
+        }
+    }
+}
+
+#[test]
+fn scope_dp_never_worse_than_balanced_at_two_scales() {
+    // The full merged-pipeline scheduler as the span cost, on the nets
+    // small enough to search repeatedly in a test.
+    let settings =
+        [("alexnet", [16usize, 64]), ("scopenet", [8, 16]), ("darknet19", [16, 64])];
+    for (name, scales) in settings {
+        let net = zoo::by_name(name).unwrap();
+        for chiplets in scales {
+            let mcm = McmConfig::paper_default(chiplets);
+            let bal = schedule_scope(&net, &mcm, &sim(SegmenterKind::Balanced, 2));
+            if !bal.eval.is_valid() {
+                continue;
+            }
+            let dp = schedule_scope(&net, &mcm, &sim(SegmenterKind::Dp, 2));
+            assert!(dp.eval.is_valid(), "{name}@{chiplets}: {:?}", dp.eval.error);
+            assert!(
+                dp.throughput() >= bal.throughput() * 0.999,
+                "{name}@{chiplets}: dp {} < balanced {}",
+                dp.throughput(),
+                bal.throughput()
+            );
+        }
+    }
+}
+
+#[test]
+fn dp_segmented_baseline_is_bit_identical_across_threads() {
+    // VGG16@16 forces ~9 segments, so the DP really runs; the span
+    // prefetch fans across the pool but the result must not move.
+    let net = zoo::vgg16();
+    let mcm = McmConfig::paper_default(16);
+    let serial = schedule_segmented(
+        &net,
+        &mcm,
+        &SimOptions { threads: 1, ..sim(SegmenterKind::Dp, 2) },
+    );
+    assert!(serial.eval.is_valid(), "{:?}", serial.eval.error);
+    for threads in [2usize, 8] {
+        let par = schedule_segmented(
+            &net,
+            &mcm,
+            &SimOptions { threads, ..sim(SegmenterKind::Dp, 2) },
+        );
+        assert_eq!(serial.schedule, par.schedule, "threads={threads}: schedule drifted");
+        assert_eq!(
+            serial.eval.total_cycles.to_bits(),
+            par.eval.total_cycles.to_bits(),
+            "threads={threads}: latency drifted"
+        );
+    }
+}
+
+#[test]
+fn dp_matches_exhaustive_boundary_enumeration_on_alexnet() {
+    // Ground truth: enumerate *every* boundary placement (1..=3 segments)
+    // on AlexNet at the paper's smallest scale, with each span scheduled
+    // by the real Algorithm-1 search. The unpruned DP must find the same
+    // optimal total, bit for bit (identical left-associated accumulation).
+    let net = zoo::alexnet();
+    let mcm = McmConfig::paper_default(16);
+    let opts = SimOptions { samples: 8, threads: 1, ..Default::default() };
+    let ctx = EvalContext {
+        net: &net,
+        mcm: &mcm,
+        opts: &opts,
+        policy: StoragePolicy::Distributed,
+        dram_fallback: true,
+    };
+    let provider = |lo: usize, hi: usize| {
+        search_segment(&ctx, lo, hi, opts.samples, SearchOptions::default())
+            .map(|s| (s.schedule, s.latency))
+    };
+    let dp = search_segments_opts(
+        &net,
+        1,
+        3,
+        usize::MAX,
+        1,
+        SegmenterOptions { kind: SegmenterKind::Dp, dp_window: 0 },
+        &provider,
+    )
+    .expect("dp result");
+    let ex = exhaustive_segmentations(net.len(), 1, 3, usize::MAX, |lo, hi| {
+        provider(lo, hi).map(|(_, lat)| lat)
+    })
+    .expect("exhaustive result");
+    assert_eq!(
+        dp.total_latency.to_bits(),
+        ex.1.to_bits(),
+        "dp {} vs exhaustive {}",
+        dp.total_latency,
+        ex.1
+    );
+    // boundary sets may differ only on exact latency ties; both must
+    // re-sum to the optimal total
+    let resum = |bounds: &[usize]| {
+        bounds.windows(2).fold(0.0f64, |acc, w| {
+            acc + provider(w[0], w[1]).expect("winning span schedulable").1
+        })
+    };
+    assert_eq!(resum(&dp.bounds).to_bits(), ex.1.to_bits());
+    assert_eq!(resum(&ex.0).to_bits(), ex.1.to_bits());
+}
