@@ -8,15 +8,74 @@
 //! the speedup is reported alongside a bit-identity check between the two
 //! results. Cluster-cache hit rates come from `SegmentSearch` stats.
 
+use std::collections::HashMap;
+use std::time::Instant;
+
 use scope::arch::McmConfig;
 use scope::bench::{bench, report, segmenter_from_env};
 use scope::config::SimOptions;
 use scope::dse::resolve_threads;
 use scope::model::zoo;
+use scope::pipeline::eval_cache::ClusterKey;
+use scope::pipeline::schedule::{Partition, SegmentSchedule};
 use scope::pipeline::timeline::EvalContext;
 use scope::report::figures;
 use scope::scope::{schedule_scope, search_segment, SearchOptions};
 use scope::storage::StoragePolicy;
+use scope::util::fxhash::FxHashMap;
+
+/// The cluster-cache key is hashed on every memoized `Forward()`; this
+/// micro-bench times lookups on an identical key population under the
+/// shipped Fx hasher vs std's default SipHash and asserts both tables
+/// return the same values (the hasher can only change speed, not
+/// results).
+fn bench_cluster_key_hashers(net: &scope::model::Network) {
+    let mut keys: Vec<ClusterKey> = Vec::new();
+    for hi in 2..=net.len() {
+        for b in 1..hi {
+            let seg = SegmentSchedule {
+                lo: 0,
+                hi,
+                bounds: vec![0, b, hi],
+                regions: vec![8, 8],
+                partitions: vec![Partition::Wsp; hi],
+            };
+            for j in 0..2 {
+                keys.push(ClusterKey::of(&seg, j));
+            }
+        }
+    }
+    let mut sip: HashMap<ClusterKey, u64> = HashMap::new();
+    let mut fx: FxHashMap<ClusterKey, u64> = FxHashMap::default();
+    for (i, k) in keys.iter().enumerate() {
+        sip.insert(k.clone(), i as u64);
+        fx.insert(k.clone(), i as u64);
+    }
+    const ROUNDS: usize = 2_000;
+    let time_lookups = |label: &str, get: &dyn Fn(&ClusterKey) -> u64| -> f64 {
+        let t0 = Instant::now();
+        let mut acc = 0u64;
+        for _ in 0..ROUNDS {
+            for k in &keys {
+                acc = acc.wrapping_add(get(k));
+            }
+        }
+        std::hint::black_box(acc);
+        let per = t0.elapsed().as_secs_f64() / (ROUNDS * keys.len()) as f64;
+        println!("[search_time] cluster-key lookup ({label}): {:.1} ns/op", per * 1e9);
+        per
+    };
+    for k in &keys {
+        assert_eq!(sip[k], fx[k], "hasher must not change cached values");
+    }
+    let t_sip = time_lookups("siphash", &|k| sip[k]);
+    let t_fx = time_lookups("fxhash", &|k| fx[k]);
+    println!(
+        "[search_time] fx vs siphash on {} distinct cluster keys: {:.2}x",
+        sip.len(),
+        t_sip / t_fx.max(1e-12)
+    );
+}
 
 fn main() {
     let fast = std::env::var("SCOPE_BENCH_FAST").is_ok();
@@ -115,6 +174,7 @@ fn main() {
         found.cache_misses,
         100.0 * found.cache_hits as f64 / total as f64
     );
+    bench_cluster_key_hashers(&net);
     println!();
     println!("{}", figures::space_table("resnet152", 256).expect("space"));
     println!("\n[search_time] paper reference: ≈1 h for resnet152@256 on an i7-13700H");

@@ -12,7 +12,7 @@ use crate::pipeline::schedule::{Schedule, SegmentSchedule};
 use crate::pipeline::timeline::{eval_schedule, EvalContext};
 use crate::scope::partition::transition_partitions;
 use crate::scope::region_alloc::{improve_regions, proportional_allocate};
-use crate::scope::{search_segments_opts, MethodResult, SegmenterOptions, SegmenterReport};
+use crate::scope::{search_segments_dag, MethodResult, SegmenterOptions, SegmenterReport};
 use crate::storage::StoragePolicy;
 
 /// Schedule one segment `[lo, hi)` with one layer per cluster: proportional
@@ -79,17 +79,28 @@ pub fn schedule_full_pipeline(net: &Network, mcm: &McmConfig, opts: &SimOptions)
     // coincide on the single span [0, L).
     let seg_opts = SegmenterOptions::from_sim(opts);
     let provider = |lo: usize, hi: usize| per_layer_segment(&ctx, lo, hi, opts.samples);
-    let found = search_segments_opts(net, 1, 1, usize::MAX, opts.threads, seg_opts, &provider);
+    let found = search_segments_dag(
+        net,
+        mcm,
+        opts.samples,
+        1,
+        1,
+        usize::MAX,
+        opts.threads,
+        seg_opts,
+        &provider,
+    );
     match found {
         None => MethodResult::invalid("full_pipeline", "no valid stage allocation"),
         Some(r) => {
+            let report = SegmenterReport::of(seg_opts, &r);
             let schedule = Schedule { method: "full_pipeline".into(), segments: r.schedules };
             let eval = eval_schedule(&ctx, &schedule);
             MethodResult {
                 method: "full_pipeline".into(),
                 schedule: Some(schedule),
                 eval,
-                segmenter: Some(SegmenterReport::new(seg_opts, r.stats)),
+                segmenter: Some(report),
             }
         }
     }

@@ -9,7 +9,7 @@ use crate::model::Network;
 use crate::pipeline::schedule::Schedule;
 use crate::pipeline::timeline::{eval_schedule, EvalContext};
 use crate::scope::{
-    min_segments, search_segments_opts, MethodResult, SegmenterOptions, SegmenterReport,
+    min_segments, search_segments_dag, MethodResult, SegmenterOptions, SegmenterReport,
 };
 use crate::storage::StoragePolicy;
 
@@ -39,8 +39,10 @@ pub fn schedule_segmented(net: &Network, mcm: &McmConfig, opts: &SimOptions) -> 
     // scheduler differs (one pipeline stage per layer, replicated WSP).
     let seg_opts = SegmenterOptions::from_sim(opts);
     let provider = |lo: usize, hi: usize| per_layer_segment(&ctx, lo, hi, opts.samples);
-    let found = search_segments_opts(
+    let found = search_segments_dag(
         net,
+        mcm,
+        opts.samples,
         lo_s,
         lo_s + SEGMENT_SLACK,
         mcm.chiplets, // per-layer stages: a segment cannot exceed C layers
@@ -51,13 +53,14 @@ pub fn schedule_segmented(net: &Network, mcm: &McmConfig, opts: &SimOptions) -> 
     match found {
         None => MethodResult::invalid("segmented", "no valid segmentation"),
         Some(r) => {
+            let report = SegmenterReport::of(seg_opts, &r);
             let schedule = Schedule { method: "segmented".into(), segments: r.schedules };
             let eval = eval_schedule(&ctx, &schedule);
             MethodResult {
                 method: "segmented".into(),
                 schedule: Some(schedule),
                 eval,
-                segmenter: Some(SegmenterReport::new(seg_opts, r.stats)),
+                segmenter: Some(report),
             }
         }
     }

@@ -17,7 +17,7 @@ use crate::cost::{
 use crate::model::Network;
 use crate::pipeline::schedule::Partition;
 use crate::pipeline::timeline::ScheduleEval;
-use crate::scope::{search_segments_opts, MethodResult, SegmenterOptions, SegmenterReport};
+use crate::scope::{search_segments_dag, MethodResult, SegmenterOptions, SegmenterReport};
 
 /// Best-of-ISP/WSP per layer over the full package.
 fn best_partition(
@@ -98,7 +98,17 @@ pub fn schedule_sequential(net: &Network, mcm: &McmConfig, opts: &SimOptions) ->
         let (cycles, energy) = sequential_span(net, mcm, opts, lo, hi);
         Some(((cycles, energy), cycles))
     };
-    let found = search_segments_opts(net, 1, 1, usize::MAX, opts.threads, seg_opts, &provider);
+    let found = search_segments_dag(
+        net,
+        mcm,
+        opts.samples,
+        1,
+        1,
+        usize::MAX,
+        opts.threads,
+        seg_opts,
+        &provider,
+    );
     let Some(r) = found else {
         return MethodResult::invalid("sequential", "empty network");
     };
@@ -117,7 +127,7 @@ pub fn schedule_sequential(net: &Network, mcm: &McmConfig, opts: &SimOptions) ->
             energy,
             error: None,
         },
-        segmenter: Some(SegmenterReport::new(seg_opts, r.stats)),
+        segmenter: Some(SegmenterReport::of(seg_opts, &r)),
     }
 }
 

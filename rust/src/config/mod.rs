@@ -11,7 +11,8 @@
 //! samples    = 64
 //! threads    = auto      # DSE worker threads (auto = one per core)
 //! segmenter  = dp        # segment allocator: balanced | dp (default balanced)
-//! dp_window  = 4         # DP boundary window ±W layers (0 = no prune)
+//! dp_window  = 4         # DP boundary window ±W (0 = no prune; 'auto' = widen
+//!                        # whenever the optimum lands on the window edge)
 //! dram.bw    = 100e9
 //! nop.bw     = 100e9
 //! distributed_weights = true
@@ -47,9 +48,15 @@ pub struct SimOptions {
     /// `balanced`, at the cost of scheduling more candidate spans.
     pub segmenter: SegmenterKind,
     /// DP boundary window (config key `dp_window`): each internal
-    /// boundary may move ±W layers around the balanced seed. `0` = no
-    /// prune (explores every placement — O(L²) spans, small nets only).
+    /// boundary may move ±W steps along the legal boundary domain around
+    /// the balanced seed. `0` = no prune (explores every placement —
+    /// O(L²) spans, small nets only).
     pub dp_window: usize,
+    /// Adaptive DP windows (`dp_window = auto`): when the DP optimum
+    /// lands on the window edge, the window doubles and the DP re-runs
+    /// against the shared span memo until the optimum sits strictly
+    /// inside. `dp_window` is then the starting width.
+    pub dp_window_auto: bool,
 }
 
 impl Default for SimOptions {
@@ -61,6 +68,7 @@ impl Default for SimOptions {
             threads: 0,
             segmenter: SegmenterKind::Balanced,
             dp_window: 4,
+            dp_window_auto: false,
         }
     }
 }
@@ -117,13 +125,18 @@ impl Config {
                         SegmenterKind::parse(value).map_err(|e| anyhow!("{e}"))?
                 }
                 "dp_window" => {
-                    let v = parse_num(value)?;
-                    if v < 0.0 || v.fract() != 0.0 {
-                        return Err(anyhow!(
-                            "dp_window expects a non-negative integer, got {value:?}"
-                        ));
+                    if value == "auto" {
+                        cfg.sim.dp_window_auto = true;
+                    } else {
+                        let v = parse_num(value)?;
+                        if v < 0.0 || v.fract() != 0.0 {
+                            return Err(anyhow!(
+                                "dp_window expects a non-negative integer or 'auto', got {value:?}"
+                            ));
+                        }
+                        cfg.sim.dp_window = v as usize;
+                        cfg.sim.dp_window_auto = false;
                     }
-                    cfg.sim.dp_window = v as usize;
                 }
                 "freq" => cfg.mcm.chiplet.freq_hz = parse_num(value)?,
                 "mac_energy_pj" => cfg.mcm.chiplet.mac_energy_pj = parse_num(value)?,
@@ -219,9 +232,15 @@ mod tests {
             Config::from_kv(&parse_kv("segmenter = dp\ndp_window = 6\n").unwrap(), 16).unwrap();
         assert_eq!(cfg.sim.segmenter, SegmenterKind::Dp, "dp selected");
         assert_eq!(cfg.sim.dp_window, 6);
+        assert!(!cfg.sim.dp_window_auto);
+        let auto =
+            Config::from_kv(&parse_kv("dp_window = auto\n").unwrap(), 16).unwrap();
+        assert!(auto.sim.dp_window_auto);
+        assert_eq!(auto.sim.dp_window, 4, "auto keeps the default starting width");
         let defaults = Config::from_kv(&BTreeMap::new(), 16).unwrap();
         assert_eq!(defaults.sim.segmenter, SegmenterKind::Balanced);
         assert_eq!(defaults.sim.dp_window, 4);
+        assert!(!defaults.sim.dp_window_auto);
         // unknown mode and bad windows error with the options listed
         let err = Config::from_kv(&parse_kv("segmenter = genetic\n").unwrap(), 16)
             .unwrap_err()

@@ -51,8 +51,15 @@ pub fn shard(layer: &Layer, p: Partition, r: u64) -> Shard {
 }
 
 /// Computation-phase cycles on one chiplet (Equ. 5's `F_comp`).
+///
+/// Merge nodes (Add/Concat) bypass the MAC-array tiling: they are
+/// element-wise/data-movement ops bounded by vector throughput, charged at
+/// one element per MAC slot per cycle over the node's sharded elements.
 pub fn comp_cycles(layer: &Layer, p: Partition, r: u64, chip: &ChipletConfig) -> f64 {
     let s = shard(layer, p, r);
+    if layer.is_merge() {
+        return ceil_div(s.co * s.px, chip.macs_per_cycle()) as f64;
+    }
     let oc_tiles = ceil_div(s.co, chip.oc_slots());
     let red_tiles = ceil_div(s.red.max(1), chip.macs_per_lane);
     (oc_tiles * red_tiles * s.px) as f64
@@ -131,6 +138,21 @@ mod tests {
         let isp = comp_cycles(&l, Partition::Isp, 8, &chip());
         assert_eq!(wsp, comp_cycles(&l, Partition::Wsp, 1, &chip()));
         assert!(isp < wsp);
+    }
+
+    #[test]
+    fn merge_nodes_cost_elementwise_cycles() {
+        let a = Layer::add_merge("add", 16, 16, 128);
+        // 16×16×128 = 32768 elements over 1024 slots/cycle = 32 cycles.
+        assert_eq!(comp_cycles(&a, Partition::Wsp, 1, &chip()), 32.0);
+        // WSP over 4 chiplets quarters the pixels.
+        assert_eq!(comp_cycles(&a, Partition::Wsp, 4, &chip()), 8.0);
+        // far cheaper than any real conv of the same footprint
+        let c = Layer::conv("c", 16, 16, 128, 128, 1, 1, 0);
+        assert!(comp_cycles(&a, Partition::Wsp, 1, &chip())
+            < comp_cycles(&c, Partition::Wsp, 1, &chip()));
+        // and contributes no useful MACs
+        assert_eq!(utilization(&a, Partition::Wsp, 4, &chip()), 0.0);
     }
 
     #[test]

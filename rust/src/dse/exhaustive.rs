@@ -324,6 +324,86 @@ where
     best
 }
 
+/// Exhaustively enumerate every segmentation of `[0, l)` whose internal
+/// boundaries are drawn from the legal `cuts` (ascending positions in
+/// `(0, l)`) — the DAG counterpart of [`exhaustive_segmentations`], and
+/// the ground truth the branch-aware segmenter DP is validated against.
+/// Boundary subsets are visited in lexicographic order per segment count;
+/// totals accumulate left-to-right like the DP's recurrence, so identical
+/// boundary choices produce bit-identical sums.
+pub fn exhaustive_cut_segmentations<F>(
+    l: usize,
+    cuts: &[usize],
+    min_segments: usize,
+    max_segments: usize,
+    max_layers: usize,
+    mut span_cost: F,
+) -> Option<(Vec<usize>, f64)>
+where
+    F: FnMut(usize, usize) -> Option<f64>,
+{
+    use std::collections::HashMap;
+    debug_assert!(cuts.windows(2).all(|w| w[0] < w[1]));
+    debug_assert!(cuts.iter().all(|&c| c > 0 && c < l));
+    let mut memo: HashMap<(usize, usize), Option<f64>> = HashMap::new();
+    let mut best: Option<(Vec<usize>, f64)> = None;
+    let d = cuts.len();
+    for s in min_segments.max(1)..=max_segments.min(l) {
+        if s - 1 > d {
+            continue;
+        }
+        // lexicographic choice of s−1 ascending cut indices
+        let mut choice: Vec<usize> = (0..s - 1).collect();
+        loop {
+            let mut bounds = Vec::with_capacity(s + 1);
+            bounds.push(0usize);
+            bounds.extend(choice.iter().map(|&i| cuts[i]));
+            bounds.push(l);
+            if bounds.windows(2).all(|w| w[1] - w[0] <= max_layers) {
+                let mut total = 0.0f64;
+                let mut ok = true;
+                for w in bounds.windows(2) {
+                    let c = *memo
+                        .entry((w[0], w[1]))
+                        .or_insert_with(|| span_cost(w[0], w[1]));
+                    match c {
+                        Some(c) => total += c,
+                        None => {
+                            ok = false;
+                            break;
+                        }
+                    }
+                }
+                if ok && best.as_ref().map(|b| total < b.1).unwrap_or(true) {
+                    best = Some((bounds, total));
+                }
+            }
+            // advance to the next lexicographic k-subset of 0..d
+            let k = s - 1;
+            if k == 0 {
+                break;
+            }
+            let mut advanced = false;
+            let mut i = k;
+            while i > 0 {
+                i -= 1;
+                if choice[i] < d - k + i {
+                    choice[i] += 1;
+                    for t in i + 1..k {
+                        choice[t] = choice[t - 1] + 1;
+                    }
+                    advanced = true;
+                    break;
+                }
+            }
+            if !advanced {
+                break;
+            }
+        }
+    }
+    best
+}
+
 impl ExhaustiveResult {
     /// Fraction of valid schedules strictly better than `latency`
     /// (the paper's "top 0.05%" is `rank_of(scope_latency) ≤ 0.0005`).
@@ -443,6 +523,49 @@ mod tests {
         assert!(r.0.windows(2).all(|w| w[1] - w[0] <= 2));
         // nothing schedulable → None
         assert!(exhaustive_segmentations(4, 1, 2, usize::MAX, |_, _| None).is_none());
+    }
+
+    #[test]
+    fn cut_segmentation_matches_unrestricted_on_full_domain() {
+        // With every position legal, the cut-set enumeration must agree
+        // with the composition-based one bit for bit.
+        let cuts: Vec<usize> = (1..7).collect();
+        let cost = |lo: usize, hi: usize| {
+            Some(((hi - lo) * (hi - lo)) as f64 + (lo % 3) as f64)
+        };
+        for (min_s, max_s, cap) in [(1usize, 4usize, usize::MAX), (2, 3, 3), (1, 7, 2)] {
+            let a = exhaustive_segmentations(7, min_s, max_s, cap, cost);
+            let b = exhaustive_cut_segmentations(7, &cuts, min_s, max_s, cap, cost);
+            match (a, b) {
+                (None, None) => {}
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.1.to_bits(), b.1.to_bits(), "{min_s}..{max_s} cap {cap}");
+                }
+                (a, b) => panic!("unrestricted {a:?} vs cuts {b:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn cut_segmentation_respects_restricted_domain() {
+        // Quadratic cost wants a split at every layer; only 2 and 5 are
+        // legal, so the best must use exactly those.
+        let quad = |lo: usize, hi: usize| Some(((hi - lo) * (hi - lo)) as f64);
+        let best = exhaustive_cut_segmentations(7, &[2, 5], 1, 7, usize::MAX, quad).unwrap();
+        assert_eq!(best.0, vec![0, 2, 5, 7]);
+        assert_eq!(best.1, 4.0 + 9.0 + 4.0);
+        // a 3-layer cap keeps the same (only) fully-capped choice
+        let capped = exhaustive_cut_segmentations(7, &[2, 5], 1, 7, 3, quad).unwrap();
+        assert_eq!(capped.0, vec![0, 2, 5, 7]);
+        // no cuts: multi-segment counts are infeasible
+        assert!(
+            exhaustive_cut_segmentations(7, &[], 2, 3, usize::MAX, |_, _| Some(1.0))
+                .is_none()
+        );
+        let single =
+            exhaustive_cut_segmentations(7, &[], 1, 3, usize::MAX, |_, _| Some(1.0))
+                .unwrap();
+        assert_eq!(single.0, vec![0, 7]);
     }
 
     #[test]

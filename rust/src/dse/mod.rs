@@ -7,8 +7,8 @@ pub mod parallel;
 pub mod space;
 
 pub use exhaustive::{
-    exhaustive_segment, exhaustive_segmentations, ExhaustiveOptions, ExhaustiveResult,
-    PartitionSpace,
+    exhaustive_cut_segmentations, exhaustive_segment, exhaustive_segmentations,
+    ExhaustiveOptions, ExhaustiveResult, PartitionSpace,
 };
 pub use parallel::{par_map, resolve_threads};
 pub use space::{q_cluster_region, q_configs, q_total, scope_reduced_space};

@@ -51,10 +51,15 @@ COMMON FLAGS
                     Results are bit-identical at every thread count.
   --segmenter <S>   segment allocator: 'balanced' (default) or 'dp'
                     (global boundary DP — never worse than balanced).
-  --dp-window <W>   DP boundary window ±W layers around the balanced seed
-                    (default 4; 0 = no prune, small nets only).
+  --dp-window <W>   DP boundary window ±W domain steps around the balanced
+                    seed (default 4; 0 = no prune, small nets only;
+                    'auto' = re-widen whenever the optimum lands on the
+                    window edge).
 
 NETWORKS: alexnet vgg16 darknet19 resnet18/34/50/101/152 scopenet
+          googlenet resnet18_dag resnet50_dag   (true multi-branch DAGs:
+          segment boundaries restricted to clean cuts, skip/branch traffic
+          crossing a boundary charged to DRAM)
 ";
 
 fn net_flag(args: &Args, default: &str) -> Result<String> {
@@ -76,7 +81,16 @@ fn sim_options(args: &Args, chiplets: usize) -> Result<(McmConfig, SimOptions)> 
     // validated up front: unknown modes abort before any scheduling runs
     sim.segmenter = SegmenterKind::parse(&args.str_or("segmenter", sim.segmenter.name()))
         .map_err(|e| anyhow!("--segmenter: {e}"))?;
-    sim.dp_window = args.usize_or("dp-window", sim.dp_window)?;
+    match args.str_or("dp-window", "").as_str() {
+        "" => {}
+        "auto" => sim.dp_window_auto = true,
+        v => {
+            sim.dp_window = v
+                .parse()
+                .map_err(|_| anyhow!("--dp-window expects an integer or 'auto', got {v:?}"))?;
+            sim.dp_window_auto = false;
+        }
+    }
     Ok((cfg.mcm, sim))
 }
 
@@ -105,6 +119,10 @@ fn cmd_info(args: &Args) -> Result<()> {
         eng(net.total_macs() as f64),
         eng(net.total_weight_bytes() as f64)
     );
+    if net.dag.is_some() {
+        println!();
+        println!("{}", figures::dag_condensation_table(&net)?);
+    }
     Ok(())
 }
 
@@ -146,9 +164,15 @@ fn cmd_search(args: &Args) -> Result<()> {
                 eng(r.eval.total_cycles),
             );
             if let Some(rep) = &r.segmenter {
-                let kind = match rep.kind {
-                    SegmenterKind::Dp => format!("dp (window ±{})", rep.dp_window),
-                    SegmenterKind::Balanced => "balanced".to_string(),
+                let kind = match (rep.kind, rep.dp_window_auto) {
+                    (SegmenterKind::Dp, true) if rep.dp_window == 0 => {
+                        "dp (window auto → no prune)".to_string()
+                    }
+                    (SegmenterKind::Dp, true) => {
+                        format!("dp (window auto → ±{})", rep.dp_window)
+                    }
+                    (SegmenterKind::Dp, false) => format!("dp (window ±{})", rep.dp_window),
+                    (SegmenterKind::Balanced, _) => "balanced".to_string(),
                 };
                 println!(
                     "segmenter: {kind} | span cache: {} hits / {} misses ({:.0}% hit rate)",

@@ -1,0 +1,654 @@
+//! True multi-branch workload graphs: nodes are layers, edges are explicit
+//! activation tensors, merges (residual adds, Inception concats) are
+//! first-class nodes.
+//!
+//! The chain type ([`Network`]) schedules a linear order; real networks
+//! branch. This module supplies:
+//!
+//! * [`DagNetwork`] — the graph itself, built in topological order through
+//!   [`DagBuilder`], with structural validation (shape consistency along
+//!   every edge, explicit [`LayerKind::Add`]/[`LayerKind::Concat`] merge
+//!   nodes wherever in-degree exceeds one, single sink).
+//! * **Condensation** ([`DagNetwork::cut_points`] /
+//!   [`DagNetwork::condense`]) — the single-exit cut positions: a boundary
+//!   after node `c` is *clean* iff every edge crossing it originates at
+//!   `c` (articulation-style: every source→sink path passes through `c`).
+//!   Consecutive cuts bound *supernodes* (branch bundles); the segmenters
+//!   may only place boundaries at clean cuts, so a pipeline segment always
+//!   receives exactly one input tensor.
+//! * **Cut-edge traffic** — at a clean cut, the cut node's output may feed
+//!   several downstream consumers (e.g. an identity skip into the next
+//!   block's add). One copy hands off on-package for free (the paper's
+//!   model — consecutive segments reuse the same chiplets); each extra
+//!   crossing edge is recorded in [`CutPoint::extra_bytes`] and charged as
+//!   a DRAM round-trip by the evaluator and the segmenter DP
+//!   ([`crate::scope::dag_segment`]) instead of being folded away.
+//! * [`DagNetwork::to_network`] — linearization into the chain scheduler's
+//!   [`Network`] (nodes are already topologically ordered) carrying a
+//!   [`DagInfo`] sidecar. A node without an edge to its linear successor
+//!   is flagged `branch` — the evaluator then charges no chain-adjacent
+//!   communication for it; its side edges inside a segment remain the
+//!   documented small-constant fold, while side edges *crossing segment
+//!   boundaries* are charged via the cut set.
+//! * [`DagNetwork::from_chain`] — imports an existing linearized chain
+//!   verbatim (layers untouched, every boundary a clean cut, zero extra
+//!   bytes), so chain workloads route through the DAG plumbing with
+//!   bit-identical results (asserted by `tests/dag_workloads.rs`).
+
+use super::graph::Network;
+use super::layer::{Layer, LayerKind};
+
+/// One clean cut: a valid internal segment boundary position plus the
+/// activation bytes crossing it beyond the free main hand-off.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CutPoint {
+    /// Boundary position `b` (the cut sits between nodes `b − 1` and `b`).
+    pub pos: usize,
+    /// `(crossing edges − 1) × output_bytes(b − 1)`: skip/branch copies
+    /// that must be spilled across the boundary (0 for pure chains).
+    pub extra_bytes: u64,
+}
+
+/// DAG sidecar carried by a linearized [`Network`]: the predecessor lists
+/// and the condensed boundary set the segmenters are restricted to.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DagInfo {
+    /// Predecessors per node (indices into the layer vec, all smaller than
+    /// the node's own index); empty = the node consumes the network input.
+    pub preds: Vec<Vec<usize>>,
+    /// Clean cuts, ascending by position.
+    pub cuts: Vec<CutPoint>,
+    /// `true` for [`DagNetwork::from_chain`] imports: the layer vec keeps
+    /// the chain's linearized substitution (side-branch projections with
+    /// folded shortcut traffic), and validation follows the chain rules.
+    pub linearized_chain: bool,
+}
+
+impl DagInfo {
+    /// Valid internal boundary positions, ascending.
+    pub fn cut_positions(&self) -> Vec<usize> {
+        self.cuts.iter().map(|c| c.pos).collect()
+    }
+
+    /// Whether `pos` is a valid segment boundary.
+    pub fn is_cut(&self, pos: usize) -> bool {
+        self.cuts.binary_search_by_key(&pos, |c| c.pos).is_ok()
+    }
+
+    /// Extra crossing bytes at boundary `pos` (0 when `pos` is not a cut —
+    /// callers validate boundary legality separately).
+    pub fn extra_bytes_at(&self, pos: usize) -> u64 {
+        match self.cuts.binary_search_by_key(&pos, |c| c.pos) {
+            Ok(i) => self.cuts[i].extra_bytes,
+            Err(_) => 0,
+        }
+    }
+}
+
+/// A multi-branch network: layers in topological order + explicit edges.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DagNetwork {
+    pub name: String,
+    /// Input feature map (h, w, c).
+    pub input: (u64, u64, u64),
+    /// Nodes in topological order.
+    pub nodes: Vec<Layer>,
+    /// Predecessors per node (empty = consumes the network input).
+    pub preds: Vec<Vec<usize>>,
+    /// Chain-semantics import (see [`DagInfo::linearized_chain`]).
+    linearized_chain: bool,
+}
+
+/// Incremental topological builder for [`DagNetwork`].
+pub struct DagBuilder {
+    name: String,
+    input: (u64, u64, u64),
+    nodes: Vec<Layer>,
+    preds: Vec<Vec<usize>>,
+}
+
+impl DagBuilder {
+    /// Append a node consuming the outputs of `preds` (node ids returned
+    /// by earlier calls; empty = the network input). Returns the node id.
+    pub fn node(&mut self, layer: Layer, preds: &[usize]) -> usize {
+        let id = self.nodes.len();
+        assert!(
+            preds.iter().all(|&p| p < id),
+            "{}: node {id} ({}) references a future predecessor {:?}",
+            self.name,
+            layer.name,
+            preds
+        );
+        self.nodes.push(layer);
+        self.preds.push(preds.to_vec());
+        id
+    }
+
+    /// Fuse a global average pool into an existing node (the zoo's final
+    /// block output, matching the chain zoo's `with_gap` convention).
+    pub fn fuse_gap(&mut self, id: usize) {
+        self.nodes[id] = self.nodes[id].clone().with_gap();
+    }
+
+    /// Output height of an existing node (for chaining geometry while
+    /// building strided blocks).
+    pub fn hout(&self, id: usize) -> u64 {
+        self.nodes[id].hout()
+    }
+
+    /// Finalize and validate (panics on a malformed graph, mirroring
+    /// [`Network::new`]).
+    pub fn build(self) -> DagNetwork {
+        let dag = DagNetwork {
+            name: self.name,
+            input: self.input,
+            nodes: self.nodes,
+            preds: self.preds,
+            linearized_chain: false,
+        };
+        dag.validate().unwrap_or_else(|e| panic!("{}: {e}", dag.name));
+        dag
+    }
+}
+
+impl DagNetwork {
+    pub fn builder(name: &str, input: (u64, u64, u64)) -> DagBuilder {
+        DagBuilder {
+            name: name.to_string(),
+            input,
+            nodes: Vec::new(),
+            preds: Vec::new(),
+        }
+    }
+
+    /// Import an existing linearized chain verbatim: node `i` depends on
+    /// node `i − 1`, layers (including `branch` substitution flags) are
+    /// untouched, every boundary is a clean cut with zero extra bytes.
+    pub fn from_chain(net: &Network) -> DagNetwork {
+        assert!(net.dag.is_none(), "{}: already a DAG network", net.name);
+        let preds = (0..net.len())
+            .map(|i| if i == 0 { Vec::new() } else { vec![i - 1] })
+            .collect();
+        DagNetwork {
+            name: net.name.clone(),
+            input: net.input,
+            nodes: net.layers.clone(),
+            preds,
+            linearized_chain: true,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Consumer lists (inverse of `preds`).
+    pub fn consumers(&self) -> Vec<Vec<usize>> {
+        let mut cons: Vec<Vec<usize>> = vec![Vec::new(); self.len()];
+        for (i, ps) in self.preds.iter().enumerate() {
+            for &p in ps {
+                cons[p].push(i);
+            }
+        }
+        cons
+    }
+
+    /// Structural validation: topological predecessor order, per-edge shape
+    /// consistency (merges explicit wherever in-degree > 1), single sink.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.linearized_chain {
+            // Chain-semantics import: the chain validator owns the rules.
+            return Network {
+                name: self.name.clone(),
+                input: self.input,
+                layers: self.nodes.clone(),
+                dag: None,
+            }
+            .validate();
+        }
+        validate_dag_shapes(self.input, &self.nodes, &self.preds)
+    }
+
+    /// Clean cuts with their crossing traffic (see module docs).
+    pub fn cut_points(&self) -> Vec<CutPoint> {
+        if self.linearized_chain {
+            return (1..self.len())
+                .map(|pos| CutPoint { pos, extra_bytes: 0 })
+                .collect();
+        }
+        compute_cuts(&self.nodes, &self.preds)
+    }
+
+    /// Supernode spans `[lo, hi)` between consecutive clean cuts — the
+    /// condensed chain the segmenter DP searches over.
+    pub fn condense(&self) -> Vec<(usize, usize)> {
+        let mut spans = Vec::new();
+        let mut lo = 0usize;
+        for cut in self.cut_points() {
+            spans.push((lo, cut.pos));
+            lo = cut.pos;
+        }
+        spans.push((lo, self.len()));
+        spans
+    }
+
+    /// Linearize into the chain scheduler's [`Network`] with the DAG
+    /// sidecar attached. Nodes are already topologically ordered; a node
+    /// with no edge to its linear successor is flagged `branch` (no
+    /// chain-adjacent communication phase).
+    pub fn to_network(&self) -> Network {
+        let mut layers = self.nodes.clone();
+        if !self.linearized_chain {
+            for i in 0..self.len().saturating_sub(1) {
+                if !self.preds[i + 1].contains(&i) {
+                    layers[i].branch = true;
+                }
+            }
+        }
+        let info = DagInfo {
+            preds: self.preds.clone(),
+            cuts: self.cut_points(),
+            linearized_chain: self.linearized_chain,
+        };
+        Network::with_dag(&self.name, self.input, layers, info)
+    }
+
+    /// Total MACs for one sample (merge nodes contribute zero).
+    pub fn total_macs(&self) -> u64 {
+        self.nodes.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Total weight bytes.
+    pub fn total_weight_bytes(&self) -> u64 {
+        self.nodes.iter().map(|l| l.weight_bytes()).sum()
+    }
+}
+
+/// Shape/topology validation shared by [`DagNetwork::validate`] and the
+/// linearized [`Network::validate`] (which re-checks through the sidecar).
+pub(crate) fn validate_dag_shapes(
+    input: (u64, u64, u64),
+    layers: &[Layer],
+    preds: &[Vec<usize>],
+) -> Result<(), String> {
+    if layers.is_empty() {
+        return Err("empty graph".into());
+    }
+    if layers.len() != preds.len() {
+        return Err(format!(
+            "{} layers but {} predecessor lists",
+            layers.len(),
+            preds.len()
+        ));
+    }
+    let n = layers.len();
+    let mut n_consumers = vec![0usize; n];
+    for (i, l) in layers.iter().enumerate() {
+        for &p in &preds[i] {
+            if p >= i {
+                return Err(format!(
+                    "node {i} ({}): predecessor {p} is not earlier in topological order",
+                    l.name
+                ));
+            }
+            n_consumers[p] += 1;
+        }
+        let expect_flat = |shape: (u64, u64, u64)| -> (u64, u64, u64) {
+            if l.kind == LayerKind::Fc {
+                (1, 1, shape.0 * shape.1 * shape.2)
+            } else {
+                shape
+            }
+        };
+        match (l.kind, preds[i].len()) {
+            (LayerKind::Add | LayerKind::Concat, 0 | 1) => {
+                return Err(format!(
+                    "node {i} ({}): merge node needs ≥ 2 predecessors, has {}",
+                    l.name,
+                    preds[i].len()
+                ));
+            }
+            (LayerKind::Conv | LayerKind::Fc, 0) => {
+                let expect = expect_flat(input);
+                if (l.hin, l.win, l.cin) != expect {
+                    return Err(format!(
+                        "node {i} ({}): input {:?} != network input {:?}",
+                        l.name,
+                        (l.hin, l.win, l.cin),
+                        expect
+                    ));
+                }
+            }
+            (LayerKind::Conv | LayerKind::Fc, 1) => {
+                let expect = expect_flat(layers[preds[i][0]].out_shape());
+                if (l.hin, l.win, l.cin) != expect {
+                    return Err(format!(
+                        "node {i} ({}): input {:?} != predecessor output {:?}",
+                        l.name,
+                        (l.hin, l.win, l.cin),
+                        expect
+                    ));
+                }
+            }
+            (LayerKind::Conv | LayerKind::Fc, _) => {
+                return Err(format!(
+                    "node {i} ({}): {} predecessors require an explicit Add/Concat merge node",
+                    l.name,
+                    preds[i].len()
+                ));
+            }
+            (LayerKind::Add, _) => {
+                for &p in &preds[i] {
+                    if layers[p].out_shape() != (l.hin, l.win, l.cin) {
+                        return Err(format!(
+                            "node {i} ({}): add operand {} has shape {:?}, expected {:?}",
+                            l.name,
+                            layers[p].name,
+                            layers[p].out_shape(),
+                            (l.hin, l.win, l.cin)
+                        ));
+                    }
+                }
+            }
+            (LayerKind::Concat, _) => {
+                let mut c_sum = 0u64;
+                for &p in &preds[i] {
+                    let (h, w, c) = layers[p].out_shape();
+                    if (h, w) != (l.hin, l.win) {
+                        return Err(format!(
+                            "node {i} ({}): concat operand {} is {h}×{w}, expected {}×{}",
+                            l.name, layers[p].name, l.hin, l.win
+                        ));
+                    }
+                    c_sum += c;
+                }
+                if c_sum != l.cin {
+                    return Err(format!(
+                        "node {i} ({}): concat channels sum to {c_sum}, expected {}",
+                        l.name, l.cin
+                    ));
+                }
+            }
+        }
+    }
+    // single sink: exactly the last node is consumer-less
+    for (i, &c) in n_consumers.iter().enumerate() {
+        if i + 1 < n && c == 0 {
+            return Err(format!(
+                "node {i} ({}): dead end — only the final node may lack consumers",
+                layers[i].name
+            ));
+        }
+    }
+    if n_consumers[n - 1] != 0 {
+        return Err(format!(
+            "final node ({}) must be the sink but has consumers",
+            layers[n - 1].name
+        ));
+    }
+    Ok(())
+}
+
+/// Compute the clean cuts of a (non-linearized) DAG: boundary `b` is valid
+/// iff no edge — including the pseudo-edges from the network input to
+/// zero-predecessor nodes — jumps over node `b − 1`. Single O(V + E) scan
+/// via the prefix maximum of farthest-consumer indices (validated against
+/// brute-force enumeration in the tests).
+pub(crate) fn compute_cuts(layers: &[Layer], preds: &[Vec<usize>]) -> Vec<CutPoint> {
+    let n = layers.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut far = vec![0usize; n]; // farthest consumer (or self)
+    let mut n_consumers = vec![0u64; n];
+    let mut last_input_consumer = 0usize;
+    for (i, ps) in preds.iter().enumerate() {
+        far[i] = i;
+        if ps.is_empty() {
+            last_input_consumer = i;
+        }
+        for &p in ps {
+            far[p] = far[p].max(i);
+            n_consumers[p] += 1;
+        }
+    }
+    let mut cuts = Vec::new();
+    // max far(u) over u ≤ b − 2, maintained incrementally across b
+    let mut max_far_below = 0usize;
+    for b in 1..n {
+        if b >= 2 {
+            max_far_below = max_far_below.max(far[b - 2]);
+        }
+        let clean = max_far_below <= b - 1 && last_input_consumer <= b - 1;
+        if clean {
+            let extra = n_consumers[b - 1].saturating_sub(1) * layers[b - 1].output_bytes();
+            cuts.push(CutPoint { pos: b, extra_bytes: extra });
+        }
+    }
+    cuts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::{alexnet, resnet50};
+    use crate::util::rng::Rng;
+
+    /// x → a → b → add(b, x) → c: one identity-skip block plus a tail.
+    fn skip_block() -> DagNetwork {
+        let mut g = DagNetwork::builder("skip", (8, 8, 16));
+        let x = g.node(Layer::conv("x", 8, 8, 16, 16, 3, 1, 1), &[]);
+        let a = g.node(Layer::conv("a", 8, 8, 16, 16, 3, 1, 1), &[x]);
+        let b = g.node(Layer::conv("b", 8, 8, 16, 16, 3, 1, 1), &[a]);
+        let s = g.node(Layer::add_merge("add", 8, 8, 16), &[b, x]);
+        g.node(Layer::conv("c", 8, 8, 16, 32, 3, 1, 1), &[s]);
+        g.build()
+    }
+
+    /// Two-branch bundle with a concat merge (inception-style).
+    fn fork_join() -> DagNetwork {
+        let mut g = DagNetwork::builder("fork", (8, 8, 8));
+        let stem = g.node(Layer::conv("stem", 8, 8, 8, 16, 3, 1, 1), &[]);
+        let b1 = g.node(Layer::conv("b1", 8, 8, 16, 8, 1, 1, 0), &[stem]);
+        let b2 = g.node(Layer::conv("b2", 8, 8, 16, 24, 3, 1, 1), &[stem]);
+        let cat = g.node(Layer::concat("cat", 8, 8, 32), &[b1, b2]);
+        g.node(Layer::conv("head", 8, 8, 32, 32, 3, 1, 1), &[cat]);
+        g.build()
+    }
+
+    /// Brute-force clean-cut enumeration straight from the definition:
+    /// boundary `b` is valid iff every (pseudo-)edge crossing it starts at
+    /// node `b − 1`.
+    fn brute_force_cuts(dag: &DagNetwork) -> Vec<usize> {
+        let n = dag.len();
+        (1..n)
+            .filter(|&b| {
+                for (w, ps) in dag.preds.iter().enumerate() {
+                    if w >= b && ps.is_empty() {
+                        return false; // network input crosses
+                    }
+                    for &u in ps {
+                        if w >= b && u < b && u != b - 1 {
+                            return false;
+                        }
+                    }
+                }
+                true
+            })
+            .collect()
+    }
+
+    /// Random valid DAG over uniform 1×1 shapes: convs pick one earlier
+    /// producer, adds join two same-shape producers, a final merge/conv
+    /// absorbs every dangling sink.
+    fn random_dag(seed: u64) -> DagNetwork {
+        let mut rng = Rng::new(seed);
+        let n_body = 4 + rng.usize_in(0, 8);
+        let mut g = DagNetwork::builder(&format!("rand{seed}"), (4, 4, 8));
+        let mut ids = vec![g.node(Layer::conv("n0", 4, 4, 8, 8, 1, 1, 0), &[])];
+        for i in 1..n_body {
+            let id = if ids.len() >= 2 && rng.bool_with(0.35) {
+                let a = ids[rng.usize_in(0, ids.len())];
+                let mut b = ids[rng.usize_in(0, ids.len())];
+                if a == b {
+                    b = ids[(ids.iter().position(|&x| x == a).unwrap() + 1) % ids.len()];
+                }
+                if a == b {
+                    g.node(Layer::conv(&format!("n{i}"), 4, 4, 8, 8, 1, 1, 0), &[a])
+                } else {
+                    g.node(Layer::add_merge(&format!("n{i}"), 4, 4, 8), &[a.min(b), a.max(b)])
+                }
+            } else {
+                let p = ids[rng.usize_in(0, ids.len())];
+                g.node(Layer::conv(&format!("n{i}"), 4, 4, 8, 8, 1, 1, 0), &[p])
+            };
+            ids.push(id);
+        }
+        // absorb dangling sinks so the graph validates (single sink)
+        let mut cons = vec![0usize; ids.len()];
+        for ps in &g.preds {
+            for &p in ps {
+                cons[p] += 1;
+            }
+        }
+        let dangling: Vec<usize> =
+            (0..ids.len()).filter(|&i| cons[i] == 0).collect();
+        if dangling.len() >= 2 {
+            g.node(Layer::add_merge("join", 4, 4, 8), &dangling);
+        } else {
+            g.node(
+                Layer::conv("tail", 4, 4, 8, 8, 1, 1, 0),
+                &[*dangling.last().unwrap()],
+            );
+        }
+        g.build()
+    }
+
+    #[test]
+    fn skip_block_cuts_and_traffic() {
+        let dag = skip_block();
+        assert!(dag.validate().is_ok());
+        // cuts: after x (skip edge x→add crosses), after add, after the
+        // sink-1 boundary into c; NOT inside the branch (a, b carry the
+        // dangling skip edge over them).
+        let cuts = dag.cut_points();
+        let positions: Vec<usize> = cuts.iter().map(|c| c.pos).collect();
+        assert_eq!(positions, vec![1, 4]);
+        // boundary after x: edges x→a (free) + x→add (skip) cross.
+        assert_eq!(cuts[0].extra_bytes, 8 * 8 * 16);
+        // boundary after add: single consumer → no extra traffic.
+        assert_eq!(cuts[1].extra_bytes, 0);
+        assert_eq!(dag.condense(), vec![(0, 1), (1, 4), (4, 5)]);
+    }
+
+    #[test]
+    fn fork_join_cuts_and_linearization() {
+        let dag = fork_join();
+        let positions: Vec<usize> = dag.cut_points().iter().map(|c| c.pos).collect();
+        // after stem and after concat (+ before the sink); never between
+        // the two branches.
+        assert_eq!(positions, vec![1, 4]);
+        let net = dag.to_network();
+        assert_eq!(net.len(), 5);
+        assert!(net.validate().is_ok());
+        // b1 has no edge to its linear successor b2 → folded side branch;
+        // b2 feeds the concat, its direct successor.
+        assert!(net.layers[1].branch, "b1 must be a side branch");
+        assert!(!net.layers[2].branch, "b2 feeds its successor");
+        let info = net.dag.as_ref().unwrap();
+        assert!(info.is_cut(1) && info.is_cut(4) && !info.is_cut(2));
+        // stem feeds both branches: one extra crossing copy at cut 1
+        assert_eq!(info.extra_bytes_at(1), 8 * 8 * 16);
+        assert_eq!(info.extra_bytes_at(4), 0);
+    }
+
+    #[test]
+    fn condensation_matches_brute_force_on_random_dags() {
+        for seed in 0..40u64 {
+            let dag = random_dag(seed);
+            assert!(dag.validate().is_ok(), "seed {seed}");
+            let fast: Vec<usize> = dag.cut_points().iter().map(|c| c.pos).collect();
+            let brute = brute_force_cuts(&dag);
+            assert_eq!(fast, brute, "seed {seed}: {dag:?}");
+        }
+    }
+
+    #[test]
+    fn degenerate_chain_dag_cuts_everywhere() {
+        let mut g = DagNetwork::builder("chain", (8, 8, 4));
+        let mut prev = g.node(Layer::conv("c0", 8, 8, 4, 4, 3, 1, 1), &[]);
+        for i in 1..6 {
+            prev = g.node(Layer::conv(&format!("c{i}"), 8, 8, 4, 4, 3, 1, 1), &[prev]);
+        }
+        let dag = g.build();
+        let positions: Vec<usize> = dag.cut_points().iter().map(|c| c.pos).collect();
+        assert_eq!(positions, (1..6).collect::<Vec<_>>());
+        assert_eq!(brute_force_cuts(&dag), positions);
+        assert!(dag.cut_points().iter().all(|c| c.extra_bytes == 0));
+        // to_network marks nothing as branch: every edge is chain-adjacent
+        assert!(dag.to_network().layers.iter().all(|l| !l.branch));
+    }
+
+    #[test]
+    fn from_chain_preserves_layers_and_allows_all_boundaries() {
+        for net in [alexnet(), resnet50()] {
+            let dag = DagNetwork::from_chain(&net);
+            assert!(dag.validate().is_ok(), "{}", net.name);
+            let lin = dag.to_network();
+            assert_eq!(lin.layers, net.layers, "{}: layers must be verbatim", net.name);
+            assert_eq!(lin.input, net.input);
+            let info = lin.dag.as_ref().expect("sidecar");
+            assert!(info.linearized_chain);
+            assert_eq!(info.cut_positions(), (1..net.len()).collect::<Vec<_>>());
+            assert!(info.cuts.iter().all(|c| c.extra_bytes == 0));
+            assert!(lin.validate().is_ok());
+            assert_eq!(dag.total_macs(), net.total_macs());
+            assert_eq!(dag.total_weight_bytes(), net.total_weight_bytes());
+        }
+    }
+
+    /// Validate a builder's current graph without the build() panic.
+    fn validate_of(b: &DagBuilder) -> Result<(), String> {
+        validate_dag_shapes(b.input, &b.nodes, &b.preds)
+    }
+
+    #[test]
+    fn validation_rejects_malformed_graphs() {
+        // shape mismatch along an edge
+        let mut g = DagNetwork::builder("bad-shape", (8, 8, 4));
+        let a = g.node(Layer::conv("a", 8, 8, 4, 8, 3, 1, 1), &[]);
+        g.node(Layer::conv("b", 8, 8, 99, 8, 3, 1, 1), &[a]);
+        assert!(matches!(validate_of(&g), Err(e) if e.contains("input")));
+
+        // implicit merge (two preds on a conv) rejected
+        let mut g = DagNetwork::builder("implicit", (8, 8, 4));
+        let a = g.node(Layer::conv("a", 8, 8, 4, 4, 3, 1, 1), &[]);
+        let b = g.node(Layer::conv("b", 8, 8, 4, 4, 3, 1, 1), &[a]);
+        g.node(Layer::conv("c", 8, 8, 4, 4, 3, 1, 1), &[a, b]);
+        assert!(matches!(validate_of(&g), Err(e) if e.contains("merge")));
+
+        // dangling interior node rejected (not the single sink)
+        let mut g = DagNetwork::builder("dead-end", (8, 8, 4));
+        let a = g.node(Layer::conv("a", 8, 8, 4, 4, 3, 1, 1), &[]);
+        g.node(Layer::conv("dead", 8, 8, 4, 4, 3, 1, 1), &[a]);
+        g.node(Layer::conv("tail", 8, 8, 4, 4, 3, 1, 1), &[a]);
+        assert!(matches!(validate_of(&g), Err(e) if e.contains("dead end")));
+
+        // merge with a single operand rejected
+        let mut g = DagNetwork::builder("lonely-add", (8, 8, 4));
+        let a = g.node(Layer::conv("a", 8, 8, 4, 4, 3, 1, 1), &[]);
+        g.node(Layer::add_merge("add", 8, 8, 4), &[a]);
+        assert!(matches!(validate_of(&g), Err(e) if e.contains("predecessors")));
+    }
+
+    #[test]
+    #[should_panic(expected = "future predecessor")]
+    fn builder_rejects_forward_edges() {
+        let mut g = DagNetwork::builder("fwd", (8, 8, 4));
+        g.node(Layer::conv("a", 8, 8, 4, 4, 3, 1, 1), &[3]);
+    }
+}

@@ -1,33 +1,90 @@
-//! The network chain: an ordered list of schedulable layers.
+//! The schedulable network: an ordered list of layers, optionally backed
+//! by a true multi-branch DAG.
 //!
-//! The paper's pipeline model (and every baseline it compares against)
-//! schedules a *chain*; residual adds are element-wise and negligible, and
-//! projection shortcut convs are linearized into the chain at their block
-//! position (documented substitution — their compute/weights are charged,
-//! their side-edge communication is a small constant we fold into the main
-//! path).
+//! Two kinds of workload flow through this type:
+//!
+//! * **Chains** (`dag: None`) — the paper's original model: residual adds
+//!   are element-wise and negligible, projection shortcut convs are
+//!   linearized into the chain at their block position (documented
+//!   substitution — compute/weights charged in place, side-edge
+//!   communication folded into the main path). Every layer boundary is a
+//!   valid segment boundary.
+//! * **Linearized DAGs** (`dag: Some`) — built by
+//!   [`DagNetwork::to_network`](super::dag::DagNetwork::to_network): the
+//!   layer order is a topological linearization of a real multi-branch
+//!   graph (explicit merge nodes, true skip/branch edges). The sidecar
+//!   [`DagInfo`] records the predecessor lists and the *clean-cut* set —
+//!   the only legal segment boundaries — plus the activation traffic each
+//!   cut spills beyond the free on-package hand-off; the segmenters and
+//!   the evaluator charge that traffic into the DRAM cost model instead of
+//!   folding it away (see `model/dag.rs` and `scope/dag_segment.rs`).
 
+use super::dag::{self, DagInfo};
 use super::layer::Layer;
 
-/// A feed-forward chain of layers.
+/// A feed-forward network in schedulable (topological) order.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Network {
     pub name: String,
     /// Input feature map (h, w, c).
     pub input: (u64, u64, u64),
     pub layers: Vec<Layer>,
+    /// Multi-branch sidecar; `None` for plain chains.
+    pub dag: Option<DagInfo>,
 }
 
 impl Network {
     pub fn new(name: &str, input: (u64, u64, u64), layers: Vec<Layer>) -> Network {
-        let net = Network { name: name.to_string(), input, layers };
+        let net = Network { name: name.to_string(), input, layers, dag: None };
         net.validate().unwrap_or_else(|e| panic!("{}: {e}", net.name));
         net
     }
 
-    /// Structural validation: every layer's input must match its
-    /// predecessor's output (chain consistency).
+    /// A linearized DAG with its boundary sidecar (built by
+    /// [`DagNetwork::to_network`](super::dag::DagNetwork::to_network)).
+    pub fn with_dag(
+        name: &str,
+        input: (u64, u64, u64),
+        layers: Vec<Layer>,
+        dag: DagInfo,
+    ) -> Network {
+        let net = Network { name: name.to_string(), input, layers, dag: Some(dag) };
+        net.validate().unwrap_or_else(|e| panic!("{}: {e}", net.name));
+        net
+    }
+
+    /// Structural validation. Chains (and chain-semantics linearizations)
+    /// check that every layer's input matches its predecessor's output;
+    /// DAG-backed networks validate per-edge shapes over the sidecar's
+    /// predecessor lists and re-derive the cut set.
     pub fn validate(&self) -> Result<(), String> {
+        if let Some(info) = &self.dag {
+            if !info.linearized_chain {
+                dag::validate_dag_shapes(self.input, &self.layers, &info.preds)?;
+            }
+            let expect = if info.linearized_chain {
+                (1..self.layers.len())
+                    .map(|pos| dag::CutPoint { pos, extra_bytes: 0 })
+                    .collect::<Vec<_>>()
+            } else {
+                dag::compute_cuts(&self.layers, &info.preds)
+            };
+            if info.cuts != expect {
+                return Err(format!(
+                    "stale cut set: sidecar has {} cuts, graph implies {}",
+                    info.cuts.len(),
+                    expect.len()
+                ));
+            }
+            if info.linearized_chain {
+                return self.validate_chain();
+            }
+            return Ok(());
+        }
+        self.validate_chain()
+    }
+
+    fn validate_chain(&self) -> Result<(), String> {
         let (mut h, mut w, mut c) = self.input;
         for (i, l) in self.layers.iter().enumerate() {
             let expect_in = if l.kind == super::layer::LayerKind::Fc {

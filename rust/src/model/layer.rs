@@ -19,6 +19,15 @@ pub enum LayerKind {
     Conv,
     /// Fully connected (a 1×1 conv over a 1×1 map).
     Fc,
+    /// Element-wise residual add (DAG merge node): no weights, negligible
+    /// compute, output shape = input shape. Exists so true-residual graphs
+    /// have a *single* block-output node — the condensation cut point the
+    /// segmenter boundaries land on.
+    Add,
+    /// Channel concatenation (DAG merge node, Inception-style): no weights,
+    /// `cin = cout = Σ` producer channels. Like [`LayerKind::Add`], it
+    /// gives a multi-branch bundle a single-exit node.
+    Concat,
 }
 
 /// One schedulable layer of the chain.
@@ -82,6 +91,34 @@ impl Layer {
         }
     }
 
+    /// Element-wise add merge node over an `h × w × c` map (DAG graphs).
+    pub fn add_merge(name: &str, h: u64, w: u64, c: u64) -> Layer {
+        Layer {
+            name: name.to_string(),
+            kind: LayerKind::Add,
+            hin: h,
+            win: w,
+            cin: c,
+            kh: 1,
+            kw: 1,
+            stride: 1,
+            pad: 0,
+            cout: c,
+            post_pool: None,
+            branch: false,
+        }
+    }
+
+    /// Channel-concat merge node: producers' channels sum to `c_total`.
+    pub fn concat(name: &str, h: u64, w: u64, c_total: u64) -> Layer {
+        Layer { kind: LayerKind::Concat, ..Layer::add_merge(name, h, w, c_total) }
+    }
+
+    /// Whether this is a weight-free merge node (Add / Concat).
+    pub fn is_merge(&self) -> bool {
+        matches!(self.kind, LayerKind::Add | LayerKind::Concat)
+    }
+
     /// Mark as a side-branch (projection shortcut) layer.
     pub fn as_branch(mut self) -> Layer {
         self.branch = true;
@@ -139,14 +176,22 @@ impl Layer {
         self.cin * self.kh * self.kw
     }
 
-    /// Multiply-accumulates for one sample.
+    /// Multiply-accumulates for one sample. Merge nodes charge zero — the
+    /// paper's "residual adds are element-wise and negligible" substitution
+    /// (their data movement is what matters, and that *is* charged).
     pub fn macs(&self) -> u64 {
+        if self.is_merge() {
+            return 0;
+        }
         self.pixels() * self.cout * self.reduction()
     }
 
     /// Weight bytes (8-bit elements; biases negligible and omitted, as in
-    /// the paper's storage analysis).
+    /// the paper's storage analysis). Merge nodes are weight-free.
     pub fn weight_bytes(&self) -> u64 {
+        if self.is_merge() {
+            return 0;
+        }
         self.cout * self.cin * self.kh * self.kw
     }
 
@@ -242,6 +287,24 @@ mod tests {
         // stride ≥ kernel → no overlap
         let s = Layer::conv("s", 56, 56, 64, 64, 2, 2, 0);
         assert_eq!(s.halo_bytes(4), 0);
+    }
+
+    #[test]
+    fn merge_nodes_are_weight_and_mac_free() {
+        let a = Layer::add_merge("add", 28, 28, 256);
+        assert!(a.is_merge());
+        assert_eq!(a.macs(), 0);
+        assert_eq!(a.weight_bytes(), 0);
+        assert_eq!(a.out_shape(), (28, 28, 256)); // pass-through geometry
+        assert_eq!(a.output_bytes(), 28 * 28 * 256);
+        assert_eq!(a.halo_bytes(4), 0); // 1×1/1: no WSP overlap
+        let c = Layer::concat("cat", 28, 28, 480);
+        assert_eq!(c.kind, LayerKind::Concat);
+        assert_eq!((c.cin, c.cout), (480, 480));
+        // a fused downsampling pool shrinks the merge output like any conv
+        let pooled = Layer::concat("cat", 28, 28, 480).with_pool(2, 2);
+        assert_eq!(pooled.out_shape(), (14, 14, 480));
+        assert!(!Layer::conv("c", 8, 8, 3, 8, 3, 1, 1).is_merge());
     }
 
     #[test]

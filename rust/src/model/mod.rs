@@ -1,8 +1,16 @@
-//! NN model IR: layers, the chain graph, and the workload zoo.
+//! NN model IR: layers, the chain/DAG graphs, and the workload zoo.
+//!
+//! `layer` defines the per-layer workload math; `dag` holds the true
+//! multi-branch graph type plus its condensation (clean-cut) pass; `graph`
+//! is the linearized, schedulable view every scheduler consumes (with an
+//! optional DAG sidecar carrying the valid-boundary set); `zoo` builds the
+//! evaluation workloads, both chain and multi-branch.
 
+pub mod dag;
 pub mod graph;
 pub mod layer;
 pub mod zoo;
 
+pub use dag::{CutPoint, DagInfo, DagNetwork};
 pub use graph::Network;
 pub use layer::{Layer, LayerKind};

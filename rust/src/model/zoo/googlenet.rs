@@ -1,0 +1,127 @@
+//! GoogLeNet / Inception-v1 (Szegedy et al. 2015) as a true multi-branch
+//! DAG: nine inception modules of four parallel branches joined by
+//! explicit channel-concat merge nodes.
+//!
+//! Substitutions, consistent with the chain zoo's conventions:
+//!
+//! * Down-sampling 3×3/2 max-pools fuse into the preceding node as the
+//!   dimension-equivalent unpadded 2×2/2 `post_pool` (the ResNet stem
+//!   rule) — on the stem convs and on the 3b/4e module concats.
+//! * Each module's pool branch is a dimension-preserving 3×3/1 same-pad
+//!   max-pool feeding a 1×1 conv; the pool adds no weights and negligible
+//!   compute, so the 1×1 projection reads the module input directly.
+//! * LRN layers are dropped (no weights, negligible compute) and the two
+//!   auxiliary classifier heads are omitted (inference-time model), as in
+//!   standard deployments.
+
+use crate::model::dag::{DagBuilder, DagNetwork};
+use crate::model::graph::Network;
+use crate::model::layer::Layer;
+
+/// One inception module on an `h × h × cin` input: four branches
+/// (1×1 | 1×1→3×3 | 1×1→5×5 | pool→1×1) joined by a concat node, which
+/// optionally fuses a trailing `k×k / s` pool. Returns the concat node id.
+#[allow(clippy::too_many_arguments)]
+fn inception(
+    g: &mut DagBuilder,
+    tag: &str,
+    input: usize,
+    h: u64,
+    cin: u64,
+    (c1, c2r, c2, c3r, c3, c4): (u64, u64, u64, u64, u64, u64),
+    pool: Option<(u64, u64)>,
+) -> usize {
+    let b1 = g.node(Layer::conv(&format!("{tag}.b1"), h, h, cin, c1, 1, 1, 0), &[input]);
+    let b2r = g.node(Layer::conv(&format!("{tag}.b2r"), h, h, cin, c2r, 1, 1, 0), &[input]);
+    let b2 = g.node(Layer::conv(&format!("{tag}.b2"), h, h, c2r, c2, 3, 1, 1), &[b2r]);
+    let b3r = g.node(Layer::conv(&format!("{tag}.b3r"), h, h, cin, c3r, 1, 1, 0), &[input]);
+    let b3 = g.node(Layer::conv(&format!("{tag}.b3"), h, h, c3r, c3, 5, 1, 2), &[b3r]);
+    let b4 = g.node(Layer::conv(&format!("{tag}.b4"), h, h, cin, c4, 1, 1, 0), &[input]);
+    let mut cat = Layer::concat(&format!("{tag}.cat"), h, h, c1 + c2 + c3 + c4);
+    if let Some((k, s)) = pool {
+        cat = cat.with_pool(k, s);
+    }
+    g.node(cat, &[b1, b2, b3, b4])
+}
+
+/// The graph form (condensation/cut tests and DAG tooling).
+pub fn googlenet_dag() -> DagNetwork {
+    let mut g = DagNetwork::builder("googlenet", (224, 224, 3));
+    // stem: 7×7/2 (fused 2×2/2 pool) → 56; 1×1; 3×3 (fused pool) → 28
+    let c1 = g.node(Layer::conv("conv1", 224, 224, 3, 64, 7, 2, 3).with_pool(2, 2), &[]);
+    let c2r = g.node(Layer::conv("conv2r", 56, 56, 64, 64, 1, 1, 0), &[c1]);
+    let c2 = g.node(Layer::conv("conv2", 56, 56, 64, 192, 3, 1, 1).with_pool(2, 2), &[c2r]);
+    // (c1, c2r, c2, c3r, c3, c4) per module, Table 1 of the paper
+    let m3a = inception(&mut g, "3a", c2, 28, 192, (64, 96, 128, 16, 32, 32), None);
+    let m3b = inception(&mut g, "3b", m3a, 28, 256, (128, 128, 192, 32, 96, 64), Some((2, 2)));
+    let m4a = inception(&mut g, "4a", m3b, 14, 480, (192, 96, 208, 16, 48, 64), None);
+    let m4b = inception(&mut g, "4b", m4a, 14, 512, (160, 112, 224, 24, 64, 64), None);
+    let m4c = inception(&mut g, "4c", m4b, 14, 512, (128, 128, 256, 24, 64, 64), None);
+    let m4d = inception(&mut g, "4d", m4c, 14, 512, (112, 144, 288, 32, 64, 64), None);
+    let m4e = inception(&mut g, "4e", m4d, 14, 528, (256, 160, 320, 32, 128, 128), Some((2, 2)));
+    let m5a = inception(&mut g, "5a", m4e, 7, 832, (256, 160, 320, 32, 128, 128), None);
+    let m5b = inception(&mut g, "5b", m5a, 7, 832, (384, 192, 384, 48, 128, 128), None);
+    g.fuse_gap(m5b);
+    g.node(Layer::fc("fc", 1024, 1000), &[m5b]);
+    g.build()
+}
+
+/// The schedulable linearization (what the zoo registry serves).
+pub fn googlenet() -> Network {
+    googlenet_dag().to_network()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn structure_and_workload_match_literature() {
+        let dag = googlenet_dag();
+        // 3 stem convs + 9 modules × (6 convs + concat) + fc
+        assert_eq!(dag.len(), 3 + 9 * 7 + 1);
+        // ≈1.58 GMACs and ≈7.0 M parameters (6.0 M conv + 1.0 M fc)
+        let gmacs = dag.total_macs() as f64 / 1e9;
+        assert!((1.3..1.9).contains(&gmacs), "{gmacs} GMACs");
+        let mw = dag.total_weight_bytes() as f64 / 1e6;
+        assert!((6.0..8.0).contains(&mw), "{mw} MB");
+    }
+
+    #[test]
+    fn cuts_sit_at_stem_and_module_boundaries() {
+        let dag = googlenet_dag();
+        let net = dag.to_network();
+        let info = net.dag.as_ref().unwrap();
+        // 3 stem boundaries + one after each of the 9 concats = 12 cuts
+        assert_eq!(info.cuts.len(), 12);
+        // concat nodes sit at positions 9, 16, …; each module exit is a cut
+        let concat_cut_count = info
+            .cuts
+            .iter()
+            .filter(|c| net.layers[c.pos - 1].is_merge())
+            .count();
+        assert_eq!(concat_cut_count, 9);
+        // a concat feeds the next module's four branch heads: three extra
+        // crossing copies beyond the free hand-off
+        let m3a_cat = &net.layers[9];
+        assert!(m3a_cat.is_merge(), "{}", m3a_cat.name);
+        assert_eq!(info.extra_bytes_at(10), 3 * m3a_cat.output_bytes());
+        // the condensed chain: 13 supernodes, none wider than one module
+        let spans = dag.condense();
+        assert_eq!(spans.len(), 13);
+        assert!(spans.iter().all(|(lo, hi)| hi - lo <= 7));
+    }
+
+    #[test]
+    fn geometry_flows_to_the_classifier() {
+        let net = googlenet();
+        assert!(net.validate().is_ok());
+        // 5b concat: 7×7×1024 GAP'd to 1×1×1024 feeding the FC
+        let last_cat = &net.layers[net.len() - 2];
+        assert_eq!(last_cat.out_shape(), (1, 1, 1024));
+        assert_eq!(net.layers.last().unwrap().out_shape(), (1, 1, 1000));
+        // downsampling concats land on 14 and 7 pixel grids
+        let cat_3b = &net.layers[16];
+        assert_eq!(cat_3b.out_shape(), (14, 14, 480));
+    }
+}

@@ -1,16 +1,22 @@
 //! Network zoo: the paper's eight evaluation workloads
-//! (AlexNet, VGG16, DarkNet19, ResNet-18/34/50/101/152) plus ScopeNet,
-//! the small functional-path CNN matching `python/compile/model.py`.
+//! (AlexNet, VGG16, DarkNet19, ResNet-18/34/50/101/152), ScopeNet (the
+//! small functional-path CNN matching `python/compile/model.py`), and the
+//! true multi-branch DAG workloads (GoogLeNet/Inception-v1 and the
+//! real-residual ResNet variants).
 
 mod alexnet;
 mod darknet;
+mod googlenet;
 mod resnet;
 mod scopenet;
 mod vgg;
 
 pub use alexnet::alexnet;
 pub use darknet::darknet19;
-pub use resnet::{resnet101, resnet152, resnet18, resnet34, resnet50};
+pub use googlenet::{googlenet, googlenet_dag};
+pub use resnet::{
+    resnet101, resnet152, resnet18, resnet18_dag, resnet34, resnet50, resnet50_dag,
+};
 pub use scopenet::{scopenet, SCOPENET_CLUSTERS};
 pub use vgg::vgg16;
 
@@ -30,6 +36,11 @@ pub fn paper_networks() -> Vec<Network> {
     ]
 }
 
+/// The true multi-branch DAG workloads (linearized with their cut sets).
+pub fn dag_networks() -> Vec<Network> {
+    vec![googlenet(), resnet18_dag(), resnet50_dag()]
+}
+
 /// Look a network up by CLI name.
 pub fn by_name(name: &str) -> Option<Network> {
     match name.to_ascii_lowercase().as_str() {
@@ -42,6 +53,9 @@ pub fn by_name(name: &str) -> Option<Network> {
         "resnet101" => Some(resnet101()),
         "resnet152" => Some(resnet152()),
         "scopenet" => Some(scopenet()),
+        "googlenet" | "inception" => Some(googlenet()),
+        "resnet18_dag" => Some(resnet18_dag()),
+        "resnet50_dag" => Some(resnet50_dag()),
         _ => None,
     }
 }
@@ -49,7 +63,8 @@ pub fn by_name(name: &str) -> Option<Network> {
 /// Names accepted by [`by_name`] (for CLI help and sweeps).
 pub const NAMES: &[&str] = &[
     "alexnet", "vgg16", "darknet19", "resnet18", "resnet34", "resnet50",
-    "resnet101", "resnet152", "scopenet",
+    "resnet101", "resnet152", "scopenet", "googlenet", "resnet18_dag",
+    "resnet50_dag",
 ];
 
 #[cfg(test)]
@@ -70,6 +85,20 @@ mod tests {
             assert!(by_name(name).is_some(), "{name}");
         }
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn dag_networks_carry_cut_sets() {
+        for net in dag_networks() {
+            assert!(net.validate().is_ok(), "{}", net.name);
+            let info = net.dag.as_ref().expect("dag sidecar");
+            assert!(!info.linearized_chain, "{}: built from a real graph", net.name);
+            assert!(!info.cuts.is_empty(), "{}", net.name);
+            // real branching: some boundary spills skip/branch traffic,
+            // and some chain positions are not valid boundaries
+            assert!(info.cuts.iter().any(|c| c.extra_bytes > 0), "{}", net.name);
+            assert!(info.cuts.len() < net.len() - 1, "{}", net.name);
+        }
     }
 
     #[test]

@@ -1,12 +1,19 @@
-//! ResNet-18/34/50/101/152 (He et al. 2016), linearized for the chain
-//! scheduler: stem conv (fused 3×3/2 max-pool), every block conv in order,
-//! projection shortcut convs inserted at their block position, final FC
-//! (GAP fused into the last conv).
+//! ResNet-18/34/50/101/152 (He et al. 2016) in two forms built from the
+//! same blocks:
 //!
-//! Linearization is the documented substitution from DESIGN.md: residual
-//! adds are element-wise (no weights, negligible MACs) and the projection
-//! convs' compute/weights are fully charged in place.
+//! * **Linearized chains** (`resnet18()` …): stem conv (fused 3×3/2
+//!   max-pool), every block conv in order, projection shortcut convs
+//!   inserted at their block position, final FC (GAP fused into the last
+//!   conv). The documented substitution: residual adds are element-wise
+//!   (no weights, negligible MACs) and shortcut side-edge traffic is
+//!   folded into the main path.
+//! * **True-residual DAGs** (`resnet18_dag()`, `resnet50_dag()`): explicit
+//!   skip edges (identity or projection) joined by `Add` merge nodes, so
+//!   the condensation pass exposes block boundaries as the only clean cuts
+//!   and skip traffic crossing a segment boundary is *charged* instead of
+//!   folded (see `model/dag.rs`).
 
+use crate::model::dag::{DagBuilder, DagNetwork};
 use crate::model::graph::Network;
 use crate::model::layer::Layer;
 
@@ -85,6 +92,94 @@ fn resnet(name: &str, blocks: [usize; 4], bottleneck: bool) -> Network {
     Network::new(name, (224, 224, 3), layers)
 }
 
+/// True-residual basic block: `x → conv1 → conv2 → add(conv2, skip)` with
+/// an identity or projection skip. Returns (add node id, output height).
+fn dag_basic(
+    g: &mut DagBuilder,
+    tag: &str,
+    x: usize,
+    h: u64,
+    cin: u64,
+    cout: u64,
+    stride: u64,
+) -> (usize, u64) {
+    let skip = if stride != 1 || cin != cout {
+        g.node(
+            Layer::conv(&format!("{tag}.proj"), h, h, cin, cout, 1, stride, 0),
+            &[x],
+        )
+    } else {
+        x
+    };
+    let c1 = g.node(Layer::conv(&format!("{tag}.conv1"), h, h, cin, cout, 3, stride, 1), &[x]);
+    let ho = g.hout(c1);
+    let c2 = g.node(Layer::conv(&format!("{tag}.conv2"), ho, ho, cout, cout, 3, 1, 1), &[c1]);
+    let add = g.node(Layer::add_merge(&format!("{tag}.add"), ho, ho, cout), &[c2, skip]);
+    (add, ho)
+}
+
+/// True-residual bottleneck block (1×1 down, 3×3 stride, 1×1 up ×4).
+fn dag_bottleneck(
+    g: &mut DagBuilder,
+    tag: &str,
+    x: usize,
+    h: u64,
+    cin: u64,
+    width: u64,
+    stride: u64,
+) -> (usize, u64) {
+    let cout = width * 4;
+    let skip = if stride != 1 || cin != cout {
+        g.node(
+            Layer::conv(&format!("{tag}.proj"), h, h, cin, cout, 1, stride, 0),
+            &[x],
+        )
+    } else {
+        x
+    };
+    let c1 = g.node(Layer::conv(&format!("{tag}.conv1"), h, h, cin, width, 1, 1, 0), &[x]);
+    // stride lives on the 3×3 (ResNet v1.5), as in the linearized blocks
+    let c2 = g.node(Layer::conv(&format!("{tag}.conv2"), h, h, width, width, 3, stride, 1), &[c1]);
+    let ho = g.hout(c2);
+    let c3 = g.node(Layer::conv(&format!("{tag}.conv3"), ho, ho, width, cout, 1, 1, 0), &[c2]);
+    let add = g.node(Layer::add_merge(&format!("{tag}.add"), ho, ho, cout), &[c3, skip]);
+    (add, ho)
+}
+
+fn resnet_dag(name: &str, blocks: [usize; 4], bottleneck: bool) -> DagNetwork {
+    let mut g = DagNetwork::builder(name, (224, 224, 3));
+    let mut x = g.node(Layer::conv("stem", 224, 224, 3, 64, 7, 2, 3).with_pool(2, 2), &[]);
+    let mut h = 56u64;
+    let mut cin = 64u64;
+    let widths = [64u64, 128, 256, 512];
+    for (stage, (&n, &width)) in blocks.iter().zip(widths.iter()).enumerate() {
+        for b in 0..n {
+            let stride = if stage > 0 && b == 0 { 2 } else { 1 };
+            let tag = format!("s{}b{}", stage + 1, b + 1);
+            if bottleneck {
+                (x, h) = dag_bottleneck(&mut g, &tag, x, h, cin, width, stride);
+                cin = width * 4;
+            } else {
+                (x, h) = dag_basic(&mut g, &tag, x, h, cin, width, stride);
+                cin = width;
+            }
+        }
+    }
+    g.fuse_gap(x);
+    g.node(Layer::fc("fc", cin, 1000), &[x]);
+    g.build()
+}
+
+/// ResNet-18 with explicit residual edges, linearized with its cut set.
+pub fn resnet18_dag() -> Network {
+    resnet_dag("resnet18_dag", [2, 2, 2, 2], false).to_network()
+}
+
+/// ResNet-50 with explicit residual edges, linearized with its cut set.
+pub fn resnet50_dag() -> Network {
+    resnet_dag("resnet50_dag", [3, 4, 6, 3], true).to_network()
+}
+
 pub fn resnet18() -> Network {
     resnet("resnet18", [2, 2, 2, 2], false)
 }
@@ -156,6 +251,65 @@ mod tests {
         let last_conv = &n.layers[n.len() - 2];
         assert_eq!(last_conv.conv_hout(), 7);
         assert_eq!(last_conv.out_shape(), (1, 1, 2048));
+    }
+
+    #[test]
+    fn dag_variants_share_the_linearized_workload() {
+        // Same conv set, Add merge nodes contribute neither MACs nor
+        // weights — the true-residual graphs must cost exactly what the
+        // linearized chains charge.
+        let cases = [
+            (resnet18_dag(), resnet18(), 8usize),
+            (resnet50_dag(), resnet50(), 16usize),
+        ];
+        for (dag_net, chain, n_blocks) in cases {
+            assert_eq!(dag_net.total_macs(), chain.total_macs(), "{}", dag_net.name);
+            assert_eq!(
+                dag_net.total_weight_bytes(),
+                chain.total_weight_bytes(),
+                "{}",
+                dag_net.name
+            );
+            // one Add node per block on top of the chain's layer count
+            assert_eq!(dag_net.len(), chain.len() + n_blocks, "{}", dag_net.name);
+            assert!(dag_net.validate().is_ok(), "{}", dag_net.name);
+        }
+    }
+
+    #[test]
+    fn dag_cuts_sit_at_block_boundaries_with_skip_traffic() {
+        let net = resnet18_dag();
+        let info = net.dag.as_ref().expect("dag sidecar");
+        // cuts: after the stem, after every block's Add, before the FC —
+        // the Add-before-fc cut and the stem cut plus 8 block exits.
+        assert_eq!(info.cuts.len(), 1 + 8);
+        for cut in &info.cuts[1..] {
+            assert!(
+                net.layers[cut.pos - 1].is_merge(),
+                "cut at {} must sit after an Add, got {}",
+                cut.pos,
+                net.layers[cut.pos - 1].name
+            );
+        }
+        // an identity-skip block boundary spills one copy of the block
+        // output (the skip edge into the next Add crosses the cut)
+        let stem_cut = info.cuts[0];
+        assert_eq!(stem_cut.pos, 1);
+        assert_eq!(
+            stem_cut.extra_bytes,
+            net.layers[0].output_bytes(),
+            "stem feeds conv1 and the identity skip of block 1"
+        );
+        // block s1b1 → s1b2 is identity-skipped: its Add feeds conv1 and
+        // the next Add
+        let b1_add_cut = info.cuts[1];
+        assert!(b1_add_cut.extra_bytes > 0, "identity skip must be charged");
+        // projection blocks (s2b1 onward) consume the skip via the proj
+        // conv *and* conv1 — still exactly one extra crossing copy
+        let net50 = resnet50_dag();
+        let info50 = net50.dag.as_ref().unwrap();
+        assert_eq!(info50.cuts.len(), 1 + 16);
+        assert!(info50.cuts.iter().skip(1).all(|c| net50.layers[c.pos - 1].is_merge()));
     }
 
     #[test]

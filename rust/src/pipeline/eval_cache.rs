@@ -21,12 +21,12 @@
 //! workers may both miss the same key and insert equal values, which is
 //! benign.
 
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::RwLock;
 
 use super::schedule::{Partition, SegmentSchedule};
 use super::timeline::{assemble_segment, eval_cluster, ClusterEval, EvalContext, SegmentEval};
+use crate::util::fxhash::FxHashMap;
 
 /// Everything a cluster evaluation depends on besides the (per-search
 /// constant) context: its global layer range, its region geometry, its
@@ -72,9 +72,14 @@ impl ClusterKey {
 }
 
 /// Thread-safe memo table for cluster evaluations (see module docs).
+///
+/// Keys are hashed with the Fx hasher ([`crate::util::fxhash`]) rather
+/// than std's SipHash: the key is hashed on every `Forward()` of the DSE
+/// hot loop and is never attacker-controlled; `benches/search_time`
+/// reports the measured lookup-time gap and asserts the tables agree.
 #[derive(Debug, Default)]
 pub struct EvalCache {
-    map: RwLock<HashMap<ClusterKey, ClusterEval>>,
+    map: RwLock<FxHashMap<ClusterKey, ClusterEval>>,
     hits: AtomicU64,
     misses: AtomicU64,
 }

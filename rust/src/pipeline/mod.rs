@@ -9,6 +9,6 @@ pub mod timeline;
 pub use eval_cache::{eval_segment_cached, ClusterKey, EvalCache};
 pub use schedule::{Partition, Schedule, SegmentSchedule};
 pub use timeline::{
-    eval_cluster, eval_layer, eval_schedule, eval_segment, ClusterEval,
-    EvalContext, LayerPhases, ScheduleEval, SegmentEval,
+    boundary_spill, eval_cluster, eval_layer, eval_schedule, eval_segment,
+    ClusterEval, EvalContext, LayerPhases, ScheduleEval, SegmentEval,
 };

@@ -128,6 +128,19 @@ impl Schedule {
         if expect != net.len() {
             return Err(format!("segments cover {expect} of {} layers", net.len()));
         }
+        // DAG workloads: segment boundaries may only sit at clean cuts —
+        // a segment must receive exactly one input tensor (plus recorded
+        // skip spills), which only holds at condensation boundaries.
+        if let Some(info) = &net.dag {
+            for seg in &self.segments[..self.segments.len() - 1] {
+                if !info.is_cut(seg.hi) {
+                    return Err(format!(
+                        "segment boundary {} is not a clean cut of the DAG",
+                        seg.hi
+                    ));
+                }
+            }
+        }
         Ok(())
     }
 
@@ -194,6 +207,32 @@ mod tests {
         gap.partitions.pop();
         let bad = Schedule { method: "scope".into(), segments: vec![gap] };
         assert!(bad.validate(&net, 16).is_err());
+    }
+
+    #[test]
+    fn dag_boundaries_must_be_clean_cuts() {
+        use crate::model::dag::DagNetwork;
+        use crate::model::Layer;
+        // stem → {b1, b2} → concat → head: cuts at 1 and 4 only.
+        let mut g = DagNetwork::builder("fork", (8, 8, 8));
+        let stem = g.node(Layer::conv("stem", 8, 8, 8, 16, 3, 1, 1), &[]);
+        let b1 = g.node(Layer::conv("b1", 8, 8, 16, 8, 1, 1, 0), &[stem]);
+        let b2 = g.node(Layer::conv("b2", 8, 8, 16, 24, 3, 1, 1), &[stem]);
+        let cat = g.node(Layer::concat("cat", 8, 8, 32), &[b1, b2]);
+        g.node(Layer::conv("head", 8, 8, 32, 32, 3, 1, 1), &[cat]);
+        let net = g.build().to_network();
+        let seg = |lo: usize, hi: usize| SegmentSchedule {
+            lo,
+            hi,
+            bounds: vec![lo, hi],
+            regions: vec![4],
+            partitions: vec![Partition::Wsp; hi - lo],
+        };
+        let ok = Schedule { method: "scope".into(), segments: vec![seg(0, 4), seg(4, 5)] };
+        assert!(ok.validate(&net, 16).is_ok());
+        let bad = Schedule { method: "scope".into(), segments: vec![seg(0, 2), seg(2, 5)] };
+        let err = bad.validate(&net, 16).unwrap_err();
+        assert!(err.contains("clean cut"), "{err}");
     }
 
     #[test]

@@ -14,7 +14,7 @@ use crate::arch::McmConfig;
 use crate::config::SimOptions;
 use crate::cost::{
     comm_phase, comp_cycles, compute_energy, dram_transfer, ring_all_gather,
-    EnergyBreakdown, NopCost, RegionGeom,
+    DramCost, EnergyBreakdown, NopCost, RegionGeom,
 };
 use crate::model::Network;
 use crate::storage::{plan_cluster, LayerResidency, StoragePolicy};
@@ -259,14 +259,30 @@ pub(crate) fn assemble_segment<F: FnMut(usize) -> ClusterEval>(
     ev
 }
 
-/// Evaluate a whole schedule for `opts.samples`: Equ. 1.
+/// DRAM spill of the skip/branch activations crossing a DAG segment
+/// boundary at `pos` (a clean cut): the producing segment stores the extra
+/// crossing copies and the consuming segment reloads them — a round trip
+/// of `2 × extra_bytes` per sample over the shared channel. Zero for
+/// chains and for cuts whose only crossing edge is the free main hand-off.
+/// Charged identically for every method (the spill volume depends on the
+/// workload and the boundary, not the scheduler — §V-A fairness).
+pub fn boundary_spill(net: &Network, mcm: &McmConfig, pos: usize, m: u64) -> DramCost {
+    let extra = net.dag.as_ref().map(|d| d.extra_bytes_at(pos)).unwrap_or(0);
+    if extra == 0 {
+        return DramCost::zero();
+    }
+    dram_transfer((2 * extra * m) as f64, &mcm.dram, mcm.chiplet.freq_hz, 1.0)
+}
+
+/// Evaluate a whole schedule for `opts.samples`: Equ. 1 (+ DAG boundary
+/// spills).
 pub fn eval_schedule(ctx: &EvalContext, sched: &Schedule) -> ScheduleEval {
     if let Err(e) = sched.validate(ctx.net, ctx.mcm.chiplets) {
         return ScheduleEval::invalid(e);
     }
     let m = ctx.opts.samples;
     let mut out = ScheduleEval::default();
-    for seg in &sched.segments {
+    for (si, seg) in sched.segments.iter().enumerate() {
         let ev = eval_segment(ctx, seg, m);
         if let Some(e) = &ev.error {
             if out.error.is_none() {
@@ -280,6 +296,14 @@ pub fn eval_schedule(ctx: &EvalContext, sched: &Schedule) -> ScheduleEval {
             .fold(EnergyBreakdown::zero(), |acc, c| acc.add(c.energy));
         out.energy = out.energy.add(per_sample.scale(m as f64));
         out.energy.dram_pj += ev.preload_energy_pj;
+        if si + 1 < sched.segments.len() {
+            // cut-edge activation traffic crossing into the next segment
+            let spill = boundary_spill(ctx.net, ctx.mcm, seg.hi, m);
+            if spill.bytes > 0.0 {
+                out.total_cycles += spill.cycles;
+                out.energy.dram_pj += spill.energy_pj;
+            }
+        }
         out.segments.push(ev);
     }
     if out.error.is_none() {
@@ -400,6 +424,60 @@ mod tests {
         let pr = eval_layer(&repl, seg, 4, LayerResidency::Resident);
         assert!(pd.pre > 0.0);
         assert_eq!(pr.pre, 0.0);
+    }
+
+    #[test]
+    fn dag_boundary_spill_is_charged_between_segments() {
+        use crate::model::dag::DagNetwork;
+        use crate::model::Layer;
+        // x → a → b → add(b, x) → c: the skip edge x→add crosses the only
+        // interesting cut (after x).
+        let mut g = DagNetwork::builder("skip", (8, 8, 16));
+        let x = g.node(Layer::conv("x", 8, 8, 16, 16, 3, 1, 1), &[]);
+        let a = g.node(Layer::conv("a", 8, 8, 16, 16, 3, 1, 1), &[x]);
+        let b = g.node(Layer::conv("b", 8, 8, 16, 16, 3, 1, 1), &[a]);
+        let s = g.node(Layer::add_merge("add", 8, 8, 16), &[b, x]);
+        g.node(Layer::conv("c", 8, 8, 16, 32, 3, 1, 1), &[s]);
+        let net = g.build().to_network();
+        let mcm = McmConfig::paper_default(16);
+        let m = 8u64;
+        // cut after x spills one copy of x's output, round trip, per sample
+        let spill = boundary_spill(&net, &mcm, 1, m);
+        assert_eq!(spill.bytes, (2 * 8 * 8 * 16 * m) as f64);
+        assert!(spill.cycles > 0.0 && spill.energy_pj > 0.0);
+        // the cut after the add carries no extra copies; chains never spill
+        assert_eq!(boundary_spill(&net, &mcm, 4, m), DramCost::zero());
+        assert_eq!(boundary_spill(&scopenet(), &mcm, 3, m), DramCost::zero());
+
+        // eval_schedule charges exactly the spill on top of the segments
+        let opts = SimOptions { samples: m, ..Default::default() };
+        let c = ctx(&net, &mcm, &opts);
+        let seg = |lo: usize, hi: usize| SegmentSchedule {
+            lo,
+            hi,
+            bounds: vec![lo, hi],
+            regions: vec![8],
+            partitions: vec![Partition::Wsp; hi - lo],
+        };
+        let split = Schedule {
+            method: "scope".into(),
+            segments: vec![seg(0, 1), seg(1, 5)],
+        };
+        let ev = eval_schedule(&c, &split);
+        assert!(ev.is_valid(), "{:?}", ev.error);
+        let seg_only: f64 = ev
+            .segments
+            .iter()
+            .map(|s| s.preload_cycles + s.pipeline_cycles)
+            .sum();
+        assert!(
+            (ev.total_cycles - (seg_only + spill.cycles)).abs()
+                <= ev.total_cycles * 1e-12,
+            "total {} vs segments {} + spill {}",
+            ev.total_cycles,
+            seg_only,
+            spill.cycles
+        );
     }
 
     #[test]

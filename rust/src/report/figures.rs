@@ -14,7 +14,7 @@ use crate::pipeline::timeline::EvalContext;
 use crate::scope::{schedule_scope, search_segment, MethodResult, SearchOptions};
 use crate::storage::StoragePolicy;
 use crate::util::stats;
-use crate::util::table::{f3, Table};
+use crate::util::table::{eng, f3, Table};
 
 /// Fig. 7 row: normalized throughput of the four methods for one
 /// (network, scale) cell. Normalization: best method = 1.0 (the paper
@@ -335,6 +335,46 @@ pub fn fig10(net_name: &str, chiplets: usize, samples: u64) -> Result<Fig10Resul
     })
 }
 
+/// DAG condensation summary: the supernodes (branch bundles between clean
+/// cuts) the segmenters place boundaries around, with each boundary's
+/// spilled cut-edge traffic. Errors on plain chain workloads.
+pub fn dag_condensation_table(net: &crate::model::Network) -> Result<Table> {
+    let info = net
+        .dag
+        .as_ref()
+        .ok_or_else(|| anyhow!("{} is not a DAG workload", net.name))?;
+    let mut bounds = vec![0usize];
+    bounds.extend(info.cut_positions());
+    bounds.push(net.len());
+    let mut t = Table::new(
+        &format!(
+            "DAG condensation — {} ({} supernodes over {} clean cuts)",
+            net.name,
+            bounds.len() - 1,
+            info.cuts.len()
+        ),
+        &["supernode", "nodes", "layers", "MACs", "weights", "cut spill (B/sample)"],
+    );
+    for (i, w) in bounds.windows(2).enumerate() {
+        let (lo, hi) = (w[0], w[1]);
+        let macs: u64 = net.layers[lo..hi].iter().map(|l| l.macs()).sum();
+        let wts: u64 = net.layers[lo..hi].iter().map(|l| l.weight_bytes()).sum();
+        t.row(vec![
+            i.to_string(),
+            format!("[{lo},{hi})"),
+            (hi - lo).to_string(),
+            eng(macs as f64),
+            eng(wts as f64),
+            if hi < net.len() {
+                info.extra_bytes_at(hi).to_string()
+            } else {
+                "-".into()
+            },
+        ]);
+    }
+    Ok(t)
+}
+
 /// §V-B(1) / Equ. 8–9: search-space size rows.
 pub fn space_table(net_name: &str, chiplets: usize) -> Result<Table> {
     let net = zoo::by_name(net_name).ok_or_else(|| anyhow!("unknown net {net_name}"))?;
@@ -409,5 +449,16 @@ mod tests {
     fn unknown_net_errors() {
         assert!(fig7(&["nope"], &[16], 4).is_err());
         assert!(space_table("nope", 16).is_err());
+    }
+
+    #[test]
+    fn dag_condensation_table_renders() {
+        let net = zoo::googlenet();
+        let t = dag_condensation_table(&net).unwrap();
+        let s = t.render();
+        assert!(s.contains("googlenet"), "{s}");
+        assert!(s.contains("supernode"), "{s}");
+        // chains have no condensation to print
+        assert!(dag_condensation_table(&zoo::alexnet()).is_err());
     }
 }

@@ -1,0 +1,223 @@
+//! Branch-aware segmentation: the DAG extension of the segmenter entry
+//! point every method routes through.
+//!
+//! [`search_segments_opts`](super::segment_dp::search_segments_opts)
+//! already restricts boundaries to the condensation's clean-cut domain;
+//! this module supplies the missing half — *charging* the cut-edge
+//! activation traffic. A clean cut's node may feed several consumers in
+//! later segments (identity skips into a downstream Add, a concat fanning
+//! into the next module's branch heads); the first copy rides the free
+//! on-package hand-off, every extra crossing copy is spilled to DRAM and
+//! reloaded by the consuming segment
+//! ([`boundary_spill`](crate::pipeline::timeline::boundary_spill) — the
+//! same term [`eval_schedule`](crate::pipeline::timeline::eval_schedule)
+//! charges, so the DP optimizes exactly the reported objective).
+//!
+//! The spill is a property of the workload and the boundary, not of the
+//! method's span scheduler, so wrapping the provider keeps the §V-A
+//! identical-allocator fairness: Scope and all three baselines see the
+//! same boundary domain and the same boundary surcharges. For chains (and
+//! cuts without extra crossing edges) the wrapper adds no term at all —
+//! chain scheduling stays bit-identical (the chain-equivalence regression
+//! in `tests/dag_workloads.rs`).
+
+use crate::arch::McmConfig;
+use crate::model::Network;
+use crate::pipeline::timeline::boundary_spill;
+use crate::util::fxhash::FxHashMap;
+
+use super::segment_dp::{
+    search_segments_opts, SegmentCost, SegmenterOptions, SegmenterResult,
+};
+use super::segmenter::SegResult;
+
+/// Per-boundary entry surcharges (cycles for the batch), precomputed from
+/// the workload's cut set. Empty for chains.
+fn entry_surcharges(net: &Network, mcm: &McmConfig, m: u64) -> FxHashMap<usize, f64> {
+    let mut out = FxHashMap::default();
+    if let Some(info) = &net.dag {
+        for cut in &info.cuts {
+            if cut.extra_bytes > 0 {
+                out.insert(cut.pos, boundary_spill(net, mcm, cut.pos, m).cycles);
+            }
+        }
+    }
+    out
+}
+
+/// Provider wrapper adding the entry-boundary spill to every span that
+/// starts at a surcharged cut. Pure function of `(lo, hi)` like the inner
+/// provider, so memoization and thread-count invariance carry over.
+struct CutCost<'a, P> {
+    inner: &'a P,
+    entry: &'a FxHashMap<usize, f64>,
+}
+
+impl<P: SegmentCost> SegmentCost for CutCost<'_, P> {
+    type Sched = P::Sched;
+
+    fn cost(&self, lo: usize, hi: usize) -> SegResult<P::Sched> {
+        let (sched, lat) = self.inner.cost(lo, hi)?;
+        match self.entry.get(&lo) {
+            Some(spill) => Some((sched, lat + spill)),
+            None => Some((sched, lat)),
+        }
+    }
+}
+
+/// The segmenter entry point for every method: boundary domain restriction
+/// (inside [`search_segments_opts`]) plus cut-edge traffic charging. For
+/// chain workloads this is exactly `search_segments_opts` — the provider
+/// is not even wrapped.
+#[allow(clippy::too_many_arguments)]
+pub fn search_segments_dag<P: SegmentCost>(
+    net: &Network,
+    mcm: &McmConfig,
+    samples: u64,
+    min_segments: usize,
+    max_segments: usize,
+    max_layers: usize,
+    threads: usize,
+    opts: SegmenterOptions,
+    provider: &P,
+) -> Option<SegmenterResult<P::Sched>> {
+    let entry = entry_surcharges(net, mcm, samples);
+    if entry.is_empty() {
+        return search_segments_opts(
+            net,
+            min_segments,
+            max_segments,
+            max_layers,
+            threads,
+            opts,
+            provider,
+        );
+    }
+    let wrapped = CutCost { inner: provider, entry: &entry };
+    search_segments_opts(
+        net,
+        min_segments,
+        max_segments,
+        max_layers,
+        threads,
+        opts,
+        &wrapped,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::dag::DagNetwork;
+    use crate::model::zoo::alexnet;
+    use crate::model::Layer;
+    use crate::scope::SegmenterKind;
+
+    /// Two identity-skip blocks and a tail; cuts after the stem and after
+    /// each Add carry one extra skip copy (except the last, pre-tail cut).
+    fn two_block_net() -> Network {
+        let mut g = DagNetwork::builder("blocks", (8, 8, 16));
+        let stem = g.node(Layer::conv("stem", 8, 8, 16, 16, 3, 1, 1), &[]);
+        let mut x = stem;
+        for b in 0..2 {
+            let c1 = g.node(Layer::conv(&format!("b{b}.c1"), 8, 8, 16, 16, 3, 1, 1), &[x]);
+            let c2 = g.node(Layer::conv(&format!("b{b}.c2"), 8, 8, 16, 16, 3, 1, 1), &[c1]);
+            x = g.node(Layer::add_merge(&format!("b{b}.add"), 8, 8, 16), &[c2, x]);
+        }
+        g.node(Layer::conv("tail", 8, 8, 16, 32, 3, 1, 1), &[x]);
+        g.build().to_network()
+    }
+
+    #[test]
+    fn surcharges_cover_exactly_the_spilling_cuts() {
+        let net = two_block_net();
+        let mcm = crate::arch::McmConfig::paper_default(8);
+        let entry = entry_surcharges(&net, &mcm, 4);
+        // cuts: 1 (stem→skip), 4 (add0→skip), 7 (add1, single consumer)
+        assert_eq!(entry.len(), 2);
+        assert!(entry.contains_key(&1) && entry.contains_key(&4));
+        assert!(entry.values().all(|&c| c > 0.0));
+        // chains carry no surcharges at all
+        assert!(entry_surcharges(&alexnet(), &mcm, 4).is_empty());
+    }
+
+    #[test]
+    fn dp_total_includes_boundary_spills_and_matches_cut_ground_truth() {
+        use crate::dse::exhaustive::exhaustive_cut_segmentations;
+        let net = two_block_net();
+        let mcm = crate::arch::McmConfig::paper_default(8);
+        let m = 4u64;
+        let fake = |lo: usize, hi: usize| -> SegResult<(usize, usize)> {
+            let span = (hi - lo) as f64;
+            Some(((lo, hi), span * span + (lo % 3) as f64))
+        };
+        let opts = SegmenterOptions {
+            kind: SegmenterKind::Dp,
+            dp_window: 0,
+            dp_window_auto: false,
+        };
+        let dp = search_segments_dag(&net, &mcm, m, 1, net.len(), usize::MAX, 1, opts, &fake)
+            .expect("feasible");
+        // ground truth: enumerate every subset of the cut set with the
+        // identically wrapped cost
+        let entry = entry_surcharges(&net, &mcm, m);
+        let cuts = net.dag.as_ref().unwrap().cut_positions();
+        let wrapped = |lo: usize, hi: usize| {
+            fake(lo, hi).map(|(_, lat)| lat + entry.get(&lo).copied().unwrap_or(0.0))
+        };
+        let (ex_bounds, ex_total) = exhaustive_cut_segmentations(
+            net.len(),
+            &cuts,
+            1,
+            net.len(),
+            usize::MAX,
+            wrapped,
+        )
+        .expect("feasible");
+        assert_eq!(
+            dp.total_latency.to_bits(),
+            ex_total.to_bits(),
+            "dp {} vs exhaustive {} (bounds {:?} vs {:?})",
+            dp.total_latency,
+            ex_total,
+            dp.bounds,
+            ex_bounds
+        );
+        // every boundary is a clean cut
+        let info = net.dag.as_ref().unwrap();
+        assert!(dp.bounds[1..dp.bounds.len() - 1].iter().all(|&b| info.is_cut(b)));
+        // the surcharge really steers: totals with spills differ from the
+        // raw span sums whenever a spilling cut is used
+        if dp.bounds[1..dp.bounds.len() - 1].iter().any(|b| entry.contains_key(b)) {
+            let raw: f64 = dp
+                .bounds
+                .windows(2)
+                .map(|w| fake(w[0], w[1]).unwrap().1)
+                .sum();
+            assert!(dp.total_latency > raw);
+        }
+    }
+
+    #[test]
+    fn chain_path_is_not_wrapped() {
+        // For chains the provider goes through unwrapped — identical
+        // results (and identical span stats) to calling the inner entry
+        // point directly.
+        let net = alexnet();
+        let mcm = crate::arch::McmConfig::paper_default(16);
+        let fake = |lo: usize, hi: usize| -> SegResult<(usize, usize)> {
+            let span = (hi - lo) as f64;
+            Some(((lo, hi), span * span))
+        };
+        for kind in [SegmenterKind::Balanced, SegmenterKind::Dp] {
+            let opts = SegmenterOptions { kind, dp_window: 2, dp_window_auto: false };
+            let direct =
+                search_segments_opts(&net, 1, 4, usize::MAX, 1, opts, &fake).unwrap();
+            let dag =
+                search_segments_dag(&net, &mcm, 8, 1, 4, usize::MAX, 1, opts, &fake).unwrap();
+            assert_eq!(direct.bounds, dag.bounds);
+            assert_eq!(direct.total_latency.to_bits(), dag.total_latency.to_bits());
+            assert_eq!(direct.stats, dag.stats);
+        }
+    }
+}

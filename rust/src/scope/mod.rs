@@ -6,6 +6,7 @@
 //! buffering.
 
 pub mod cmt;
+pub mod dag_segment;
 pub mod partition;
 pub mod region_alloc;
 pub mod search;
@@ -20,6 +21,7 @@ use crate::pipeline::timeline::{eval_schedule, EvalContext, ScheduleEval};
 use crate::storage::StoragePolicy;
 use crate::util::ceil_div;
 
+pub use dag_segment::search_segments_dag;
 pub use search::{search_segment, SearchOptions, SegmentSearch};
 pub use segment_dp::{
     search_segments_opts, SegmentCost, SegmenterKind, SegmenterOptions, SegmenterReport,
@@ -95,8 +97,10 @@ pub fn schedule_scope_opts(
     let provider = |lo: usize, hi: usize| {
         search_segment(span_ctx, lo, hi, opts.samples, sopts).map(|s| (s.schedule, s.latency))
     };
-    let found = search_segments_opts(
+    let found = search_segments_dag(
         net,
+        mcm,
+        opts.samples,
         lo_s,
         lo_s + SEGMENT_SLACK,
         usize::MAX,
@@ -107,13 +111,14 @@ pub fn schedule_scope_opts(
     match found {
         None => MethodResult::invalid("scope", "no valid segmentation"),
         Some(r) => {
+            let report = SegmenterReport::of(seg_opts, &r);
             let schedule = Schedule { method: "scope".into(), segments: r.schedules };
             let eval = eval_schedule(&ctx, &schedule);
             MethodResult {
                 method: "scope".into(),
                 schedule: Some(schedule),
                 eval,
-                segmenter: Some(SegmenterReport::new(seg_opts, r.stats)),
+                segmenter: Some(report),
             }
         }
     }

@@ -43,11 +43,10 @@
 //! — asserted by tests here, in the baselines, and across the zoo in
 //! `tests/segmenter_dp.rs`.
 
-use std::collections::{HashMap, HashSet};
-
 use crate::config::SimOptions;
 use crate::dse::parallel::par_map;
 use crate::model::Network;
+use crate::util::fxhash::{FxHashMap, FxHashSet};
 
 use super::segmenter::{balanced_split_capped, SegResult};
 
@@ -89,21 +88,35 @@ impl SegmenterKind {
 pub struct SegmenterOptions {
     pub kind: SegmenterKind,
     /// DP boundary window: each internal boundary may move ±`dp_window`
-    /// layers around the balanced seed position. `0` = no prune (every
-    /// placement is explored — O(L²) spans, small nets only).
+    /// steps along the legal boundary domain (every position for chains,
+    /// the clean-cut set for DAG workloads) around the balanced seed.
+    /// `0` = no prune (every placement is explored — O(L²) spans, small
+    /// nets only).
     pub dp_window: usize,
+    /// Adaptive windows (`dp_window = auto`): when the DP optimum lands on
+    /// the window edge, double the window and re-run — the span memo makes
+    /// the re-run cost only the newly exposed spans.
+    pub dp_window_auto: bool,
 }
 
 impl Default for SegmenterOptions {
     fn default() -> Self {
-        SegmenterOptions { kind: SegmenterKind::Balanced, dp_window: 4 }
+        SegmenterOptions {
+            kind: SegmenterKind::Balanced,
+            dp_window: 4,
+            dp_window_auto: false,
+        }
     }
 }
 
 impl SegmenterOptions {
     /// The segmenter knobs carried by a simulation configuration.
     pub fn from_sim(sim: &SimOptions) -> SegmenterOptions {
-        SegmenterOptions { kind: sim.segmenter, dp_window: sim.dp_window }
+        SegmenterOptions {
+            kind: sim.segmenter,
+            dp_window: sim.dp_window,
+            dp_window_auto: sim.dp_window_auto,
+        }
     }
 }
 
@@ -132,13 +145,24 @@ impl SpanStats {
 #[derive(Clone, Copy, Debug)]
 pub struct SegmenterReport {
     pub kind: SegmenterKind,
+    /// The window the winning pass ran with (auto mode may have widened it
+    /// past the configured start).
     pub dp_window: usize,
+    /// Whether adaptive widening was enabled.
+    pub dp_window_auto: bool,
     pub stats: SpanStats,
 }
 
 impl SegmenterReport {
-    pub fn new(opts: SegmenterOptions, stats: SpanStats) -> SegmenterReport {
-        SegmenterReport { kind: opts.kind, dp_window: opts.dp_window, stats }
+    /// Report for a finished sweep (the result carries the effective
+    /// window and the span-cache statistics).
+    pub fn of<S>(opts: SegmenterOptions, r: &SegmenterResult<S>) -> SegmenterReport {
+        SegmenterReport {
+            kind: opts.kind,
+            dp_window: r.dp_window,
+            dp_window_auto: opts.dp_window_auto,
+            stats: r.stats,
+        }
     }
 }
 
@@ -166,16 +190,17 @@ where
 /// Span-level memo: each distinct `(lo, hi)` is scheduled exactly once per
 /// sweep. Values are the provider's exact results (pure function of the
 /// key), so a memoized sweep is bit-identical to an unmemoized one.
+/// Fx-hashed like the cluster cache (`util/fxhash.rs`).
 #[derive(Debug)]
 pub struct SpanMemo<S> {
-    map: HashMap<(usize, usize), SegResult<S>>,
+    map: FxHashMap<(usize, usize), SegResult<S>>,
     hits: usize,
     misses: usize,
 }
 
 impl<S> Default for SpanMemo<S> {
     fn default() -> Self {
-        SpanMemo { map: HashMap::new(), hits: 0, misses: 0 }
+        SpanMemo { map: FxHashMap::default(), hits: 0, misses: 0 }
     }
 }
 
@@ -212,7 +237,7 @@ impl<S: Clone> SpanMemo<S> {
         S: Send,
         P: SegmentCost<Sched = S>,
     {
-        let mut seen: HashSet<(usize, usize)> = HashSet::new();
+        let mut seen: FxHashSet<(usize, usize)> = FxHashSet::default();
         let todo: Vec<(usize, usize)> = spans
             .iter()
             .copied()
@@ -230,20 +255,78 @@ impl<S: Clone> SpanMemo<S> {
 }
 
 /// Winner of a segmenter sweep: boundaries, per-segment schedules, total
-/// latency (Equ. 1 sum), and span-cache statistics.
+/// latency (Equ. 1 sum), the effective DP window, and span-cache
+/// statistics.
 #[derive(Clone, Debug)]
 pub struct SegmenterResult<S> {
     pub bounds: Vec<usize>,
     pub schedules: Vec<S>,
     pub total_latency: f64,
+    /// Window of the winning pass (== the configured window unless auto
+    /// widening kicked in; echoes the configured value for balanced).
+    pub dp_window: usize,
     pub stats: SpanStats,
 }
 
+/// Legal internal boundary positions of `net`, ascending: every chain
+/// position for chains, the condensation's clean-cut set for DAG
+/// workloads (a pipeline segment must receive exactly one input tensor).
+fn boundary_domain(net: &Network) -> Vec<usize> {
+    match &net.dag {
+        Some(info) => info.cut_positions(),
+        None => (1..net.len()).collect(),
+    }
+}
+
+/// Snap balanced-split boundaries onto the legal domain: each internal
+/// boundary moves to the nearest legal position that keeps the split
+/// strictly ascending and leaves room for the remaining boundaries (ties
+/// prefer the smaller position). The identity for chains — the domain is
+/// every position. `None` when the domain cannot host the split or a
+/// snapped segment breaks the layer cap.
+fn snap_to_domain(
+    bounds: &[usize],
+    domain: &[usize],
+    max_layers: usize,
+    l: usize,
+) -> Option<Vec<usize>> {
+    let s = bounds.len() - 1;
+    if s > domain.len() + 1 {
+        return None;
+    }
+    let mut out = Vec::with_capacity(s + 1);
+    out.push(0usize);
+    let mut min_idx = 0usize;
+    for k in 1..s {
+        // leave s − 1 − k usable domain positions above this one
+        let max_idx = domain.len().checked_sub(s - k)?;
+        if min_idx > max_idx {
+            return None;
+        }
+        let target = bounds[k];
+        let mut best = min_idx;
+        for i in min_idx..=max_idx {
+            if domain[i].abs_diff(target) < domain[best].abs_diff(target) {
+                best = i;
+            }
+        }
+        out.push(domain[best]);
+        min_idx = best + 1;
+    }
+    out.push(l);
+    if out.windows(2).any(|w| w[1] <= w[0] || w[1] - w[0] > max_layers) {
+        return None;
+    }
+    Some(out)
+}
+
 /// The legacy balanced-weight sweep, routed through a span memo: for each
-/// segment count the balanced split is materialized, its spans scheduled
-/// (each distinct span once across *all* counts), and the cheapest total
-/// kept. Identical visit order, comparisons, and float accumulation to the
-/// pre-memo sweep — bit-identical results, fewer scheduler calls.
+/// segment count the balanced split is materialized (snapped onto the
+/// legal boundary domain for DAG workloads), its spans scheduled (each
+/// distinct span once across *all* counts), and the cheapest total kept.
+/// Identical visit order, comparisons, and float accumulation to the
+/// pre-memo sweep — bit-identical results for chains, fewer scheduler
+/// calls.
 pub fn balanced_sweep_memo<S, F>(
     net: &Network,
     min_segments: usize,
@@ -257,12 +340,16 @@ where
     F: FnMut(usize, usize) -> SegResult<S>,
 {
     let l = net.len();
+    let domain = boundary_domain(net);
     let mut best: Option<(Vec<usize>, Vec<S>, f64)> = None;
     for s in min_segments.max(1)..=max_segments.min(l) {
-        let bounds = balanced_split_capped(net, s, max_layers);
-        if bounds.len() - 1 != s {
+        let raw = balanced_split_capped(net, s, max_layers);
+        if raw.len() - 1 != s {
             continue; // couldn't materialize s segments
         }
+        let Some(bounds) = snap_to_domain(&raw, &domain, max_layers, l) else {
+            continue; // the cut set cannot host this count
+        };
         let mut schedules = Vec::with_capacity(s);
         let mut total = 0.0f64;
         let mut ok = true;
@@ -296,78 +383,107 @@ struct DpNode {
 }
 
 /// Allowed positions for each of the `s + 1` boundaries of an `s`-way
-/// split of `[0, l)`: boundary `k` must leave ≥ 1 layer per segment on
-/// both sides, and — when a window is set — sit within ±`window` of the
-/// balanced seed. `None` when no seed exists for this count (mirrors the
-/// balanced sweep skipping it; window `0` explores every placement and
-/// needs no seed).
+/// split of `[0, l)`, drawn from the legal boundary `domain`: boundary `k`
+/// must leave room for the boundaries on both sides, and — when a window
+/// is set — sit within ±`window` *domain steps* of the (snapped) balanced
+/// seed. For chains the domain is every position, so the window keeps its
+/// original ±layers meaning. `None` when no seed exists for this count
+/// (mirrors the balanced sweep skipping it; window `0` explores every
+/// legal placement and needs no seed).
 fn boundary_windows(
     net: &Network,
+    domain: &[usize],
     s: usize,
     max_layers: usize,
     window: usize,
 ) -> Option<Vec<Vec<usize>>> {
     let l = net.len();
+    let d = domain.len();
+    if s >= 2 && d < s - 1 {
+        return None; // not enough legal boundaries for s segments
+    }
     let mut allowed: Vec<Vec<usize>> = Vec::with_capacity(s + 1);
     allowed.push(vec![0]);
     if s >= 2 {
-        let seed = if window > 0 {
-            let b = balanced_split_capped(net, s, max_layers);
-            if b.len() - 1 != s {
+        let seed_idx: Option<Vec<usize>> = if window > 0 {
+            let raw = balanced_split_capped(net, s, max_layers);
+            if raw.len() - 1 != s {
                 return None;
             }
-            Some(b)
+            let snapped = snap_to_domain(&raw, domain, max_layers, l)?;
+            Some(
+                (1..s)
+                    .map(|k| {
+                        domain
+                            .binary_search(&snapped[k])
+                            .expect("snapped boundary is on the domain")
+                    })
+                    .collect(),
+            )
         } else {
             None
         };
         for k in 1..s {
-            let mut lo = k; // k segments to the left need ≥ k layers
-            let mut hi = l - (s - k); // s−k segments to the right
-            if let Some(b) = &seed {
-                lo = lo.max(b[k].saturating_sub(window));
-                hi = hi.min(b[k].saturating_add(window));
+            let mut lo_i = k - 1; // k − 1 earlier internal boundaries below
+            let mut hi_i = d - (s - k); // s − 1 − k boundaries still above
+            if let Some(idx) = &seed_idx {
+                lo_i = lo_i.max(idx[k - 1].saturating_sub(window));
+                hi_i = hi_i.min(idx[k - 1].saturating_add(window));
             }
-            if lo > hi {
+            if lo_i > hi_i {
                 return None;
             }
-            allowed.push((lo..=hi).collect());
+            allowed.push(domain[lo_i..=hi_i].to_vec());
         }
     }
     allowed.push(vec![l]);
     Some(allowed)
 }
 
-/// The global DP sweep: prefetch every candidate span across the worker
-/// pool, then run `best[k][i] = min_j best[k-1][j] + cost(j, i)` per
-/// segment count and keep the cheapest total (ties keep the smaller
+/// Outcome of one [`dp_pass`]: the global winner plus every feasible
+/// count's own winner (the auto-widen audit must see counts the global
+/// winner beat — a runner-up pressed against its window edge may overtake
+/// at a wider window).
+struct DpPassOut {
+    best: Option<(Vec<usize>, f64)>,
+    count_winners: Vec<Vec<usize>>,
+}
+
+/// One DP pass at a fixed window: prefetch every candidate span across the
+/// worker pool, then run `best[k][i] = min_j best[k-1][j] + cost(j, i)`
+/// per segment count and keep the cheapest total (ties keep the smaller
 /// count, then the smaller predecessor — the balanced sweep's order).
-fn dp_sweep<P: SegmentCost>(
+fn dp_pass<P: SegmentCost>(
     net: &Network,
+    domain: &[usize],
     min_segments: usize,
     max_segments: usize,
     max_layers: usize,
     threads: usize,
     window: usize,
     provider: &P,
-) -> Option<SegmenterResult<P::Sched>> {
+    memo: &mut SpanMemo<P::Sched>,
+) -> DpPassOut {
     let l = net.len();
     let lo_s = min_segments.max(1);
     let hi_s = max_segments.min(l);
+    let mut out = DpPassOut { best: None, count_winners: Vec::new() };
     if lo_s > hi_s {
-        return None;
+        return out;
     }
     let mut per_s: Vec<(usize, Vec<Vec<usize>>)> = Vec::new();
     for s in lo_s..=hi_s {
-        if let Some(allowed) = boundary_windows(net, s, max_layers, window) {
+        if let Some(allowed) = boundary_windows(net, domain, s, max_layers, window) {
             per_s.push((s, allowed));
         }
     }
     if per_s.is_empty() {
-        return None;
+        return out;
     }
     // Deterministic candidate span list across all counts (deduped), then
-    // one parallel fill — the DP below only ever hits the memo.
-    let mut seen: HashSet<(usize, usize)> = HashSet::new();
+    // one parallel fill — the DP below only ever hits the memo. Re-runs at
+    // a widened window only pay for the newly exposed spans.
+    let mut seen: FxHashSet<(usize, usize)> = FxHashSet::default();
     let mut spans: Vec<(usize, usize)> = Vec::new();
     for (_, allowed) in &per_s {
         for pair in allowed.windows(2) {
@@ -380,11 +496,9 @@ fn dp_sweep<P: SegmentCost>(
             }
         }
     }
-    let mut memo: SpanMemo<P::Sched> = SpanMemo::new();
     memo.prefill(threads, &spans, provider);
     let mut eval = |lo: usize, hi: usize| provider.cost(lo, hi);
 
-    let mut best: Option<(Vec<usize>, f64)> = None;
     for (s, allowed) in &per_s {
         // levels[k] = reachable boundary positions after placing k bounds
         let mut levels: Vec<Vec<DpNode>> =
@@ -423,20 +537,100 @@ fn dp_sweep<P: SegmentCost>(
         // The last level holds the single end position `l`.
         let end = levels[*s][0];
         debug_assert_eq!(end.pos, l);
-        if best.as_ref().map(|b| end.total < b.1).unwrap_or(true) {
-            // reconstruct boundaries via parent pointers
-            let mut bounds = vec![l];
-            let mut node = end;
-            for level in levels[1..*s].iter().rev() {
-                node = level[node.parent];
-                bounds.push(node.pos);
-            }
-            bounds.push(0);
-            bounds.reverse();
-            best = Some((bounds, end.total));
+        // reconstruct this count's winner via parent pointers
+        let mut bounds = vec![l];
+        let mut node = end;
+        for level in levels[1..*s].iter().rev() {
+            node = level[node.parent];
+            bounds.push(node.pos);
         }
+        bounds.push(0);
+        bounds.reverse();
+        if out.best.as_ref().map(|b| end.total < b.1).unwrap_or(true) {
+            out.best = Some((bounds.clone(), end.total));
+        }
+        out.count_winners.push(bounds);
     }
+    out
+}
+
+/// Whether the winning boundaries press against the ±`window` prune: some
+/// internal boundary sits exactly `window` domain steps from its balanced
+/// seed, so a wider window could expose a better placement.
+fn on_window_edge(
+    net: &Network,
+    domain: &[usize],
+    bounds: &[usize],
+    max_layers: usize,
+    window: usize,
+) -> bool {
+    let s = bounds.len() - 1;
+    if s < 2 {
+        return false;
+    }
+    let raw = balanced_split_capped(net, s, max_layers);
+    if raw.len() - 1 != s {
+        return false;
+    }
+    let Some(seed) = snap_to_domain(&raw, domain, max_layers, net.len()) else {
+        return false;
+    };
+    (1..s).any(|k| {
+        let bi = domain.binary_search(&bounds[k]).expect("winner is on the domain");
+        let si = domain.binary_search(&seed[k]).expect("seed is on the domain");
+        bi.abs_diff(si) >= window
+    })
+}
+
+/// The global DP sweep: one [`dp_pass`] at the configured window; in auto
+/// mode ([`SegmenterOptions::dp_window_auto`]) the pass re-runs with a
+/// doubled window while *any* feasible count's optimum presses its window
+/// edge (or nothing was feasible), sharing one span memo so each re-run
+/// costs only the newly exposed spans. The ladder ends in a genuine
+/// no-prune pass (window 0): seeded windows — however wide — still skip
+/// counts whose balanced seed cannot materialize, and only the seedless
+/// structural windows explore those.
+fn dp_sweep<P: SegmentCost>(
+    net: &Network,
+    min_segments: usize,
+    max_segments: usize,
+    max_layers: usize,
+    threads: usize,
+    opts: SegmenterOptions,
+    provider: &P,
+) -> Option<SegmenterResult<P::Sched>> {
+    let domain = boundary_domain(net);
+    let mut memo: SpanMemo<P::Sched> = SpanMemo::new();
+    let mut window = opts.dp_window;
+    // beyond this, a seeded window adds nothing a no-prune pass lacks
+    let max_window = domain.len().max(1);
+    let best = loop {
+        let attempt = dp_pass(
+            net,
+            &domain,
+            min_segments,
+            max_segments,
+            max_layers,
+            threads,
+            window,
+            provider,
+            &mut memo,
+        );
+        if !opts.dp_window_auto || window == 0 {
+            break attempt.best;
+        }
+        let widen = attempt.best.is_none()
+            || attempt
+                .count_winners
+                .iter()
+                .any(|b| on_window_edge(net, &domain, b, max_layers, window));
+        if !widen {
+            break attempt.best;
+        }
+        window = if window.saturating_mul(2) >= max_window { 0 } else { window * 2 };
+    };
     let (bounds, total) = best?;
+    let mut eval = |lo: usize, hi: usize| provider.cost(lo, hi);
     let schedules: Vec<P::Sched> = bounds
         .windows(2)
         .map(|w| {
@@ -449,6 +643,7 @@ fn dp_sweep<P: SegmentCost>(
         bounds,
         schedules,
         total_latency: total,
+        dp_window: window,
         stats: memo.stats(),
     })
 }
@@ -456,7 +651,10 @@ fn dp_sweep<P: SegmentCost>(
 /// Segmenter entry point shared by Scope and every baseline: pick the best
 /// segmentation of `net` into `min..=max` segments of ≤ `max_layers`
 /// layers, with spans costed by `provider` (the method's real scheduler)
-/// and the boundary allocator selected by `opts.kind`.
+/// and the boundary allocator selected by `opts.kind`. DAG workloads
+/// restrict boundaries to the clean-cut domain in both allocators; callers
+/// that must also charge cut-edge traffic wrap the provider through
+/// [`super::dag_segment::search_segments_dag`].
 pub fn search_segments_opts<P: SegmentCost>(
     net: &Network,
     min_segments: usize,
@@ -482,6 +680,7 @@ pub fn search_segments_opts<P: SegmentCost>(
                 bounds: got.0,
                 schedules: got.1,
                 total_latency: got.2,
+                dp_window: opts.dp_window,
                 stats: memo.stats(),
             })
         }
@@ -491,7 +690,7 @@ pub fn search_segments_opts<P: SegmentCost>(
             max_segments,
             max_layers,
             threads,
-            opts.dp_window,
+            opts,
             provider,
         ),
     }
@@ -517,7 +716,11 @@ mod tests {
     }
 
     fn dp_opts(window: usize) -> SegmenterOptions {
-        SegmenterOptions { kind: SegmenterKind::Dp, dp_window: window }
+        SegmenterOptions {
+            kind: SegmenterKind::Dp,
+            dp_window: window,
+            dp_window_auto: false,
+        }
     }
 
     #[test]
@@ -536,7 +739,7 @@ mod tests {
         let net = vgg16();
         for (min_s, max_s, cap) in [(1, 5, usize::MAX), (2, 6, 4), (1, 3, 8)] {
             let legacy = search_segments_capped(&net, min_s, max_s, cap, fake_provider);
-            let opts = SegmenterOptions { kind: SegmenterKind::Balanced, dp_window: 4 };
+            let opts = SegmenterOptions::default();
             let new = search_segments_opts(&net, min_s, max_s, cap, 1, opts, &fake_provider);
             match (legacy, new) {
                 (None, None) => {}
@@ -560,7 +763,11 @@ mod tests {
                         4,
                         cap,
                         1,
-                        SegmenterOptions { kind: SegmenterKind::Balanced, dp_window: window },
+                        SegmenterOptions {
+                            kind: SegmenterKind::Balanced,
+                            dp_window: window,
+                            dp_window_auto: false,
+                        },
                         &fake_provider,
                     );
                     let dp =
@@ -685,6 +892,119 @@ mod tests {
         assert_eq!(stats.misses, 3);
         assert_eq!(stats.hits, 1);
         assert!((stats.hit_rate() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auto_window_recovers_from_a_bad_balanced_seed() {
+        // Cost model whose optimum (2 segments split at boundary 1) sits
+        // far from AlexNet's weight-balanced seed (boundary 6, in front of
+        // fc6): a fixed ±1 window stays trapped near the seed; auto mode
+        // must keep widening off the window edge until it matches the
+        // unpruned optimum.
+        let net = alexnet();
+        let skewed = |lo: usize, hi: usize| -> SegResult<(usize, usize)> {
+            let span = (hi - lo) as f64;
+            let cost = if lo == 0 { span * span } else { span };
+            Some(((lo, hi), cost))
+        };
+        let unpruned =
+            search_segments_opts(&net, 2, 2, usize::MAX, 1, dp_opts(0), &skewed).unwrap();
+        assert_eq!(unpruned.bounds, vec![0, 1, net.len()]);
+        let fixed =
+            search_segments_opts(&net, 2, 2, usize::MAX, 1, dp_opts(1), &skewed).unwrap();
+        assert!(
+            fixed.total_latency > unpruned.total_latency,
+            "a ±1 window must miss the distant optimum for this test to bite"
+        );
+        let auto_opts = SegmenterOptions {
+            kind: SegmenterKind::Dp,
+            dp_window: 1,
+            dp_window_auto: true,
+        };
+        let auto =
+            search_segments_opts(&net, 2, 2, usize::MAX, 1, auto_opts, &skewed).unwrap();
+        assert_eq!(auto.bounds, unpruned.bounds);
+        assert_eq!(auto.total_latency.to_bits(), unpruned.total_latency.to_bits());
+        assert_ne!(
+            auto.dp_window, 1,
+            "window must have widened past the configured ±1"
+        );
+
+        // a seed already at the optimum does not widen
+        let happy = |lo: usize, hi: usize| -> SegResult<(usize, usize)> {
+            Some(((lo, hi), fake_cost(lo, hi)))
+        };
+        let stay = search_segments_opts(&net, 1, 3, usize::MAX, 1, auto_opts, &happy);
+        assert!(stay.is_some());
+    }
+
+    #[test]
+    fn dag_domain_restricts_both_allocators() {
+        use crate::model::dag::DagNetwork;
+        use crate::model::Layer;
+        // stem → {b1, b2} → concat → two head convs: cuts at 1, 4, 5 only.
+        let mut g = DagNetwork::builder("fork", (8, 8, 8));
+        let stem = g.node(Layer::conv("stem", 8, 8, 8, 16, 3, 1, 1), &[]);
+        let b1 = g.node(Layer::conv("b1", 8, 8, 16, 8, 1, 1, 0), &[stem]);
+        let b2 = g.node(Layer::conv("b2", 8, 8, 16, 24, 3, 1, 1), &[stem]);
+        let cat = g.node(Layer::concat("cat", 8, 8, 32), &[b1, b2]);
+        let h1 = g.node(Layer::conv("h1", 8, 8, 32, 32, 3, 1, 1), &[cat]);
+        g.node(Layer::conv("h2", 8, 8, 32, 32, 3, 1, 1), &[h1]);
+        let net = g.build().to_network();
+        assert_eq!(boundary_domain(&net), vec![1, 4, 5]);
+        // quadratic span cost rewards many segments → wants every cut
+        let quad = |lo: usize, hi: usize| -> SegResult<(usize, usize)> {
+            let d = (hi - lo) as f64;
+            Some(((lo, hi), d * d))
+        };
+        for opts in [SegmenterOptions::default(), dp_opts(0), dp_opts(2)] {
+            let r = search_segments_opts(&net, 1, net.len(), usize::MAX, 1, opts, &quad)
+                .expect("feasible");
+            for w in r.bounds[1..r.bounds.len() - 1].iter() {
+                assert!(
+                    net.dag.as_ref().unwrap().is_cut(*w),
+                    "{:?}: boundary {w} must be a clean cut (bounds {:?})",
+                    opts.kind,
+                    r.bounds
+                );
+            }
+            // with cuts at {1,4,5} the best feasible split uses all three
+            assert_eq!(r.bounds, vec![0, 1, 4, 5, 6], "{:?}", opts.kind);
+        }
+        // a chain of the same depth would split every layer — the domain
+        // is what held the DAG back
+        let chain = crate::model::zoo::alexnet();
+        let r = search_segments_opts(&chain, 1, 6, usize::MAX, 1, dp_opts(0), &quad).unwrap();
+        assert_eq!(r.bounds.len() - 1, 6);
+    }
+
+    #[test]
+    fn snap_to_domain_identity_on_chains_and_snapping_on_cuts() {
+        // chain domain: snapping is the identity
+        let domain: Vec<usize> = (1..8).collect();
+        let b = vec![0, 2, 5, 8];
+        assert_eq!(snap_to_domain(&b, &domain, usize::MAX, 8), Some(b.clone()));
+        // sparse domain: boundaries move to the nearest cut, staying
+        // ascending
+        let cuts = [1usize, 4, 5];
+        assert_eq!(
+            snap_to_domain(&[0, 3, 5, 8], &cuts, usize::MAX, 8),
+            Some(vec![0, 4, 5, 8])
+        );
+        // ties prefer the smaller position: target 3 between 2 and 4
+        assert_eq!(
+            snap_to_domain(&[0, 3, 8], &[2, 4], usize::MAX, 8),
+            Some(vec![0, 2, 8])
+        );
+        // exactly as many cuts as needed: forced onto the full domain
+        assert_eq!(
+            snap_to_domain(&[0, 2, 4, 6, 8], &cuts, usize::MAX, 8),
+            Some(vec![0, 1, 4, 5, 8])
+        );
+        // more segments than the domain can host → None
+        assert_eq!(snap_to_domain(&[0, 2, 3, 4, 6, 8], &cuts, usize::MAX, 8), None);
+        // layer cap violated after snapping → None
+        assert_eq!(snap_to_domain(&[0, 4, 8], &[1], 5, 8), None);
     }
 
     #[test]

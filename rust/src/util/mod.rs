@@ -1,6 +1,7 @@
 //! In-crate substrates for functionality the offline vendor set lacks
 //! (no serde / clap / criterion / proptest / rand in the sandbox):
 //!
+//! * [`fxhash`] — FxHash-style hasher for the DSE memo tables
 //! * [`rng`] — xorshift PRNG (deterministic workloads & property tests)
 //! * [`stats`] — mean / variance / percentiles / histograms
 //! * [`bignum`] — exact unsigned big integers (Equ. 8–9 search-space counts)
@@ -10,6 +11,7 @@
 
 pub mod bignum;
 pub mod cli;
+pub mod fxhash;
 pub mod json;
 pub mod rng;
 pub mod stats;
