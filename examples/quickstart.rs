@@ -4,6 +4,12 @@
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
+//!
+//! A doc-tested twin of this walkthrough lives in the crate-level rustdoc
+//! (`rust/src/lib.rs`) — `cargo test` executes it, so the tour can never
+//! drift from the API. Further doc-tested entry points: `DagBuilder`
+//! (`model/dag.rs`), `search_segments_dag` (`scope/dag_segment.rs`), and
+//! the multi-model co-scheduler (`scope/multi_model.rs`).
 
 use anyhow::Result;
 

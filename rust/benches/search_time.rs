@@ -12,7 +12,7 @@ use std::collections::HashMap;
 use std::time::Instant;
 
 use scope::arch::McmConfig;
-use scope::bench::{bench, report, segmenter_from_env};
+use scope::bench::{bench, cache_store_from_env, humanize_secs, report, segmenter_from_env};
 use scope::config::SimOptions;
 use scope::dse::resolve_threads;
 use scope::model::zoo;
@@ -96,9 +96,14 @@ fn main() {
     };
     // `SCOPE_SEGMENTER=dp` times the boundary-DP path (same bit-identity
     // bar: the serial and parallel runs must agree exactly).
+    // `SCOPE_CACHE_STORE=1` additionally routes every sweep through the
+    // process-wide store — the second timed pass of each setting then
+    // shows what batched reuse saves (results stay bit-identical).
     let segmenter = segmenter_from_env();
-    let serial_opts = SimOptions { threads: 1, segmenter, ..Default::default() };
-    let par_opts = SimOptions { threads: par_threads, segmenter, ..Default::default() };
+    let cache_store = cache_store_from_env();
+    let serial_opts = SimOptions { threads: 1, segmenter, cache_store, ..Default::default() };
+    let par_opts =
+        SimOptions { threads: par_threads, segmenter, cache_store, ..Default::default() };
     let mut ms = Vec::new();
     let mut speedups: Vec<(String, f64)> = Vec::new();
     for (name, chiplets) in settings {
@@ -175,6 +180,44 @@ fn main() {
         100.0 * found.cache_hits as f64 / total as f64
     );
     bench_cluster_key_hashers(&net);
+
+    // Cache-store effectiveness: the same sweep twice in one process pays
+    // its spans once — the batched-sweep/multi-model speedup in isolation
+    // (a fresh key: `samples` differs from the timed settings above).
+    let store_opts = SimOptions {
+        cache_store: true,
+        samples: 48,
+        segmenter,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let first = schedule_scope(&net, &mcm, &store_opts);
+    let cold_secs = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let second = schedule_scope(&net, &mcm, &store_opts);
+    let warm_secs = t1.elapsed().as_secs_f64();
+    assert!(first.eval.is_valid() && second.eval.is_valid());
+    assert_eq!(
+        first.eval.total_cycles.to_bits(),
+        second.eval.total_cycles.to_bits(),
+        "store reuse must not change results"
+    );
+    assert_eq!(first.schedule, second.schedule);
+    let warm_stats = second.segmenter.as_ref().map(|r| r.stats).unwrap_or_default();
+    println!(
+        "[search_time] alexnet@16 cache store: cold {} → warm {} ({:.1}x); warm sweep {} hits / {} misses ({} cross-sweep)",
+        humanize_secs(cold_secs),
+        humanize_secs(warm_secs),
+        cold_secs / warm_secs.max(1e-12),
+        warm_stats.hits,
+        warm_stats.misses,
+        warm_stats.cross_hits,
+    );
+    let snap = scope::pipeline::cache_store::CacheStore::global().snapshot();
+    println!(
+        "[search_time] store totals: {} span sweeps ({} reused, {} spans carried) | shared cluster cache: {} hits / {} misses",
+        snap.span_checkouts, snap.span_reuses, snap.spans_carried, snap.cluster_hits, snap.cluster_misses,
+    );
     println!();
     println!("{}", figures::space_table("resnet152", 256).expect("space"));
     println!("\n[search_time] paper reference: ≈1 h for resnet152@256 on an i7-13700H");

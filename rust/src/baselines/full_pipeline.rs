@@ -77,7 +77,10 @@ pub fn schedule_full_pipeline(net: &Network, mcm: &McmConfig, opts: &SimOptions)
     // SegmentCost provider so every method uses the identical allocator
     // path (§V-A); with min = max = 1 the balanced and DP allocators
     // coincide on the single span [0, L).
-    let seg_opts = SegmenterOptions::from_sim(opts);
+    let seg_opts = SegmenterOptions::from_sim(opts).with_store(
+        opts.cache_store
+            .then(|| crate::pipeline::cache_store::StoreKey::new(net, mcm, "full_pipeline", opts)),
+    );
     let provider = |lo: usize, hi: usize| per_layer_segment(&ctx, lo, hi, opts.samples);
     let found = search_segments_dag(
         net,

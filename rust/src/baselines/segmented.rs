@@ -37,7 +37,10 @@ pub fn schedule_segmented(net: &Network, mcm: &McmConfig, opts: &SimOptions) -> 
     // Same segment allocator (balanced or DP, same window) as Scope —
     // the paper's §V-A identical-allocator fairness; only the span
     // scheduler differs (one pipeline stage per layer, replicated WSP).
-    let seg_opts = SegmenterOptions::from_sim(opts);
+    let seg_opts = SegmenterOptions::from_sim(opts).with_store(
+        opts.cache_store
+            .then(|| crate::pipeline::cache_store::StoreKey::new(net, mcm, "segmented", opts)),
+    );
     let provider = |lo: usize, hi: usize| per_layer_segment(&ctx, lo, hi, opts.samples);
     let found = search_segments_dag(
         net,

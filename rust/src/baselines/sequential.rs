@@ -93,7 +93,10 @@ pub fn schedule_sequential(net: &Network, mcm: &McmConfig, opts: &SimOptions) ->
     // method (§V-A identical allocator). Because the span cost is
     // additive, a single mandatory span loses nothing — the segmenter is
     // a no-op here by construction, not by special-casing.
-    let seg_opts = SegmenterOptions::from_sim(opts);
+    let seg_opts = SegmenterOptions::from_sim(opts).with_store(
+        opts.cache_store
+            .then(|| crate::pipeline::cache_store::StoreKey::new(net, mcm, "sequential", opts)),
+    );
     let provider = |lo: usize, hi: usize| {
         let (cycles, energy) = sequential_span(net, mcm, opts, lo, hi);
         Some(((cycles, energy), cycles))

@@ -67,6 +67,21 @@ pub fn segmenter_from_env() -> crate::scope::SegmenterKind {
     }
 }
 
+/// The `SCOPE_CACHE_STORE` env knob shared by the benches: enable the
+/// process-wide span/cluster cache store (`1`/`true`; default off, like
+/// `SimOptions::cache_store`). Results are bit-identical either way — the
+/// store only changes how much work repeated sweeps re-pay.
+pub fn cache_store_from_env() -> bool {
+    match std::env::var("SCOPE_CACHE_STORE") {
+        Err(_) => false,
+        Ok(v) => match v.as_str() {
+            "1" | "true" => true,
+            "0" | "false" => false,
+            other => panic!("SCOPE_CACHE_STORE expects 0/1/true/false, got {other:?}"),
+        },
+    }
+}
+
 /// Human-friendly seconds.
 pub fn humanize_secs(s: f64) -> String {
     if s >= 1.0 {

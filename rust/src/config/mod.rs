@@ -57,6 +57,15 @@ pub struct SimOptions {
     /// against the shared span memo until the optimum sits strictly
     /// inside. `dp_window` is then the starting width.
     pub dp_window_auto: bool,
+    /// Process-wide keyed span/cluster cache store (config key
+    /// `cache_store`, CLI `--cache-store`, bench env `SCOPE_CACHE_STORE`):
+    /// batched sweeps check their memo tables out of
+    /// [`CacheStore`](crate::pipeline::cache_store::CacheStore) keyed by
+    /// network × geometry × method, so repeated models/sweeps in one
+    /// process pay each distinct span once. Results are bit-identical
+    /// with the store on or off; default off (the `multi` subcommand
+    /// enables it).
+    pub cache_store: bool,
 }
 
 impl Default for SimOptions {
@@ -69,6 +78,7 @@ impl Default for SimOptions {
             segmenter: SegmenterKind::Balanced,
             dp_window: 4,
             dp_window_auto: false,
+            cache_store: false,
         }
     }
 }
@@ -78,12 +88,21 @@ impl Default for SimOptions {
 pub struct Config {
     pub mcm: McmConfig,
     pub sim: SimOptions,
+    /// Multi-model serving set (config key `models = name[:weight],...`):
+    /// the workloads the `multi` subcommand co-schedules, with per-model
+    /// rate weights. Empty unless configured; names are resolved against
+    /// the zoo by `model::workload_set::WorkloadSet::from_pairs`.
+    pub models: Vec<(String, f64)>,
 }
 
 impl Config {
     /// The paper's platform at a package scale, default sim options.
     pub fn paper_default(chiplets: usize) -> Config {
-        Config { mcm: McmConfig::paper_default(chiplets), sim: SimOptions::default() }
+        Config {
+            mcm: McmConfig::paper_default(chiplets),
+            sim: SimOptions::default(),
+            models: Vec::new(),
+        }
     }
 
     /// Apply `key = value` overrides from a config file.
@@ -124,6 +143,8 @@ impl Config {
                     cfg.sim.segmenter =
                         SegmenterKind::parse(value).map_err(|e| anyhow!("{e}"))?
                 }
+                "cache_store" => cfg.sim.cache_store = parse_bool(value)?,
+                "models" => cfg.models = parse_models(value)?,
                 "dp_window" => {
                     if value == "auto" {
                         cfg.sim.dp_window_auto = true;
@@ -173,6 +194,41 @@ pub fn parse_kv(text: &str) -> Result<BTreeMap<String, String>> {
     Ok(out)
 }
 
+/// Parse a `models` list: comma-separated `name[:weight]` entries with
+/// positive finite weights (default 1). Names are *not* resolved here —
+/// the zoo lookup happens in `model::workload_set`, so config parsing
+/// stays independent of the workload registry.
+pub fn parse_models(v: &str) -> Result<Vec<(String, f64)>> {
+    let mut out = Vec::new();
+    for part in v.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (name, weight) = match part.split_once(':') {
+            None => (part, 1.0),
+            Some((n, w)) => {
+                let w: f64 = w
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow!("model weight expects a number, got {w:?}"))?;
+                (n.trim(), w)
+            }
+        };
+        if name.is_empty() {
+            return Err(anyhow!("empty model name in {v:?}"));
+        }
+        if !weight.is_finite() || weight <= 0.0 {
+            return Err(anyhow!("{name}: model weight must be positive, got {weight}"));
+        }
+        out.push((name.to_string(), weight));
+    }
+    if out.is_empty() {
+        return Err(anyhow!("models expects at least one name"));
+    }
+    Ok(out)
+}
+
 fn parse_num(v: &str) -> Result<f64> {
     v.parse::<f64>()
         .map_err(|_| anyhow!("expected a number, got {v:?}"))
@@ -184,6 +240,269 @@ fn parse_bool(v: &str) -> Result<bool> {
         "false" | "0" | "no" => Ok(false),
         _ => Err(anyhow!("expected a bool, got {v:?}")),
     }
+}
+
+/// One knob row of the generated help table: every way a setting can be
+/// supplied (config-file key, CLI flag, bench env var) and where it lands.
+/// The single source of truth the `help` subcommand renders — a test
+/// asserts the table covers every [`SimOptions`] field, so adding a field
+/// without documenting it fails CI.
+#[derive(Clone, Copy, Debug)]
+pub struct KnobDoc {
+    /// `key = value` config-file key (`""` = not settable from the file).
+    pub config_key: &'static str,
+    /// CLI flag (`""` = not exposed on the command line).
+    pub cli_flag: &'static str,
+    /// Bench environment variable (`""` = none).
+    pub bench_env: &'static str,
+    /// The [`SimOptions`] field the knob lands in (`""` = platform /
+    /// experiment-level setting).
+    pub sim_field: &'static str,
+    /// Default value, as the user would write it.
+    pub default_value: &'static str,
+    /// What the knob does (one line).
+    pub doc: &'static str,
+}
+
+/// Every config key, CLI flag, and bench env var — the generated HELP
+/// table (`scope help` prints it through [`knob_table`]).
+pub const KNOBS: &[KnobDoc] = &[
+    KnobDoc {
+        config_key: "chiplets",
+        cli_flag: "--chiplets <C>",
+        bench_env: "",
+        sim_field: "",
+        default_value: "per command",
+        doc: "package scale (paper sweeps 16-256); builds the near-square mesh",
+    },
+    KnobDoc {
+        config_key: "samples",
+        cli_flag: "--samples <M>",
+        bench_env: "",
+        sim_field: "samples",
+        default_value: "64",
+        doc: "pipeline depth m (Equ. 2); batch size every method amortizes over",
+    },
+    KnobDoc {
+        config_key: "distributed_weights",
+        cli_flag: "",
+        bench_env: "",
+        sim_field: "distributed_weights",
+        default_value: "true",
+        doc: "SIII-B distributed weight buffering (Scope's storage scheme)",
+    },
+    KnobDoc {
+        config_key: "overlap_comm",
+        cli_flag: "",
+        bench_env: "",
+        sim_field: "overlap_comm",
+        default_value: "true",
+        doc: "overlap computation and NoP communication (Equ. 7; ablation knob)",
+    },
+    KnobDoc {
+        config_key: "threads",
+        cli_flag: "--threads <N|auto>",
+        bench_env: "SCOPE_THREADS",
+        sim_field: "threads",
+        default_value: "auto",
+        doc: "DSE worker threads (auto = one per core); bit-identical at every count",
+    },
+    KnobDoc {
+        config_key: "segmenter",
+        cli_flag: "--segmenter <S>",
+        bench_env: "SCOPE_SEGMENTER",
+        sim_field: "segmenter",
+        default_value: "balanced",
+        doc: "segment allocator: balanced (paper) or dp (global boundary co-search)",
+    },
+    KnobDoc {
+        config_key: "dp_window",
+        cli_flag: "--dp-window <W>",
+        bench_env: "",
+        sim_field: "dp_window",
+        default_value: "4",
+        doc: "DP boundary window +-W domain steps around the balanced seed (0 = no prune)",
+    },
+    KnobDoc {
+        config_key: "dp_window",
+        cli_flag: "--dp-window auto",
+        bench_env: "",
+        sim_field: "dp_window_auto",
+        default_value: "false",
+        doc: "adaptive windows: re-run doubled whenever the optimum presses the window edge",
+    },
+    KnobDoc {
+        config_key: "cache_store",
+        cli_flag: "--cache-store [true|false]",
+        bench_env: "SCOPE_CACHE_STORE",
+        sim_field: "cache_store",
+        default_value: "false",
+        doc: "process-wide span/cluster store: batched sweeps pay each span once (multi: on)",
+    },
+    KnobDoc {
+        config_key: "models",
+        cli_flag: "--models a[:w],b,..",
+        bench_env: "",
+        sim_field: "",
+        default_value: "serving mix",
+        doc: "multi-model serving set with per-model rate weights (multi subcommand)",
+    },
+    KnobDoc {
+        config_key: "",
+        cli_flag: "--allocator <A>",
+        bench_env: "",
+        sim_field: "",
+        default_value: "dp",
+        doc: "multi: chiplet-split allocator, dp or exhaustive (ground truth)",
+    },
+    KnobDoc {
+        config_key: "",
+        cli_flag: "--quantum <Q>",
+        bench_env: "",
+        sim_field: "",
+        default_value: "auto",
+        doc: "multi: chiplet-share granularity (0/auto = total/16, floor 1)",
+    },
+    KnobDoc {
+        config_key: "",
+        cli_flag: "--method <M>",
+        bench_env: "",
+        sim_field: "",
+        default_value: "scope",
+        doc: "multi: per-model span scheduler (any SV-A method name)",
+    },
+    KnobDoc {
+        config_key: "",
+        cli_flag: "--net / --nets / --scales",
+        bench_env: "",
+        sim_field: "",
+        default_value: "per command",
+        doc: "workload and package-scale selection (validated before scheduling)",
+    },
+    KnobDoc {
+        config_key: "",
+        cli_flag: "--config <file>",
+        bench_env: "",
+        sim_field: "",
+        default_value: "",
+        doc: "key = value config file; keys are the rows of this table",
+    },
+    KnobDoc {
+        config_key: "freq",
+        cli_flag: "",
+        bench_env: "",
+        sim_field: "",
+        default_value: "800e6",
+        doc: "chiplet clock (Hz); Table III platform",
+    },
+    KnobDoc {
+        config_key: "mac_energy_pj",
+        cli_flag: "",
+        bench_env: "",
+        sim_field: "",
+        default_value: "Table III",
+        doc: "energy per MAC (pJ) in the Equ. 4-6 energy model",
+    },
+    KnobDoc {
+        config_key: "sram_pj_per_bit",
+        cli_flag: "",
+        bench_env: "",
+        sim_field: "",
+        default_value: "Table III",
+        doc: "on-chiplet SRAM access energy (pJ/bit)",
+    },
+    KnobDoc {
+        config_key: "weight_buf_per_pe",
+        cli_flag: "",
+        bench_env: "",
+        sim_field: "",
+        default_value: "Table III",
+        doc: "per-PE weight buffer (bytes); sets package weight capacity",
+    },
+    KnobDoc {
+        config_key: "nop.bw",
+        cli_flag: "",
+        bench_env: "",
+        sim_field: "",
+        default_value: "100e9",
+        doc: "NoP bandwidth per chiplet (B/s); the sensitivity sweep's knob",
+    },
+    KnobDoc {
+        config_key: "nop.pj_per_bit",
+        cli_flag: "",
+        bench_env: "",
+        sim_field: "",
+        default_value: "Table III",
+        doc: "NoP energy per bit-hop (pJ)",
+    },
+    KnobDoc {
+        config_key: "nop.hop_cycles",
+        cli_flag: "",
+        bench_env: "",
+        sim_field: "",
+        default_value: "Table III",
+        doc: "NoP per-hop latency (cycles)",
+    },
+    KnobDoc {
+        config_key: "dram.bw",
+        cli_flag: "",
+        bench_env: "",
+        sim_field: "",
+        default_value: "100e9",
+        doc: "total DRAM bandwidth (B/s)",
+    },
+    KnobDoc {
+        config_key: "dram.efficiency",
+        cli_flag: "",
+        bench_env: "",
+        sim_field: "",
+        default_value: "0.85",
+        doc: "DRAM channel efficiency factor",
+    },
+    KnobDoc {
+        config_key: "dram.pj_per_bit",
+        cli_flag: "",
+        bench_env: "",
+        sim_field: "",
+        default_value: "8.0",
+        doc: "DRAM access energy (pJ/bit)",
+    },
+    KnobDoc {
+        config_key: "",
+        cli_flag: "",
+        bench_env: "SCOPE_BENCH_FAST",
+        sim_field: "",
+        default_value: "unset",
+        doc: "benches: shrink the setting grid for smoke runs",
+    },
+];
+
+/// Render [`KNOBS`] as the help table (`scope help` appends it to the
+/// usage text). Generated from code so the docs cannot drift from the
+/// parser.
+pub fn knob_table() -> crate::util::table::Table {
+    let dash = |s: &'static str| {
+        if s.is_empty() {
+            "-".to_string()
+        } else {
+            s.to_string()
+        }
+    };
+    let mut t = crate::util::table::Table::new(
+        "knobs — config keys, CLI flags, bench env vars (generated from config::KNOBS)",
+        &["config key", "CLI flag", "bench env", "SimOptions field", "default", "what it does"],
+    );
+    for k in KNOBS {
+        t.row(vec![
+            dash(k.config_key),
+            dash(k.cli_flag),
+            dash(k.bench_env),
+            dash(k.sim_field),
+            dash(k.default_value),
+            k.doc.to_string(),
+        ]);
+    }
+    t
 }
 
 #[cfg(test)]
@@ -254,6 +573,72 @@ mod tests {
     fn unknown_key_rejected() {
         let kv = parse_kv("nonsense = 1\n").unwrap();
         assert!(Config::from_kv(&kv, 16).is_err());
+    }
+
+    #[test]
+    fn cache_store_key_parses() {
+        let cfg = Config::from_kv(&parse_kv("cache_store = true\n").unwrap(), 16).unwrap();
+        assert!(cfg.sim.cache_store);
+        let off = Config::from_kv(&parse_kv("cache_store = false\n").unwrap(), 16).unwrap();
+        assert!(!off.sim.cache_store);
+        assert!(!SimOptions::default().cache_store, "off by default");
+        assert!(Config::from_kv(&parse_kv("cache_store = maybe\n").unwrap(), 16).is_err());
+    }
+
+    #[test]
+    fn models_key_parses_names_and_weights() {
+        let cfg = Config::from_kv(
+            &parse_kv("models = alexnet, googlenet:2, resnet50_dag:0.5\n").unwrap(),
+            16,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.models,
+            vec![
+                ("alexnet".to_string(), 1.0),
+                ("googlenet".to_string(), 2.0),
+                ("resnet50_dag".to_string(), 0.5),
+            ]
+        );
+        assert!(Config::paper_default(16).models.is_empty());
+        // bad weights and empty lists error out
+        assert!(parse_models("alexnet:0").is_err());
+        assert!(parse_models("alexnet:-1").is_err());
+        assert!(parse_models("alexnet:lots").is_err());
+        assert!(parse_models("").is_err());
+        assert!(parse_models(":2").is_err());
+    }
+
+    #[test]
+    fn knob_table_covers_every_sim_options_field() {
+        // Extract the field names from the Debug rendering (kept in sync
+        // with the struct by the compiler), and require a KNOBS row for
+        // each: adding a SimOptions field without documenting it fails
+        // here.
+        let dbg = format!("{:?}", SimOptions::default());
+        let inner = dbg
+            .trim_start_matches("SimOptions {")
+            .trim_end_matches('}')
+            .trim();
+        let fields: Vec<&str> = inner
+            .split(',')
+            .filter_map(|chunk| chunk.split(':').next())
+            .map(str::trim)
+            .filter(|name| !name.is_empty())
+            .collect();
+        assert!(fields.len() >= 8, "Debug parse broke: {fields:?}");
+        for field in fields {
+            assert!(
+                KNOBS.iter().any(|k| k.sim_field == field),
+                "SimOptions field {field:?} has no KNOBS row"
+            );
+        }
+        // and the documented rows point at real fields / known keys
+        let rendered = knob_table().render();
+        for key in ["threads", "segmenter", "dp_window", "cache_store", "models", "nop.bw"] {
+            assert!(rendered.contains(key), "knob table must document {key}");
+        }
+        assert!(rendered.contains("SCOPE_THREADS") && rendered.contains("SCOPE_CACHE_STORE"));
     }
 
     #[test]

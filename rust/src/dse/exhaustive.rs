@@ -404,6 +404,49 @@ where
     best
 }
 
+/// Visit every way to give each of `models` workloads one chiplet share
+/// drawn from `sizes` (strictly ascending candidate share counts), with
+/// the shares summing to at most `budget` — the multi-model chiplet-split
+/// ground truth [`scope::multi_model`](crate::scope::multi_model)
+/// validates its weighted-throughput DP against. Splits are visited in
+/// lexicographic order (model 0's share varies slowest, each share
+/// ascending), so "first wins" tie-breaking is deterministic. The
+/// callback returns `false` to stop early; the function returns `false`
+/// iff it was stopped.
+pub fn for_each_share_split<F>(models: usize, sizes: &[usize], budget: usize, f: &mut F) -> bool
+where
+    F: FnMut(&[usize]) -> bool,
+{
+    fn rec<F: FnMut(&[usize]) -> bool>(
+        cur: &mut Vec<usize>,
+        models: usize,
+        sizes: &[usize],
+        left: usize,
+        f: &mut F,
+    ) -> bool {
+        if cur.len() == models {
+            return f(cur);
+        }
+        for &s in sizes {
+            if s > left {
+                break; // ascending sizes: nothing further fits
+            }
+            cur.push(s);
+            let keep_going = rec(cur, models, sizes, left - s, f);
+            cur.pop();
+            if !keep_going {
+                return false;
+            }
+        }
+        true
+    }
+    if models == 0 {
+        return true;
+    }
+    debug_assert!(sizes.windows(2).all(|w| w[0] < w[1]), "sizes must ascend");
+    rec(&mut Vec::with_capacity(models), models, sizes, budget, f)
+}
+
 impl ExhaustiveResult {
     /// Fraction of valid schedules strictly better than `latency`
     /// (the paper's "top 0.05%" is `rank_of(scope_latency) ≤ 0.0005`).
@@ -689,5 +732,38 @@ mod tests {
         assert_eq!(h.counts.len(), 8);
         assert!(h.proportions().iter().all(|&p| p == 0.0));
         assert_eq!(h.frac_below(0.5), 0.0);
+    }
+
+    #[test]
+    fn share_splits_enumerate_lexicographically_within_budget() {
+        let mut seen: Vec<Vec<usize>> = Vec::new();
+        let done = for_each_share_split(2, &[1, 2, 3], 4, &mut |split| {
+            seen.push(split.to_vec());
+            true
+        });
+        assert!(done);
+        assert_eq!(
+            seen,
+            vec![
+                vec![1, 1],
+                vec![1, 2],
+                vec![1, 3],
+                vec![2, 1],
+                vec![2, 2],
+                vec![3, 1],
+            ]
+        );
+        // early stop propagates
+        let mut count = 0usize;
+        let done = for_each_share_split(2, &[1, 2, 3], 4, &mut |_| {
+            count += 1;
+            count < 3
+        });
+        assert!(!done);
+        assert_eq!(count, 3);
+        // degenerate cases: zero models is vacuously complete; a budget
+        // below the smallest share visits nothing
+        assert!(for_each_share_split(0, &[1, 2], 4, &mut |_| panic!("no splits")));
+        assert!(for_each_share_split(2, &[3, 4], 5, &mut |_| panic!("cannot fit")));
     }
 }

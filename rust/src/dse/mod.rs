@@ -1,6 +1,8 @@
 //! DSE validation: exact search-space counting (Equ. 8–9), the exhaustive
-//! sweep used by the Fig. 8 comparison, and the deterministic parallel
-//! executor both sweeps (and Algorithm 1) fan candidates across.
+//! sweeps — the Fig. 8 schedule enumeration, the boundary/cut-set
+//! segmentation ground truths, and the multi-model chiplet-split
+//! enumeration — and the deterministic parallel executor every sweep (and
+//! Algorithm 1) fans candidates across.
 
 pub mod exhaustive;
 pub mod parallel;
@@ -8,7 +10,7 @@ pub mod space;
 
 pub use exhaustive::{
     exhaustive_cut_segmentations, exhaustive_segment, exhaustive_segmentations,
-    ExhaustiveOptions, ExhaustiveResult, PartitionSpace,
+    for_each_share_split, ExhaustiveOptions, ExhaustiveResult, PartitionSpace,
 };
 pub use parallel::{par_map, resolve_threads};
 pub use space::{q_cluster_region, q_configs, q_total, scope_reduced_space};

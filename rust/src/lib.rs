@@ -11,12 +11,56 @@
 //!   at build time.
 //! * **Layer 1** — `python/compile/kernels/`: the Pallas PE-array kernel.
 //!
-//! See `DESIGN.md` for the system inventory and the per-experiment index.
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and the root `README.md` for the quickstart and figure-regeneration
+//! recipes.
+//!
+//! ## Paper map
+//!
+//! | paper | code |
+//! |---|---|
+//! | Equ. 1–3, 7 (pipeline timeline) | [`pipeline::timeline`] |
+//! | Equ. 4–6 (compute / NoP / DRAM / energy `F`) | [`cost`] |
+//! | §III-B distributed weight buffering | [`storage`] |
+//! | Algorithm 1 (per-segment search) | [`scope::search`], [`scope::cmt`], [`scope::partition`], [`scope::region_alloc`] |
+//! | §V-A identical segment allocator | [`scope::segment_dp`] (+ [`scope::dag_segment`] for DAG workloads) |
+//! | §V-A baselines (sequential / full / segmented) | [`baselines`] |
+//! | Equ. 8–9 (search-space counts), Fig. 8 sweep | [`dse`] |
+//! | Fig. 7–10 tables | [`report`] + `benches/` |
+//! | Table III platform | [`arch`] |
+//! | multi-model serving (SCAR-style extension) | [`scope::multi_model`], [`model::workload_set`] |
+//!
+//! ## Sixty-second tour
+//!
+//! Schedule a workload on a package and compare all four §V-A methods
+//! (the `examples/quickstart.rs` walkthrough, doc-tested here):
+//!
+//! ```
+//! use scope::arch::McmConfig;
+//! use scope::baselines::run_all;
+//! use scope::config::SimOptions;
+//! use scope::model::zoo;
+//!
+//! // a zoo workload and the Table III platform at 8 chiplets
+//! let net = zoo::scopenet();
+//! let mcm = McmConfig::paper_default(8);
+//! let opts = SimOptions { samples: 4, ..Default::default() };
+//! // sequential, full_pipeline, segmented, scope — same cost model
+//! let results = run_all(&net, &mcm, &opts);
+//! assert_eq!(results.len(), 4);
+//! let scope_result = results.last().unwrap();
+//! assert!(scope_result.eval.is_valid());
+//! assert!(scope_result.throughput() > 0.0);
+//! // the merged pipeline emits a real schedule: clusters over regions
+//! assert!(scope_result.schedule.as_ref().unwrap().total_clusters() >= 1);
+//! ```
 //!
 //! The DSE sweeps run on a deterministic parallel engine
 //! ([`dse::parallel`]) with memoized cluster evaluation
 //! ([`pipeline::eval_cache`]); `SimOptions::threads` controls the worker
-//! count and the result is bit-identical at every setting.
+//! count and the result is bit-identical at every setting. Batched runs
+//! (repeated sweeps, multi-model serving sets) share their memo tables
+//! through the process-wide keyed [`pipeline::cache_store`].
 
 // Hot-path cost functions take the full (layer, partition, region, mesh)
 // geometry as parameters by design.

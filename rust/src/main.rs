@@ -9,19 +9,21 @@
 //!   exhaustive  exhaustive-vs-search validation          [Fig. 8]
 //!   casestudy   balance + energy breakdown               [Fig. 10]
 //!   space       Equ. 8–9 search-space counts
+//!   multi       co-schedule several models on one package [SCAR-style]
 //!   pipeline    run the functional AOT pipeline (PJRT)   [E2E]
 
 use anyhow::{anyhow, bail, Result};
 
 use scope::arch::McmConfig;
-use scope::baselines::run_all;
-use scope::config::{Config, SimOptions};
+use scope::baselines::{run_all, METHOD_NAMES};
+use scope::config::{knob_table, Config, SimOptions};
 use scope::coordinator::{run_pipeline, PipelineMode};
 use scope::dse::{ExhaustiveOptions, PartitionSpace};
 use scope::model::zoo;
+use scope::model::WorkloadSet;
 use scope::report::figures;
 use scope::runtime::Manifest;
-use scope::scope::{schedule_scope, SegmenterKind};
+use scope::scope::{co_schedule, schedule_scope, AllocatorKind, MultiOptions, SegmenterKind};
 use scope::util::cli::Args;
 use scope::util::table::{eng, f3, Table};
 
@@ -40,6 +42,11 @@ SUBCOMMANDS
   exhaustive  [--net alexnet] [--chiplets 16] [--full-partitions] [--max-visits N]
   casestudy   [--net resnet152] [--chiplets 256] [--samples M]
   space       [--net resnet152] [--chiplets 256]
+  multi       [--models a[:w],b,..] [--chiplets C] [--allocator dp|exhaustive]
+              [--method scope] [--quantum Q]   co-schedule a serving set on
+              one package vs the time-multiplexed sequential baseline
+              (default set: resnet50_dag:1 + googlenet:2 + alexnet:4;
+              the shared span/cluster cache store is on here by default)
   pipeline    [--mode merged|isp|single|all] [--samples N] [--artifacts DIR]
   sensitivity [--net resnet50] [--chiplets 256] [--knob nop|dram]
   help
@@ -55,6 +62,11 @@ COMMON FLAGS
                     seed (default 4; 0 = no prune, small nets only;
                     'auto' = re-widen whenever the optimum lands on the
                     window edge).
+  --cache-store     process-wide keyed span/cluster cache: batched sweeps
+                    pay each distinct span once (bit-identical results).
+
+`scope help` appends the full generated knob table (every config key,
+CLI flag, and bench env var).
 
 NETWORKS: alexnet vgg16 darknet19 resnet18/34/50/101/152 scopenet
           googlenet resnet18_dag resnet50_dag   (true multi-branch DAGs:
@@ -70,12 +82,15 @@ fn net_flag(args: &Args, default: &str) -> Result<String> {
     Ok(name)
 }
 
-fn sim_options(args: &Args, chiplets: usize) -> Result<(McmConfig, SimOptions)> {
-    let cfg = match args.str_or("config", "").as_str() {
+/// Load the config file (or the paper defaults) and fold the shared CLI
+/// flags into `cfg.sim`. The full [`Config`] comes back so subcommands
+/// can also read experiment-level keys (`models`).
+fn load_config(args: &Args, chiplets: usize) -> Result<Config> {
+    let mut cfg = match args.str_or("config", "").as_str() {
         "" => Config::paper_default(chiplets),
         path => Config::load_file(std::path::Path::new(path), chiplets)?,
     };
-    let mut sim = cfg.sim;
+    let sim = &mut cfg.sim;
     sim.samples = args.usize_or("samples", sim.samples as usize)? as u64;
     sim.threads = args.threads_or(sim.threads)?;
     // validated up front: unknown modes abort before any scheduling runs
@@ -91,7 +106,18 @@ fn sim_options(args: &Args, chiplets: usize) -> Result<(McmConfig, SimOptions)> 
             sim.dp_window_auto = false;
         }
     }
-    Ok((cfg.mcm, sim))
+    match args.str_or("cache-store", "").as_str() {
+        "" => {}
+        "true" | "1" => sim.cache_store = true,
+        "false" | "0" => sim.cache_store = false,
+        other => bail!("--cache-store expects true/false, got {other:?}"),
+    }
+    Ok(cfg)
+}
+
+fn sim_options(args: &Args, chiplets: usize) -> Result<(McmConfig, SimOptions)> {
+    let cfg = load_config(args, chiplets)?;
+    Ok((cfg.mcm, cfg.sim))
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
@@ -175,10 +201,11 @@ fn cmd_search(args: &Args) -> Result<()> {
                     (SegmenterKind::Balanced, _) => "balanced".to_string(),
                 };
                 println!(
-                    "segmenter: {kind} | span cache: {} hits / {} misses ({:.0}% hit rate)",
+                    "segmenter: {kind} | span cache: {} hits / {} misses ({:.0}% hit rate, {} cross-sweep)",
                     rep.stats.hits,
                     rep.stats.misses,
                     rep.stats.hit_rate() * 100.0,
+                    rep.stats.cross_hits,
                 );
             }
         }
@@ -296,6 +323,71 @@ fn cmd_space(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_multi(args: &Args) -> Result<()> {
+    let chiplets = args.usize_or("chiplets", 64)?;
+    let cfg = load_config(args, chiplets)?;
+    let mut sim = cfg.sim;
+    // Batched by construction — the shared store defaults ON here, but an
+    // explicit opt-out wins, whether it came from the CLI flag or a
+    // `cache_store = false` line in the config file.
+    let cli_set = !args.str_or("cache-store", "").is_empty();
+    let cfg_set = match args.str_or("config", "").as_str() {
+        "" => false,
+        path => {
+            // load_config already parsed this file successfully
+            let text = std::fs::read_to_string(path)?;
+            scope::config::parse_kv(&text)?.contains_key("cache_store")
+        }
+    };
+    if !cli_set && !cfg_set {
+        sim.cache_store = true;
+    }
+    let spec = args.str_or("models", "");
+    let set = if !spec.is_empty() {
+        WorkloadSet::parse(&spec)?
+    } else if !cfg.models.is_empty() {
+        WorkloadSet::from_pairs(&cfg.models)?
+    } else {
+        WorkloadSet::serving_mix()
+    };
+    let mopts = MultiOptions {
+        allocator: AllocatorKind::parse(&args.str_or("allocator", AllocatorKind::Dp.name()))
+            .map_err(|e| anyhow!("--allocator: {e}"))?,
+        method: args.str_choice_or("method", "scope", METHOD_NAMES)?,
+        share_quantum: args.usize_or("quantum", 0)?,
+    };
+    println!("serving set: {} on {} chiplets\n", set.label(), cfg.mcm.chiplets);
+    let r = co_schedule(&set, &cfg.mcm, &sim, &mopts);
+    println!("{}", figures::multi_model_table(&r)?);
+    println!(
+        "co-scheduled: {} mixes/s ({} samples/s aggregate) | time-multiplexed sequential: {} mixes/s ({} samples/s)",
+        f3(r.rate),
+        f3(r.total_throughput),
+        f3(r.tm_rate),
+        f3(r.tm_total),
+    );
+    match r.speedup_vs_tm() {
+        Some(x) => println!(
+            "co-schedule vs time-multiplexed: {:.3}x | allocator: {} ({} (model, share) evals)",
+            x,
+            r.allocator.name(),
+            r.evals
+        ),
+        None => println!(
+            "allocator: {} ({} (model, share) evals); baseline infeasible on the full package",
+            r.allocator.name(),
+            r.evals
+        ),
+    }
+    if let Some(s) = &r.store {
+        println!(
+            "cache store: {} span sweeps ({} reused, {} spans carried) | shared cluster cache: {} hits / {} misses",
+            s.span_checkouts, s.span_reuses, s.spans_carried, s.cluster_hits, s.cluster_misses,
+        );
+    }
+    Ok(())
+}
+
 fn cmd_pipeline(args: &Args) -> Result<()> {
     let dir = match args.str_or("artifacts", "").as_str() {
         "" => Manifest::default_dir(),
@@ -354,10 +446,13 @@ fn main() -> Result<()> {
         Some("exhaustive") => cmd_exhaustive(&args),
         Some("casestudy") => cmd_casestudy(&args),
         Some("space") => cmd_space(&args),
+        Some("multi") => cmd_multi(&args),
         Some("pipeline") => cmd_pipeline(&args),
         Some("sensitivity") => cmd_sensitivity(&args),
         Some("help") | None => {
             print!("{HELP}");
+            println!();
+            println!("{}", knob_table());
             Ok(())
         }
         Some(other) => Err(anyhow!("unknown subcommand {other:?}; try `scope help`")),

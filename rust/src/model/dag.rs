@@ -100,6 +100,25 @@ pub struct DagNetwork {
 }
 
 /// Incremental topological builder for [`DagNetwork`].
+///
+/// ```
+/// use scope::model::dag::DagNetwork;
+/// use scope::model::Layer;
+///
+/// // stem → {a, b} → concat → head: the branches hide every boundary
+/// // between them, so the only clean cuts are after the stem and after
+/// // the concat.
+/// let mut g = DagNetwork::builder("fork", (8, 8, 8));
+/// let stem = g.node(Layer::conv("stem", 8, 8, 8, 16, 3, 1, 1), &[]);
+/// let a = g.node(Layer::conv("a", 8, 8, 16, 8, 1, 1, 0), &[stem]);
+/// let b = g.node(Layer::conv("b", 8, 8, 16, 24, 3, 1, 1), &[stem]);
+/// let cat = g.node(Layer::concat("cat", 8, 8, 32), &[a, b]);
+/// g.node(Layer::conv("head", 8, 8, 32, 32, 3, 1, 1), &[cat]);
+/// let net = g.build().to_network();
+/// let info = net.dag.as_ref().unwrap();
+/// assert_eq!(info.cut_positions(), vec![1, 4]);
+/// assert!(!info.is_cut(2), "mid-branch boundaries are illegal");
+/// ```
 pub struct DagBuilder {
     name: String,
     input: (u64, u64, u64),

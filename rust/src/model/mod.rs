@@ -1,16 +1,22 @@
-//! NN model IR: layers, the chain/DAG graphs, and the workload zoo.
+//! NN model IR: layers, the chain/DAG graphs, the workload zoo, and the
+//! multi-model serving sets.
 //!
-//! `layer` defines the per-layer workload math; `dag` holds the true
-//! multi-branch graph type plus its condensation (clean-cut) pass; `graph`
-//! is the linearized, schedulable view every scheduler consumes (with an
-//! optional DAG sidecar carrying the valid-boundary set); `zoo` builds the
-//! evaluation workloads, both chain and multi-branch.
+//! `layer` defines the per-layer workload math (the MAC/weight/activation
+//! volumes Equ. 4–6 consume); `dag` holds the true multi-branch graph type
+//! plus its condensation (clean-cut) pass; `graph` is the linearized,
+//! schedulable view every scheduler consumes (with an optional DAG sidecar
+//! carrying the valid-boundary set); `zoo` builds the evaluation workloads
+//! (the paper's Fig. 7 chains plus the multi-branch graphs);
+//! `workload_set` groups several networks with rate weights for SCAR-style
+//! multi-model co-scheduling.
 
 pub mod dag;
 pub mod graph;
 pub mod layer;
+pub mod workload_set;
 pub mod zoo;
 
 pub use dag::{CutPoint, DagInfo, DagNetwork};
 pub use graph::Network;
 pub use layer::{Layer, LayerKind};
+pub use workload_set::{ModelSpec, WorkloadSet};

@@ -1,0 +1,135 @@
+//! Multi-model workload sets — the serving-scale input of the SCAR-style
+//! co-scheduler ([`scope::multi_model`](crate::scope::multi_model)).
+//!
+//! Real MCM deployments serve several networks from one package; a
+//! [`WorkloadSet`] names the models and their *rate weights*: the request
+//! mix contains `weight` samples of each model per mix unit, so a set
+//! `alexnet:4, googlenet:2, resnet50_dag:1` serves four AlexNet samples
+//! for every ResNet-50 sample. The co-scheduler maximizes the sustainable
+//! mix rate; the weights are what make the objective non-degenerate
+//! (without them, all capacity would flow to the cheapest model).
+//!
+//! Sets come from the `models` config key / `--models` CLI flag
+//! (`name[:weight],...` — parsed by
+//! [`config::parse_models`](crate::config::parse_models)) or from the
+//! built-in mixed chain+DAG [`WorkloadSet::serving_mix`].
+
+use anyhow::{anyhow, Result};
+
+use super::graph::Network;
+use super::zoo;
+use crate::config::parse_models;
+
+/// One model of a serving set: the network plus its rate weight.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub net: Network,
+    /// Samples of this model per mix unit (must be positive and finite).
+    pub weight: f64,
+}
+
+/// A set of networks co-served from one package.
+#[derive(Clone, Debug, Default)]
+pub struct WorkloadSet {
+    pub models: Vec<ModelSpec>,
+}
+
+impl WorkloadSet {
+    /// Build from `(zoo name, weight)` pairs (the parsed `models` config
+    /// key). Unknown names list the zoo; non-positive weights error.
+    pub fn from_pairs(pairs: &[(String, f64)]) -> Result<WorkloadSet> {
+        let mut models = Vec::with_capacity(pairs.len());
+        for (name, weight) in pairs {
+            let net = zoo::by_name(name).ok_or_else(|| {
+                anyhow!("unknown network {name:?}; options: {}", zoo::NAMES.join(" "))
+            })?;
+            if !weight.is_finite() || *weight <= 0.0 {
+                return Err(anyhow!("{name}: weight must be positive, got {weight}"));
+            }
+            models.push(ModelSpec { net, weight: *weight });
+        }
+        if models.is_empty() {
+            return Err(anyhow!("workload set needs at least one model"));
+        }
+        Ok(WorkloadSet { models })
+    }
+
+    /// Parse a `--models` spec: `name[:weight],...` (weight defaults to 1).
+    pub fn parse(spec: &str) -> Result<WorkloadSet> {
+        WorkloadSet::from_pairs(&parse_models(spec)?)
+    }
+
+    /// The built-in mixed chain+DAG serving set (the `multi` subcommand's
+    /// default): a heavy true-residual DAG, a branchy Inception graph, and
+    /// a light chain, at 1:2:4 request rates.
+    pub fn serving_mix() -> WorkloadSet {
+        WorkloadSet {
+            models: vec![
+                ModelSpec { net: zoo::resnet50_dag(), weight: 1.0 },
+                ModelSpec { net: zoo::googlenet(), weight: 2.0 },
+                ModelSpec { net: zoo::alexnet(), weight: 4.0 },
+            ],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    /// Samples per mix unit, summed over the set.
+    pub fn total_weight(&self) -> f64 {
+        self.models.iter().map(|m| m.weight).sum()
+    }
+
+    /// Display label: `name:w + name:w + ...`.
+    pub fn label(&self) -> String {
+        self.models
+            .iter()
+            .map(|m| format!("{}:{}", m.net.name, m.weight))
+            .collect::<Vec<_>>()
+            .join(" + ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_names_and_weights() {
+        let set = WorkloadSet::parse("alexnet, googlenet:2").unwrap();
+        assert_eq!(set.len(), 2);
+        assert_eq!(set.models[0].net.name, "alexnet");
+        assert_eq!(set.models[0].weight, 1.0);
+        assert_eq!(set.models[1].weight, 2.0);
+        assert_eq!(set.total_weight(), 3.0);
+        assert_eq!(set.label(), "alexnet:1 + googlenet:2");
+        assert!(!set.is_empty());
+    }
+
+    #[test]
+    fn rejects_unknown_names_and_bad_weights() {
+        let err = WorkloadSet::parse("nosuchnet").unwrap_err().to_string();
+        assert!(err.contains("alexnet"), "must list the zoo: {err}");
+        assert!(WorkloadSet::parse("alexnet:0").is_err());
+        assert!(WorkloadSet::parse("").is_err());
+        assert!(WorkloadSet::from_pairs(&[]).is_err());
+        assert!(WorkloadSet::from_pairs(&[("alexnet".into(), f64::NAN)]).is_err());
+    }
+
+    #[test]
+    fn serving_mix_is_mixed_chain_and_dag() {
+        let mix = WorkloadSet::serving_mix();
+        assert_eq!(mix.len(), 3);
+        assert!(mix.models.iter().any(|m| m.net.dag.is_some()), "has a DAG");
+        assert!(mix.models.iter().any(|m| m.net.dag.is_none()), "has a chain");
+        assert_eq!(mix.total_weight(), 7.0);
+        for m in &mix.models {
+            assert!(m.net.validate().is_ok(), "{}", m.net.name);
+        }
+    }
+}

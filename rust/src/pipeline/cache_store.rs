@@ -1,0 +1,302 @@
+//! Process-wide keyed store for the DSE's memo tables — the batched-sweep
+//! redundancy killer.
+//!
+//! The span memo ([`SpanMemo`]) and the cluster cache ([`EvalCache`]) were
+//! born per-sweep: every `schedule_*` call started cold, so a batched run
+//! (the same network swept twice, a multi-model co-schedule evaluating one
+//! model at many chiplet shares, repeated models in a serving set) re-paid
+//! every span it had already scheduled. This store hoists both tables
+//! behind a process-wide key so each distinct span/cluster is costed once
+//! per *process*, not once per sweep.
+//!
+//! **Keying.** A [`StoreKey`] fingerprints everything a memoized value
+//! depends on beyond its own `(lo, hi)` / cluster key: the network
+//! structure, the platform geometry ([`McmConfig`]), the scheduling method
+//! (including its search knobs), and the evaluation-relevant
+//! [`SimOptions`] fields (`samples`, `distributed_weights`,
+//! `overlap_comm`). Thread count is deliberately *excluded* — the engine
+//! is bit-identical at every thread count, which is precisely what makes
+//! cross-thread-count reuse sound. Fingerprints hash the `Debug`
+//! rendering with the in-crate Fx hasher; they are stable within a
+//! process and never persisted.
+//!
+//! **Correctness.** Memoized values are exact results of pure functions of
+//! their key under the `StoreKey` context, so a warm sweep returns
+//! bit-identical schedules, latencies, and energies to a cold one — the
+//! acceptance bar asserted by `tests/multi_model.rs` (batched vs
+//! one-process-per-model at 1/2/8 threads).
+//!
+//! **Concurrency.** Span memos use a checkout/checkin discipline: a sweep
+//! removes its memo from the store, mutates it privately, and re-inserts
+//! it. Two concurrent sweeps under one key each proceed with their own
+//! memo (no sharing mid-flight, results still exact) and merge on checkin
+//! ([`SpanMemo::absorb`] — colliding entries are equal by purity).
+//! Cluster caches are internally synchronized and shared by `Arc`.
+//!
+//! Enabled by `SimOptions::cache_store` (config key `cache_store`, CLI
+//! `--cache-store`, bench env `SCOPE_CACHE_STORE`); the `multi`
+//! subcommand turns it on by default. Off, every sweep keeps its classic
+//! private tables.
+
+use std::any::Any;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::arch::McmConfig;
+use crate::config::SimOptions;
+use crate::model::Network;
+use crate::scope::segment_dp::SpanMemo;
+use crate::util::fxhash::{FxHashMap, FxHasher};
+
+use super::eval_cache::EvalCache;
+
+/// Fingerprint a string with the in-crate Fx hasher (process-local — never
+/// persisted, not stable across platforms or versions).
+pub fn fingerprint_str(s: &str) -> u64 {
+    use std::hash::Hasher;
+    let mut h = FxHasher::default();
+    h.write(s.as_bytes());
+    h.finish()
+}
+
+/// Fingerprint any `Debug` rendering — networks, platform configs, knob
+/// structs. `Debug` covers every field, so two values with equal
+/// fingerprints are (collision aside) structurally identical.
+pub fn fingerprint_debug<T: std::fmt::Debug>(v: &T) -> u64 {
+    fingerprint_str(&format!("{v:?}"))
+}
+
+/// The store key: network × platform geometry × method × sim options.
+/// `Copy` so it travels inside `SegmenterOptions`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct StoreKey {
+    /// Network structure fingerprint (name, input, layers, DAG sidecar).
+    pub net: u64,
+    /// Platform fingerprint (chiplet count, mesh, cost-model parameters).
+    pub geom: u64,
+    /// Method label fingerprint — include every scheduler knob that can
+    /// change span values (e.g. `"scope/SearchOptions { .. }"`).
+    pub method: u64,
+    /// Evaluation-relevant `SimOptions` fields (threads excluded: results
+    /// are bit-identical at every thread count).
+    pub sim: u64,
+}
+
+impl StoreKey {
+    pub fn new(net: &Network, mcm: &McmConfig, method: &str, sim: &SimOptions) -> StoreKey {
+        StoreKey {
+            net: fingerprint_debug(net),
+            geom: fingerprint_debug(mcm),
+            method: fingerprint_str(method),
+            sim: fingerprint_str(&format!(
+                "m={} dw={} ov={}",
+                sim.samples, sim.distributed_weights, sim.overlap_comm
+            )),
+        }
+    }
+}
+
+/// Aggregate counters of the store (cumulative over the process life).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreSnapshot {
+    /// Span-memo checkouts (one per store-backed segmenter sweep).
+    pub span_checkouts: u64,
+    /// Checkouts that found a previously filled memo under their key.
+    pub span_reuses: u64,
+    /// Cached spans carried into reusing sweeps, summed over checkouts.
+    pub spans_carried: u64,
+    /// Distinct span-memo keys currently stored.
+    pub span_slots: usize,
+    /// Distinct shared cluster caches currently stored.
+    pub cluster_slots: usize,
+    /// Cluster evaluations served from shared caches.
+    pub cluster_hits: u64,
+    /// Cluster evaluations that ran the cost model in shared caches.
+    pub cluster_misses: u64,
+}
+
+/// The process-wide store. Usually accessed through [`CacheStore::global`];
+/// fresh instances exist for unit tests.
+#[derive(Default)]
+pub struct CacheStore {
+    spans: Mutex<FxHashMap<StoreKey, Box<dyn Any + Send>>>,
+    clusters: Mutex<FxHashMap<StoreKey, Arc<EvalCache>>>,
+    checkouts: AtomicU64,
+    reuses: AtomicU64,
+    carried: AtomicU64,
+}
+
+impl CacheStore {
+    pub fn new() -> CacheStore {
+        CacheStore::default()
+    }
+
+    /// The one store every store-backed sweep in the process shares.
+    pub fn global() -> &'static CacheStore {
+        static STORE: OnceLock<CacheStore> = OnceLock::new();
+        STORE.get_or_init(CacheStore::new)
+    }
+
+    /// Check the span memo for `key` out of the store (a fresh one on the
+    /// first visit), run `f` against it, and check it back in. The memo's
+    /// epoch is advanced first, so hits on carried entries are reported as
+    /// [`cross_hits`](crate::scope::segment_dp::SpanStats::cross_hits).
+    pub fn with_span_memo<S, R, F>(&self, key: StoreKey, f: F) -> R
+    where
+        S: Clone + Send + 'static,
+        F: FnOnce(&mut SpanMemo<S>) -> R,
+    {
+        let mut memo: SpanMemo<S> = {
+            let mut map = self.spans.lock().expect("cache store poisoned");
+            match map.remove(&key).and_then(|b| b.downcast::<SpanMemo<S>>().ok()) {
+                Some(boxed) => *boxed,
+                None => SpanMemo::new(),
+            }
+        };
+        self.checkouts.fetch_add(1, Ordering::Relaxed);
+        if !memo.is_empty() {
+            self.reuses.fetch_add(1, Ordering::Relaxed);
+            self.carried.fetch_add(memo.len() as u64, Ordering::Relaxed);
+        }
+        memo.begin_epoch();
+        let out = f(&mut memo);
+        let mut map = self.spans.lock().expect("cache store poisoned");
+        // A concurrent same-key sweep may have checked its memo in while
+        // ours was out: merge (entries are pure → colliding values equal).
+        if let Some(other) = map
+            .remove(&key)
+            .and_then(|b| b.downcast::<SpanMemo<S>>().ok())
+        {
+            memo.absorb(*other);
+        }
+        map.insert(key, Box::new(memo));
+        out
+    }
+
+    /// The shared cluster cache for `key` (created on first use).
+    /// [`EvalCache`] is internally synchronized, so callers hold the `Arc`
+    /// for as long as they like.
+    pub fn cluster_cache(&self, key: StoreKey) -> Arc<EvalCache> {
+        self.clusters
+            .lock()
+            .expect("cache store poisoned")
+            .entry(key)
+            .or_insert_with(|| Arc::new(EvalCache::new()))
+            .clone()
+    }
+
+    pub fn snapshot(&self) -> StoreSnapshot {
+        let span_slots = self.spans.lock().expect("cache store poisoned").len();
+        let mut cluster_slots = 0usize;
+        let mut cluster_hits = 0u64;
+        let mut cluster_misses = 0u64;
+        for cache in self.clusters.lock().expect("cache store poisoned").values() {
+            cluster_slots += 1;
+            cluster_hits += cache.hits();
+            cluster_misses += cache.misses();
+        }
+        StoreSnapshot {
+            span_checkouts: self.checkouts.load(Ordering::Relaxed),
+            span_reuses: self.reuses.load(Ordering::Relaxed),
+            spans_carried: self.carried.load(Ordering::Relaxed),
+            span_slots,
+            cluster_slots,
+            cluster_hits,
+            cluster_misses,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::{alexnet, scopenet};
+
+    #[test]
+    fn keys_discriminate_every_dimension() {
+        let sim = SimOptions::default();
+        let base = StoreKey::new(&alexnet(), &McmConfig::paper_default(16), "scope", &sim);
+        let other_net =
+            StoreKey::new(&scopenet(), &McmConfig::paper_default(16), "scope", &sim);
+        let other_geom =
+            StoreKey::new(&alexnet(), &McmConfig::paper_default(64), "scope", &sim);
+        let other_method =
+            StoreKey::new(&alexnet(), &McmConfig::paper_default(16), "segmented", &sim);
+        let other_sim = StoreKey::new(
+            &alexnet(),
+            &McmConfig::paper_default(16),
+            "scope",
+            &SimOptions { samples: 7, ..SimOptions::default() },
+        );
+        assert_ne!(base, other_net);
+        assert_ne!(base, other_geom);
+        assert_ne!(base, other_method);
+        assert_ne!(base, other_sim);
+        // threads are excluded on purpose (bit-identical at every count)
+        let threaded = StoreKey::new(
+            &alexnet(),
+            &McmConfig::paper_default(16),
+            "scope",
+            &SimOptions { threads: 8, ..SimOptions::default() },
+        );
+        assert_eq!(base, threaded);
+    }
+
+    #[test]
+    fn span_memo_checkout_carries_entries_across_sweeps() {
+        use std::sync::atomic::AtomicUsize;
+        let store = CacheStore::new();
+        let sim = SimOptions::default();
+        let key = StoreKey::new(&alexnet(), &McmConfig::paper_default(16), "test", &sim);
+        let calls = AtomicUsize::new(0);
+        let mut eval = |lo: usize, hi: usize| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            Some(((lo, hi), (hi - lo) as f64))
+        };
+        // first sweep: two spans costed
+        let s1 = store.with_span_memo(key, |memo: &mut SpanMemo<(usize, usize)>| {
+            memo.get_or_eval(0, 2, &mut eval);
+            memo.get_or_eval(2, 5, &mut eval);
+            memo.stats()
+        });
+        assert_eq!(s1.misses, 2);
+        assert_eq!(calls.load(Ordering::Relaxed), 2);
+        // second sweep under the same key: both spans carried, zero calls
+        let s2 = store.with_span_memo(key, |memo: &mut SpanMemo<(usize, usize)>| {
+            let a = memo.get_or_eval(0, 2, &mut eval).unwrap();
+            let b = memo.get_or_eval(2, 5, &mut eval).unwrap();
+            assert_eq!((a.0, b.0), ((0, 2), (2, 5)));
+            memo.stats()
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 2, "no re-evaluation");
+        let delta = s2.since(s1);
+        assert_eq!(delta.misses, 0);
+        assert_eq!(delta.hits, 2);
+        assert_eq!(delta.cross_hits, 2);
+        // a different key starts cold
+        let key2 = StoreKey::new(&alexnet(), &McmConfig::paper_default(64), "test", &sim);
+        store.with_span_memo(key2, |memo: &mut SpanMemo<(usize, usize)>| {
+            memo.get_or_eval(0, 2, &mut eval);
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 3);
+        let snap = store.snapshot();
+        assert_eq!(snap.span_checkouts, 3);
+        assert_eq!(snap.span_reuses, 1);
+        assert_eq!(snap.spans_carried, 2);
+        assert_eq!(snap.span_slots, 2);
+    }
+
+    #[test]
+    fn cluster_cache_is_shared_per_key() {
+        let store = CacheStore::new();
+        let sim = SimOptions::default();
+        let key = StoreKey::new(&scopenet(), &McmConfig::paper_default(8), "scope", &sim);
+        let a = store.cluster_cache(key);
+        let b = store.cluster_cache(key);
+        assert!(Arc::ptr_eq(&a, &b), "same key → same cache");
+        let key2 = StoreKey::new(&scopenet(), &McmConfig::paper_default(16), "scope", &sim);
+        let c = store.cluster_cache(key2);
+        assert!(!Arc::ptr_eq(&a, &c), "different key → different cache");
+        assert_eq!(store.snapshot().cluster_slots, 2);
+    }
+}

@@ -1,11 +1,14 @@
 //! Pipeline scheduling: schedule types, the timeline evaluator
-//! (Equ. 1–3, 7 of the paper), and the memoized cluster-evaluation cache
-//! the DSE shares across candidates.
+//! (Equ. 1–3, 7 of the paper), the memoized cluster-evaluation cache the
+//! DSE shares across candidates, and the process-wide keyed cache store
+//! batched sweeps share across models and runs.
 
+pub mod cache_store;
 pub mod eval_cache;
 pub mod schedule;
 pub mod timeline;
 
+pub use cache_store::{CacheStore, StoreKey, StoreSnapshot};
 pub use eval_cache::{eval_segment_cached, ClusterKey, EvalCache};
 pub use schedule::{Partition, Schedule, SegmentSchedule};
 pub use timeline::{

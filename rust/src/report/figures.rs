@@ -335,6 +335,45 @@ pub fn fig10(net_name: &str, chiplets: usize, samples: u64) -> Result<Fig10Resul
     })
 }
 
+/// Multi-model co-schedule table: one row per model — its share of the
+/// package, the method's throughput there, the rate the mix actually
+/// serves it at, and the full-package throughput the time-multiplexed
+/// baseline would get. Errors (rather than rendering) when the
+/// co-schedule itself failed.
+pub fn multi_model_table(r: &crate::scope::MultiModelResult) -> Result<Table> {
+    if let Some(e) = &r.error {
+        return Err(anyhow!("multi-model co-schedule failed: {e}"));
+    }
+    let mut t = Table::new(
+        &format!(
+            "multi-model co-schedule — {} models on {} chiplets ({} used, {:.0}% of package)",
+            r.outcomes.len(),
+            r.total_chiplets,
+            r.used_chiplets,
+            100.0 * r.utilization(),
+        ),
+        &[
+            "model",
+            "weight",
+            "chiplets",
+            "throughput (samples/s)",
+            "served (samples/s)",
+            "full package (samples/s)",
+        ],
+    );
+    for o in &r.outcomes {
+        t.row(vec![
+            o.name.clone(),
+            f3(o.weight),
+            o.share.to_string(),
+            if o.result.eval.is_valid() { f3(o.result.throughput()) } else { "invalid".into() },
+            f3(r.rate * o.weight),
+            if o.full_package > 0.0 { f3(o.full_package) } else { "-".into() },
+        ]);
+    }
+    Ok(t)
+}
+
 /// DAG condensation summary: the supernodes (branch bundles between clean
 /// cuts) the segmenters place boundaries around, with each boundary's
 /// spilled cut-edge traffic. Errors on plain chain workloads.
@@ -449,6 +488,24 @@ mod tests {
     fn unknown_net_errors() {
         assert!(fig7(&["nope"], &[16], 4).is_err());
         assert!(space_table("nope", 16).is_err());
+    }
+
+    #[test]
+    fn multi_model_table_renders_and_rejects_failures() {
+        use crate::model::WorkloadSet;
+        use crate::scope::{co_schedule, MultiOptions};
+        let set = WorkloadSet::parse("scopenet:2,alexnet").unwrap();
+        let mcm = McmConfig::paper_default(16);
+        let sim = SimOptions { samples: 4, ..Default::default() };
+        let mopts = MultiOptions { share_quantum: 8, ..Default::default() };
+        let r = co_schedule(&set, &mcm, &sim, &mopts);
+        assert!(r.is_valid(), "{:?}", r.error);
+        let s = multi_model_table(&r).unwrap().render();
+        assert!(s.contains("scopenet") && s.contains("alexnet"), "{s}");
+        assert!(s.contains("chiplets"), "{s}");
+        // a failed co-schedule errors instead of rendering garbage
+        let bad = co_schedule(&WorkloadSet::default(), &mcm, &sim, &mopts);
+        assert!(multi_model_table(&bad).is_err());
     }
 
     #[test]

@@ -1,5 +1,13 @@
 //! Report emission: figure/table regenerators, CSV twins, and sensitivity
 //! sweeps, shared by the CLI, examples, and benches.
+//!
+//! One function per paper artifact: Fig. 7 (normalized throughput across
+//! networks × scales), Fig. 8 (exhaustive-vs-search validation), Fig. 9
+//! (scalability, plus the balanced-vs-DP segmenter extension), Fig. 10
+//! (stage balance + energy breakdown), the Equ. 8–9 search-space rows,
+//! the DAG condensation summary, and the multi-model co-schedule table
+//! (`figures::multi_model_table`) — so every entry point prints the same
+//! rows the paper reports.
 
 pub mod csv;
 pub mod figures;

@@ -69,6 +69,32 @@ impl<P: SegmentCost> SegmentCost for CutCost<'_, P> {
 /// (inside [`search_segments_opts`]) plus cut-edge traffic charging. For
 /// chain workloads this is exactly `search_segments_opts` — the provider
 /// is not even wrapped.
+///
+/// The provider is any pure `Fn(lo, hi) → Option<(schedule, latency)>`;
+/// the real methods plug in their span schedulers, and a synthetic cost
+/// makes the search shape visible:
+///
+/// ```
+/// use scope::arch::McmConfig;
+/// use scope::model::zoo;
+/// use scope::scope::{search_segments_dag, SegmenterOptions};
+///
+/// // quadratic span cost: splitting a chain in two always pays off
+/// let net = zoo::alexnet();
+/// let mcm = McmConfig::paper_default(16);
+/// let provider = |lo: usize, hi: usize| {
+///     let len = (hi - lo) as f64;
+///     Some(((lo, hi), len * len))
+/// };
+/// let r = search_segments_dag(
+///     &net, &mcm, 8, 2, 2, usize::MAX, 1, SegmenterOptions::default(), &provider,
+/// )
+/// .expect("feasible");
+/// assert_eq!(r.bounds.len(), 3, "two segments");
+/// assert_eq!(r.bounds[0], 0);
+/// assert_eq!(*r.bounds.last().unwrap(), net.len());
+/// assert!(r.total_latency > 0.0);
+/// ```
 #[allow(clippy::too_many_arguments)]
 pub fn search_segments_dag<P: SegmentCost>(
     net: &Network,
@@ -154,7 +180,7 @@ mod tests {
         let opts = SegmenterOptions {
             kind: SegmenterKind::Dp,
             dp_window: 0,
-            dp_window_auto: false,
+            ..SegmenterOptions::default()
         };
         let dp = search_segments_dag(&net, &mcm, m, 1, net.len(), usize::MAX, 1, opts, &fake)
             .expect("feasible");
@@ -210,7 +236,7 @@ mod tests {
             Some(((lo, hi), span * span))
         };
         for kind in [SegmenterKind::Balanced, SegmenterKind::Dp] {
-            let opts = SegmenterOptions { kind, dp_window: 2, dp_window_auto: false };
+            let opts = SegmenterOptions { kind, dp_window: 2, ..SegmenterOptions::default() };
             let direct =
                 search_segments_opts(&net, 1, 4, usize::MAX, 1, opts, &fake).unwrap();
             let dag =

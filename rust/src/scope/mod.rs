@@ -1,28 +1,37 @@
 //! The Scope merged-pipeline scheduler — the paper's contribution.
 //!
-//! Pipeline: segment allocation (shared with the segmented baseline) →
-//! per-segment Algorithm 1 (CMT cluster DP × WSP→ISP transition × region
-//! heuristic) → whole-schedule evaluation under §III-B distributed weight
-//! buffering.
+//! Pipeline: segment allocation (shared with the segmented baseline per
+//! §V-A — `segment_dp` for chains, `dag_segment` for multi-branch
+//! workloads) → per-segment Algorithm 1 (CMT cluster DP × WSP→ISP
+//! transition × region heuristic, in `cmt`/`partition`/`region_alloc`/
+//! `search`) → whole-schedule evaluation under §III-B distributed weight
+//! buffering. `multi_model` extends the single-network pipeline to
+//! SCAR-style serving sets co-scheduled on one package.
 
 pub mod cmt;
 pub mod dag_segment;
+pub mod multi_model;
 pub mod partition;
 pub mod region_alloc;
 pub mod search;
 pub mod segment_dp;
 pub mod segmenter;
 
+use std::sync::Arc;
+
 use crate::arch::McmConfig;
 use crate::config::SimOptions;
 use crate::model::Network;
+use crate::pipeline::cache_store::{CacheStore, StoreKey};
+use crate::pipeline::eval_cache::EvalCache;
 use crate::pipeline::schedule::Schedule;
 use crate::pipeline::timeline::{eval_schedule, EvalContext, ScheduleEval};
 use crate::storage::StoragePolicy;
 use crate::util::ceil_div;
 
 pub use dag_segment::search_segments_dag;
-pub use search::{search_segment, SearchOptions, SegmentSearch};
+pub use multi_model::{co_schedule, AllocatorKind, MultiModelResult, MultiOptions};
+pub use search::{search_segment, search_segment_cached, SearchOptions, SegmentSearch};
 pub use segment_dp::{
     search_segments_opts, SegmentCost, SegmenterKind, SegmenterOptions, SegmenterReport,
     SegmenterResult, SpanStats,
@@ -87,7 +96,17 @@ pub fn schedule_scope_opts(
     };
     let ctx = EvalContext { net, mcm, opts, policy, dram_fallback: true };
     let lo_s = min_segments(net, mcm).max(1);
-    let seg_opts = SegmenterOptions::from_sim(opts);
+    // With the process-wide cache store on, spans and clusters persist
+    // under a key covering everything their values depend on — including
+    // the Algorithm-1 search knobs, folded into the method label.
+    let store_key = if opts.cache_store {
+        Some(StoreKey::new(net, mcm, &format!("scope/{sopts:?}"), opts))
+    } else {
+        None
+    };
+    let seg_opts = SegmenterOptions::from_sim(opts).with_store(store_key);
+    let cluster_cache: Option<Arc<EvalCache>> =
+        store_key.map(|key| CacheStore::global().cluster_cache(key));
     // In DP mode the segmenter fans *span* evaluations across the worker
     // pool, so each span's inner Algorithm-1 search runs serially; the
     // search result is bit-identical at every thread count either way.
@@ -95,7 +114,8 @@ pub fn schedule_scope_opts(
     let serial_ctx = EvalContext { net, mcm, opts: &serial_sim, policy, dram_fallback: true };
     let span_ctx = if seg_opts.kind == SegmenterKind::Dp { &serial_ctx } else { &ctx };
     let provider = |lo: usize, hi: usize| {
-        search_segment(span_ctx, lo, hi, opts.samples, sopts).map(|s| (s.schedule, s.latency))
+        search_segment_cached(span_ctx, lo, hi, opts.samples, sopts, cluster_cache.as_deref())
+            .map(|s| (s.schedule, s.latency))
     };
     let found = search_segments_dag(
         net,

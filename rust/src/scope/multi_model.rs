@@ -1,0 +1,573 @@
+//! Multi-model co-scheduling — several networks served from one package
+//! (SCAR-style; Odema et al., 2024).
+//!
+//! Scope's merged-pipeline search schedules *one* network; serving-scale
+//! MCM deployments run several. This module partitions the chiplet budget
+//! across a [`WorkloadSet`]: each model gets a contiguous sub-package (its
+//! *share*) and is scheduled there by the existing per-model machinery
+//! (any §V-A method — Scope's merged search by default — through the
+//! identical segment-allocator entry point, chains and DAG workloads
+//! alike), while a global allocator searches the chiplet-split frontier.
+//!
+//! ## Objective
+//!
+//! With per-model rate weights `w_i` (the request mix serves `w_i` samples
+//! of model `i` per *mix unit*), a split giving model `i` a share with
+//! standalone throughput `T_i` sustains the mix at
+//!
+//! ```text
+//! R_co = min_i T_i / w_i            (mix units per second)
+//! ```
+//!
+//! and the allocator maximizes `R_co`. The comparison baseline is
+//! *time-multiplexed sequential serving*: every model runs on the full
+//! package (throughput `F_i`) and the package round-robins with time
+//! fractions matched to the mix, sustaining
+//!
+//! ```text
+//! R_tm = 1 / Σ_i (w_i / F_i)
+//! ```
+//!
+//! Spatial sharing wins exactly when per-model scaling is sublinear at
+//! package scale (the paper's Fig. 9 regime): giving a model half the
+//! package costs it less than half its throughput. Both sides use the
+//! same method and cost model — the §V-A fairness discipline extended to
+//! serving.
+//!
+//! ## Allocators
+//!
+//! Shares are drawn from a quantized grid ([`share_grid`]). The
+//! per-(model, share) throughputs are evaluated once — fanned across the
+//! deterministic worker pool of [`dse::parallel`](crate::dse::parallel),
+//! each job running its method serially so the outer fan-out is the only
+//! parallelism — then the split search runs on the resulting table:
+//!
+//! * [`AllocatorKind::Exhaustive`] — enumerate every split
+//!   ([`for_each_share_split`]), the ground truth for small sets;
+//! * [`AllocatorKind::Dp`] — a weighted-throughput DP over (model prefix,
+//!   chiplets used): `val[i+1][u+s] = max(val[i+1][u+s], min(val[i][u],
+//!   rate_i(s)))`. `min`/`max` are exact on floats, so the DP's optimum
+//!   is **bit-identical** to the exhaustive one (asserted in
+//!   `tests/multi_model.rs`).
+//!
+//! Ties prefer fewer chiplets, then the lexicographically earlier split.
+//! Results are bit-identical at every thread count, and — with
+//! `SimOptions::cache_store` on (the `multi` subcommand's default) —
+//! repeated models and repeated shares pay each distinct span once
+//! through the process-wide store.
+//!
+//! ```
+//! use scope::arch::McmConfig;
+//! use scope::config::SimOptions;
+//! use scope::model::workload_set::WorkloadSet;
+//! use scope::scope::multi_model::{co_schedule, MultiOptions};
+//!
+//! let set = WorkloadSet::parse("scopenet,scopenet:2").unwrap();
+//! let mcm = McmConfig::paper_default(8);
+//! let sim = SimOptions { samples: 4, ..Default::default() };
+//! let mopts = MultiOptions { share_quantum: 4, ..Default::default() };
+//! let r = co_schedule(&set, &mcm, &sim, &mopts);
+//! assert!(r.is_valid(), "{:?}", r.error);
+//! assert_eq!(r.outcomes.len(), 2);
+//! assert!(r.rate > 0.0);
+//! assert!(r.used_chiplets <= 8);
+//! ```
+
+use crate::arch::{McmConfig, Mesh};
+use crate::baselines::{run_method, METHOD_NAMES};
+use crate::config::SimOptions;
+use crate::dse::exhaustive::for_each_share_split;
+use crate::dse::parallel::par_map;
+use crate::model::workload_set::WorkloadSet;
+use crate::pipeline::cache_store::{CacheStore, StoreSnapshot};
+
+use super::MethodResult;
+
+/// Which chiplet-split allocator to run (`--allocator`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllocatorKind {
+    /// Weighted-throughput DP over (model prefix, chiplets used) — exact
+    /// over the share grid, polynomial time.
+    Dp,
+    /// Full enumeration of the share grid — the ground truth the DP is
+    /// validated against; exponential in the model count.
+    Exhaustive,
+}
+
+impl AllocatorKind {
+    /// Names accepted by [`AllocatorKind::parse`].
+    pub const NAMES: &'static [&'static str] = &["dp", "exhaustive"];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AllocatorKind::Dp => "dp",
+            AllocatorKind::Exhaustive => "exhaustive",
+        }
+    }
+
+    /// Parse a CLI/config value; unknown values list the options.
+    pub fn parse(s: &str) -> Result<AllocatorKind, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "dp" => Ok(AllocatorKind::Dp),
+            "exhaustive" => Ok(AllocatorKind::Exhaustive),
+            other => Err(format!(
+                "unknown allocator {other:?}; options: {}",
+                AllocatorKind::NAMES.join(" ")
+            )),
+        }
+    }
+}
+
+/// Co-scheduler knobs.
+#[derive(Clone, Debug)]
+pub struct MultiOptions {
+    pub allocator: AllocatorKind,
+    /// Per-model span scheduler — any §V-A method name
+    /// ([`METHOD_NAMES`]); every model uses the same one (fairness).
+    pub method: String,
+    /// Chiplet-share granularity: shares are multiples of the quantum
+    /// (plus the full package). `0` = auto: `total / 16`, floor 1.
+    pub share_quantum: usize,
+}
+
+impl Default for MultiOptions {
+    fn default() -> Self {
+        MultiOptions {
+            allocator: AllocatorKind::Dp,
+            method: "scope".to_string(),
+            share_quantum: 0,
+        }
+    }
+}
+
+/// One model's slice of the co-schedule.
+#[derive(Clone, Debug)]
+pub struct ModelOutcome {
+    pub name: String,
+    pub weight: f64,
+    /// Chiplets allocated to this model.
+    pub share: usize,
+    /// The method's result on the share sub-package (schedule, eval, and
+    /// segmenter/span-cache statistics).
+    pub result: MethodResult,
+    /// The same method's throughput on the *full* package (samples/s) —
+    /// the time-multiplexed baseline's input; 0 when infeasible there.
+    pub full_package: f64,
+}
+
+/// A finished co-schedule with its baseline comparison.
+#[derive(Clone, Debug)]
+pub struct MultiModelResult {
+    pub outcomes: Vec<ModelOutcome>,
+    /// Sustainable mix rate `min_i T_i / w_i` (mix units per second).
+    pub rate: f64,
+    /// Aggregate samples/s at the mix rate: `rate × Σ w_i`.
+    pub total_throughput: f64,
+    /// Time-multiplexed sequential baseline `1 / Σ (w_i / F_i)`; 0 when
+    /// some model is infeasible on the full package.
+    pub tm_rate: f64,
+    /// `tm_rate × Σ w_i`.
+    pub tm_total: f64,
+    pub used_chiplets: usize,
+    pub total_chiplets: usize,
+    pub allocator: AllocatorKind,
+    /// (model, share) schedulings paid for the allocation table.
+    pub evals: usize,
+    /// Cache-store counters after the run (`SimOptions::cache_store`).
+    pub store: Option<StoreSnapshot>,
+    pub error: Option<String>,
+}
+
+impl MultiModelResult {
+    pub fn is_valid(&self) -> bool {
+        self.error.is_none()
+    }
+
+    /// Co-scheduling gain over time multiplexing (`None` when either side
+    /// is infeasible).
+    pub fn speedup_vs_tm(&self) -> Option<f64> {
+        if self.rate > 0.0 && self.tm_rate > 0.0 {
+            Some(self.rate / self.tm_rate)
+        } else {
+            None
+        }
+    }
+
+    /// Fraction of the package allocated to some model.
+    pub fn utilization(&self) -> f64 {
+        if self.total_chiplets == 0 {
+            0.0
+        } else {
+            self.used_chiplets as f64 / self.total_chiplets as f64
+        }
+    }
+}
+
+/// A model's share as its own sub-package: the caller's platform knobs
+/// (chiplet micro-architecture, NoP, DRAM — config-file overrides
+/// included) on a `chiplets`-sized near-square mesh. DRAM contention
+/// between co-resident models is not modeled (each share sees the full
+/// channel, exactly as a standalone package of that size would) — a
+/// documented limitation, same on both sides of the TM comparison.
+fn sub_package(mcm: &McmConfig, chiplets: usize) -> McmConfig {
+    McmConfig {
+        chiplets,
+        mesh: Mesh::for_chiplets(chiplets),
+        chiplet: mcm.chiplet.clone(),
+        nop: mcm.nop.clone(),
+        dram: mcm.dram.clone(),
+    }
+}
+
+/// Candidate share sizes for a package of `total` chiplets: multiples of
+/// the quantum (`0` = auto: `total / 16`, floor 1), with the full package
+/// always included. Strictly ascending — what
+/// [`for_each_share_split`] and the DP require.
+pub fn share_grid(total: usize, quantum: usize) -> Vec<usize> {
+    let q = if quantum > 0 { quantum } else { (total / 16).max(1) };
+    let mut sizes: Vec<usize> = (1usize..)
+        .map(|i| i * q)
+        .take_while(|&s| s <= total)
+        .collect();
+    if sizes.last() != Some(&total) {
+        sizes.push(total);
+    }
+    sizes
+}
+
+/// Exhaustive split search over the grid (ground truth): maximize the mix
+/// rate, ties → fewer chiplets → first in lexicographic order.
+fn exhaustive_alloc(
+    models: usize,
+    sizes: &[usize],
+    budget: usize,
+    rate: &[Vec<Option<f64>>],
+) -> Option<(Vec<usize>, f64)> {
+    let mut best: Option<(Vec<usize>, f64, usize)> = None;
+    for_each_share_split(models, sizes, budget, &mut |split| {
+        let mut r = f64::INFINITY;
+        let mut feasible = true;
+        for (i, &share) in split.iter().enumerate() {
+            let j = sizes
+                .iter()
+                .position(|&x| x == share)
+                .expect("split shares come from sizes");
+            match rate[i][j] {
+                Some(v) => r = r.min(v),
+                None => {
+                    feasible = false;
+                    break;
+                }
+            }
+        }
+        if feasible {
+            let used: usize = split.iter().sum();
+            let better = match &best {
+                None => true,
+                Some((_, br, bu)) => r > *br || (r == *br && used < *bu),
+            };
+            if better {
+                best = Some((split.to_vec(), r, used));
+            }
+        }
+        true
+    });
+    best.map(|(split, r, _)| (split, r))
+}
+
+/// Weighted-throughput DP over (model prefix, chiplets used). `val[i][u]`
+/// is the best min-rate over the first `i` models using exactly `u`
+/// chiplets (`∞` at `val[0][0]` — the identity of `min`); transitions
+/// iterate prefix states and shares ascending with strict improvement, so
+/// ties resolve to the same split family as the exhaustive scan. End
+/// states pick max rate, then fewest chiplets.
+fn dp_alloc(
+    models: usize,
+    sizes: &[usize],
+    budget: usize,
+    rate: &[Vec<Option<f64>>],
+) -> Option<(Vec<usize>, f64)> {
+    let mut val: Vec<Vec<Option<f64>>> = vec![vec![None; budget + 1]; models + 1];
+    let mut pick: Vec<Vec<usize>> = vec![vec![usize::MAX; budget + 1]; models + 1];
+    val[0][0] = Some(f64::INFINITY);
+    for i in 0..models {
+        for used in 0..=budget {
+            let Some(base) = val[i][used] else { continue };
+            for (j, &share) in sizes.iter().enumerate() {
+                let next_used = used + share;
+                if next_used > budget {
+                    break; // ascending sizes
+                }
+                let Some(r) = rate[i][j] else { continue };
+                let v = base.min(r);
+                if val[i + 1][next_used].map(|cur| v > cur).unwrap_or(true) {
+                    val[i + 1][next_used] = Some(v);
+                    pick[i + 1][next_used] = j;
+                }
+            }
+        }
+    }
+    let mut end: Option<(usize, f64)> = None;
+    for used in 0..=budget {
+        if let Some(v) = val[models][used] {
+            if end.map(|(_, bv)| v > bv).unwrap_or(true) {
+                end = Some((used, v));
+            }
+        }
+    }
+    let (mut used, best_rate) = end?;
+    let mut split = vec![0usize; models];
+    for i in (0..models).rev() {
+        let j = pick[i + 1][used];
+        debug_assert_ne!(j, usize::MAX, "reachable state must have a pick");
+        split[i] = sizes[j];
+        used -= sizes[j];
+    }
+    debug_assert_eq!(used, 0);
+    Some((split, best_rate))
+}
+
+/// Co-schedule `set` onto the package described by `mcm` (its `chiplets`
+/// is the budget; its micro-architecture/NoP/DRAM knobs — config-file
+/// overrides included — apply to every share): evaluate every
+/// (model, share) candidate once, search the split frontier with the
+/// configured allocator, and report per-model outcomes plus the
+/// time-multiplexed sequential baseline. Deterministic at every thread
+/// count; never panics on infeasible inputs (the result carries `error`
+/// instead).
+pub fn co_schedule(
+    set: &WorkloadSet,
+    mcm: &McmConfig,
+    sim: &SimOptions,
+    mopts: &MultiOptions,
+) -> MultiModelResult {
+    let total_chiplets = mcm.chiplets;
+    let invalid = |msg: String| MultiModelResult {
+        outcomes: Vec::new(),
+        rate: 0.0,
+        total_throughput: 0.0,
+        tm_rate: 0.0,
+        tm_total: 0.0,
+        used_chiplets: 0,
+        total_chiplets,
+        allocator: mopts.allocator,
+        evals: 0,
+        store: None,
+        error: Some(msg),
+    };
+    let k = set.models.len();
+    if k == 0 {
+        return invalid("empty workload set".to_string());
+    }
+    if total_chiplets == 0 {
+        return invalid("zero chiplets".to_string());
+    }
+    if !METHOD_NAMES.contains(&mopts.method.as_str()) {
+        return invalid(format!(
+            "unknown method {:?}; options: {}",
+            mopts.method,
+            METHOD_NAMES.join(" ")
+        ));
+    }
+    let sizes = share_grid(total_chiplets, mopts.share_quantum);
+    // Every (model, share) evaluation is independent: fan across the
+    // worker pool with each job's method running serially (threads = 1),
+    // so results are bit-identical at every outer thread count.
+    let inner = SimOptions { threads: 1, ..sim.clone() };
+    let mut jobs: Vec<(usize, usize)> = Vec::with_capacity(k * sizes.len());
+    for i in 0..k {
+        for &share in &sizes {
+            jobs.push((i, share));
+        }
+    }
+    let evals = jobs.len();
+    let results: Vec<MethodResult> = par_map(sim.threads, jobs, |_, (i, share)| {
+        run_method(&mopts.method, &set.models[i].net, &sub_package(mcm, share), &inner)
+    });
+    let idx = |i: usize, j: usize| i * sizes.len() + j;
+    let tput = |i: usize, j: usize| -> Option<f64> {
+        let r = &results[idx(i, j)];
+        if r.eval.is_valid() && r.throughput() > 0.0 {
+            Some(r.throughput())
+        } else {
+            None
+        }
+    };
+    let rate_table: Vec<Vec<Option<f64>>> = (0..k)
+        .map(|i| {
+            (0..sizes.len())
+                .map(|j| tput(i, j).map(|t| t / set.models[i].weight))
+                .collect()
+        })
+        .collect();
+    let chosen = match mopts.allocator {
+        AllocatorKind::Exhaustive => {
+            exhaustive_alloc(k, &sizes, total_chiplets, &rate_table)
+        }
+        AllocatorKind::Dp => dp_alloc(k, &sizes, total_chiplets, &rate_table),
+    };
+    let Some((split, rate)) = chosen else {
+        return invalid(format!(
+            "no feasible chiplet split for {k} models on {total_chiplets} chiplets \
+             (grid {sizes:?})"
+        ));
+    };
+    // Time-multiplexed sequential baseline: every model on the full
+    // package (the grid's last entry), round-robined to the mix.
+    let full_j = sizes.len() - 1;
+    let mut tm_denominator = 0.0f64;
+    let mut tm_feasible = true;
+    let mut outcomes = Vec::with_capacity(k);
+    for (i, spec) in set.models.iter().enumerate() {
+        let share = split[i];
+        let j = sizes
+            .iter()
+            .position(|&x| x == share)
+            .expect("chosen shares come from the grid");
+        let full = tput(i, full_j);
+        match full {
+            Some(t) => tm_denominator += spec.weight / t,
+            None => tm_feasible = false,
+        }
+        outcomes.push(ModelOutcome {
+            name: spec.net.name.clone(),
+            weight: spec.weight,
+            share,
+            result: results[idx(i, j)].clone(),
+            full_package: full.unwrap_or(0.0),
+        });
+    }
+    let tm_rate = if tm_feasible && tm_denominator > 0.0 {
+        1.0 / tm_denominator
+    } else {
+        0.0
+    };
+    let total_weight = set.total_weight();
+    MultiModelResult {
+        outcomes,
+        rate,
+        total_throughput: rate * total_weight,
+        tm_rate,
+        tm_total: tm_rate * total_weight,
+        used_chiplets: split.iter().sum(),
+        total_chiplets,
+        allocator: mopts.allocator,
+        evals,
+        store: if sim.cache_store {
+            Some(CacheStore::global().snapshot())
+        } else {
+            None
+        },
+        error: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocator_kind_parse_roundtrip() {
+        for name in AllocatorKind::NAMES {
+            assert_eq!(AllocatorKind::parse(name).unwrap().name(), *name);
+        }
+        assert_eq!(AllocatorKind::parse("DP").unwrap(), AllocatorKind::Dp);
+        let err = AllocatorKind::parse("greedy").unwrap_err();
+        assert!(err.contains("dp") && err.contains("exhaustive"), "{err}");
+    }
+
+    #[test]
+    fn share_grid_spans_the_package() {
+        assert_eq!(share_grid(64, 16), vec![16, 32, 48, 64]);
+        assert_eq!(share_grid(16, 0), vec![1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16]);
+        assert_eq!(share_grid(100, 30), vec![30, 60, 90, 100]);
+        assert_eq!(share_grid(8, 32), vec![8], "oversized quantum degrades to the package");
+        assert_eq!(share_grid(256, 0), (1..=16).map(|i| i * 16).collect::<Vec<_>>());
+    }
+
+    /// Synthetic rate tables exercise the allocators without scheduling.
+    fn table(rows: &[&[Option<f64>]]) -> Vec<Vec<Option<f64>>> {
+        rows.iter().map(|r| r.to_vec()).collect()
+    }
+
+    #[test]
+    fn dp_matches_exhaustive_on_synthetic_tables() {
+        let sizes = [2usize, 4, 6, 8];
+        // Concave-ish per-model curves with an infeasible hole.
+        let t = table(&[
+            &[Some(3.0), Some(5.0), Some(6.0), Some(6.5)],
+            &[None, Some(2.0), Some(3.5), Some(4.0)],
+            &[Some(1.0), Some(1.8), Some(2.2), Some(2.4)],
+        ]);
+        for budget in [8usize, 12, 16, 18] {
+            let dp = dp_alloc(3, &sizes, budget, &t);
+            let ex = exhaustive_alloc(3, &sizes, budget, &t);
+            match (dp, ex) {
+                (None, None) => {}
+                (Some((ds, dr)), Some((es, er))) => {
+                    assert_eq!(dr.to_bits(), er.to_bits(), "budget={budget}");
+                    assert_eq!(
+                        ds.iter().sum::<usize>(),
+                        es.iter().sum::<usize>(),
+                        "budget={budget}: tie-break drifted ({ds:?} vs {es:?})"
+                    );
+                }
+                (d, e) => panic!("budget={budget}: dp {d:?} vs exhaustive {e:?}"),
+            }
+        }
+        // budget too small for three models of ≥2 chiplets each
+        assert!(dp_alloc(3, &sizes, 5, &t).is_none());
+        assert!(exhaustive_alloc(3, &sizes, 5, &t).is_none());
+    }
+
+    #[test]
+    fn allocator_prefers_fewer_chiplets_on_rate_ties() {
+        // Model 0 saturates at 2 chiplets; model 1 is the bottleneck
+        // everywhere. Both allocators must not waste budget on model 0.
+        let sizes = [2usize, 4];
+        let t = table(&[
+            &[Some(10.0), Some(10.0)],
+            &[Some(1.0), Some(1.0)],
+        ]);
+        let (ds, dr) = dp_alloc(2, &sizes, 8, &t).unwrap();
+        let (es, er) = exhaustive_alloc(2, &sizes, 8, &t).unwrap();
+        assert_eq!(dr.to_bits(), er.to_bits());
+        assert_eq!(ds, vec![2, 2]);
+        assert_eq!(es, vec![2, 2]);
+    }
+
+    #[test]
+    fn co_schedule_rejects_bad_inputs() {
+        let set = WorkloadSet::parse("scopenet").unwrap();
+        let mcm = McmConfig::paper_default(8);
+        let sim = SimOptions { samples: 4, ..Default::default() };
+        let bad_method = MultiOptions { method: "warp".to_string(), ..Default::default() };
+        let r = co_schedule(&set, &mcm, &sim, &bad_method);
+        assert!(!r.is_valid());
+        assert!(r.error.as_deref().unwrap().contains("scope"), "{:?}", r.error);
+        let empty = WorkloadSet::default();
+        assert!(!co_schedule(&empty, &mcm, &sim, &MultiOptions::default()).is_valid());
+        // a zero-chiplet package (never constructible via paper_default —
+        // the mesh asserts — but representable) degrades to an error
+        let zero_mcm = McmConfig { chiplets: 0, ..McmConfig::paper_default(1) };
+        let zero = co_schedule(&set, &zero_mcm, &sim, &MultiOptions::default());
+        assert!(!zero.is_valid());
+        assert_eq!(zero.speedup_vs_tm(), None);
+        assert_eq!(zero.utilization(), 0.0);
+    }
+
+    #[test]
+    fn sub_package_inherits_platform_knobs() {
+        // Config-file hardware overrides must flow into every share (the
+        // multi subcommand's --config contract).
+        let mut mcm = McmConfig::paper_default(64);
+        mcm.dram.bw_total = 50e9;
+        mcm.nop.bw_per_chiplet = 25e9;
+        let share = sub_package(&mcm, 16);
+        assert_eq!(share.chiplets, 16);
+        assert_eq!(share.mesh.chiplets(), 16);
+        assert_eq!(share.dram.bw_total, 50e9);
+        assert_eq!(share.nop.bw_per_chiplet, 25e9);
+        assert_eq!(share.chiplet, mcm.chiplet);
+    }
+}

@@ -208,11 +208,31 @@ pub fn search_segment(
     m: u64,
     opts: SearchOptions,
 ) -> Option<SegmentSearch> {
+    search_segment_cached(ctx, lo, hi, m, opts, None)
+}
+
+/// [`search_segment`] against an externally shared cluster cache — the
+/// process-wide store's batched-sweep path, where one [`EvalCache`] keyed
+/// by (network, platform, sim) serves every span of every sweep. `None`
+/// uses a fresh per-search cache (the classic behaviour). Cached values
+/// are pure functions of the cluster key under the search context, so
+/// sharing changes speed only, never the result; with a shared cache the
+/// reported hit/miss counters are cumulative across its users
+/// (informational either way).
+pub fn search_segment_cached(
+    ctx: &EvalContext,
+    lo: usize,
+    hi: usize,
+    m: u64,
+    opts: SearchOptions,
+    shared_cache: Option<&EvalCache>,
+) -> Option<SegmentSearch> {
     let l = hi - lo;
     let c = ctx.mcm.chiplets;
     let layers = &ctx.net.layers[lo..hi];
     let cmt = gen_cmt(layers, lo, hi);
-    let cache = EvalCache::new();
+    let local_cache = EvalCache::new();
+    let cache: &EvalCache = shared_cache.unwrap_or(&local_cache);
     let threads = ctx.opts.threads;
     let mut evals = 0usize;
     let n_max = {
@@ -261,7 +281,7 @@ pub fn search_segment(
             regions,
             partitions,
         };
-        match improve_regions_cached(ctx, seed, m, opts.max_region_iters, Some(&cache)) {
+        match improve_regions_cached(ctx, seed, m, opts.max_region_iters, Some(cache)) {
             Some(found) => CandidateOutcome::Found(found),
             None => CandidateOutcome::NoSchedule,
         }
@@ -317,7 +337,7 @@ pub fn search_segment(
         // Each survivor refines independently — second parallel stage.
         candidates = par_map(threads, candidates, |_, mut cand| {
             if cand.schedule.n_clusters() > 1 {
-                refine_boundaries(ctx, &mut cand, m, opts.max_region_iters, Some(&cache));
+                refine_boundaries(ctx, &mut cand, m, opts.max_region_iters, Some(cache));
             }
             cand
         });

@@ -46,6 +46,7 @@
 use crate::config::SimOptions;
 use crate::dse::parallel::par_map;
 use crate::model::Network;
+use crate::pipeline::cache_store::{CacheStore, StoreKey};
 use crate::util::fxhash::{FxHashMap, FxHashSet};
 
 use super::segmenter::{balanced_split_capped, SegResult};
@@ -97,6 +98,13 @@ pub struct SegmenterOptions {
     /// the window edge, double the window and re-run — the span memo makes
     /// the re-run cost only the newly exposed spans.
     pub dp_window_auto: bool,
+    /// Process-wide cache-store key (`SimOptions::cache_store`): the sweep
+    /// checks its span memo out of [`CacheStore::global`] under this key
+    /// instead of starting empty, so repeated models/sweeps in one process
+    /// pay each distinct span once (see
+    /// [`cache_store`](crate::pipeline::cache_store)). `None` keeps the
+    /// classic per-sweep memo.
+    pub store: Option<StoreKey>,
 }
 
 impl Default for SegmenterOptions {
@@ -105,18 +113,29 @@ impl Default for SegmenterOptions {
             kind: SegmenterKind::Balanced,
             dp_window: 4,
             dp_window_auto: false,
+            store: None,
         }
     }
 }
 
 impl SegmenterOptions {
-    /// The segmenter knobs carried by a simulation configuration.
+    /// The segmenter knobs carried by a simulation configuration. The
+    /// cache-store key is *not* derivable from [`SimOptions`] alone (it
+    /// fingerprints the network, platform, and method too) — callers that
+    /// honour `SimOptions::cache_store` attach it via [`Self::with_store`].
     pub fn from_sim(sim: &SimOptions) -> SegmenterOptions {
         SegmenterOptions {
             kind: sim.segmenter,
             dp_window: sim.dp_window,
             dp_window_auto: sim.dp_window_auto,
+            store: None,
         }
+    }
+
+    /// Attach (or clear) the process-wide cache-store key.
+    pub fn with_store(mut self, store: Option<StoreKey>) -> SegmenterOptions {
+        self.store = store;
+        self
     }
 }
 
@@ -127,6 +146,11 @@ pub struct SpanStats {
     pub hits: usize,
     /// Spans that ran the method's scheduler (== distinct spans costed).
     pub misses: usize,
+    /// The subset of `hits` served by entries an *earlier* sweep inserted
+    /// through the process-wide cache store — the cross-model/cross-sweep
+    /// reuse a batched run gets for free. Always 0 without
+    /// `SimOptions::cache_store`.
+    pub cross_hits: usize,
 }
 
 impl SpanStats {
@@ -137,6 +161,17 @@ impl SpanStats {
             0.0
         } else {
             self.hits as f64 / total as f64
+        }
+    }
+
+    /// Counters accumulated since `earlier` (a snapshot of the same memo
+    /// taken before this sweep started) — the per-sweep view of a
+    /// store-backed memo's cumulative counters.
+    pub fn since(&self, earlier: SpanStats) -> SpanStats {
+        SpanStats {
+            hits: self.hits - earlier.hits,
+            misses: self.misses - earlier.misses,
+            cross_hits: self.cross_hits - earlier.cross_hits,
         }
     }
 }
@@ -170,15 +205,16 @@ impl SegmenterReport {
 /// real scheduler, returning `(schedule, latency)` or `None` when the span
 /// is unschedulable. Implementations must be pure functions of `(lo, hi)`
 /// (the determinism guarantee rests on it) and `Sync` (spans fan across
-/// the worker pool).
+/// the worker pool). Schedules are `'static` so memoized results can live
+/// in the process-wide cache store beyond the sweep that produced them.
 pub trait SegmentCost: Sync {
-    type Sched: Clone + Send;
+    type Sched: Clone + Send + 'static;
     fn cost(&self, lo: usize, hi: usize) -> SegResult<Self::Sched>;
 }
 
 impl<S, F> SegmentCost for F
 where
-    S: Clone + Send,
+    S: Clone + Send + 'static,
     F: Fn(usize, usize) -> SegResult<S> + Sync,
 {
     type Sched = S;
@@ -191,16 +227,30 @@ where
 /// sweep. Values are the provider's exact results (pure function of the
 /// key), so a memoized sweep is bit-identical to an unmemoized one.
 /// Fx-hashed like the cluster cache (`util/fxhash.rs`).
+///
+/// Entries are stamped with the *epoch* (sweep number) that inserted them;
+/// when a memo lives in the process-wide
+/// [`CacheStore`](crate::pipeline::cache_store::CacheStore) and is reused
+/// by a later sweep, hits on earlier-epoch entries are counted as
+/// [`SpanStats::cross_hits`].
 #[derive(Debug)]
 pub struct SpanMemo<S> {
-    map: FxHashMap<(usize, usize), SegResult<S>>,
+    map: FxHashMap<(usize, usize), (SegResult<S>, u32)>,
+    epoch: u32,
     hits: usize,
     misses: usize,
+    cross_hits: usize,
 }
 
 impl<S> Default for SpanMemo<S> {
     fn default() -> Self {
-        SpanMemo { map: FxHashMap::default(), hits: 0, misses: 0 }
+        SpanMemo {
+            map: FxHashMap::default(),
+            epoch: 0,
+            hits: 0,
+            misses: 0,
+            cross_hits: 0,
+        }
     }
 }
 
@@ -210,7 +260,23 @@ impl<S: Clone> SpanMemo<S> {
     }
 
     pub fn stats(&self) -> SpanStats {
-        SpanStats { hits: self.hits, misses: self.misses }
+        SpanStats { hits: self.hits, misses: self.misses, cross_hits: self.cross_hits }
+    }
+
+    /// Distinct spans currently cached.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Start a new sweep: hits on entries inserted before this point count
+    /// as cross-sweep hits. Called by the cache store on checkout; a memo
+    /// that never changes epoch (the classic per-sweep path) reports 0.
+    pub fn begin_epoch(&mut self) {
+        self.epoch = self.epoch.saturating_add(1);
     }
 
     /// Memoized span evaluation (serial path — the balanced sweep and the
@@ -219,14 +285,27 @@ impl<S: Clone> SpanMemo<S> {
     where
         F: FnMut(usize, usize) -> SegResult<S>,
     {
-        if let Some(r) = self.map.get(&(lo, hi)) {
+        if let Some((r, born)) = self.map.get(&(lo, hi)) {
             self.hits += 1;
+            if *born < self.epoch {
+                self.cross_hits += 1;
+            }
             return r.clone();
         }
         let r = f(lo, hi);
         self.misses += 1;
-        self.map.insert((lo, hi), r.clone());
+        self.map.insert((lo, hi), (r.clone(), self.epoch));
         r
+    }
+
+    /// Merge entries from a memo filled concurrently under the same store
+    /// key. Values are pure functions of the span key, so colliding
+    /// entries are equal — existing entries win; `other`'s counters are
+    /// dropped (they were reported by its own sweep already).
+    pub fn absorb(&mut self, other: SpanMemo<S>) {
+        for (k, v) in other.map {
+            self.map.entry(k).or_insert(v);
+        }
     }
 
     /// Evaluate every not-yet-cached span across the deterministic worker
@@ -249,7 +328,7 @@ impl<S: Clone> SpanMemo<S> {
         let results = par_map(threads, todo.clone(), |_, (lo, hi)| provider.cost(lo, hi));
         for (key, r) in todo.into_iter().zip(results) {
             self.misses += 1;
-            self.map.insert(key, r);
+            self.map.insert(key, (r, self.epoch));
         }
     }
 }
@@ -598,9 +677,9 @@ fn dp_sweep<P: SegmentCost>(
     threads: usize,
     opts: SegmenterOptions,
     provider: &P,
+    memo: &mut SpanMemo<P::Sched>,
 ) -> Option<SegmenterResult<P::Sched>> {
     let domain = boundary_domain(net);
-    let mut memo: SpanMemo<P::Sched> = SpanMemo::new();
     let mut window = opts.dp_window;
     // beyond this, a seeded window adds nothing a no-prune pass lacks
     let max_window = domain.len().max(1);
@@ -614,7 +693,7 @@ fn dp_sweep<P: SegmentCost>(
             threads,
             window,
             provider,
-            &mut memo,
+            memo,
         );
         if !opts.dp_window_auto || window == 0 {
             break attempt.best;
@@ -655,6 +734,14 @@ fn dp_sweep<P: SegmentCost>(
 /// restrict boundaries to the clean-cut domain in both allocators; callers
 /// that must also charge cut-edge traffic wrap the provider through
 /// [`super::dag_segment::search_segments_dag`].
+///
+/// With `opts.store` set, the span memo is checked out of the process-wide
+/// [`CacheStore`] under that key instead of starting empty: spans costed
+/// by earlier sweeps of the same `(network, platform, method, sim)` are
+/// served from memory (reported as [`SpanStats::cross_hits`]). Memoized
+/// values are exact provider results — pure functions of `(lo, hi)` under
+/// the key's context — so a store-backed sweep is bit-identical to a cold
+/// one.
 pub fn search_segments_opts<P: SegmentCost>(
     net: &Network,
     min_segments: usize,
@@ -664,25 +751,68 @@ pub fn search_segments_opts<P: SegmentCost>(
     opts: SegmenterOptions,
     provider: &P,
 ) -> Option<SegmenterResult<P::Sched>> {
-    match opts.kind {
+    match opts.store {
+        None => {
+            let mut memo: SpanMemo<P::Sched> = SpanMemo::new();
+            search_segments_memo(
+                net,
+                min_segments,
+                max_segments,
+                max_layers,
+                threads,
+                opts,
+                provider,
+                &mut memo,
+            )
+        }
+        Some(key) => CacheStore::global().with_span_memo(key, |memo: &mut SpanMemo<P::Sched>| {
+            search_segments_memo(
+                net,
+                min_segments,
+                max_segments,
+                max_layers,
+                threads,
+                opts,
+                provider,
+                memo,
+            )
+        }),
+    }
+}
+
+/// [`search_segments_opts`] against an explicit span memo — the store
+/// checkout path (also what unit tests use to observe carried entries).
+/// The reported [`SegmenterResult::stats`] cover *this* sweep only (the
+/// memo's counters since entry).
+fn search_segments_memo<P: SegmentCost>(
+    net: &Network,
+    min_segments: usize,
+    max_segments: usize,
+    max_layers: usize,
+    threads: usize,
+    opts: SegmenterOptions,
+    provider: &P,
+    memo: &mut SpanMemo<P::Sched>,
+) -> Option<SegmenterResult<P::Sched>> {
+    let before = memo.stats();
+    let mut result = match opts.kind {
         SegmenterKind::Balanced => {
-            let mut memo = SpanMemo::new();
             let mut eval = |lo: usize, hi: usize| provider.cost(lo, hi);
             let got = balanced_sweep_memo(
                 net,
                 min_segments,
                 max_segments,
                 max_layers,
-                &mut memo,
+                memo,
                 &mut eval,
             )?;
-            Some(SegmenterResult {
+            SegmenterResult {
                 bounds: got.0,
                 schedules: got.1,
                 total_latency: got.2,
                 dp_window: opts.dp_window,
-                stats: memo.stats(),
-            })
+                stats: SpanStats::default(),
+            }
         }
         SegmenterKind::Dp => dp_sweep(
             net,
@@ -692,8 +822,11 @@ pub fn search_segments_opts<P: SegmentCost>(
             threads,
             opts,
             provider,
-        ),
-    }
+            memo,
+        )?,
+    };
+    result.stats = memo.stats().since(before);
+    Some(result)
 }
 
 #[cfg(test)]
@@ -719,7 +852,7 @@ mod tests {
         SegmenterOptions {
             kind: SegmenterKind::Dp,
             dp_window: window,
-            dp_window_auto: false,
+            ..SegmenterOptions::default()
         }
     }
 
@@ -766,7 +899,7 @@ mod tests {
                         SegmenterOptions {
                             kind: SegmenterKind::Balanced,
                             dp_window: window,
-                            dp_window_auto: false,
+                            ..SegmenterOptions::default()
                         },
                         &fake_provider,
                     );
@@ -895,6 +1028,33 @@ mod tests {
     }
 
     #[test]
+    fn span_memo_epochs_count_cross_sweep_hits() {
+        let mut memo: SpanMemo<(usize, usize)> = SpanMemo::new();
+        let mut eval = |lo: usize, hi: usize| fake_provider(lo, hi);
+        memo.get_or_eval(0, 2, &mut eval);
+        memo.get_or_eval(0, 2, &mut eval); // same-epoch hit
+        assert_eq!(memo.stats(), SpanStats { hits: 1, misses: 1, cross_hits: 0 });
+        memo.begin_epoch();
+        memo.get_or_eval(0, 2, &mut eval); // carried entry → cross-sweep hit
+        memo.get_or_eval(2, 4, &mut eval); // new span in the new epoch
+        memo.get_or_eval(2, 4, &mut eval); // same-epoch hit, not cross
+        let s = memo.stats();
+        assert_eq!(s, SpanStats { hits: 3, misses: 2, cross_hits: 1 });
+        assert_eq!(
+            s.since(SpanStats { hits: 1, misses: 1, cross_hits: 0 }),
+            SpanStats { hits: 2, misses: 1, cross_hits: 1 }
+        );
+        assert_eq!(memo.len(), 2);
+        // absorb keeps existing entries and adds the missing ones
+        let mut other: SpanMemo<(usize, usize)> = SpanMemo::new();
+        other.get_or_eval(7, 9, &mut eval);
+        other.get_or_eval(0, 2, &mut eval);
+        memo.absorb(other);
+        assert_eq!(memo.len(), 3);
+        assert!(!memo.is_empty());
+    }
+
+    #[test]
     fn auto_window_recovers_from_a_bad_balanced_seed() {
         // Cost model whose optimum (2 segments split at boundary 1) sits
         // far from AlexNet's weight-balanced seed (boundary 6, in front of
@@ -920,6 +1080,7 @@ mod tests {
             kind: SegmenterKind::Dp,
             dp_window: 1,
             dp_window_auto: true,
+            ..SegmenterOptions::default()
         };
         let auto =
             search_segments_opts(&net, 2, 2, usize::MAX, 1, auto_opts, &skewed).unwrap();

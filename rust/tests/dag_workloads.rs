@@ -130,7 +130,7 @@ fn dag_dp_matches_exhaustive_cut_ground_truth_with_real_scheduler() {
     let seg_opts = SegmenterOptions {
         kind: SegmenterKind::Dp,
         dp_window: 0,
-        dp_window_auto: false,
+        ..SegmenterOptions::default()
     };
     let dp = search_segments_dag(
         &net,

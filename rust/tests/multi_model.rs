@@ -1,0 +1,199 @@
+//! Multi-model co-scheduling + cache-store acceptance tests (PR 4):
+//!
+//! * a two-model co-schedule (weighted throughput) beats the
+//!   time-multiplexed sequential baseline on a zoo pair,
+//! * the weighted-throughput DP matches the exhaustive chiplet-split
+//!   ground truth bit-for-bit,
+//! * batched (store-backed) runs are bit-identical to
+//!   one-process-per-model runs at 1/2/8 threads, and
+//! * a batched sweep pays each distinct span once, reporting >0
+//!   cross-sweep cache hits.
+//!
+//! Store-stat assertions use distinctive `samples` values so their store
+//! keys cannot collide with other tests sharing the process-wide store.
+
+use scope::arch::McmConfig;
+use scope::config::SimOptions;
+use scope::model::WorkloadSet;
+use scope::scope::{co_schedule, schedule_scope, AllocatorKind, MultiOptions, SegmenterKind};
+
+fn sim(samples: u64, threads: usize, cache_store: bool) -> SimOptions {
+    SimOptions { samples, threads, cache_store, ..Default::default() }
+}
+
+#[test]
+fn co_schedule_beats_time_multiplexed_on_a_zoo_pair() {
+    // Two AlexNets on 64 chiplets: per-model scaling is sublinear at this
+    // scale (the paper's Fig. 9 regime), so spatial sharing — e.g. 32+32,
+    // each keeping well over half its full-package throughput — must beat
+    // round-robining the whole package.
+    let set = WorkloadSet::parse("alexnet,alexnet").unwrap();
+    let mopts = MultiOptions { share_quantum: 16, ..Default::default() };
+    let r = co_schedule(&set, &McmConfig::paper_default(64), &sim(16, 0, true), &mopts);
+    assert!(r.is_valid(), "{:?}", r.error);
+    assert!(r.rate > 0.0 && r.tm_rate > 0.0);
+    assert!(
+        r.rate > r.tm_rate,
+        "co-schedule {} must beat time-multiplexed {} (shares {:?})",
+        r.rate,
+        r.tm_rate,
+        r.outcomes.iter().map(|o| o.share).collect::<Vec<_>>()
+    );
+    assert_eq!(r.speedup_vs_tm().map(|x| x > 1.0), Some(true));
+    assert!(r.used_chiplets <= 64);
+    assert!(r.utilization() > 0.0 && r.utilization() <= 1.0);
+    // every model is actually served at the reported rate
+    for o in &r.outcomes {
+        assert!(o.result.eval.is_valid(), "{}", o.name);
+        assert!(o.result.throughput() / o.weight >= r.rate * (1.0 - 1e-12), "{}", o.name);
+    }
+}
+
+#[test]
+fn dp_allocator_matches_exhaustive_ground_truth_bit_for_bit() {
+    // A small mixed set where full enumeration is cheap: the DP must land
+    // on the same optimal mix rate (bit-identical — both allocators fold
+    // the same pure throughput table through exact min/max) and the same
+    // chiplet usage.
+    let set = WorkloadSet::parse("alexnet:1,scopenet:2").unwrap();
+    let s = sim(8, 0, true);
+    let mk = |allocator| MultiOptions {
+        allocator,
+        method: "scope".to_string(),
+        share_quantum: 4,
+    };
+    let mcm = McmConfig::paper_default(16);
+    let dp = co_schedule(&set, &mcm, &s, &mk(AllocatorKind::Dp));
+    let ex = co_schedule(&set, &mcm, &s, &mk(AllocatorKind::Exhaustive));
+    assert!(dp.is_valid(), "{:?}", dp.error);
+    assert!(ex.is_valid(), "{:?}", ex.error);
+    assert_eq!(
+        dp.rate.to_bits(),
+        ex.rate.to_bits(),
+        "dp {} vs exhaustive {}",
+        dp.rate,
+        ex.rate
+    );
+    assert_eq!(dp.used_chiplets, ex.used_chiplets);
+    assert_eq!(dp.total_throughput.to_bits(), ex.total_throughput.to_bits());
+    assert_eq!(dp.tm_rate.to_bits(), ex.tm_rate.to_bits());
+}
+
+#[test]
+fn batched_equals_unbatched_at_every_thread_count() {
+    // The store and the outer fan-out may change *how* the table is
+    // computed, never *what* it holds: shares, mix rate, and every
+    // per-model schedule must be bit-identical across store on/off and
+    // 1/2/8 worker threads.
+    let set = WorkloadSet::parse("scopenet,alexnet").unwrap();
+    let mcm = McmConfig::paper_default(16);
+    let mopts = MultiOptions { share_quantum: 8, ..Default::default() };
+    let base = co_schedule(&set, &mcm, &sim(12, 1, false), &mopts);
+    assert!(base.is_valid(), "{:?}", base.error);
+    for threads in [1usize, 2, 8] {
+        for store in [false, true] {
+            let got = co_schedule(&set, &mcm, &sim(12, threads, store), &mopts);
+            assert!(got.is_valid(), "threads={threads} store={store}");
+            assert_eq!(
+                base.rate.to_bits(),
+                got.rate.to_bits(),
+                "threads={threads} store={store}"
+            );
+            assert_eq!(base.used_chiplets, got.used_chiplets);
+            assert_eq!(base.tm_rate.to_bits(), got.tm_rate.to_bits());
+            for (a, b) in base.outcomes.iter().zip(&got.outcomes) {
+                assert_eq!(a.share, b.share, "threads={threads} store={store}");
+                assert_eq!(
+                    a.result.eval.total_cycles.to_bits(),
+                    b.result.eval.total_cycles.to_bits(),
+                    "threads={threads} store={store} model={}",
+                    a.name
+                );
+                assert_eq!(a.result.schedule, b.result.schedule, "model={}", a.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_sweep_pays_each_span_once_and_reports_cross_hits() {
+    // Two passes of the same (net, platform, method, sim) with the store
+    // on — the batched-sweep shape: the second sweep's spans are all
+    // carried from the first (zero scheduler calls), counted as
+    // cross-sweep hits, and the result stays bit-identical to a
+    // store-less run.
+    let net = scope::model::zoo::alexnet();
+    let mcm = McmConfig::paper_default(16);
+    let plain = schedule_scope(&net, &mcm, &sim(28, 0, false));
+    let first = schedule_scope(&net, &mcm, &sim(28, 0, true));
+    let second = schedule_scope(&net, &mcm, &sim(28, 0, true));
+    for r in [&first, &second] {
+        assert!(r.eval.is_valid(), "{:?}", r.eval.error);
+        assert_eq!(plain.eval.total_cycles.to_bits(), r.eval.total_cycles.to_bits());
+        assert_eq!(plain.schedule, r.schedule);
+    }
+    let s1 = first.segmenter.as_ref().expect("report").stats;
+    let s2 = second.segmenter.as_ref().expect("report").stats;
+    assert!(s1.misses > 0, "first sweep must schedule spans: {s1:?}");
+    assert_eq!(s1.cross_hits, 0, "nothing to carry on a cold store: {s1:?}");
+    assert_eq!(s2.misses, 0, "every span must be carried: {s2:?}");
+    assert!(s2.cross_hits > 0, "{s2:?}");
+    assert_eq!(
+        s1.hits + s1.misses,
+        s2.hits + s2.misses,
+        "identical sweeps make identical span requests"
+    );
+}
+
+#[test]
+fn store_backed_dp_segmenter_is_thread_invariant() {
+    // The store key deliberately excludes the thread count (results are
+    // bit-identical at every count), so runs at different thread counts
+    // *share* spans — and must still agree exactly, DP segmenter included.
+    let net = scope::model::zoo::alexnet();
+    let mcm = McmConfig::paper_default(16);
+    let mk = |threads| SimOptions {
+        samples: 44,
+        threads,
+        cache_store: true,
+        segmenter: SegmenterKind::Dp,
+        ..Default::default()
+    };
+    let base = schedule_scope(&net, &mcm, &mk(1));
+    assert!(base.eval.is_valid(), "{:?}", base.eval.error);
+    for threads in [2usize, 8] {
+        let got = schedule_scope(&net, &mcm, &mk(threads));
+        assert_eq!(base.schedule, got.schedule, "threads={threads}");
+        assert_eq!(
+            base.eval.total_cycles.to_bits(),
+            got.eval.total_cycles.to_bits(),
+            "threads={threads}"
+        );
+    }
+}
+
+#[test]
+fn serving_mix_co_schedules_end_to_end() {
+    // The built-in mixed chain+DAG set (resnet50_dag + googlenet +
+    // alexnet) runs end to end on a small package with a coarse grid.
+    // The per-model method is `sequential` — the cheap §V-A scheduler —
+    // so the deep DAGs stay fast in a debug test; the full Scope search
+    // over this set is the CI release smoke's job.
+    let set = WorkloadSet::serving_mix();
+    let mopts = MultiOptions {
+        method: "sequential".to_string(),
+        share_quantum: 8,
+        ..Default::default()
+    };
+    let r = co_schedule(&set, &McmConfig::paper_default(32), &sim(4, 0, true), &mopts);
+    assert!(r.is_valid(), "{:?}", r.error);
+    assert_eq!(r.outcomes.len(), 3);
+    assert!(r.rate > 0.0);
+    assert!(r.used_chiplets <= 32);
+    for o in &r.outcomes {
+        assert!(o.share >= 8, "{}: grid share", o.name);
+        assert!(o.result.eval.is_valid(), "{}: {:?}", o.name, o.result.eval.error);
+    }
+    let snap = r.store.expect("store stats on");
+    assert!(snap.span_checkouts > 0);
+}

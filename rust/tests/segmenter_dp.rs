@@ -131,7 +131,7 @@ fn dp_matches_exhaustive_boundary_enumeration_on_alexnet() {
         3,
         usize::MAX,
         1,
-        SegmenterOptions { kind: SegmenterKind::Dp, dp_window: 0, dp_window_auto: false },
+        SegmenterOptions { kind: SegmenterKind::Dp, dp_window: 0, ..SegmenterOptions::default() },
         &provider,
     )
     .expect("dp result");
