@@ -1,0 +1,62 @@
+//! Serving-simulator throughput: how many discrete events per second the
+//! event loop sustains, measured on a deliberately overloaded two-model
+//! mix (tens of thousands of arrivals) so the loop — not the scheduler —
+//! dominates. The (model, share) preparation is timed separately, and the
+//! loop's bit-identity on repeat runs is asserted before timing.
+//!
+//! `SCOPE_BENCH_FAST=1` shrinks the stream for smoke runs.
+
+use scope::arch::McmConfig;
+use scope::bench::{bench, report};
+use scope::config::SimOptions;
+use scope::model::WorkloadSet;
+use scope::scope::multi_model::{HybridAllocation, ShareGroup};
+use scope::serve::trace::RequestStream;
+use scope::serve::{prepare, simulate_allocation, ServeOptions};
+
+fn main() {
+    let fast = std::env::var("SCOPE_BENCH_FAST").is_ok();
+    let mut set = WorkloadSet::parse("alexnet,scopenet:2").expect("zoo models");
+    set.apply_slo_spec("10000").expect("slo spec");
+    let mcm = McmConfig::paper_default(16);
+    let sim = SimOptions { samples: 4, ..SimOptions::default() };
+    let sopts = ServeOptions {
+        arrival_rate: if fast { 2_000.0 } else { 20_000.0 },
+        horizon_secs: if fast { 0.05 } else { 0.5 },
+        max_batch: 4,
+        share_quantum: 8,
+        seed: 7,
+        ..ServeOptions::default()
+    };
+    let t0 = std::time::Instant::now();
+    let prepared = prepare(&set, &mcm, &sim, &sopts).expect("prepare");
+    println!(
+        "[serving] prepared {} (model, share) service tables in {:.3} s",
+        prepared.evals,
+        t0.elapsed().as_secs_f64()
+    );
+    let stream = RequestStream::poisson(&set, sopts.arrival_rate, sopts.horizon_ns(), sopts.seed);
+    let alloc = HybridAllocation {
+        groups: vec![ShareGroup { members: vec![0, 1], chiplets: 16 }],
+    };
+    let wait = sopts.max_wait_ns();
+    let baseline = simulate_allocation(&alloc, &prepared, &stream, sopts.max_batch, wait, true);
+    assert!(baseline.feasible, "tm@16 must schedule");
+    assert!(baseline.completed as usize == stream.len(), "the sim must drain");
+    let again = simulate_allocation(&alloc, &prepared, &stream, sopts.max_batch, wait, true);
+    assert_eq!(baseline, again, "the event loop must be bit-identical on repeat");
+    // timed log-free — the configuration serve()'s enumeration loop runs
+    let iters = if fast { 3 } else { 10 };
+    let m = bench("simulate_allocation (tm@16)", 1, iters, || {
+        let out = simulate_allocation(&alloc, &prepared, &stream, sopts.max_batch, wait, false);
+        std::hint::black_box(out.events);
+    });
+    println!("{}", report("serving event loop", std::slice::from_ref(&m)));
+    let events_per_sec = baseline.events as f64 / m.mean().max(1e-12);
+    println!(
+        "[serving] {} arrivals -> {} events per run | {:.0} events/sec",
+        stream.len(),
+        baseline.events,
+        events_per_sec
+    );
+}

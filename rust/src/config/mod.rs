@@ -66,6 +66,13 @@ pub struct SimOptions {
     /// with the store on or off; default off (the `multi` subcommand
     /// enables it).
     pub cache_store: bool,
+    /// Cache-store persistence (config key `cache_file`, CLI
+    /// `--cache-file`): path the process-wide store's span memos are
+    /// serialized to on exit and reloaded from on startup, so repeated
+    /// CLI invocations reuse each other's sweeps (a warm-from-disk run
+    /// re-schedules zero spans). Empty = no persistence; setting it
+    /// implies `cache_store`.
+    pub cache_file: String,
 }
 
 impl Default for SimOptions {
@@ -79,6 +86,7 @@ impl Default for SimOptions {
             dp_window: 4,
             dp_window_auto: false,
             cache_store: false,
+            cache_file: String::new(),
         }
     }
 }
@@ -93,6 +101,11 @@ pub struct Config {
     /// rate weights. Empty unless configured; names are resolved against
     /// the zoo by `model::workload_set::WorkloadSet::from_pairs`.
     pub models: Vec<(String, f64)>,
+    /// Whether the file set `cache_store` explicitly. Explicit choices
+    /// beat the implied defaults of `--cache-file` and the batched
+    /// subcommands (`multi`/`serve` turn the store on only when neither
+    /// the CLI flag nor the config key was given).
+    pub cache_store_explicit: bool,
 }
 
 impl Config {
@@ -102,6 +115,7 @@ impl Config {
             mcm: McmConfig::paper_default(chiplets),
             sim: SimOptions::default(),
             models: Vec::new(),
+            cache_store_explicit: false,
         }
     }
 
@@ -143,7 +157,16 @@ impl Config {
                     cfg.sim.segmenter =
                         SegmenterKind::parse(value).map_err(|e| anyhow!("{e}"))?
                 }
-                "cache_store" => cfg.sim.cache_store = parse_bool(value)?,
+                "cache_store" => {
+                    cfg.sim.cache_store = parse_bool(value)?;
+                    cfg.cache_store_explicit = true;
+                }
+                "cache_file" => {
+                    if value.is_empty() {
+                        return Err(anyhow!("cache_file expects a path"));
+                    }
+                    cfg.sim.cache_file = value.clone();
+                }
                 "models" => cfg.models = parse_models(value)?,
                 "dp_window" => {
                     if value == "auto" {
@@ -173,6 +196,12 @@ impl Config {
                 "dram.pj_per_bit" => cfg.mcm.dram.pj_per_bit = parse_num(value)?,
                 other => return Err(anyhow!("unknown config key {other:?}")),
             }
+        }
+        // cache_file implies the store, but an explicit cache_store key
+        // wins — applied after the loop so the rule cannot depend on the
+        // parse map's key order
+        if !cfg.sim.cache_file.is_empty() && !cfg.cache_store_explicit {
+            cfg.sim.cache_store = true;
         }
         Ok(cfg)
     }
@@ -340,12 +369,84 @@ pub const KNOBS: &[KnobDoc] = &[
         doc: "process-wide span/cluster store: batched sweeps pay each span once (multi: on)",
     },
     KnobDoc {
+        config_key: "cache_file",
+        cli_flag: "--cache-file <path>",
+        bench_env: "",
+        sim_field: "cache_file",
+        default_value: "(none)",
+        doc: "persist span memos to JSON on exit, reload on startup (implies cache_store)",
+    },
+    KnobDoc {
         config_key: "models",
         cli_flag: "--models a[:w],b,..",
         bench_env: "",
         sim_field: "",
         default_value: "serving mix",
-        doc: "multi-model serving set with per-model rate weights (multi subcommand)",
+        doc: "multi-model serving set with per-model rate weights (multi/serve subcommands)",
+    },
+    KnobDoc {
+        config_key: "",
+        cli_flag: "--arrival-rate <R>",
+        bench_env: "",
+        sim_field: "",
+        default_value: "32",
+        doc: "serve: Poisson mix rate (mix units/s); model i arrives at R x weight_i",
+    },
+    KnobDoc {
+        config_key: "",
+        cli_flag: "--rates a:r,..",
+        bench_env: "",
+        sim_field: "",
+        default_value: "(none)",
+        doc: "serve: absolute per-model arrival-rate overrides (requests/s)",
+    },
+    KnobDoc {
+        config_key: "",
+        cli_flag: "--trace <file>",
+        bench_env: "",
+        sim_field: "",
+        default_value: "(none)",
+        doc: "serve: replay a JSON request trace instead of Poisson arrivals",
+    },
+    KnobDoc {
+        config_key: "",
+        cli_flag: "--slo ms | a:ms,..",
+        bench_env: "",
+        sim_field: "",
+        default_value: "(none)",
+        doc: "serve: p99 latency SLOs (ms); allocations whose simulated p99 exceeds are pruned",
+    },
+    KnobDoc {
+        config_key: "",
+        cli_flag: "--batch <B>",
+        bench_env: "",
+        sim_field: "",
+        default_value: "8",
+        doc: "serve: per-model batch-size cap",
+    },
+    KnobDoc {
+        config_key: "",
+        cli_flag: "--max-wait <ms>",
+        bench_env: "",
+        sim_field: "",
+        default_value: "1",
+        doc: "serve: longest a queued head request waits before a part-full dispatch",
+    },
+    KnobDoc {
+        config_key: "",
+        cli_flag: "--horizon <s>",
+        bench_env: "",
+        sim_field: "",
+        default_value: "0.25",
+        doc: "serve: arrival-generation window; the sim then drains",
+    },
+    KnobDoc {
+        config_key: "",
+        cli_flag: "--seed <S>",
+        bench_env: "",
+        sim_field: "",
+        default_value: "7",
+        doc: "serve: Poisson stream seed; same seed = bit-identical replay",
     },
     KnobDoc {
         config_key: "",
@@ -357,11 +458,11 @@ pub const KNOBS: &[KnobDoc] = &[
     },
     KnobDoc {
         config_key: "",
-        cli_flag: "--quantum <Q>",
+        cli_flag: "--quantum <Q|auto>",
         bench_env: "",
         sim_field: "",
         default_value: "auto",
-        doc: "multi: chiplet-share granularity (0/auto = total/16, floor 1)",
+        doc: "multi/serve: chiplet-share granularity ('auto' = total/16, floor 1; 0 rejected)",
     },
     KnobDoc {
         config_key: "",
@@ -369,7 +470,7 @@ pub const KNOBS: &[KnobDoc] = &[
         bench_env: "",
         sim_field: "",
         default_value: "scope",
-        doc: "multi: per-model span scheduler (any SV-A method name)",
+        doc: "multi/serve: per-model span scheduler (any SV-A method name)",
     },
     KnobDoc {
         config_key: "",
@@ -579,10 +680,33 @@ mod tests {
     fn cache_store_key_parses() {
         let cfg = Config::from_kv(&parse_kv("cache_store = true\n").unwrap(), 16).unwrap();
         assert!(cfg.sim.cache_store);
+        assert!(cfg.cache_store_explicit, "the key marks the choice explicit");
         let off = Config::from_kv(&parse_kv("cache_store = false\n").unwrap(), 16).unwrap();
         assert!(!off.sim.cache_store);
+        assert!(off.cache_store_explicit, "an explicit opt-out is explicit too");
         assert!(!SimOptions::default().cache_store, "off by default");
+        assert!(!Config::paper_default(16).cache_store_explicit);
         assert!(Config::from_kv(&parse_kv("cache_store = maybe\n").unwrap(), 16).is_err());
+    }
+
+    #[test]
+    fn cache_file_key_sets_path_and_implies_store() {
+        let cfg =
+            Config::from_kv(&parse_kv("cache_file = /tmp/spans.json\n").unwrap(), 16).unwrap();
+        assert_eq!(cfg.sim.cache_file, "/tmp/spans.json");
+        assert!(cfg.sim.cache_store, "persistence implies the store");
+        assert!(SimOptions::default().cache_file.is_empty());
+        assert!(Config::from_kv(&parse_kv("cache_file =\n").unwrap(), 16).is_err());
+        // an explicit store opt-out wins over the cache_file implication,
+        // in either key order (the rule applies after the parse loop)
+        for text in [
+            "cache_file = f.json\ncache_store = false\n",
+            "cache_store = false\ncache_file = f.json\n",
+        ] {
+            let cfg = Config::from_kv(&parse_kv(text).unwrap(), 16).unwrap();
+            assert!(!cfg.sim.cache_store, "{text}");
+            assert_eq!(cfg.sim.cache_file, "f.json");
+        }
     }
 
     #[test]

@@ -29,6 +29,7 @@
 //! | Fig. 7–10 tables | [`report`] + `benches/` |
 //! | Table III platform | [`arch`] |
 //! | multi-model serving (SCAR-style extension) | [`scope::multi_model`], [`model::workload_set`] |
+//! | serving latency / SLOs / hybrid temporal shares (SCAR + arXiv:2312.09401) | [`serve`] |
 //!
 //! ## Sixty-second tour
 //!
@@ -60,7 +61,11 @@
 //! ([`pipeline::eval_cache`]); `SimOptions::threads` controls the worker
 //! count and the result is bit-identical at every setting. Batched runs
 //! (repeated sweeps, multi-model serving sets) share their memo tables
-//! through the process-wide keyed [`pipeline::cache_store`].
+//! through the process-wide keyed [`pipeline::cache_store`], which can
+//! persist its span memos to disk (`--cache-file`) so repeated CLI
+//! invocations reuse each other's sweeps. The [`serve`] subsystem replays
+//! trace-driven request streams against co-scheduled packages — batching,
+//! tail latency, SLO pruning, and hybrid spatial/temporal shares.
 
 // Hot-path cost functions take the full (layer, partition, region, mesh)
 // geometry as parameters by design.
@@ -78,5 +83,6 @@ pub mod pipeline;
 pub mod report;
 pub mod runtime;
 pub mod scope;
+pub mod serve;
 pub mod storage;
 pub mod util;

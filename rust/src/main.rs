@@ -10,6 +10,7 @@
 //!   casestudy   balance + energy breakdown               [Fig. 10]
 //!   space       Equ. 8–9 search-space counts
 //!   multi       co-schedule several models on one package [SCAR-style]
+//!   serve       discrete-event serving sim: batching, SLOs, hybrid shares
 //!   pipeline    run the functional AOT pipeline (PJRT)   [E2E]
 
 use anyhow::{anyhow, bail, Result};
@@ -21,9 +22,13 @@ use scope::coordinator::{run_pipeline, PipelineMode};
 use scope::dse::{ExhaustiveOptions, PartitionSpace};
 use scope::model::zoo;
 use scope::model::WorkloadSet;
+use scope::pipeline::cache_store::CacheStore;
 use scope::report::figures;
 use scope::runtime::Manifest;
+use scope::scope::multi_model::parse_quantum;
 use scope::scope::{co_schedule, schedule_scope, AllocatorKind, MultiOptions, SegmenterKind};
+use scope::serve::trace::RequestStream;
+use scope::serve::{self, ServeOptions};
 use scope::util::cli::Args;
 use scope::util::table::{eng, f3, Table};
 
@@ -47,6 +52,15 @@ SUBCOMMANDS
               one package vs the time-multiplexed sequential baseline
               (default set: resnet50_dag:1 + googlenet:2 + alexnet:4;
               the shared span/cluster cache store is on here by default)
+  serve       [--models a[:w],b,.. | serving_mix] [--chiplets C] [--seed S]
+              [--arrival-rate R | --trace file] [--rates a:r,..]
+              [--slo ms|a:ms,..] [--batch B] [--max-wait ms] [--horizon s]
+              [--method scope] [--quantum Q]   replay a request stream
+              against every hybrid spatial/temporal allocation of the
+              share grid; batch latencies from the scheduled pipelines,
+              temporal shares charged the DRAM weight-swap; allocations
+              whose simulated p99 breaks a --slo bound are pruned.
+              Deterministic: one seed = one bit-identical report.
   pipeline    [--mode merged|isp|single|all] [--samples N] [--artifacts DIR]
   sensitivity [--net resnet50] [--chiplets 256] [--knob nop|dram]
   help
@@ -64,6 +78,11 @@ COMMON FLAGS
                     window edge).
   --cache-store     process-wide keyed span/cluster cache: batched sweeps
                     pay each distinct span once (bit-identical results).
+  --cache-file <f>  persist the cache store's span memos to <f> on exit and
+                    reload them on startup (implies --cache-store unless
+                    that flag explicitly disables the store): repeated
+                    invocations reuse each other's sweeps — a warm run
+                    re-schedules zero spans.
 
 `scope help` appends the full generated knob table (every config key,
 CLI flag, and bench env var).
@@ -90,6 +109,7 @@ fn load_config(args: &Args, chiplets: usize) -> Result<Config> {
         "" => Config::paper_default(chiplets),
         path => Config::load_file(std::path::Path::new(path), chiplets)?,
     };
+    let store_explicit = cache_store_explicit(args, &cfg);
     let sim = &mut cfg.sim;
     sim.samples = args.usize_or("samples", sim.samples as usize)? as u64;
     sim.threads = args.threads_or(sim.threads)?;
@@ -112,7 +132,45 @@ fn load_config(args: &Args, chiplets: usize) -> Result<Config> {
         "false" | "0" => sim.cache_store = false,
         other => bail!("--cache-store expects true/false, got {other:?}"),
     }
+    match args.str_or("cache-file", "").as_str() {
+        "" => {}
+        path => {
+            sim.cache_file = path.to_string();
+            // --cache-file implies the store, but an explicit opt-out
+            // wins whether it came from `--cache-store false` or a
+            // `cache_store = false` config-file line
+            if !store_explicit {
+                sim.cache_store = true;
+            }
+        }
+    }
+    if !sim.cache_file.is_empty() && sim.cache_store {
+        let path = std::path::PathBuf::from(&sim.cache_file);
+        // warm the process-wide store from disk; main() persists on exit.
+        // An unreadable file must not brick the CLI — warn, start cold,
+        // and let the exit-time persist rewrite it.
+        if let Err(e) = CacheStore::global().load_file(&path) {
+            eprintln!("warning: ignoring cache file {}: {e}", path.display());
+        }
+        CacheStore::global().set_persist_path(Some(path));
+    }
     Ok(cfg)
+}
+
+/// Whether the user explicitly set the cache-store knob — via the CLI
+/// flag or a config-file `cache_store` key. Explicit choices beat the
+/// implied defaults of `--cache-file` and the batched subcommands.
+fn cache_store_explicit(args: &Args, cfg: &Config) -> bool {
+    !args.str_or("cache-store", "").is_empty() || cfg.cache_store_explicit
+}
+
+/// The batched subcommands (`multi`, `serve`) default the shared cache
+/// store ON; an explicit opt-out wins, whether it came from the CLI flag
+/// or a `cache_store = false` line in the config file.
+fn batched_store_default(args: &Args, cfg: &Config, sim: &mut SimOptions) {
+    if !cache_store_explicit(args, cfg) {
+        sim.cache_store = true;
+    }
 }
 
 fn sim_options(args: &Args, chiplets: usize) -> Result<(McmConfig, SimOptions)> {
@@ -323,38 +381,33 @@ fn cmd_space(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The serving set of the `multi`/`serve` subcommands: `--models` wins,
+/// then the config file's `models` key, then the built-in mix. Both
+/// paths resolve the special name `serving_mix` through the same
+/// [`WorkloadSet::resolve_pairs`] contract.
+fn serving_set(args: &Args, cfg: &Config) -> Result<WorkloadSet> {
+    let spec = args.str_or("models", "");
+    if !spec.is_empty() {
+        WorkloadSet::parse(&spec)
+    } else if !cfg.models.is_empty() {
+        WorkloadSet::resolve_pairs(&cfg.models)
+    } else {
+        Ok(WorkloadSet::serving_mix())
+    }
+}
+
 fn cmd_multi(args: &Args) -> Result<()> {
     let chiplets = args.usize_or("chiplets", 64)?;
     let cfg = load_config(args, chiplets)?;
-    let mut sim = cfg.sim;
-    // Batched by construction — the shared store defaults ON here, but an
-    // explicit opt-out wins, whether it came from the CLI flag or a
-    // `cache_store = false` line in the config file.
-    let cli_set = !args.str_or("cache-store", "").is_empty();
-    let cfg_set = match args.str_or("config", "").as_str() {
-        "" => false,
-        path => {
-            // load_config already parsed this file successfully
-            let text = std::fs::read_to_string(path)?;
-            scope::config::parse_kv(&text)?.contains_key("cache_store")
-        }
-    };
-    if !cli_set && !cfg_set {
-        sim.cache_store = true;
-    }
-    let spec = args.str_or("models", "");
-    let set = if !spec.is_empty() {
-        WorkloadSet::parse(&spec)?
-    } else if !cfg.models.is_empty() {
-        WorkloadSet::from_pairs(&cfg.models)?
-    } else {
-        WorkloadSet::serving_mix()
-    };
+    let mut sim = cfg.sim.clone();
+    batched_store_default(args, &cfg, &mut sim);
+    let set = serving_set(args, &cfg)?;
     let mopts = MultiOptions {
         allocator: AllocatorKind::parse(&args.str_or("allocator", AllocatorKind::Dp.name()))
             .map_err(|e| anyhow!("--allocator: {e}"))?,
         method: args.str_choice_or("method", "scope", METHOD_NAMES)?,
-        share_quantum: args.usize_or("quantum", 0)?,
+        share_quantum: parse_quantum(&args.str_or("quantum", "auto"))
+            .map_err(|e| anyhow!("--quantum: {e}"))?,
     };
     println!("serving set: {} on {} chiplets\n", set.label(), cfg.mcm.chiplets);
     let r = co_schedule(&set, &cfg.mcm, &sim, &mopts);
@@ -385,6 +438,101 @@ fn cmd_multi(args: &Args) -> Result<()> {
             s.span_checkouts, s.span_reuses, s.spans_carried, s.cluster_hits, s.cluster_misses,
         );
     }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let chiplets = args.usize_or("chiplets", 16)?;
+    let cfg = load_config(args, chiplets)?;
+    let mut sim = cfg.sim.clone();
+    batched_store_default(args, &cfg, &mut sim);
+    let mut set = serving_set(args, &cfg)?;
+    let slo_spec = args.str_or("slo", "");
+    if !slo_spec.is_empty() {
+        set.apply_slo_spec(&slo_spec).map_err(|e| anyhow!("--slo: {e}"))?;
+    }
+    let rates_spec = args.str_or("rates", "");
+    if !rates_spec.is_empty() {
+        set.apply_rate_spec(&rates_spec).map_err(|e| anyhow!("--rates: {e}"))?;
+    }
+    let sopts = ServeOptions {
+        arrival_rate: args.f64_or("arrival-rate", 32.0)?,
+        horizon_secs: args.f64_or("horizon", 0.25)?,
+        max_batch: args.usize_or("batch", 8)?,
+        max_wait_ms: args.f64_or("max-wait", 1.0)?,
+        seed: args.usize_or("seed", 7)? as u64,
+        method: args.str_choice_or("method", "scope", METHOD_NAMES)?,
+        share_quantum: parse_quantum(&args.str_or("quantum", "auto"))
+            .map_err(|e| anyhow!("--quantum: {e}"))?,
+    };
+    let trace_path = args.str_or("trace", "");
+    if !trace_path.is_empty() {
+        // the trace determines every arrival — explicit stream-generation
+        // flags would be silently ignored, so reject the conflict instead
+        for flag in ["arrival-rate", "rates", "horizon", "seed"] {
+            if !args.str_or(flag, "").is_empty() {
+                bail!("--{flag} has no effect with --trace (the trace determines every arrival)");
+            }
+        }
+    }
+    // the full knob surface is validated before any scheduling runs
+    sopts.validate(!trace_path.is_empty()).map_err(|e| anyhow!("{e}"))?;
+    let stream = if trace_path.is_empty() {
+        let expected =
+            serve::trace::expected_arrivals(&set, sopts.arrival_rate, sopts.horizon_ns());
+        if expected > serve::trace::MAX_ARRIVALS as f64 {
+            bail!(
+                "--arrival-rate/--rates x --horizon would generate ~{expected:.0} requests \
+                 (cap {}); lower the rate or shorten the horizon",
+                serve::trace::MAX_ARRIVALS
+            );
+        }
+        RequestStream::poisson(&set, sopts.arrival_rate, sopts.horizon_ns(), sopts.seed)
+    } else {
+        RequestStream::load(std::path::Path::new(&trace_path), &set)?
+    };
+    let source = if trace_path.is_empty() {
+        format!(
+            "poisson {} mix/s over {} s, seed {}",
+            sopts.arrival_rate, sopts.horizon_secs, sopts.seed
+        )
+    } else {
+        format!("trace {trace_path}")
+    };
+    println!(
+        "serving set: {} on {} chiplets | {} arrivals ({source})\n",
+        set.label(),
+        cfg.mcm.chiplets,
+        stream.len(),
+    );
+    let r = serve::serve(&set, &cfg.mcm, &sim, &sopts, &stream);
+    println!("{}", figures::serving_table(&r)?);
+    for (mode, o) in r.modes() {
+        let verdict = if !o.sim.feasible {
+            "infeasible (a share cannot schedule its model)".to_string()
+        } else if o.meets_all_slos {
+            "meets every declared SLO".to_string()
+        } else {
+            format!("violates an SLO (worst p99/slo {:.2}x)", o.worst_slo_ratio)
+        };
+        println!(
+            "{mode:>7} -> {} | {verdict} | {} swaps",
+            o.alloc.label(&set),
+            o.sim.swaps
+        );
+    }
+    println!(
+        "allocations: {} simulated ({} schedulable, {} meeting every SLO) | (model, share) evals: {}",
+        r.allocations, r.feasible_allocations, r.slo_feasible_allocations, r.evals
+    );
+    let hybrid = r.hybrid.as_ref().ok_or_else(|| anyhow!("no allocation was enumerated"))?;
+    println!(
+        "completed: {} / {} requests on the winner | events: {} | makespan: {} ms",
+        hybrid.sim.completed,
+        stream.len(),
+        hybrid.sim.events,
+        f3(hybrid.sim.makespan_ns as f64 / 1e6),
+    );
     Ok(())
 }
 
@@ -437,7 +585,7 @@ fn cmd_sensitivity(args: &Args) -> Result<()> {
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
-    match args.subcommand.as_deref() {
+    let out = match args.subcommand.as_deref() {
         Some("info") => cmd_info(&args),
         Some("search") => cmd_search(&args),
         Some("compare") => cmd_compare(&args),
@@ -447,6 +595,7 @@ fn main() -> Result<()> {
         Some("casestudy") => cmd_casestudy(&args),
         Some("space") => cmd_space(&args),
         Some("multi") => cmd_multi(&args),
+        Some("serve") => cmd_serve(&args),
         Some("pipeline") => cmd_pipeline(&args),
         Some("sensitivity") => cmd_sensitivity(&args),
         Some("help") | None => {
@@ -456,5 +605,12 @@ fn main() -> Result<()> {
             Ok(())
         }
         Some(other) => Err(anyhow!("unknown subcommand {other:?}; try `scope help`")),
-    }
+    };
+    // --cache-file: write the warmed span memos back for the next run —
+    // even when the subcommand failed late, the spans it paid for are
+    // pure values worth keeping (the subcommand's error still wins).
+    let persisted = CacheStore::global().persist();
+    out?;
+    persisted?;
+    Ok(())
 }

@@ -1,5 +1,6 @@
 //! Multi-model workload sets — the serving-scale input of the SCAR-style
-//! co-scheduler ([`scope::multi_model`](crate::scope::multi_model)).
+//! co-scheduler ([`scope::multi_model`](crate::scope::multi_model)) and
+//! the discrete-event serving simulator ([`serve`](crate::serve)).
 //!
 //! Real MCM deployments serve several networks from one package; a
 //! [`WorkloadSet`] names the models and their *rate weights*: the request
@@ -9,10 +10,19 @@
 //! mix rate; the weights are what make the objective non-degenerate
 //! (without them, all capacity would flow to the cheapest model).
 //!
+//! Serving adds two optional per-model fields on top of the weights:
+//! a **p99 latency SLO** ([`ModelSpec::slo_ms`], set from the `--slo`
+//! spec) that the hybrid allocator prunes against, and an **absolute
+//! arrival rate** ([`ModelSpec::rate`], set from the `--rates` spec)
+//! overriding the default `--arrival-rate × weight` Poisson intensity.
+//!
 //! Sets come from the `models` config key / `--models` CLI flag
 //! (`name[:weight],...` — parsed by
-//! [`config::parse_models`](crate::config::parse_models)) or from the
-//! built-in mixed chain+DAG [`WorkloadSet::serving_mix`].
+//! [`config::parse_models`](crate::config::parse_models)) or from
+//! [`WorkloadSet::serving_mix`] directly. A spec consisting solely of
+//! the special name `serving_mix` resolves to the built-in mix; it is
+//! not a zoo name and cannot be combined with other entries or given a
+//! weight.
 
 use anyhow::{anyhow, Result};
 
@@ -20,12 +30,30 @@ use super::graph::Network;
 use super::zoo;
 use crate::config::parse_models;
 
-/// One model of a serving set: the network plus its rate weight.
+/// One model of a serving set: the network plus its rate weight and
+/// optional serving fields.
 #[derive(Clone, Debug)]
 pub struct ModelSpec {
     pub net: Network,
     /// Samples of this model per mix unit (must be positive and finite).
     pub weight: f64,
+    /// Declared p99 latency SLO in milliseconds (`--slo`); `None` = no
+    /// bound — the serving allocator never prunes on this model.
+    pub slo_ms: Option<f64>,
+    /// Absolute arrival rate in requests/s (`--rates`); `None` = the
+    /// stream default `mix rate × weight`.
+    pub rate: Option<f64>,
+}
+
+impl ModelSpec {
+    fn new(net: Network, weight: f64) -> ModelSpec {
+        ModelSpec { net, weight, slo_ms: None, rate: None }
+    }
+
+    /// The declared SLO in integer nanoseconds (the event clock).
+    pub fn slo_ns(&self) -> Option<u64> {
+        self.slo_ms.map(|ms| (ms * 1e6).round() as u64)
+    }
 }
 
 /// A set of networks co-served from one package.
@@ -46,7 +74,7 @@ impl WorkloadSet {
             if !weight.is_finite() || *weight <= 0.0 {
                 return Err(anyhow!("{name}: weight must be positive, got {weight}"));
             }
-            models.push(ModelSpec { net, weight: *weight });
+            models.push(ModelSpec::new(net, *weight));
         }
         if models.is_empty() {
             return Err(anyhow!("workload set needs at least one model"));
@@ -54,22 +82,120 @@ impl WorkloadSet {
         Ok(WorkloadSet { models })
     }
 
-    /// Parse a `--models` spec: `name[:weight],...` (weight defaults to 1).
+    /// Parse a `--models` spec: `name[:weight],...` (weight defaults to
+    /// 1). A spec that is exactly `serving_mix` (alone, unweighted)
+    /// resolves to [`WorkloadSet::serving_mix`].
     pub fn parse(spec: &str) -> Result<WorkloadSet> {
-        WorkloadSet::from_pairs(&parse_models(spec)?)
+        WorkloadSet::resolve_pairs(&parse_models(spec)?)
     }
 
-    /// The built-in mixed chain+DAG serving set (the `multi` subcommand's
-    /// default): a heavy true-residual DAG, a branchy Inception graph, and
-    /// a light chain, at 1:2:4 request rates.
+    /// Resolve parsed `(name, weight)` pairs — the shared back end of the
+    /// `--models` flag and the config-file `models` key, so the
+    /// `serving_mix` special-casing behaves identically on both: alone
+    /// and unweighted it is the built-in mix; weighted or combined with
+    /// other entries it errors with the reason (it is not a zoo name).
+    pub fn resolve_pairs(pairs: &[(String, f64)]) -> Result<WorkloadSet> {
+        match pairs {
+            [(name, weight)] if name == "serving_mix" => {
+                if *weight != 1.0 {
+                    return Err(anyhow!(
+                        "serving_mix is the built-in mix (it carries its own per-model \
+                         weights) and cannot take a weight, got {weight}"
+                    ));
+                }
+                Ok(WorkloadSet::serving_mix())
+            }
+            _ => {
+                if pairs.iter().any(|(n, _)| n == "serving_mix") {
+                    return Err(anyhow!(
+                        "serving_mix is the built-in mix: use it alone, not combined \
+                         with other model entries"
+                    ));
+                }
+                WorkloadSet::from_pairs(pairs)
+            }
+        }
+    }
+
+    /// The built-in mixed chain+DAG serving set (the `multi`/`serve`
+    /// subcommands' default): a heavy true-residual DAG, a branchy
+    /// Inception graph, and a light chain, at 1:2:4 request rates.
     pub fn serving_mix() -> WorkloadSet {
         WorkloadSet {
             models: vec![
-                ModelSpec { net: zoo::resnet50_dag(), weight: 1.0 },
-                ModelSpec { net: zoo::googlenet(), weight: 2.0 },
-                ModelSpec { net: zoo::alexnet(), weight: 4.0 },
+                ModelSpec::new(zoo::resnet50_dag(), 1.0),
+                ModelSpec::new(zoo::googlenet(), 2.0),
+                ModelSpec::new(zoo::alexnet(), 4.0),
             ],
         }
+    }
+
+    /// Apply a `--slo` spec: either one bound in milliseconds for every
+    /// model (`"50"`) or per-model entries (`"alexnet:20, googlenet:80"`).
+    /// Unknown names and non-positive bounds error naming the offender.
+    pub fn apply_slo_spec(&mut self, spec: &str) -> Result<()> {
+        self.apply_per_model_spec(spec, "slo (ms)", |m, v| m.slo_ms = Some(v))
+    }
+
+    /// Apply a `--rates` spec (absolute requests/s): one rate for every
+    /// model or per-model `name:rate` entries. Overrides the stream
+    /// default `--arrival-rate × weight`.
+    pub fn apply_rate_spec(&mut self, spec: &str) -> Result<()> {
+        self.apply_per_model_spec(spec, "rate (requests/s)", |m, v| m.rate = Some(v))
+    }
+
+    /// Shared `value | name:value[, ...]` grammar of the per-model serving
+    /// specs. A bare value applies to every model; named entries set every
+    /// set member with that network name (duplicates included). The whole
+    /// spec is validated before anything is applied, so a failing spec
+    /// never half-applies.
+    fn apply_per_model_spec<F>(&mut self, spec: &str, what: &str, mut set: F) -> Result<()>
+    where
+        F: FnMut(&mut ModelSpec, f64),
+    {
+        let parse_val = |name: &str, v: &str| -> Result<f64> {
+            let val: f64 = v
+                .trim()
+                .parse()
+                .map_err(|_| anyhow!("{name}: {what} expects a number, got {v:?}"))?;
+            if !val.is_finite() || val <= 0.0 {
+                return Err(anyhow!("{name}: {what} must be positive, got {val}"));
+            }
+            Ok(val)
+        };
+        // validate everything first: (model-name filter, value) pairs
+        let mut updates: Vec<(Option<String>, f64)> = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            match part.split_once(':') {
+                None => updates.push((None, parse_val("(all models)", part)?)),
+                Some((name, v)) => {
+                    let name = name.trim();
+                    let val = parse_val(name, v)?;
+                    if !self.models.iter().any(|m| m.net.name == name) {
+                        return Err(anyhow!(
+                            "unknown model {name:?}; serving set: {}",
+                            self.label()
+                        ));
+                    }
+                    updates.push((Some(name.to_string()), val));
+                }
+            }
+        }
+        if updates.is_empty() {
+            return Err(anyhow!("empty {what} spec"));
+        }
+        for (filter, val) in updates {
+            for m in &mut self.models {
+                if filter.as_deref().map(|n| m.net.name == n).unwrap_or(true) {
+                    set(m, val);
+                }
+            }
+        }
+        Ok(())
     }
 
     pub fn len(&self) -> usize {
@@ -109,13 +235,18 @@ mod tests {
         assert_eq!(set.total_weight(), 3.0);
         assert_eq!(set.label(), "alexnet:1 + googlenet:2");
         assert!(!set.is_empty());
+        assert!(set.models.iter().all(|m| m.slo_ms.is_none() && m.rate.is_none()));
     }
 
     #[test]
     fn rejects_unknown_names_and_bad_weights() {
         let err = WorkloadSet::parse("nosuchnet").unwrap_err().to_string();
+        assert!(err.contains("nosuchnet"), "must name the offender: {err}");
         assert!(err.contains("alexnet"), "must list the zoo: {err}");
-        assert!(WorkloadSet::parse("alexnet:0").is_err());
+        let zero = WorkloadSet::parse("alexnet:0").unwrap_err().to_string();
+        assert!(zero.contains("alexnet"), "must name the offender: {zero}");
+        let neg = WorkloadSet::parse("scopenet:-2").unwrap_err().to_string();
+        assert!(neg.contains("scopenet"), "must name the offender: {neg}");
         assert!(WorkloadSet::parse("").is_err());
         assert!(WorkloadSet::from_pairs(&[]).is_err());
         assert!(WorkloadSet::from_pairs(&[("alexnet".into(), f64::NAN)]).is_err());
@@ -131,5 +262,59 @@ mod tests {
         for m in &mix.models {
             assert!(m.net.validate().is_ok(), "{}", m.net.name);
         }
+        // the special --models name resolves to the built-in mix — alone
+        // and unweighted only, with the reason named otherwise
+        let resolved = WorkloadSet::parse("serving_mix").unwrap();
+        assert_eq!(resolved.label(), mix.label());
+        let weighted = WorkloadSet::parse("serving_mix:2").unwrap_err().to_string();
+        assert!(weighted.contains("built-in mix"), "{weighted}");
+        let combined = WorkloadSet::parse("serving_mix,alexnet").unwrap_err().to_string();
+        assert!(combined.contains("alone"), "{combined}");
+        // the config-file path resolves identically
+        let pairs = vec![("serving_mix".to_string(), 1.0)];
+        assert_eq!(WorkloadSet::resolve_pairs(&pairs).unwrap().label(), mix.label());
+    }
+
+    #[test]
+    fn slo_spec_applies_globally_and_per_model() {
+        let mut set = WorkloadSet::parse("alexnet, scopenet:2").unwrap();
+        set.apply_slo_spec("50").unwrap();
+        assert_eq!(set.models[0].slo_ms, Some(50.0));
+        assert_eq!(set.models[1].slo_ms, Some(50.0));
+        assert_eq!(set.models[0].slo_ns(), Some(50_000_000));
+        set.apply_slo_spec("scopenet:12.5").unwrap();
+        assert_eq!(set.models[0].slo_ms, Some(50.0), "alexnet untouched");
+        assert_eq!(set.models[1].slo_ms, Some(12.5));
+        // duplicate names all get the bound
+        let mut twin = WorkloadSet::parse("scopenet, scopenet:2").unwrap();
+        twin.apply_slo_spec("scopenet:3").unwrap();
+        assert!(twin.models.iter().all(|m| m.slo_ms == Some(3.0)));
+    }
+
+    #[test]
+    fn slo_spec_rejects_unknown_models_and_bad_bounds() {
+        let mut set = WorkloadSet::parse("alexnet").unwrap();
+        let err = set.apply_slo_spec("nosuchnet:5").unwrap_err().to_string();
+        assert!(err.contains("nosuchnet") && err.contains("alexnet"), "{err}");
+        let neg = set.apply_slo_spec("alexnet:-5").unwrap_err().to_string();
+        assert!(neg.contains("alexnet"), "{neg}");
+        assert!(set.apply_slo_spec("0").is_err());
+        assert!(set.apply_slo_spec("alexnet:soon").is_err());
+        assert!(set.apply_slo_spec("").is_err());
+        // multi-entry spec failing on a later entry applies nothing
+        assert!(set.apply_slo_spec("alexnet:5, nosuchnet:1").is_err());
+        assert!(set.models[0].slo_ms.is_none(), "failed specs must not half-apply");
+    }
+
+    #[test]
+    fn rate_spec_overrides_arrival_rates() {
+        let mut set = WorkloadSet::parse("alexnet, scopenet").unwrap();
+        set.apply_rate_spec("alexnet:120").unwrap();
+        assert_eq!(set.models[0].rate, Some(120.0));
+        assert_eq!(set.models[1].rate, None);
+        set.apply_rate_spec("8").unwrap();
+        assert!(set.models.iter().all(|m| m.rate == Some(8.0)));
+        assert!(set.apply_rate_spec("scopenet:0").is_err());
+        assert!(set.apply_rate_spec("nosuchnet:1").is_err());
     }
 }

@@ -17,8 +17,9 @@
 //! `overlap_comm`). Thread count is deliberately *excluded* — the engine
 //! is bit-identical at every thread count, which is precisely what makes
 //! cross-thread-count reuse sound. Fingerprints hash the `Debug`
-//! rendering with the in-crate Fx hasher; they are stable within a
-//! process and never persisted.
+//! rendering with the in-crate Fx hasher; they are deterministic for a
+//! given build (what makes `--cache-file` persistence sound) but not
+//! stable across builds or platforms.
 //!
 //! **Correctness.** Memoized values are exact results of pure functions of
 //! their key under the `StoreKey` context, so a warm sweep returns
@@ -33,25 +34,44 @@
 //! ([`SpanMemo::absorb`] — colliding entries are equal by purity).
 //! Cluster caches are internally synchronized and shared by `Arc`.
 //!
+//! **Persistence.** `--cache-file <path>` (config key `cache_file`)
+//! serializes the span memos to JSON on exit ([`CacheStore::persist`])
+//! and reloads them on startup ([`CacheStore::load_file`]), so repeated
+//! CLI invocations reuse each other's sweeps — a warm-from-disk run
+//! re-schedules **zero** spans. Only memos of the pipeline-schedule type
+//! ([`SegmentSchedule`]) are written (the expensive ones — scope and the
+//! pipelined baselines; the sequential baseline's additive spans are
+//! cheap to recompute). Latencies round-trip exactly: the JSON writer
+//! emits shortest-roundtrip floats. Keys are Fx fingerprints — stable for
+//! a given build of this crate; a file written by a different build or
+//! platform simply never matches and costs nothing but misses.
+//!
 //! Enabled by `SimOptions::cache_store` (config key `cache_store`, CLI
-//! `--cache-store`, bench env `SCOPE_CACHE_STORE`); the `multi`
-//! subcommand turns it on by default. Off, every sweep keeps its classic
-//! private tables.
+//! `--cache-store`, bench env `SCOPE_CACHE_STORE`); the `multi` and
+//! `serve` subcommands turn it on by default, and `--cache-file` implies
+//! it. Off, every sweep keeps its classic private tables.
 
 use std::any::Any;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{anyhow, Context, Result};
 
 use crate::arch::McmConfig;
 use crate::config::SimOptions;
 use crate::model::Network;
 use crate::scope::segment_dp::SpanMemo;
 use crate::util::fxhash::{FxHashMap, FxHasher};
+use crate::util::json::{arr, num, obj, s, Json};
 
 use super::eval_cache::EvalCache;
+use super::schedule::{Partition, SegmentSchedule};
 
-/// Fingerprint a string with the in-crate Fx hasher (process-local — never
-/// persisted, not stable across platforms or versions).
+/// Fingerprint a string with the in-crate Fx hasher (process-local in
+/// spirit: deterministic for a given build of this crate, not stable
+/// across platforms or versions — a persisted key from another build
+/// never matches and only costs misses).
 pub fn fingerprint_str(s: &str) -> u64 {
     use std::hash::Hasher;
     let mut h = FxHasher::default();
@@ -67,8 +87,9 @@ pub fn fingerprint_debug<T: std::fmt::Debug>(v: &T) -> u64 {
 }
 
 /// The store key: network × platform geometry × method × sim options.
-/// `Copy` so it travels inside `SegmenterOptions`.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+/// `Copy` so it travels inside `SegmenterOptions`; `Ord` so persisted
+/// cache files list memos deterministically.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct StoreKey {
     /// Network structure fingerprint (name, input, layers, DAG sidecar).
     pub net: u64,
@@ -94,6 +115,57 @@ impl StoreKey {
             )),
         }
     }
+}
+
+/// Cache-file format version ([`CacheStore::to_json`]); bumped whenever
+/// the span/schedule encoding changes.
+const CACHE_FILE_VERSION: usize = 1;
+
+fn hex(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+fn from_hex(j: &Json) -> Result<u64> {
+    let text = j.as_str()?;
+    u64::from_str_radix(text, 16).map_err(|_| anyhow!("bad key fingerprint {text:?}"))
+}
+
+fn sched_to_json(sched: &SegmentSchedule) -> Json {
+    let parts: String = sched
+        .partitions
+        .iter()
+        .map(|p| match p {
+            Partition::Wsp => 'W',
+            Partition::Isp => 'I',
+        })
+        .collect();
+    obj(vec![
+        ("lo", num(sched.lo as f64)),
+        ("hi", num(sched.hi as f64)),
+        ("bounds", arr(sched.bounds.iter().map(|&b| num(b as f64)).collect())),
+        ("regions", arr(sched.regions.iter().map(|&r| num(r as f64)).collect())),
+        ("parts", s(&parts)),
+    ])
+}
+
+fn sched_from_json(j: &Json) -> Result<SegmentSchedule> {
+    let partitions = j
+        .get("parts")?
+        .as_str()?
+        .chars()
+        .map(|c| match c {
+            'W' => Ok(Partition::Wsp),
+            'I' => Ok(Partition::Isp),
+            other => Err(anyhow!("bad partition char {other:?}")),
+        })
+        .collect::<Result<Vec<Partition>>>()?;
+    Ok(SegmentSchedule {
+        lo: j.get("lo")?.as_usize()?,
+        hi: j.get("hi")?.as_usize()?,
+        bounds: j.get("bounds")?.usize_list()?,
+        regions: j.get("regions")?.usize_list()?,
+        partitions,
+    })
 }
 
 /// Aggregate counters of the store (cumulative over the process life).
@@ -124,6 +196,8 @@ pub struct CacheStore {
     checkouts: AtomicU64,
     reuses: AtomicU64,
     carried: AtomicU64,
+    /// Where [`CacheStore::persist`] writes on exit (`--cache-file`).
+    persist_path: Mutex<Option<PathBuf>>,
 }
 
 impl CacheStore {
@@ -183,6 +257,193 @@ impl CacheStore {
             .entry(key)
             .or_insert_with(|| Arc::new(EvalCache::new()))
             .clone()
+    }
+
+    /// Set (or clear) the exit-time persistence target (`--cache-file`).
+    pub fn set_persist_path(&self, path: Option<PathBuf>) {
+        *self.persist_path.lock().expect("cache store poisoned") = path;
+    }
+
+    /// Write the store to the configured `--cache-file`, if any. Returns
+    /// the path and span count written, `None` when no path is set.
+    pub fn persist(&self) -> Result<Option<(PathBuf, usize)>> {
+        let path = self.persist_path.lock().expect("cache store poisoned").clone();
+        match path {
+            None => Ok(None),
+            Some(p) => {
+                let n = self.save_file(&p)?;
+                Ok(Some((p, n)))
+            }
+        }
+    }
+
+    /// Serialize the pipeline-schedule span memos to `path` (see the
+    /// module docs for scope and format). Returns the spans written.
+    /// The document lands in a process-unique sibling `.tmp` file first
+    /// and is renamed into place, so neither a crash mid-write nor two
+    /// processes sharing one cache file can install truncated JSON.
+    /// Current on-disk contents are merged in before writing (existing
+    /// entries win), so concurrent processes sharing one cache file
+    /// union their spans instead of last-writer-wins dropping them — a
+    /// best-effort merge: a span persisted between our read and rename
+    /// can still be lost, which only ever costs a future miss.
+    pub fn save_file(&self, path: &Path) -> Result<usize> {
+        // an unreadable/corrupt existing file is overwritten fresh
+        let _ = self.load_file(path);
+        let (json, n) = self.to_json();
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(format!(".{}.tmp", std::process::id()));
+        let tmp = std::path::PathBuf::from(tmp);
+        std::fs::write(&tmp, json.to_string_compact())
+            .with_context(|| format!("writing cache file {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("installing cache file {}", path.display()))?;
+        Ok(n)
+    }
+
+    /// Restore span memos from `path`; a missing file is an empty cache
+    /// (`Ok(0)`), a corrupt one errors. Returns the spans restored.
+    pub fn load_file(&self, path: &Path) -> Result<usize> {
+        if !path.exists() {
+            return Ok(0);
+        }
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading cache file {}", path.display()))?;
+        let json = Json::parse(&text)
+            .with_context(|| format!("parsing cache file {}", path.display()))?;
+        self.load_json(&json)
+    }
+
+    /// The persistable view: every [`SegmentSchedule`]-typed span memo,
+    /// finite-latency entries only. Returns the document and span count.
+    pub fn to_json(&self) -> (Json, usize) {
+        let map = self.spans.lock().expect("cache store poisoned");
+        let mut memos: Vec<Json> = Vec::new();
+        let mut total = 0usize;
+        // BTreeMap-backed JSON objects sort keys, but the memo list order
+        // follows the hash map; sort by key fingerprints so the file is
+        // deterministic for a given store content.
+        let mut keyed: Vec<_> = map.iter().collect();
+        keyed.sort_by_key(|(k, _)| **k);
+        for (key, boxed) in keyed {
+            let Some(memo) = boxed.downcast_ref::<SpanMemo<SegmentSchedule>>() else {
+                continue; // e.g. the sequential baseline's additive spans
+            };
+            let mut spans: Vec<((usize, usize), &Option<(SegmentSchedule, f64)>)> =
+                memo.entries().collect();
+            spans.sort_by_key(|(k, _)| *k);
+            let mut list: Vec<Json> = Vec::with_capacity(spans.len());
+            for ((lo, hi), result) in spans {
+                let mut fields = vec![("lo", num(lo as f64)), ("hi", num(hi as f64))];
+                match result {
+                    None => fields.push(("ok", Json::Bool(false))),
+                    Some((sched, latency)) => {
+                        if !latency.is_finite() {
+                            continue;
+                        }
+                        fields.push(("lat", num(*latency)));
+                        fields.push(("sched", sched_to_json(sched)));
+                    }
+                }
+                list.push(obj(fields));
+                total += 1;
+            }
+            memos.push(obj(vec![
+                ("net", s(&hex(key.net))),
+                ("geom", s(&hex(key.geom))),
+                ("method", s(&hex(key.method))),
+                ("sim", s(&hex(key.sim))),
+                ("spans", arr(list)),
+            ]));
+        }
+        (
+            obj(vec![("version", num(CACHE_FILE_VERSION as f64)), ("memos", arr(memos))]),
+            total,
+        )
+    }
+
+    /// Merge a persisted document into the store (existing entries win —
+    /// memoized values are pure functions of their key). Returns the
+    /// spans restored. A format-version mismatch is expected lifecycle
+    /// (a file written by another generation of this code), not
+    /// corruption: it warm-starts empty (`Ok(0)`) and the file is
+    /// rewritten in the current format on exit.
+    ///
+    /// The whole document is parsed before anything touches the store, so
+    /// a mangled entry mid-file leaves the store untouched (a partial
+    /// restore followed by the exit-time persist would silently destroy
+    /// the file's remaining valid spans).
+    pub fn load_json(&self, json: &Json) -> Result<usize> {
+        let version = json.get("version")?.as_usize()?;
+        if version != CACHE_FILE_VERSION {
+            return Ok(0);
+        }
+        let mut parsed: Vec<(StoreKey, SpanMemo<SegmentSchedule>)> = Vec::new();
+        for (i, entry) in json.get("memos")?.as_arr()?.iter().enumerate() {
+            let key = StoreKey {
+                net: from_hex(entry.get("net")?)?,
+                geom: from_hex(entry.get("geom")?)?,
+                method: from_hex(entry.get("method")?)?,
+                sim: from_hex(entry.get("sim")?)?,
+            };
+            let mut memo: SpanMemo<SegmentSchedule> = SpanMemo::new();
+            for (j, span) in entry.get("spans")?.as_arr()?.iter().enumerate() {
+                let at = || format!("memo {i} span {j}");
+                let lo = span.get("lo")?.as_usize().with_context(at)?;
+                let hi = span.get("hi")?.as_usize().with_context(at)?;
+                let result = match span.get("sched") {
+                    Ok(sched) => {
+                        let latency = span.get("lat")?.as_f64().with_context(at)?;
+                        Some((sched_from_json(sched).with_context(at)?, latency))
+                    }
+                    // an unschedulable span must carry its explicit
+                    // marker — a mangled entry that merely lost its
+                    // sched/lat fields errors instead of silently
+                    // restoring as "no valid schedule"
+                    Err(_) => match span.get("ok") {
+                        Ok(Json::Bool(false)) => None,
+                        _ => {
+                            return Err(anyhow!(
+                                "{}: span has neither a schedule nor the \
+                                 \"ok\": false marker",
+                                at()
+                            ))
+                        }
+                    },
+                };
+                memo.restore(lo, hi, result);
+            }
+            parsed.push((key, memo));
+        }
+        // everything parsed — now merge
+        let mut total = 0usize;
+        for (key, memo) in parsed {
+            let restored = memo.len();
+            let mut map = self.spans.lock().expect("cache store poisoned");
+            let compatible = map
+                .get(&key)
+                .map(|existing| existing.is::<SpanMemo<SegmentSchedule>>())
+                .unwrap_or(true);
+            if compatible {
+                match map.remove(&key) {
+                    Some(boxed) => {
+                        // a live memo owns this key: merge, existing wins
+                        let mut live = *boxed
+                            .downcast::<SpanMemo<SegmentSchedule>>()
+                            .expect("type checked above");
+                        live.absorb(memo);
+                        map.insert(key, Box::new(live));
+                    }
+                    None => {
+                        map.insert(key, Box::new(memo));
+                    }
+                }
+                total += restored;
+            }
+            // an incompatible live memo keeps its key; the loaded spans
+            // for it are dropped (and not counted as restored)
+        }
+        Ok(total)
     }
 
     pub fn snapshot(&self) -> StoreSnapshot {
@@ -284,6 +545,115 @@ mod tests {
         assert_eq!(snap.span_reuses, 1);
         assert_eq!(snap.spans_carried, 2);
         assert_eq!(snap.span_slots, 2);
+    }
+
+    fn demo_sched(lo: usize, hi: usize) -> SegmentSchedule {
+        SegmentSchedule {
+            lo,
+            hi,
+            bounds: (lo..=hi).collect(),
+            regions: vec![3; hi - lo],
+            partitions: (0..hi - lo)
+                .map(|i| if i % 2 == 0 { Partition::Wsp } else { Partition::Isp })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn span_memos_roundtrip_through_json() {
+        let store = CacheStore::new();
+        let sim = SimOptions::default();
+        let key = StoreKey::new(&alexnet(), &McmConfig::paper_default(16), "scope", &sim);
+        let lat = 123.456_789_012_345_f64; // exercises float round-tripping
+        store.with_span_memo(key, |memo: &mut SpanMemo<SegmentSchedule>| {
+            let mut eval = |lo: usize, hi: usize| match lo {
+                0 => Some((demo_sched(lo, hi), lat)),
+                2 => Some((demo_sched(lo, hi), 4096.0)),
+                _ => None, // unschedulable spans persist too
+            };
+            memo.get_or_eval(0, 2, &mut eval);
+            memo.get_or_eval(2, 5, &mut eval);
+            memo.get_or_eval(5, 7, &mut eval);
+        });
+        let (json, written) = store.to_json();
+        assert_eq!(written, 3);
+        let text = json.to_string_compact();
+        // a fresh store warmed from the document re-evaluates nothing
+        let warm = CacheStore::new();
+        let restored = warm.load_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(restored, 3);
+        let calls = std::sync::atomic::AtomicUsize::new(0);
+        warm.with_span_memo(key, |memo: &mut SpanMemo<SegmentSchedule>| {
+            let mut eval = |_: usize, _: usize| {
+                calls.fetch_add(1, Ordering::Relaxed);
+                None
+            };
+            let a = memo.get_or_eval(0, 2, &mut eval).expect("restored span");
+            assert_eq!(a.1.to_bits(), lat.to_bits(), "latency must round-trip exactly");
+            assert_eq!(a.0, demo_sched(0, 2), "schedule must round-trip exactly");
+            assert!(memo.get_or_eval(5, 7, &mut eval).is_none(), "None spans carried");
+            let stats = memo.stats();
+            assert_eq!(stats.misses, 0, "warm-from-disk re-schedules zero spans");
+            assert_eq!(stats.cross_hits, 2, "restored entries count as cross-sweep");
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 0);
+        // the document itself is stable: re-serializing the warm store
+        // yields the same spans
+        let (rejson, rewritten) = warm.to_json();
+        assert_eq!(rewritten, 3);
+        assert_eq!(rejson.to_string_compact(), text);
+    }
+
+    #[test]
+    fn cache_files_save_and_load_from_disk() {
+        let path = std::env::temp_dir()
+            .join(format!("scope-cache-store-test-{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let store = CacheStore::new();
+        // missing file = empty cache, not an error
+        assert_eq!(store.load_file(&path).unwrap(), 0);
+        let sim = SimOptions::default();
+        let key = StoreKey::new(&scopenet(), &McmConfig::paper_default(8), "scope", &sim);
+        store.with_span_memo(key, |memo: &mut SpanMemo<SegmentSchedule>| {
+            let mut eval = |lo: usize, hi: usize| Some((demo_sched(lo, hi), 7.5));
+            memo.get_or_eval(0, 3, &mut eval);
+        });
+        store.set_persist_path(Some(path.clone()));
+        let (saved_path, n) = store.persist().unwrap().expect("path was set");
+        assert_eq!((saved_path.as_path(), n), (path.as_path(), 1));
+        let warm = CacheStore::new();
+        assert_eq!(warm.load_file(&path).unwrap(), 1);
+        // a second process persisting to the same file merges instead of
+        // last-writer-wins dropping the first one's spans
+        let other = CacheStore::new();
+        let key2 = StoreKey::new(&scopenet(), &McmConfig::paper_default(16), "scope", &sim);
+        other.with_span_memo(key2, |memo: &mut SpanMemo<SegmentSchedule>| {
+            let mut eval = |lo: usize, hi: usize| Some((demo_sched(lo, hi), 9.25));
+            memo.get_or_eval(1, 4, &mut eval);
+        });
+        assert_eq!(other.save_file(&path).unwrap(), 2, "disk spans merged before writing");
+        let union = CacheStore::new();
+        assert_eq!(union.load_file(&path).unwrap(), 2);
+        // corrupt files error instead of silently serving garbage
+        std::fs::write(&path, "{not json").unwrap();
+        assert!(warm.load_file(&path).is_err());
+        // a version from another code generation is a cold start, not an
+        // error — the file is rewritten in the current format on exit
+        std::fs::write(&path, r#"{"version": 99, "memos": []}"#).unwrap();
+        assert_eq!(warm.load_file(&path).unwrap(), 0, "version mismatch = cold cache");
+        // a span that lost its schedule fields must error, not restore as
+        // "unschedulable"
+        std::fs::write(
+            &path,
+            r#"{"version": 1, "memos": [{"net": "00", "geom": "00", "method": "00",
+                "sim": "00", "spans": [{"lo": 0, "hi": 2}]}]}"#,
+        )
+        .unwrap();
+        let err = warm.load_file(&path).unwrap_err().to_string();
+        assert!(err.contains("ok"), "{err}");
+        let _ = std::fs::remove_file(&path);
+        // no persist path → persist is a no-op
+        assert!(CacheStore::new().persist().unwrap().is_none());
     }
 
     #[test]

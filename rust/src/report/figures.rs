@@ -374,6 +374,76 @@ pub fn multi_model_table(r: &crate::scope::MultiModelResult) -> Result<Table> {
     Ok(t)
 }
 
+/// The serving simulation table: per-mode, per-model latency percentiles,
+/// SLO verdicts, and queue statistics of the best pure-spatial,
+/// pure-time-multiplexed, and hybrid allocations (`serve` subcommand).
+pub fn serving_table(r: &crate::serve::ServingReport) -> Result<Table> {
+    if let Some(e) = &r.error {
+        return Err(anyhow!("serving simulation failed: {e}"));
+    }
+    let ms = |ns: u64| f3(ns as f64 / 1e6);
+    let mut t = Table::new(
+        &format!(
+            "serving simulation — {} on {} chiplets ({} arrivals, share grid {:?})",
+            r.set.label(),
+            r.total_chiplets,
+            r.arrival_counts.iter().sum::<u64>(),
+            r.sizes,
+        ),
+        &[
+            "mode",
+            "allocation",
+            "model",
+            "share",
+            "share tput (samples/s)",
+            "arrivals",
+            "served",
+            "batches",
+            "p50 (ms)",
+            "p95 (ms)",
+            "p99 (ms)",
+            "SLO (ms)",
+            "viol %",
+            "q max",
+        ],
+    );
+    for (mode, o) in r.modes() {
+        let group_of = o.alloc.group_of(r.set.models.len());
+        for (i, spec) in r.set.models.iter().enumerate() {
+            let stats = &o.sim.per_model[i];
+            let served = stats.completed > 0;
+            let dash_ms = |ns: u64| if served { ms(ns) } else { "-".to_string() };
+            t.row(vec![
+                if i == 0 { mode.to_string() } else { String::new() },
+                if i == 0 { o.alloc.label(&r.set) } else { String::new() },
+                spec.net.name.clone(),
+                o.alloc.groups[group_of[i]].chiplets.to_string(),
+                match o.share_throughput[i] {
+                    Some(tput) => f3(tput),
+                    None => "-".to_string(),
+                },
+                stats.arrivals.to_string(),
+                stats.completed.to_string(),
+                stats.batches.to_string(),
+                dash_ms(stats.p50_ns),
+                dash_ms(stats.p95_ns),
+                dash_ms(stats.p99_ns),
+                match spec.slo_ms {
+                    Some(slo) => f3(slo),
+                    None => "-".to_string(),
+                },
+                if served {
+                    format!("{:.1}", stats.violation_rate() * 100.0)
+                } else {
+                    "-".to_string()
+                },
+                stats.queue_high_water.to_string(),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
 /// DAG condensation summary: the supernodes (branch bundles between clean
 /// cuts) the segmenters place boundaries around, with each boundary's
 /// spilled cut-edge traffic. Errors on plain chain workloads.
@@ -506,6 +576,32 @@ mod tests {
         // a failed co-schedule errors instead of rendering garbage
         let bad = co_schedule(&WorkloadSet::default(), &mcm, &sim, &mopts);
         assert!(multi_model_table(&bad).is_err());
+    }
+
+    #[test]
+    fn serving_table_renders_and_rejects_failures() {
+        use crate::model::WorkloadSet;
+        use crate::serve::trace::RequestStream;
+        use crate::serve::{serve, ServeOptions};
+        let mut set = WorkloadSet::parse("scopenet,alexnet").unwrap();
+        set.apply_slo_spec("10000").unwrap();
+        let mcm = McmConfig::paper_default(16);
+        let sim = SimOptions { samples: 4, ..Default::default() };
+        let sopts = ServeOptions {
+            max_batch: 2,
+            share_quantum: 8,
+            ..ServeOptions::default()
+        };
+        let stream = RequestStream::poisson(&set, 20.0, 50_000_000, 7);
+        let r = serve(&set, &mcm, &sim, &sopts, &stream);
+        assert!(r.is_valid(), "{:?}", r.error);
+        let text = serving_table(&r).unwrap().render();
+        assert!(text.contains("scopenet") && text.contains("alexnet"), "{text}");
+        assert!(text.contains("p99") && text.contains("SLO"), "{text}");
+        assert!(text.contains("tm") || text.contains("spatial"), "{text}");
+        // a failed run errors instead of rendering garbage
+        let bad = serve(&WorkloadSet::default(), &mcm, &sim, &sopts, &stream);
+        assert!(serving_table(&bad).is_err());
     }
 
     #[test]

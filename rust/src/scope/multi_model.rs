@@ -76,9 +76,11 @@
 use crate::arch::{McmConfig, Mesh};
 use crate::baselines::{run_method, METHOD_NAMES};
 use crate::config::SimOptions;
+use crate::cost::dram::dram_transfer;
 use crate::dse::exhaustive::for_each_share_split;
 use crate::dse::parallel::par_map;
 use crate::model::workload_set::WorkloadSet;
+use crate::model::Network;
 use crate::pipeline::cache_store::{CacheStore, StoreSnapshot};
 
 use super::MethodResult;
@@ -203,13 +205,171 @@ impl MultiModelResult {
     }
 }
 
+/// One share of a hybrid allocation: the chiplets it spans and the models
+/// it serves. A single member is a classic *spatial* share (the model owns
+/// the chiplets); two or more members are *temporally multiplexed* — the
+/// share runs one model's batches at a time and pays the weight-swap
+/// charge ([`weight_swap_ns`]) whenever the resident model changes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShareGroup {
+    /// Serving-set model indices, ascending.
+    pub members: Vec<usize>,
+    pub chiplets: usize,
+}
+
+/// A hybrid spatial/temporal chiplet allocation: a partition of the
+/// serving set into [`ShareGroup`]s whose chiplet sizes sum within the
+/// package budget. All-singleton groups recover the pure spatial
+/// co-schedule of [`co_schedule`]; a single group over every model is the
+/// pure time-multiplexed baseline; everything between is hybrid.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HybridAllocation {
+    pub groups: Vec<ShareGroup>,
+}
+
+impl HybridAllocation {
+    /// Every model runs alone on its share (no temporal multiplexing).
+    pub fn is_spatial(&self) -> bool {
+        self.groups.iter().all(|g| g.members.len() == 1)
+    }
+
+    /// One share serves the whole set (pure time multiplexing).
+    pub fn is_time_multiplexed(&self) -> bool {
+        self.groups.len() == 1
+    }
+
+    pub fn used_chiplets(&self) -> usize {
+        self.groups.iter().map(|g| g.chiplets).sum()
+    }
+
+    /// Model index → group index (`models` = serving-set size).
+    pub fn group_of(&self, models: usize) -> Vec<usize> {
+        let mut of = vec![usize::MAX; models];
+        for (gi, g) in self.groups.iter().enumerate() {
+            for &m in &g.members {
+                of[m] = gi;
+            }
+        }
+        debug_assert!(of.iter().all(|&g| g != usize::MAX), "partition must cover every model");
+        of
+    }
+
+    /// Display label, e.g. `[alexnet]@8 + [googlenet+scopenet]@16`.
+    pub fn label(&self, set: &WorkloadSet) -> String {
+        self.groups
+            .iter()
+            .map(|g| {
+                let names: Vec<&str> =
+                    g.members.iter().map(|&m| set.models[m].net.name.as_str()).collect();
+                format!("[{}]@{}", names.join("+"), g.chiplets)
+            })
+            .collect::<Vec<_>>()
+            .join(" + ")
+    }
+}
+
+/// Every partition of `{0, .., k-1}` into non-empty groups, in canonical
+/// (restricted-growth) order: groups sorted by their smallest member,
+/// members ascending. `Bell(k)` partitions — the serving surface caps the
+/// model count, so the enumeration stays small.
+pub fn set_partitions(k: usize) -> Vec<Vec<Vec<usize>>> {
+    fn rec(i: usize, k: usize, groups: &mut Vec<Vec<usize>>, out: &mut Vec<Vec<Vec<usize>>>) {
+        if i == k {
+            out.push(groups.clone());
+            return;
+        }
+        for g in 0..groups.len() {
+            groups[g].push(i);
+            rec(i + 1, k, groups, out);
+            groups[g].pop();
+        }
+        groups.push(vec![i]);
+        rec(i + 1, k, groups, out);
+        groups.pop();
+    }
+    let mut out = Vec::new();
+    rec(0, k, &mut Vec::new(), &mut out);
+    out
+}
+
+/// Enumerate every hybrid allocation of `k` models over the quantized
+/// share grid (`sizes` ascending, total ≤ `budget`): every set partition
+/// crossed with every share split of its groups. Deterministic order —
+/// partitions in [`set_partitions`] order, splits in
+/// [`for_each_share_split`] order. The callback returns `false` to stop
+/// early; the function reports whether the enumeration ran to completion.
+pub fn for_each_hybrid_allocation<F>(
+    k: usize,
+    sizes: &[usize],
+    budget: usize,
+    f: &mut F,
+) -> bool
+where
+    F: FnMut(&HybridAllocation) -> bool,
+{
+    for partition in set_partitions(k) {
+        let g = partition.len();
+        let complete = for_each_share_split(g, sizes, budget, &mut |split| {
+            let alloc = HybridAllocation {
+                groups: partition
+                    .iter()
+                    .zip(split)
+                    .map(|(members, &chiplets)| ShareGroup {
+                        members: members.clone(),
+                        chiplets,
+                    })
+                    .collect(),
+            };
+            f(&alloc)
+        });
+        if !complete {
+            return false;
+        }
+    }
+    true
+}
+
+/// Weight-swap charge of a temporal share (integer ns): switching the
+/// resident model reloads the incoming network's weights through the
+/// DRAM model of [`cost::dram`](crate::cost::dram) at the full channel —
+/// the §III-B distributed copy must be rebuilt before the batch runs.
+pub fn weight_swap_ns(net: &Network, mcm: &McmConfig) -> u64 {
+    let freq = mcm.chiplet.freq_hz;
+    let cost = dram_transfer(net.total_weight_bytes() as f64, &mcm.dram, freq, 1.0);
+    let secs = mcm.cycles_to_secs(cost.cycles);
+    if !(secs.is_finite() && secs >= 0.0) {
+        // a degenerate platform (e.g. zero DRAM bandwidth overridden in a
+        // config file) must not make temporal multiplexing look free —
+        // saturate so such shares rank as unusably slow instead
+        return u64::MAX / 4;
+    }
+    (secs * 1e9).round() as u64
+}
+
+/// Parse the `--quantum <Q|auto>` flag: `auto` (the default) maps to the
+/// internal auto value `0` (`total / 16`, floor 1); explicit quanta must
+/// be ≥ 1 — `--quantum 0` is rejected by name instead of silently
+/// aliasing `auto`.
+pub fn parse_quantum(v: &str) -> Result<usize, String> {
+    if v.is_empty() || v.eq_ignore_ascii_case("auto") {
+        return Ok(0);
+    }
+    match v.parse::<usize>() {
+        Ok(0) => Err(format!(
+            "share quantum must be >= 1 chiplet, got {v:?} (use 'auto' for package/16)"
+        )),
+        Ok(q) => Ok(q),
+        Err(_) => Err(format!("expects a positive integer or 'auto', got {v:?}")),
+    }
+}
+
 /// A model's share as its own sub-package: the caller's platform knobs
 /// (chiplet micro-architecture, NoP, DRAM — config-file overrides
 /// included) on a `chiplets`-sized near-square mesh. DRAM contention
 /// between co-resident models is not modeled (each share sees the full
 /// channel, exactly as a standalone package of that size would) — a
 /// documented limitation, same on both sides of the TM comparison.
-fn sub_package(mcm: &McmConfig, chiplets: usize) -> McmConfig {
+pub(crate) fn sub_package(mcm: &McmConfig, chiplets: usize) -> McmConfig {
     McmConfig {
         chiplets,
         mesh: Mesh::for_chiplets(chiplets),
@@ -554,6 +714,104 @@ mod tests {
         assert!(!zero.is_valid());
         assert_eq!(zero.speedup_vs_tm(), None);
         assert_eq!(zero.utilization(), 0.0);
+    }
+
+    #[test]
+    fn set_partitions_counts_match_bell_numbers() {
+        // Bell numbers: 1, 1, 2, 5, 15, 52
+        for (k, bell) in [(0usize, 1usize), (1, 1), (2, 2), (3, 5), (4, 15), (5, 52)] {
+            let parts = set_partitions(k);
+            assert_eq!(parts.len(), bell, "k={k}");
+            for p in &parts {
+                let mut seen: Vec<usize> = p.iter().flatten().copied().collect();
+                seen.sort_unstable();
+                assert_eq!(seen, (0..k).collect::<Vec<_>>(), "k={k}: must cover exactly");
+                assert!(p.iter().all(|g| !g.is_empty()));
+                // canonical order: groups ascend by first member
+                assert!(p.windows(2).all(|w| w[0][0] < w[1][0]));
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_enumeration_covers_spatial_and_tm_corners() {
+        let sizes = [8usize, 16];
+        let mut allocs: Vec<HybridAllocation> = Vec::new();
+        let complete = for_each_hybrid_allocation(2, &sizes, 16, &mut |a| {
+            allocs.push(a.clone());
+            true
+        });
+        assert!(complete);
+        // partitions of 2 models: {0}{1} and {01}; budget 16 admits
+        // (8, 8) for the split pair and 8 or 16 for the merged group
+        assert!(allocs.iter().any(|a| a.is_spatial() && a.used_chiplets() == 16));
+        assert!(allocs
+            .iter()
+            .any(|a| a.is_time_multiplexed() && a.groups[0].chiplets == 16));
+        for a in &allocs {
+            assert!(a.used_chiplets() <= 16);
+            assert_eq!(a.group_of(2).len(), 2);
+        }
+        // early stop propagates
+        let mut n = 0usize;
+        let complete = for_each_hybrid_allocation(2, &sizes, 16, &mut |_| {
+            n += 1;
+            n < 2
+        });
+        assert!(!complete);
+        assert_eq!(n, 2);
+    }
+
+    #[test]
+    fn hybrid_labels_and_classification() {
+        let set = WorkloadSet::parse("alexnet,scopenet").unwrap();
+        let alloc = HybridAllocation {
+            groups: vec![ShareGroup { members: vec![0, 1], chiplets: 16 }],
+        };
+        assert!(alloc.is_time_multiplexed() && !alloc.is_spatial());
+        assert_eq!(alloc.label(&set), "[alexnet+scopenet]@16");
+        assert_eq!(alloc.group_of(2), vec![0, 0]);
+        let spatial = HybridAllocation {
+            groups: vec![
+                ShareGroup { members: vec![0], chiplets: 8 },
+                ShareGroup { members: vec![1], chiplets: 8 },
+            ],
+        };
+        assert!(spatial.is_spatial() && !spatial.is_time_multiplexed());
+        assert_eq!(spatial.label(&set), "[alexnet]@8 + [scopenet]@8");
+        assert_eq!(spatial.group_of(2), vec![0, 1]);
+        assert_eq!(spatial.used_chiplets(), 16);
+    }
+
+    #[test]
+    fn weight_swap_ns_matches_dram_bandwidth() {
+        let net = crate::model::zoo::alexnet();
+        let mcm = McmConfig::paper_default(16);
+        let ns = weight_swap_ns(&net, &mcm);
+        // bytes / effective bandwidth, in ns
+        let expect =
+            net.total_weight_bytes() as f64 / (mcm.dram.bw_total * mcm.dram.efficiency) * 1e9;
+        assert!(
+            (ns as f64 - expect).abs() <= expect * 1e-6 + 1.0,
+            "swap {ns} ns vs expected {expect:.0} ns"
+        );
+        assert!(ns > 0);
+        // a zero-bandwidth platform saturates instead of charging nothing
+        let mut dead = McmConfig::paper_default(16);
+        dead.dram.bw_total = 0.0;
+        assert!(weight_swap_ns(&net, &dead) >= u64::MAX / 4);
+    }
+
+    #[test]
+    fn quantum_parser_rejects_zero_by_name() {
+        assert_eq!(parse_quantum(""), Ok(0));
+        assert_eq!(parse_quantum("auto"), Ok(0));
+        assert_eq!(parse_quantum("AUTO"), Ok(0));
+        assert_eq!(parse_quantum("4"), Ok(4));
+        let err = parse_quantum("0").unwrap_err();
+        assert!(err.contains(">= 1") && err.contains("auto"), "{err}");
+        assert!(parse_quantum("-2").is_err());
+        assert!(parse_quantum("lots").is_err());
     }
 
     #[test]

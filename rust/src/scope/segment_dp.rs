@@ -308,6 +308,19 @@ impl<S: Clone> SpanMemo<S> {
         }
     }
 
+    /// Iterate the cached spans — the cache-store persistence walk.
+    pub fn entries(&self) -> impl Iterator<Item = ((usize, usize), &SegResult<S>)> + '_ {
+        self.map.iter().map(|(&k, (r, _))| (k, r))
+    }
+
+    /// Re-insert a persisted span at the current epoch (existing entries
+    /// win — memoized values are pure functions of the key). Restored
+    /// entries predate every later sweep's epoch, so hits on them count
+    /// as [`SpanStats::cross_hits`] exactly like process-local carries.
+    pub fn restore(&mut self, lo: usize, hi: usize, value: SegResult<S>) {
+        self.map.entry((lo, hi)).or_insert((value, self.epoch));
+    }
+
     /// Evaluate every not-yet-cached span across the deterministic worker
     /// pool ([`par_map`]) and store the results. Values are pure functions
     /// of the key, so the fill order cannot affect any later lookup.

@@ -1,0 +1,161 @@
+//! Discrete-event queue of the serving simulator.
+//!
+//! Timestamps are **integer nanoseconds** (`u64`) so event times compare
+//! exactly — no float accumulation can reorder two runs. Same-timestamp
+//! events are processed in a fixed priority order (batch completions free
+//! their share before the arrivals and timers of the same instant are
+//! looked at) and ties beyond that break on the monotone insertion
+//! sequence number, so a simulation replays **bit-identically** across
+//! repeat invocations and `--threads` settings (the event loop itself is
+//! single-threaded; only the allocation tables feeding it are computed in
+//! parallel, by the bit-identical DSE pool).
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+/// What happens at an event's timestamp. Variants are listed in
+/// same-timestamp processing order (see [`EventKind::priority`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// A batch of `size` requests of `model` finished on share `share`,
+    /// freeing it for the next dispatch.
+    BatchComplete { share: usize, model: usize, size: usize },
+    /// Request `req` (an index into the request stream) of `model`
+    /// entered the system.
+    Arrival { model: usize, req: usize },
+    /// Batching timeout armed when request `req` of `model` arrived: if
+    /// the request is still queued when the timer fires, its batch
+    /// dispatches without waiting to fill up.
+    BatchTimer { model: usize, req: usize },
+}
+
+impl EventKind {
+    /// Same-timestamp processing priority (lower first): completions free
+    /// shares before the instant's arrivals are queued, and timers run
+    /// last so an arrival that completes a batch at the same instant wins
+    /// over its own timeout.
+    fn priority(self) -> u8 {
+        match self {
+            EventKind::BatchComplete { .. } => 0,
+            EventKind::Arrival { .. } => 1,
+            EventKind::BatchTimer { .. } => 2,
+        }
+    }
+}
+
+/// One scheduled event: timestamp, tie-break sequence number, payload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    pub t_ns: u64,
+    /// Monotone insertion counter — the last tie-break level, so the
+    /// ordering is total and insertion-stable.
+    pub seq: u64,
+    pub kind: EventKind,
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.t_ns
+            .cmp(&other.t_ns)
+            .then_with(|| self.kind.priority().cmp(&other.kind.priority()))
+            .then_with(|| self.seq.cmp(&other.seq))
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Min-heap of events in `(t_ns, kind priority, seq)` order.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<Event>>,
+    next_seq: u64,
+    popped: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue::default()
+    }
+
+    /// Schedule `kind` at `t_ns`.
+    pub fn push(&mut self, t_ns: u64, kind: EventKind) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Reverse(Event { t_ns, seq, kind }));
+    }
+
+    /// Earliest event (ties: completion < arrival < timer, then insertion
+    /// order).
+    pub fn pop(&mut self) -> Option<Event> {
+        let ev = self.heap.pop().map(|Reverse(e)| e);
+        if ev.is_some() {
+            self.popped += 1;
+        }
+        ev
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Events processed so far (the bench's events/sec numerator).
+    pub fn processed(&self) -> u64 {
+        self.popped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn orders_by_time_then_priority_then_seq() {
+        let mut q = EventQueue::new();
+        q.push(50, EventKind::Arrival { model: 0, req: 0 });
+        q.push(10, EventKind::BatchTimer { model: 1, req: 1 });
+        q.push(10, EventKind::Arrival { model: 2, req: 2 });
+        q.push(10, EventKind::BatchComplete { share: 0, model: 3, size: 4 });
+        let a = q.pop().unwrap();
+        assert_eq!(a.t_ns, 10);
+        assert!(matches!(a.kind, EventKind::BatchComplete { model: 3, .. }));
+        let b = q.pop().unwrap();
+        assert!(matches!(b.kind, EventKind::Arrival { model: 2, .. }));
+        let c = q.pop().unwrap();
+        assert!(matches!(c.kind, EventKind::BatchTimer { model: 1, .. }));
+        assert_eq!(q.pop().unwrap().t_ns, 50);
+        assert!(q.pop().is_none());
+        assert!(q.is_empty());
+        assert_eq!(q.processed(), 4);
+    }
+
+    #[test]
+    fn equal_time_and_kind_break_on_insertion_order() {
+        let mut q = EventQueue::new();
+        for req in 0..5usize {
+            q.push(7, EventKind::Arrival { model: 0, req });
+        }
+        for req in 0..5usize {
+            let e = q.pop().unwrap();
+            assert!(matches!(e.kind, EventKind::Arrival { req: r, .. } if r == req));
+        }
+    }
+
+    #[test]
+    fn len_tracks_pending() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.len(), 0);
+        q.push(1, EventKind::Arrival { model: 0, req: 0 });
+        q.push(2, EventKind::Arrival { model: 0, req: 1 });
+        assert_eq!(q.len(), 2);
+        q.pop();
+        assert_eq!(q.len(), 1);
+    }
+}

@@ -1,0 +1,953 @@
+//! Discrete-event serving simulator — the repo's first subsystem that
+//! models *time*, not just steady-state rates.
+//!
+//! ## Paper → code map
+//!
+//! The co-scheduler of [`scope::multi_model`](crate::scope::multi_model)
+//! answers SCAR's (arXiv:2405.00790) *rate* question: which chiplet split
+//! maximizes the sustainable mix rate `min_i T_i / w_i`. This module
+//! answers the *latency* axis — what millions of users actually see when
+//! they send requests: queueing, batching, pipeline-fill tails, and SLO
+//! violations — and extends the allocator with the temporal dimension
+//! that Odema et al.'s inter-layer scheduling work (arXiv:2312.09401)
+//! shows dominates pure spatial splits for bursty low-rate mixes.
+//!
+//! * [`events`] — the deterministic event queue: integer-nanosecond
+//!   timestamps, fixed same-instant priorities, insertion-stable
+//!   tie-breaks. One run's event log is bit-identical across repeat
+//!   invocations and `--threads` settings.
+//! * [`trace`] — request streams: seeded per-model Poisson arrivals or a
+//!   replayable JSON trace (`--trace`).
+//! * [`batcher`] — per-model queues (max-batch / max-wait dispatch) and
+//!   the batch service-time model: the share's scheduled pipeline
+//!   re-evaluated per batch size (fill latency + steady throughput out of
+//!   the method's [`MethodResult`](crate::scope::MethodResult)).
+//! * [`slo`] — per-model p50/p95/p99, violation rates, queue high-water
+//!   marks.
+//! * this module — [`serve()`]: enumerate **hybrid spatial/temporal
+//!   allocations** ([`HybridAllocation`]) over the quantized share grid,
+//!   replay the stream against each, prune any allocation whose simulated
+//!   p99 exceeds a declared SLO, and report the best pure-spatial,
+//!   pure-time-multiplexed, and hybrid winners side by side.
+//!
+//! Temporal shares charge a weight-swap penalty
+//! ([`weight_swap_ns`](crate::scope::multi_model::weight_swap_ns), the
+//! §III-B distributed-weight reload through `cost/dram.rs`) whenever the
+//! resident model changes — the cost that makes time-multiplexing a real
+//! trade instead of a free lunch.
+
+pub mod batcher;
+pub mod events;
+pub mod slo;
+pub mod trace;
+
+use crate::arch::McmConfig;
+use crate::baselines::{run_method, METHOD_NAMES};
+use crate::config::SimOptions;
+use crate::dse::parallel::par_map;
+use crate::model::workload_set::WorkloadSet;
+use crate::scope::multi_model::{
+    for_each_hybrid_allocation, share_grid, sub_package, weight_swap_ns, HybridAllocation,
+};
+
+use self::batcher::{Batcher, ServiceTable};
+use self::events::{EventKind, EventQueue};
+use self::slo::{SloStats, SloTracker};
+use self::trace::RequestStream;
+
+/// Hybrid enumeration visits `Bell(k)` partitions; beyond this the serve
+/// surface asks for a smaller set instead of silently exploding.
+pub const MAX_SERVE_MODELS: usize = 6;
+
+/// Serving knobs (`serve` subcommand flags).
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Mix arrival rate (mix units/s): model `i` arrives at
+    /// `arrival_rate × weight_i` requests/s unless its
+    /// [`ModelSpec::rate`](crate::model::workload_set::ModelSpec)
+    /// override is set. Ignored when a trace is replayed.
+    pub arrival_rate: f64,
+    /// Arrival-generation window in seconds (the sim then drains).
+    pub horizon_secs: f64,
+    /// Per-model batch-size cap (`--batch`).
+    pub max_batch: usize,
+    /// How long the oldest queued request may wait before its batch
+    /// dispatches part-full (`--max-wait`, ms; 0 = dispatch immediately).
+    pub max_wait_ms: f64,
+    /// Poisson stream seed (`--seed`).
+    pub seed: u64,
+    /// Per-model span scheduler — any §V-A method (fairness: every model
+    /// and every share use the same one).
+    pub method: String,
+    /// Chiplet-share granularity (0 = auto: `total / 16`, floor 1).
+    pub share_quantum: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            arrival_rate: 32.0,
+            horizon_secs: 0.25,
+            max_batch: 8,
+            max_wait_ms: 1.0,
+            seed: 7,
+            method: "scope".to_string(),
+            share_quantum: 0,
+        }
+    }
+}
+
+impl ServeOptions {
+    pub fn max_wait_ns(&self) -> u64 {
+        (self.max_wait_ms * 1e6).round() as u64
+    }
+
+    pub fn horizon_ns(&self) -> u64 {
+        (self.horizon_secs * 1e9).round() as u64
+    }
+
+    /// Validate the knob surface, naming the offending flag. `has_trace`
+    /// relaxes the stream-generation knobs a replayed trace ignores.
+    pub fn validate(&self, has_trace: bool) -> Result<(), String> {
+        if !has_trace {
+            if !(self.arrival_rate.is_finite() && self.arrival_rate > 0.0) {
+                return Err(format!(
+                    "--arrival-rate: must be a positive rate (mix units/s), got {}",
+                    self.arrival_rate
+                ));
+            }
+            if !(self.horizon_secs.is_finite() && self.horizon_secs > 0.0) {
+                return Err(format!(
+                    "--horizon: must be a positive duration (s), got {}",
+                    self.horizon_secs
+                ));
+            }
+        }
+        if self.max_batch == 0 {
+            return Err("--batch: batch size must be >= 1, got 0".to_string());
+        }
+        if !(self.max_wait_ms.is_finite() && self.max_wait_ms >= 0.0) {
+            return Err(format!(
+                "--max-wait: must be a non-negative wait (ms), got {}",
+                self.max_wait_ms
+            ));
+        }
+        if !METHOD_NAMES.contains(&self.method.as_str()) {
+            return Err(format!(
+                "--method: unknown method {:?}; options: {}",
+                self.method,
+                METHOD_NAMES.join(" ")
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Everything the event loop needs, computed once per serve run: the
+/// share grid, per-(model, share) schedules folded into batch
+/// service-time tables, weight-swap charges, and declared SLOs. Built by
+/// [`prepare`]; the (model, share) evaluations fan across the
+/// deterministic worker pool with serial inner methods, so the tables are
+/// bit-identical at every thread count.
+#[derive(Clone, Debug)]
+pub struct Prepared {
+    pub sizes: Vec<usize>,
+    /// `tables[model][size index]`; `None` = the method found no valid
+    /// schedule for that share (allocations using it are infeasible).
+    pub tables: Vec<Vec<Option<ServiceTable>>>,
+    /// Standalone steady-state throughput (samples/s at the scheduling
+    /// pipeline depth) per (model, size index).
+    pub throughput: Vec<Vec<Option<f64>>>,
+    /// Weight-swap charge per model (ns) on temporal shares.
+    pub swap_ns: Vec<u64>,
+    /// Declared p99 SLOs (ns) per model.
+    pub slo_ns: Vec<Option<u64>>,
+    /// (model, share) schedulings paid for the tables.
+    pub evals: usize,
+}
+
+impl Prepared {
+    pub fn table(&self, model: usize, chiplets: usize) -> Option<&ServiceTable> {
+        let j = self.sizes.iter().position(|&s| s == chiplets)?;
+        self.tables[model][j].as_ref()
+    }
+
+    pub fn throughput_at(&self, model: usize, chiplets: usize) -> Option<f64> {
+        let j = self.sizes.iter().position(|&s| s == chiplets)?;
+        self.throughput[model][j]
+    }
+}
+
+/// Evaluate every (model, share) candidate once and fold the results into
+/// batch service tables. `Err` carries a user-facing message (unknown
+/// method, oversized set, empty grid).
+pub fn prepare(
+    set: &WorkloadSet,
+    mcm: &McmConfig,
+    sim: &SimOptions,
+    sopts: &ServeOptions,
+) -> Result<Prepared, String> {
+    let k = set.models.len();
+    if k == 0 {
+        return Err("empty workload set".to_string());
+    }
+    if k > MAX_SERVE_MODELS {
+        return Err(format!(
+            "serving set has {k} models; the hybrid enumeration caps at {MAX_SERVE_MODELS}"
+        ));
+    }
+    if mcm.chiplets == 0 {
+        return Err("zero chiplets".to_string());
+    }
+    if !METHOD_NAMES.contains(&sopts.method.as_str()) {
+        return Err(format!(
+            "unknown method {:?}; options: {}",
+            sopts.method,
+            METHOD_NAMES.join(" ")
+        ));
+    }
+    let sizes = share_grid(mcm.chiplets, sopts.share_quantum);
+    let inner = SimOptions { threads: 1, ..sim.clone() };
+    let mut jobs: Vec<(usize, usize)> = Vec::with_capacity(k * sizes.len());
+    for i in 0..k {
+        for &share in &sizes {
+            jobs.push((i, share));
+        }
+    }
+    let evals = jobs.len();
+    let max_batch = sopts.max_batch;
+    let method = sopts.method.clone();
+    let results: Vec<(Option<f64>, Option<ServiceTable>)> =
+        par_map(sim.threads, jobs, |_, (i, share)| {
+            let sub = sub_package(mcm, share);
+            let net = &set.models[i].net;
+            let r = run_method(&method, net, &sub, &inner);
+            let tput = if r.eval.is_valid() && r.throughput() > 0.0 {
+                Some(r.throughput())
+            } else {
+                None
+            };
+            let table = ServiceTable::build(&method, net, &sub, &inner, &r, max_batch);
+            (tput, table)
+        });
+    let idx = |i: usize, j: usize| i * sizes.len() + j;
+    let mut tables: Vec<Vec<Option<ServiceTable>>> = Vec::with_capacity(k);
+    let mut throughput: Vec<Vec<Option<f64>>> = Vec::with_capacity(k);
+    for i in 0..k {
+        let mut trow = Vec::with_capacity(sizes.len());
+        let mut prow = Vec::with_capacity(sizes.len());
+        for j in 0..sizes.len() {
+            let (tput, table) = &results[idx(i, j)];
+            prow.push(*tput);
+            trow.push(table.clone());
+        }
+        tables.push(trow);
+        throughput.push(prow);
+    }
+    Ok(Prepared {
+        sizes,
+        tables,
+        throughput,
+        swap_ns: set.models.iter().map(|m| weight_swap_ns(&m.net, mcm)).collect(),
+        slo_ns: set.models.iter().map(|m| m.slo_ns()).collect(),
+        evals,
+    })
+}
+
+/// One line of the replayable event log (compact, `Eq`-comparable — the
+/// determinism tests compare whole logs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LogKind {
+    /// Request queued (`n` = queue depth after).
+    Arrival,
+    /// Batch of `n` requests started (swap included in its service time).
+    Dispatch,
+    /// Batch of `n` requests finished.
+    Complete,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LogEntry {
+    pub t_ns: u64,
+    pub kind: LogKind,
+    pub model: usize,
+    pub share: usize,
+    pub n: usize,
+}
+
+/// A finished simulation of one allocation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimOutcome {
+    /// Every model's share had a valid schedule; `false` aborts before
+    /// the event loop (the allocation cannot serve at all).
+    pub feasible: bool,
+    /// The first model whose share was unschedulable (diagnostics).
+    pub infeasible_model: Option<usize>,
+    pub per_model: Vec<SloStats>,
+    /// Events processed by the loop.
+    pub events: u64,
+    pub completed: u64,
+    /// Last completion time (ns).
+    pub makespan_ns: u64,
+    /// Dispatches that paid the weight-swap charge, summed over shares.
+    pub swaps: u64,
+    pub log: Vec<LogEntry>,
+}
+
+impl SimOutcome {
+    /// Every arrival served and every declared SLO's simulated p99 within
+    /// bound — the hybrid allocator's pruning predicate.
+    pub fn meets_all_slos(&self) -> bool {
+        self.feasible && self.per_model.iter().all(|s| s.meets_slo())
+    }
+
+    /// Worst `p99 / slo` over models with a declared SLO (0 when none).
+    pub fn worst_slo_ratio(&self) -> f64 {
+        if !self.feasible {
+            return f64::INFINITY;
+        }
+        self.per_model.iter().map(|s| s.slo_ratio()).fold(0.0, f64::max)
+    }
+
+    /// Largest per-model p99 (ns); `u64::MAX` for infeasible allocations.
+    pub fn max_p99_ns(&self) -> u64 {
+        if !self.feasible {
+            return u64::MAX;
+        }
+        self.per_model.iter().map(|s| s.p99_ns).max().unwrap_or(0)
+    }
+
+    fn infeasible(model: usize, stream: &RequestStream, slo_ns: &[Option<u64>]) -> SimOutcome {
+        let mut trackers: Vec<SloTracker> =
+            slo_ns.iter().map(|s| SloTracker::new(*s)).collect();
+        for r in &stream.arrivals {
+            trackers[r.model].on_arrival(0);
+        }
+        SimOutcome {
+            feasible: false,
+            infeasible_model: Some(model),
+            per_model: trackers.into_iter().map(SloTracker::finish).collect(),
+            events: 0,
+            completed: 0,
+            makespan_ns: 0,
+            swaps: 0,
+            log: Vec::new(),
+        }
+    }
+}
+
+struct ShareState {
+    resident: Option<usize>,
+    busy: bool,
+}
+
+/// The single-threaded event loop over one allocation.
+struct Sim<'a> {
+    alloc: &'a HybridAllocation,
+    group_of: Vec<usize>,
+    /// Per model: its group's service table (resolved up front).
+    tables: Vec<&'a ServiceTable>,
+    swap_ns: &'a [u64],
+    max_batch: usize,
+    max_wait_ns: u64,
+    record_log: bool,
+    shares: Vec<ShareState>,
+    batchers: Vec<Batcher>,
+    trackers: Vec<SloTracker>,
+    queue: EventQueue,
+    log: Vec<LogEntry>,
+    completed: u64,
+    swaps: u64,
+    makespan_ns: u64,
+}
+
+impl Sim<'_> {
+    fn try_dispatch(&mut self, g: usize, now: u64) {
+        if self.shares[g].busy {
+            return;
+        }
+        // eligible member with the oldest head request (ties: lower index);
+        // the batch cap is clamped to each model's service table so a
+        // caller-supplied max_batch beyond the prepared tables degrades to
+        // the table limit instead of panicking mid-simulation
+        let mut pick: Option<(u64, usize)> = None;
+        for &m in &self.alloc.groups[g].members {
+            let cap = self.max_batch.min(self.tables[m].max_batch()).max(1);
+            if self.batchers[m].ripe(now, cap, self.max_wait_ns) {
+                let head = self.batchers[m].head_arrival().expect("ripe implies non-empty");
+                if pick.map(|p| (head, m) < p).unwrap_or(true) {
+                    pick = Some((head, m));
+                }
+            }
+        }
+        let Some((_, m)) = pick else { return };
+        let cap = self.max_batch.min(self.tables[m].max_batch()).max(1);
+        let batch = self.batchers[m].take_batch(cap);
+        let swapped = self.shares[g].resident != Some(m);
+        let swap = if swapped { self.swap_ns[m] } else { 0 };
+        let done = now
+            .saturating_add(swap)
+            .saturating_add(self.tables[m].service_ns(batch.len()));
+        self.shares[g].resident = Some(m);
+        self.shares[g].busy = true;
+        self.trackers[m].on_batch(swapped);
+        if swapped {
+            self.swaps += 1;
+        }
+        for q in &batch {
+            self.trackers[m].record(done - q.t_ns);
+        }
+        self.completed += batch.len() as u64;
+        self.makespan_ns = self.makespan_ns.max(done);
+        if self.record_log {
+            self.log.push(LogEntry {
+                t_ns: now,
+                kind: LogKind::Dispatch,
+                model: m,
+                share: g,
+                n: batch.len(),
+            });
+        }
+        self.queue
+            .push(done, EventKind::BatchComplete { share: g, model: m, size: batch.len() });
+    }
+
+    fn run(mut self, stream: &RequestStream) -> SimOutcome {
+        for (req, r) in stream.arrivals.iter().enumerate() {
+            self.queue.push(r.t_ns, EventKind::Arrival { model: r.model, req });
+        }
+        while let Some(ev) = self.queue.pop() {
+            match ev.kind {
+                EventKind::Arrival { model, req } => {
+                    let g = self.group_of[model];
+                    self.batchers[model].push(req, ev.t_ns);
+                    self.trackers[model].on_arrival(self.batchers[model].len());
+                    if self.record_log {
+                        self.log.push(LogEntry {
+                            t_ns: ev.t_ns,
+                            kind: LogKind::Arrival,
+                            model,
+                            share: g,
+                            n: self.batchers[model].len(),
+                        });
+                    }
+                    if self.max_wait_ns > 0 {
+                        self.queue.push(
+                            ev.t_ns.saturating_add(self.max_wait_ns),
+                            EventKind::BatchTimer { model, req },
+                        );
+                    }
+                    self.try_dispatch(g, ev.t_ns);
+                }
+                EventKind::BatchTimer { model, req } => {
+                    // stale once the request dispatched; the head check is
+                    // exact because queues are FIFO
+                    if self.batchers[model].head_req() == Some(req) {
+                        self.try_dispatch(self.group_of[model], ev.t_ns);
+                    }
+                }
+                EventKind::BatchComplete { share, model, size } => {
+                    self.shares[share].busy = false;
+                    if self.record_log {
+                        self.log.push(LogEntry {
+                            t_ns: ev.t_ns,
+                            kind: LogKind::Complete,
+                            model,
+                            share,
+                            n: size,
+                        });
+                    }
+                    self.try_dispatch(share, ev.t_ns);
+                }
+            }
+        }
+        SimOutcome {
+            feasible: true,
+            infeasible_model: None,
+            per_model: self.trackers.into_iter().map(SloTracker::finish).collect(),
+            events: self.queue.processed(),
+            completed: self.completed,
+            makespan_ns: self.makespan_ns,
+            swaps: self.swaps,
+            log: self.log,
+        }
+    }
+}
+
+/// Replay `stream` against one allocation. Deterministic: the loop is
+/// single-threaded and the event order is total, so two calls with equal
+/// inputs return bit-identical outcomes (logs included). `record_log`
+/// keeps the per-event replay log — worth ~3 `LogEntry` per request, so
+/// the enumeration loop of [`serve()`] leaves it off and re-simulates
+/// only the winners with it on.
+///
+/// Precondition: every `stream` model index is below `prepared`'s model
+/// count ([`serve()`] validates this once up front — re-scanning the
+/// stream per allocation would dominate large enumerations).
+pub fn simulate_allocation(
+    alloc: &HybridAllocation,
+    prepared: &Prepared,
+    stream: &RequestStream,
+    max_batch: usize,
+    max_wait_ns: u64,
+    record_log: bool,
+) -> SimOutcome {
+    let k = prepared.tables.len();
+    debug_assert!(
+        stream.arrivals.iter().all(|r| r.model < k),
+        "stream model indices must be < the prepared model count"
+    );
+    let group_of = alloc.group_of(k);
+    let mut tables: Vec<&ServiceTable> = Vec::with_capacity(k);
+    for m in 0..k {
+        match prepared.table(m, alloc.groups[group_of[m]].chiplets) {
+            Some(t) => tables.push(t),
+            None => return SimOutcome::infeasible(m, stream, &prepared.slo_ns),
+        }
+    }
+    Sim {
+        alloc,
+        group_of,
+        tables,
+        swap_ns: &prepared.swap_ns,
+        max_batch,
+        max_wait_ns,
+        record_log,
+        shares: (0..alloc.groups.len())
+            .map(|_| ShareState { resident: None, busy: false })
+            .collect(),
+        batchers: (0..k).map(|_| Batcher::new()).collect(),
+        trackers: prepared.slo_ns.iter().map(|s| SloTracker::new(*s)).collect(),
+        queue: EventQueue::new(),
+        log: Vec::new(),
+        completed: 0,
+        swaps: 0,
+        makespan_ns: 0,
+    }
+    .run(stream)
+}
+
+/// One allocation's simulated outcome inside a serve run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServingOutcome {
+    pub alloc: HybridAllocation,
+    pub sim: SimOutcome,
+    pub meets_all_slos: bool,
+    pub worst_slo_ratio: f64,
+    /// Each model's standalone steady-state throughput on its share
+    /// (samples/s at the scheduling pipeline depth; `None` when the
+    /// share was unschedulable). Temporal co-residents report the same
+    /// share's standalone number — the simulation, not this column, says
+    /// what multiplexing actually cost them.
+    pub share_throughput: Vec<Option<f64>>,
+    /// Enumeration index (the final determinism tie-break).
+    pub index: usize,
+}
+
+/// Strict "is `a` a better serving allocation than `b`": SLO-feasible
+/// first (the pruning rule — an allocation whose simulated p99 exceeds a
+/// declared SLO never beats one that meets every bound), then lower worst
+/// p99/SLO ratio, then lower worst p99, then fewer chiplets, then
+/// enumeration order. Total and deterministic.
+fn better(a: &ServingOutcome, b: &ServingOutcome) -> bool {
+    if a.sim.feasible != b.sim.feasible {
+        return a.sim.feasible;
+    }
+    if a.meets_all_slos != b.meets_all_slos {
+        return a.meets_all_slos;
+    }
+    match a.worst_slo_ratio.total_cmp(&b.worst_slo_ratio) {
+        std::cmp::Ordering::Less => return true,
+        std::cmp::Ordering::Greater => return false,
+        std::cmp::Ordering::Equal => {}
+    }
+    let (ap, bp) = (a.sim.max_p99_ns(), b.sim.max_p99_ns());
+    if ap != bp {
+        return ap < bp;
+    }
+    let (ac, bc) = (a.alloc.used_chiplets(), b.alloc.used_chiplets());
+    if ac != bc {
+        return ac < bc;
+    }
+    a.index < b.index
+}
+
+/// A finished serve run: the best pure-spatial, pure-time-multiplexed,
+/// and hybrid allocations under the serving objective, plus enumeration
+/// statistics. `hybrid` searches the full partition × split space, so it
+/// is never worse than the other two by construction.
+#[derive(Clone, Debug)]
+pub struct ServingReport {
+    pub set: WorkloadSet,
+    pub total_chiplets: usize,
+    pub sizes: Vec<usize>,
+    /// Arrivals per model in the replayed stream.
+    pub arrival_counts: Vec<u64>,
+    /// (model, share) schedulings paid for the service tables.
+    pub evals: usize,
+    /// Allocations enumerated and simulated.
+    pub allocations: usize,
+    /// Allocations whose every share had a valid schedule.
+    pub feasible_allocations: usize,
+    /// Feasible allocations meeting every declared SLO.
+    pub slo_feasible_allocations: usize,
+    pub spatial: Option<ServingOutcome>,
+    pub tm: Option<ServingOutcome>,
+    pub hybrid: Option<ServingOutcome>,
+    pub error: Option<String>,
+}
+
+impl ServingReport {
+    pub fn is_valid(&self) -> bool {
+        self.error.is_none()
+    }
+
+    /// The reported modes in comparison order, labels attached.
+    pub fn modes(&self) -> Vec<(&'static str, &ServingOutcome)> {
+        let mut out = Vec::new();
+        if let Some(o) = &self.spatial {
+            out.push(("spatial", o));
+        }
+        if let Some(o) = &self.tm {
+            out.push(("tm", o));
+        }
+        if let Some(o) = &self.hybrid {
+            out.push(("hybrid", o));
+        }
+        out
+    }
+}
+
+/// Run the full serving study: prepare the (model, share) tables, replay
+/// `stream` against every hybrid allocation of the share grid, prune on
+/// declared SLOs, and report the per-class winners. Never panics on
+/// infeasible inputs — the report carries `error` instead.
+pub fn serve(
+    set: &WorkloadSet,
+    mcm: &McmConfig,
+    sim: &SimOptions,
+    sopts: &ServeOptions,
+    stream: &RequestStream,
+) -> ServingReport {
+    let invalid = |msg: String| ServingReport {
+        set: set.clone(),
+        total_chiplets: mcm.chiplets,
+        sizes: Vec::new(),
+        arrival_counts: Vec::new(),
+        evals: 0,
+        allocations: 0,
+        feasible_allocations: 0,
+        slo_feasible_allocations: 0,
+        spatial: None,
+        tm: None,
+        hybrid: None,
+        error: Some(msg),
+    };
+    if let Err(e) = sopts.validate(true) {
+        return invalid(e);
+    }
+    let prepared = match prepare(set, mcm, sim, sopts) {
+        Ok(p) => p,
+        Err(e) => return invalid(e),
+    };
+    let k = set.models.len();
+    if let Some(r) = stream.arrivals.iter().find(|r| r.model >= k) {
+        return invalid(format!(
+            "request stream references model index {} but the serving set has {k} models",
+            r.model
+        ));
+    }
+    let max_wait_ns = sopts.max_wait_ns();
+    let mut allocs: Vec<HybridAllocation> = Vec::new();
+    for_each_hybrid_allocation(k, &prepared.sizes, mcm.chiplets, &mut |alloc| {
+        allocs.push(alloc.clone());
+        true
+    });
+    if allocs.is_empty() {
+        return invalid(format!(
+            "no allocation fits {k} models on {} chiplets (grid {:?})",
+            mcm.chiplets, prepared.sizes
+        ));
+    }
+    let allocations = allocs.len();
+    // Each simulation is a pure function of (alloc, prepared, stream):
+    // fan the replays across the deterministic worker pool, log-free
+    // (winners are re-simulated with the replay log on below — same
+    // outcome by determinism), and fold winners in enumeration order.
+    let results: Vec<(HybridAllocation, SimOutcome)> =
+        par_map(sim.threads, allocs, |_, alloc| {
+            let outcome =
+                simulate_allocation(&alloc, &prepared, stream, sopts.max_batch, max_wait_ns, false);
+            (alloc, outcome)
+        });
+    let mut feasible = 0usize;
+    let mut slo_feasible = 0usize;
+    let mut best: Option<ServingOutcome> = None;
+    let mut best_spatial: Option<ServingOutcome> = None;
+    let mut best_tm: Option<ServingOutcome> = None;
+    for (index, (alloc, outcome)) in results.into_iter().enumerate() {
+        let group_of = alloc.group_of(k);
+        let cand = ServingOutcome {
+            meets_all_slos: outcome.meets_all_slos(),
+            worst_slo_ratio: outcome.worst_slo_ratio(),
+            share_throughput: (0..k)
+                .map(|m| prepared.throughput_at(m, alloc.groups[group_of[m]].chiplets))
+                .collect(),
+            sim: outcome,
+            alloc,
+            index,
+        };
+        if cand.sim.feasible {
+            feasible += 1;
+        }
+        if cand.meets_all_slos {
+            slo_feasible += 1;
+        }
+        let update = |slot: &mut Option<ServingOutcome>, cand: &ServingOutcome| {
+            if slot.as_ref().map(|cur| better(cand, cur)).unwrap_or(true) {
+                *slot = Some(cand.clone());
+            }
+        };
+        if cand.alloc.is_spatial() {
+            update(&mut best_spatial, &cand);
+        }
+        if cand.alloc.is_time_multiplexed() {
+            update(&mut best_tm, &cand);
+        }
+        update(&mut best, &cand);
+    }
+    // attach the replay log to the reported winners only; the three
+    // winner slots often hold the same allocation (e.g. the overall best
+    // IS the tm winner), so identical allocations share one logged replay
+    let mut logged: Vec<(HybridAllocation, SimOutcome)> = Vec::new();
+    let mut with_log = |o: Option<ServingOutcome>| -> Option<ServingOutcome> {
+        o.map(|mut o| {
+            match logged.iter().find(|(a, _)| *a == o.alloc) {
+                Some((_, sim)) => o.sim = sim.clone(),
+                None => {
+                    let sim = simulate_allocation(
+                        &o.alloc,
+                        &prepared,
+                        stream,
+                        sopts.max_batch,
+                        max_wait_ns,
+                        true,
+                    );
+                    logged.push((o.alloc.clone(), sim.clone()));
+                    o.sim = sim;
+                }
+            }
+            o
+        })
+    };
+    let (best_spatial, best_tm, best) = (with_log(best_spatial), with_log(best_tm), with_log(best));
+    ServingReport {
+        set: set.clone(),
+        total_chiplets: mcm.chiplets,
+        arrival_counts: stream.counts(k),
+        evals: prepared.evals,
+        allocations,
+        feasible_allocations: feasible,
+        slo_feasible_allocations: slo_feasible,
+        sizes: prepared.sizes,
+        spatial: best_spatial,
+        tm: best_tm,
+        hybrid: best,
+        error: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scope::multi_model::ShareGroup;
+
+    /// A synthetic two-model prepared table: model 0 is fast, model 1
+    /// slow; bigger shares are faster. No scheduling involved.
+    fn synthetic_prepared(slo_ns: Vec<Option<u64>>) -> Prepared {
+        let t = |base: u64| -> Option<ServiceTable> {
+            Some(ServiceTable::from_ns((1..=4).map(|b| base * b as u64).collect()))
+        };
+        Prepared {
+            sizes: vec![8, 16],
+            tables: vec![vec![t(100), t(60)], vec![t(300), t(180)]],
+            throughput: vec![vec![Some(10.0), Some(16.0)], vec![Some(3.0), Some(5.0)]],
+            swap_ns: vec![50, 70],
+            slo_ns,
+            evals: 4,
+        }
+    }
+
+    fn stream_of(pairs: &[(usize, u64)]) -> RequestStream {
+        RequestStream {
+            arrivals: pairs
+                .iter()
+                .map(|&(model, t_ns)| trace::Request { model, t_ns })
+                .collect(),
+        }
+    }
+
+    fn tm_alloc(chiplets: usize) -> HybridAllocation {
+        HybridAllocation {
+            groups: vec![ShareGroup { members: vec![0, 1], chiplets }],
+        }
+    }
+
+    fn spatial_alloc() -> HybridAllocation {
+        HybridAllocation {
+            groups: vec![
+                ShareGroup { members: vec![0], chiplets: 8 },
+                ShareGroup { members: vec![1], chiplets: 8 },
+            ],
+        }
+    }
+
+    #[test]
+    fn temporal_share_charges_swaps_and_serves_fifo() {
+        let p = synthetic_prepared(vec![None, None]);
+        let s = stream_of(&[(0, 0), (1, 0)]);
+        let out = simulate_allocation(&tm_alloc(16), &p, &s, 1, 0, true);
+        assert!(out.feasible);
+        assert_eq!(out.completed, 2);
+        // model 0 first (equal arrivals, lower index): swap 50 + svc 60 →
+        // done at 110; model 1 then swaps 70 + svc 180 → done at 360
+        assert_eq!(out.per_model[0].p99_ns, 110);
+        assert_eq!(out.per_model[1].p99_ns, 360);
+        assert_eq!(out.swaps, 2, "both dispatches switched the resident model");
+        assert_eq!(out.makespan_ns, 360);
+        // a repeated same-model batch pays no second swap
+        let s2 = stream_of(&[(0, 0), (0, 1)]);
+        let out2 = simulate_allocation(&tm_alloc(16), &p, &s2, 1, 0, true);
+        assert_eq!(out2.swaps, 1);
+        assert_eq!(out2.per_model[0].max_ns, (50 + 60) + 60 - 1);
+    }
+
+    #[test]
+    fn spatial_shares_run_in_parallel() {
+        let p = synthetic_prepared(vec![None, None]);
+        let s = stream_of(&[(0, 0), (1, 0)]);
+        let out = simulate_allocation(&spatial_alloc(), &p, &s, 1, 0, true);
+        // each model on its own share: swap (first load) + batch-1 service
+        assert_eq!(out.per_model[0].p99_ns, 50 + 100);
+        assert_eq!(out.per_model[1].p99_ns, 70 + 300);
+        assert_eq!(out.makespan_ns, 370, "shares overlap in time");
+    }
+
+    #[test]
+    fn batching_waits_and_dispatches_on_timeout_or_full() {
+        let p = synthetic_prepared(vec![None, None]);
+        // two arrivals 10 ns apart, max_batch 4, max_wait 100: one batch
+        // of 2 dispatches when the head (t = 0) times out at t = 100
+        let s = stream_of(&[(0, 0), (0, 10)]);
+        let out = simulate_allocation(&tm_alloc(16), &p, &s, 4, 100, true);
+        assert_eq!(out.per_model[0].batches, 1, "one merged batch");
+        // dispatch at 100 (head timeout): swap 50 + svc(2) = 120 → 270
+        assert_eq!(out.per_model[0].max_ns, 100 + 50 + 120);
+        // a full batch dispatches immediately, no timeout needed
+        let s2 = stream_of(&[(0, 0), (0, 0), (0, 0), (0, 0)]);
+        let out2 = simulate_allocation(&tm_alloc(16), &p, &s2, 4, 1_000_000, true);
+        assert_eq!(out2.per_model[0].batches, 1);
+        assert_eq!(out2.per_model[0].max_ns, 50 + 60 * 4);
+    }
+
+    #[test]
+    fn queue_depth_and_violations_track() {
+        let p = synthetic_prepared(vec![Some(200), None]);
+        // three back-to-back model-0 requests, batch 1: the third waits
+        // two service times and violates its 200 ns SLO
+        let s = stream_of(&[(0, 0), (0, 1), (0, 2)]);
+        let out = simulate_allocation(&tm_alloc(16), &p, &s, 1, 0, true);
+        let m0 = &out.per_model[0];
+        assert_eq!(m0.completed, 3);
+        assert!(m0.queue_high_water >= 2);
+        assert!(m0.violations >= 1, "tail request must blow the 200 ns bound");
+        assert!(!out.meets_all_slos());
+        assert!(out.worst_slo_ratio() > 1.0);
+    }
+
+    #[test]
+    fn infeasible_share_reports_the_model() {
+        let mut p = synthetic_prepared(vec![Some(1_000), None]);
+        p.tables[1][0] = None; // model 1 cannot schedule on 8 chiplets
+        let s = stream_of(&[(0, 0), (1, 5)]);
+        let out = simulate_allocation(&spatial_alloc(), &p, &s, 1, 0, true);
+        assert!(!out.feasible);
+        assert_eq!(out.infeasible_model, Some(1));
+        assert_eq!(out.completed, 0);
+        assert_eq!(out.per_model[1].arrivals, 1);
+        assert!(!out.meets_all_slos());
+        assert_eq!(out.max_p99_ns(), u64::MAX);
+        assert_eq!(out.worst_slo_ratio(), f64::INFINITY);
+        // but the 16-chiplet temporal share still serves everyone
+        let tm = simulate_allocation(&tm_alloc(16), &p, &s, 1, 0, true);
+        assert!(tm.feasible);
+        assert_eq!(tm.completed, 2);
+    }
+
+    #[test]
+    fn oversized_batch_cap_clamps_to_the_service_table() {
+        // tables were built for batches of ≤ 4; asking for 8 must clamp,
+        // not panic mid-simulation
+        let p = synthetic_prepared(vec![None, None]);
+        let s = stream_of(&[(0, 0), (0, 0), (0, 0), (0, 0), (0, 0), (0, 0)]);
+        let out = simulate_allocation(&tm_alloc(16), &p, &s, 8, 0, true);
+        assert!(out.feasible);
+        assert_eq!(out.completed, 6);
+        // wait 0 dispatches the first arrival alone (batch 1), then the
+        // queued 5 drain as a clamped batch of 4 plus a final 1
+        assert_eq!(out.per_model[0].batches, 3);
+        assert!(out.log.iter().all(|l| l.kind != LogKind::Dispatch || l.n <= 4));
+    }
+
+    #[test]
+    fn simulation_is_bit_identical_on_repeat() {
+        let p = synthetic_prepared(vec![Some(500), Some(2_000)]);
+        let s = stream_of(&[(0, 0), (1, 3), (0, 7), (1, 7), (0, 400), (1, 900)]);
+        let a = simulate_allocation(&tm_alloc(16), &p, &s, 2, 50, true);
+        let b = simulate_allocation(&tm_alloc(16), &p, &s, 2, 50, true);
+        assert_eq!(a, b, "logs and stats must match bit for bit");
+        assert!(a.events > 0);
+        assert!(!a.log.is_empty());
+    }
+
+    #[test]
+    fn serve_options_validate_names_the_offending_flag() {
+        let ok = ServeOptions::default();
+        assert!(ok.validate(false).is_ok());
+        let bad_rate = ServeOptions { arrival_rate: 0.0, ..ServeOptions::default() };
+        assert!(bad_rate.validate(false).unwrap_err().contains("--arrival-rate"));
+        assert!(bad_rate.validate(true).is_ok(), "a trace ignores the rate");
+        let bad_batch = ServeOptions { max_batch: 0, ..ServeOptions::default() };
+        assert!(bad_batch.validate(true).unwrap_err().contains("--batch"));
+        let bad_wait = ServeOptions { max_wait_ms: -1.0, ..ServeOptions::default() };
+        assert!(bad_wait.validate(true).unwrap_err().contains("--max-wait"));
+        let bad_horizon = ServeOptions { horizon_secs: 0.0, ..ServeOptions::default() };
+        assert!(bad_horizon.validate(false).unwrap_err().contains("--horizon"));
+        let bad_method =
+            ServeOptions { method: "warp".to_string(), ..ServeOptions::default() };
+        let err = bad_method.validate(true).unwrap_err();
+        assert!(err.contains("--method") && err.contains("scope"), "{err}");
+    }
+
+    #[test]
+    fn serve_rejects_bad_sets_without_panicking() {
+        let mcm = McmConfig::paper_default(8);
+        let sim = SimOptions { samples: 4, ..SimOptions::default() };
+        let sopts = ServeOptions::default();
+        let stream = RequestStream::default();
+        let empty = serve(&WorkloadSet::default(), &mcm, &sim, &sopts, &stream);
+        assert!(!empty.is_valid());
+        let set = WorkloadSet::parse("scopenet").unwrap();
+        let zero_mcm = McmConfig { chiplets: 0, ..McmConfig::paper_default(1) };
+        assert!(!serve(&set, &zero_mcm, &sim, &sopts, &stream).is_valid());
+        let bad_method = ServeOptions { method: "warp".into(), ..ServeOptions::default() };
+        let r = serve(&set, &mcm, &sim, &bad_method, &stream);
+        assert!(r.error.as_deref().unwrap_or("").contains("scope"), "{:?}", r.error);
+        let seven = WorkloadSet::parse(
+            "scopenet,scopenet,scopenet,scopenet,scopenet,scopenet,scopenet",
+        )
+        .unwrap();
+        let r = serve(&seven, &mcm, &sim, &sopts, &stream);
+        assert!(r.error.as_deref().unwrap_or("").contains("7 models"), "{:?}", r.error);
+    }
+}

@@ -1,0 +1,209 @@
+//! Per-model latency / SLO accounting (SCAR's second axis: the
+//! co-scheduler of `scope/multi_model.rs` maximizes the sustainable mix
+//! *rate*; serving adds per-request latency bounds).
+//!
+//! Latencies are integer nanoseconds end to end (completion − arrival),
+//! so percentiles and violation counts are exact and the stats compare
+//! bit-identically across runs. Percentiles use the nearest-rank
+//! definition on the sorted sample — no interpolation, no floats.
+
+/// Nearest-rank percentile of a **sorted** latency sample: the smallest
+/// value with at least `q` of the mass at or below it (`q` in `(0, 1]`).
+/// `0` on an empty sample.
+pub fn percentile_ns(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    debug_assert!(q > 0.0 && q <= 1.0);
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// One model's serving statistics over a finished simulation.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SloStats {
+    /// Requests that entered the system.
+    pub arrivals: u64,
+    /// Requests that completed (== `arrivals` once the sim drains; 0 when
+    /// the model's share was unschedulable).
+    pub completed: u64,
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+    pub p99_ns: u64,
+    pub max_ns: u64,
+    /// Integer mean latency (ns, rounded down) — kept integral so stats
+    /// stay `Eq`-comparable in the determinism tests.
+    pub mean_ns: u64,
+    /// Requests whose end-to-end latency exceeded the SLO.
+    pub violations: u64,
+    /// The declared p99 bound (ns); `None` = no SLO for this model.
+    pub slo_ns: Option<u64>,
+    /// Deepest the model's queue ever got.
+    pub queue_high_water: usize,
+    /// Batches dispatched for this model.
+    pub batches: u64,
+    /// Dispatches that paid the weight-swap charge (the share's resident
+    /// model differed).
+    pub swaps: u64,
+}
+
+impl SloStats {
+    /// Fraction of completed requests over the SLO (0 with no SLO).
+    pub fn violation_rate(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.violations as f64 / self.completed as f64
+        }
+    }
+
+    /// The pruning predicate of the hybrid allocator: every arrival
+    /// completed and — when an SLO is declared — the simulated p99 sits at
+    /// or under it.
+    pub fn meets_slo(&self) -> bool {
+        self.completed == self.arrivals
+            && self.slo_ns.map(|s| self.p99_ns <= s).unwrap_or(true)
+    }
+
+    /// `p99 / slo` (1.0 = exactly at the bound); `0` with no SLO,
+    /// `f64::INFINITY` for an unserved model.
+    pub fn slo_ratio(&self) -> f64 {
+        match self.slo_ns {
+            None => 0.0,
+            Some(_) if self.completed < self.arrivals => f64::INFINITY,
+            Some(s) => self.p99_ns as f64 / s.max(1) as f64,
+        }
+    }
+}
+
+/// Accumulates one model's latencies during a simulation run.
+#[derive(Clone, Debug, Default)]
+pub struct SloTracker {
+    slo_ns: Option<u64>,
+    latencies: Vec<u64>,
+    arrivals: u64,
+    violations: u64,
+    queue_high_water: usize,
+    batches: u64,
+    swaps: u64,
+}
+
+impl SloTracker {
+    pub fn new(slo_ns: Option<u64>) -> SloTracker {
+        SloTracker { slo_ns, ..SloTracker::default() }
+    }
+
+    pub fn on_arrival(&mut self, queue_depth: usize) {
+        self.arrivals += 1;
+        self.queue_high_water = self.queue_high_water.max(queue_depth);
+    }
+
+    pub fn on_batch(&mut self, swapped: bool) {
+        self.batches += 1;
+        if swapped {
+            self.swaps += 1;
+        }
+    }
+
+    pub fn record(&mut self, latency_ns: u64) {
+        if let Some(s) = self.slo_ns {
+            if latency_ns > s {
+                self.violations += 1;
+            }
+        }
+        self.latencies.push(latency_ns);
+    }
+
+    /// Fold the sample into final statistics.
+    pub fn finish(mut self) -> SloStats {
+        self.latencies.sort_unstable();
+        let n = self.latencies.len() as u64;
+        let mean_ns = if n == 0 {
+            0
+        } else {
+            // u128 sum: ~2^64 ns of aggregate latency overflows u64 fast
+            (self.latencies.iter().map(|&l| l as u128).sum::<u128>() / n as u128) as u64
+        };
+        SloStats {
+            arrivals: self.arrivals,
+            completed: n,
+            p50_ns: percentile_ns(&self.latencies, 0.50),
+            p95_ns: percentile_ns(&self.latencies, 0.95),
+            p99_ns: percentile_ns(&self.latencies, 0.99),
+            max_ns: self.latencies.last().copied().unwrap_or(0),
+            mean_ns,
+            violations: self.violations,
+            slo_ns: self.slo_ns,
+            queue_high_water: self.queue_high_water,
+            batches: self.batches,
+            swaps: self.swaps,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_rank_percentiles() {
+        let xs: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile_ns(&xs, 0.50), 50);
+        assert_eq!(percentile_ns(&xs, 0.95), 95);
+        assert_eq!(percentile_ns(&xs, 0.99), 99);
+        assert_eq!(percentile_ns(&xs, 1.0), 100);
+        assert_eq!(percentile_ns(&[42], 0.99), 42);
+        assert_eq!(percentile_ns(&[], 0.5), 0);
+        // small-sample nearest rank: p50 of [10, 20] is the first element
+        assert_eq!(percentile_ns(&[10, 20], 0.5), 10);
+        assert_eq!(percentile_ns(&[10, 20], 0.99), 20);
+    }
+
+    #[test]
+    fn tracker_counts_violations_and_meets() {
+        let mut t = SloTracker::new(Some(100));
+        for l in [50u64, 99, 100, 101, 250] {
+            t.on_arrival(1);
+            t.record(l);
+        }
+        t.on_batch(true);
+        t.on_batch(false);
+        let s = t.finish();
+        assert_eq!(s.arrivals, 5);
+        assert_eq!(s.completed, 5);
+        assert_eq!(s.violations, 2, "100 is at the bound, not over it");
+        assert_eq!(s.max_ns, 250);
+        assert_eq!(s.p50_ns, 100);
+        assert_eq!(s.p99_ns, 250);
+        assert_eq!(s.mean_ns, (50 + 99 + 100 + 101 + 250) / 5);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.swaps, 1);
+        assert!(!s.meets_slo(), "p99 = 250 > slo = 100");
+        assert!((s.violation_rate() - 0.4).abs() < 1e-12);
+        assert!(s.slo_ratio() > 1.0);
+    }
+
+    #[test]
+    fn no_slo_always_meets() {
+        let mut t = SloTracker::new(None);
+        t.on_arrival(3);
+        t.record(1_000_000_000);
+        let s = t.finish();
+        assert!(s.meets_slo());
+        assert_eq!(s.violations, 0);
+        assert_eq!(s.slo_ratio(), 0.0);
+        assert_eq!(s.queue_high_water, 3);
+    }
+
+    #[test]
+    fn unserved_requests_never_meet_a_declared_slo() {
+        let mut t = SloTracker::new(Some(1_000));
+        t.on_arrival(1);
+        let s = t.finish();
+        assert_eq!(s.arrivals, 1);
+        assert_eq!(s.completed, 0);
+        assert!(!s.meets_slo());
+        assert_eq!(s.slo_ratio(), f64::INFINITY);
+        assert_eq!(s.violation_rate(), 0.0);
+    }
+}

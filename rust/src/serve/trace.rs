@@ -1,0 +1,290 @@
+//! Request streams: seeded Poisson arrivals or a replayable JSON trace.
+//!
+//! A stream is the serving simulator's input — a time-sorted list of
+//! `(model, arrival time)` pairs with integer-nanosecond timestamps.
+//! Synthetic streams draw per-model Poisson processes from the
+//! deterministic in-crate PRNG ([`util::rng`](crate::util::rng)), so the
+//! same `--seed` always produces the identical stream; recorded traffic
+//! replays through the JSON substrate of [`util::json`](crate::util::json):
+//!
+//! ```text
+//! { "arrivals": [ { "model": "alexnet", "t_ns": 0 },
+//!                 { "model": "googlenet", "t_ns": 1500000 } ] }
+//! ```
+//!
+//! `model` names resolve against the serving set (`--models`); an unknown
+//! name aborts the load naming the offender. Out-of-order entries are
+//! legal — the stream re-sorts stably by timestamp, preserving file order
+//! among equal-time arrivals.
+
+use anyhow::{anyhow, Result};
+
+use crate::model::workload_set::WorkloadSet;
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::rng::Rng;
+
+/// Sanity cap on generated arrivals: a fat-fingered rate × horizon
+/// should error naming the flag (the CLI checks [`expected_arrivals`]
+/// against this before generating), not OOM the process.
+pub const MAX_ARRIVALS: usize = 4_000_000;
+
+/// Largest `t_ns` a trace may carry: JSON numbers are `f64`, so integers
+/// above 2^53 (~104 days of nanoseconds) quantize silently — the loader
+/// rejects them instead of breaking the bit-exact replay contract.
+pub const MAX_EXACT_T_NS: f64 = (1u64 << 53) as f64;
+
+/// Expected arrival count of [`RequestStream::poisson`] for this set:
+/// `Σ_i rate_i × horizon` with each model's rate resolved exactly as the
+/// generator resolves it.
+pub fn expected_arrivals(set: &WorkloadSet, mix_rate: f64, horizon_ns: u64) -> f64 {
+    let secs = horizon_ns as f64 / 1e9;
+    set.models
+        .iter()
+        .map(|m| m.rate.unwrap_or(mix_rate * m.weight).max(0.0))
+        .sum::<f64>()
+        * secs
+}
+
+/// One request: the serving-set model index and its arrival time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Request {
+    pub model: usize,
+    pub t_ns: u64,
+}
+
+/// A time-sorted request stream.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RequestStream {
+    pub arrivals: Vec<Request>,
+}
+
+impl RequestStream {
+    /// Seeded Poisson arrivals for every model of `set` over
+    /// `[0, horizon_ns]`: model `i` arrives at rate `rate_i` requests/s —
+    /// its [`ModelSpec::rate`](crate::model::workload_set::ModelSpec)
+    /// override when set, otherwise `mix_rate × weight_i`. Each model
+    /// draws from its own seed-derived PRNG, so adding a model never
+    /// perturbs the others' arrival times.
+    pub fn poisson(set: &WorkloadSet, mix_rate: f64, horizon_ns: u64, seed: u64) -> RequestStream {
+        let mut arrivals = Vec::new();
+        for (i, spec) in set.models.iter().enumerate() {
+            let rate = spec.rate.unwrap_or(mix_rate * spec.weight);
+            if !(rate.is_finite() && rate > 0.0) {
+                continue;
+            }
+            let mut rng =
+                Rng::new(seed.wrapping_add((i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)));
+            let mut t = 0u64;
+            loop {
+                // exponential inter-arrival; 1 − u ∈ (0, 1] keeps ln finite
+                let gap_secs = -(1.0 - rng.f64()).ln() / rate;
+                let gap_ns = (gap_secs * 1e9).min(u64::MAX as f64 / 2.0) as u64;
+                t = t.saturating_add(gap_ns.max(1));
+                if t > horizon_ns {
+                    break;
+                }
+                arrivals.push(Request { model: i, t_ns: t });
+            }
+        }
+        // stable merge: equal-time arrivals keep model order, per-model
+        // streams are already time-sorted
+        arrivals.sort_by_key(|r| (r.t_ns, r.model));
+        RequestStream { arrivals }
+    }
+
+    /// Parse the JSON trace format. Model names resolve to the *first*
+    /// matching entry of `set` (sets may repeat a network; the trace
+    /// cannot distinguish the copies).
+    pub fn from_json(text: &str, set: &WorkloadSet) -> Result<RequestStream> {
+        let j = Json::parse(text)?;
+        let list = j.get("arrivals")?.as_arr()?;
+        let mut arrivals = Vec::with_capacity(list.len());
+        for (i, entry) in list.iter().enumerate() {
+            let name = entry
+                .get("model")
+                .and_then(|m| m.as_str())
+                .map_err(|e| anyhow!("trace arrival {i}: {e}"))?;
+            let model = set
+                .models
+                .iter()
+                .position(|m| m.net.name == name)
+                .ok_or_else(|| {
+                    anyhow!(
+                        "trace arrival {i}: unknown model {name:?}; serving set: {}",
+                        set.label()
+                    )
+                })?;
+            let t = entry
+                .get("t_ns")
+                .and_then(|t| t.as_f64())
+                .map_err(|e| anyhow!("trace arrival {i}: {e}"))?;
+            if !(t.is_finite() && t >= 0.0 && t.fract() == 0.0) {
+                return Err(anyhow!(
+                    "trace arrival {i}: t_ns must be a non-negative integer, got {t}"
+                ));
+            }
+            // JSON numbers are f64: above 2^53 ns (~104 days) integers
+            // quantize silently, which would break the bit-exact replay
+            // contract — reject instead and ask for stream-relative
+            // times. `>=` because 2^53 is exactly where neighbours start
+            // collapsing onto it (2^53 + 1 parses as 2^53).
+            if t >= MAX_EXACT_T_NS {
+                return Err(anyhow!(
+                    "trace arrival {i}: t_ns {t} exceeds 2^53 (the largest exactly \
+                     representable JSON integer); make timestamps relative to the \
+                     stream start"
+                ));
+            }
+            arrivals.push(Request { model, t_ns: t as u64 });
+        }
+        let mut stream = RequestStream { arrivals };
+        // stable: file order survives among equal timestamps
+        stream.arrivals.sort_by_key(|r| r.t_ns);
+        Ok(stream)
+    }
+
+    /// Load a trace file (see the module docs for the format).
+    pub fn load(path: &std::path::Path, set: &WorkloadSet) -> Result<RequestStream> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading trace {}: {e}", path.display()))?;
+        RequestStream::from_json(&text, set)
+    }
+
+    /// Serialize back to the trace format (round-trips exactly through
+    /// [`RequestStream::from_json`]). Timestamps at or beyond 2^53 ns
+    /// error — JSON numbers would quantize them, and the loader rejects
+    /// them anyway ([`MAX_EXACT_T_NS`]).
+    pub fn to_json(&self, set: &WorkloadSet) -> Result<Json> {
+        let mut list = Vec::with_capacity(self.arrivals.len());
+        for (i, r) in self.arrivals.iter().enumerate() {
+            if (r.t_ns as f64) >= MAX_EXACT_T_NS {
+                return Err(anyhow!(
+                    "arrival {i}: t_ns {} is not exactly representable in JSON \
+                     (>= 2^53); re-base timestamps to the stream start",
+                    r.t_ns
+                ));
+            }
+            list.push(obj(vec![
+                ("model", s(&set.models[r.model].net.name)),
+                ("t_ns", num(r.t_ns as f64)),
+            ]));
+        }
+        Ok(obj(vec![("arrivals", arr(list))]))
+    }
+
+    pub fn len(&self) -> usize {
+        self.arrivals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrivals.is_empty()
+    }
+
+    /// Per-model arrival counts (length = serving-set size; out-of-range
+    /// model indices are skipped — `serve` rejects such streams up
+    /// front).
+    pub fn counts(&self, models: usize) -> Vec<u64> {
+        let mut c = vec![0u64; models];
+        for r in &self.arrivals {
+            if let Some(slot) = c.get_mut(r.model) {
+                *slot += 1;
+            }
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_model_set() -> WorkloadSet {
+        WorkloadSet::parse("alexnet, scopenet:2").unwrap()
+    }
+
+    #[test]
+    fn poisson_is_deterministic_per_seed_and_sorted() {
+        let set = two_model_set();
+        let a = RequestStream::poisson(&set, 1000.0, 50_000_000, 7);
+        let b = RequestStream::poisson(&set, 1000.0, 50_000_000, 7);
+        assert_eq!(a, b, "same seed ⇒ identical stream");
+        assert!(!a.is_empty());
+        assert!(a.arrivals.windows(2).all(|w| w[0].t_ns <= w[1].t_ns), "time-sorted");
+        assert!(a.arrivals.iter().all(|r| r.t_ns <= 50_000_000));
+        let c = RequestStream::poisson(&set, 1000.0, 50_000_000, 8);
+        assert_ne!(a, c, "different seed ⇒ different stream");
+    }
+
+    #[test]
+    fn poisson_rates_scale_with_weights() {
+        let set = two_model_set(); // alexnet:1, scopenet:2
+        let s = RequestStream::poisson(&set, 2000.0, 100_000_000, 3);
+        let counts = s.counts(2);
+        // ~200 vs ~400 expected; generous bounds keep this robust
+        assert!(counts[0] > 100 && counts[0] < 320, "alexnet ≈ 200, got {}", counts[0]);
+        assert!(counts[1] > 250 && counts[1] < 600, "scopenet ≈ 400, got {}", counts[1]);
+        assert!(counts[1] > counts[0], "weight 2 must out-arrive weight 1");
+    }
+
+    #[test]
+    fn per_model_rate_override_wins() {
+        let mut set = two_model_set();
+        set.models[0].rate = Some(0.0); // silence alexnet entirely
+        let s = RequestStream::poisson(&set, 1000.0, 50_000_000, 7);
+        assert!(!s.is_empty());
+        assert_eq!(s.counts(2)[0], 0);
+    }
+
+    #[test]
+    fn expected_arrivals_matches_rate_resolution() {
+        let mut set = two_model_set(); // weights 1 and 2
+        // mix rate 100/s over 0.5 s: (100 + 200) × 0.5
+        assert_eq!(expected_arrivals(&set, 100.0, 500_000_000), 150.0);
+        set.models[1].rate = Some(10.0); // absolute override wins
+        assert_eq!(expected_arrivals(&set, 100.0, 500_000_000), 55.0);
+        // the estimate tracks the generator closely
+        let s = RequestStream::poisson(&set, 100.0, 500_000_000, 9);
+        let expected = expected_arrivals(&set, 100.0, 500_000_000);
+        assert!((s.len() as f64 - expected).abs() < expected * 0.5 + 10.0);
+    }
+
+    #[test]
+    fn trace_roundtrip_and_errors() {
+        let set = two_model_set();
+        let text = r#"{"arrivals": [
+            {"model": "scopenet", "t_ns": 2000},
+            {"model": "alexnet", "t_ns": 1000},
+            {"model": "alexnet", "t_ns": 2000}
+        ]}"#;
+        let s = RequestStream::from_json(text, &set).unwrap();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.arrivals[0], Request { model: 0, t_ns: 1000 });
+        // stable sort: the scopenet entry precedes the equal-time alexnet
+        // one because it came first in the file
+        assert_eq!(s.arrivals[1], Request { model: 1, t_ns: 2000 });
+        assert_eq!(s.arrivals[2], Request { model: 0, t_ns: 2000 });
+        let re = RequestStream::from_json(&s.to_json(&set).unwrap().to_string_compact(), &set)
+            .unwrap();
+        assert_eq!(re, s, "trace round-trips");
+        // a stream beyond JSON exactness refuses to serialize lossily
+        let far = RequestStream {
+            arrivals: vec![Request { model: 0, t_ns: 1u64 << 53 }],
+        };
+        assert!(far.to_json(&set).is_err());
+        // unknown model names the offender and the set
+        let err = RequestStream::from_json(
+            r#"{"arrivals": [{"model": "nosuchnet", "t_ns": 0}]}"#,
+            &set,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("nosuchnet") && err.contains("alexnet"), "{err}");
+        // bad timestamps rejected, including ones beyond f64 exactness —
+        // 2^53 + 1 parses as exactly 2^53 and must still be rejected
+        for bad in ["-1", "1.5", "9007199254740993", "9007199254740994"] {
+            let text = format!(r#"{{"arrivals": [{{"model": "alexnet", "t_ns": {bad}}}]}}"#);
+            assert!(RequestStream::from_json(&text, &set).is_err(), "{bad}");
+        }
+        assert!(RequestStream::from_json("{}", &set).is_err(), "missing arrivals key");
+    }
+}
