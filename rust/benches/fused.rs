@@ -1,0 +1,169 @@
+//! Fused vs merged-pipeline execution: wall-clock of the dual-mode DSE
+//! and — the point of the exercise — the schedule quality gap between
+//! `exec_mode = pipeline` (the paper's merged pipeline everywhere) and
+//! `exec_mode = auto` (the DP picks the cheaper execution per segment).
+//!
+//! Two regimes are measured:
+//!
+//! * the paper-default platform across the zoo, where auto must never be
+//!   worse than pipeline (the DP takes a per-span min), and
+//! * memory-bound variants of vgg16/resnet50 with shrunken weight and
+//!   activation buffers, where the fused evaluator's package-wide SRAM
+//!   aggregation should win outright on at least one configuration.
+//!
+//! `SCOPE_BENCH_FAST=1` shrinks the net list for smoke runs. `--json`
+//! additionally writes the headline numbers to `BENCH_fused.json` at the
+//! repo root (the CI artifact).
+
+use scope::arch::McmConfig;
+use scope::bench::{bench, report};
+use scope::config::SimOptions;
+use scope::model::zoo;
+use scope::pipeline::{ExecMode, ExecModeChoice};
+use scope::scope::{schedule_scope, MethodResult};
+use scope::util::json::{arr, num, obj, s, Json};
+
+fn run(net: &scope::model::Network, mcm: &McmConfig, mode: ExecModeChoice) -> MethodResult {
+    let sim = SimOptions { samples: 16, exec_mode: mode, ..SimOptions::default() };
+    schedule_scope(net, mcm, &sim)
+}
+
+fn fused_segments(r: &MethodResult) -> usize {
+    match &r.schedule {
+        Some(s) => s.segments.iter().filter(|g| g.exec_mode == ExecMode::Fused).count(),
+        None => 0,
+    }
+}
+
+/// Shrink the on-chip memories by `factor` to force the memory-bound
+/// regime: pipeline clusters start streaming weights / spilling
+/// activations, while a fused segment still aggregates the whole
+/// package's buffers for one layer at a time.
+fn small_sram(chiplets: usize, factor: u64) -> McmConfig {
+    let mut mcm = McmConfig::paper_default(chiplets);
+    mcm.chiplet.weight_buf_per_pe /= factor;
+    mcm.chiplet.global_buf /= factor;
+    mcm
+}
+
+fn main() {
+    let fast = std::env::var("SCOPE_BENCH_FAST").is_ok();
+    let json = std::env::args().any(|a| a == "--json");
+    let mut rows: Vec<Json> = Vec::new();
+
+    // Regime 1: paper-default platform, whole zoo — auto never loses.
+    let nets: Vec<&str> = if fast {
+        vec!["alexnet", "vgg16"]
+    } else {
+        zoo::NAMES.to_vec()
+    };
+    let mut ms = Vec::new();
+    for name in &nets {
+        let net = zoo::by_name(name).unwrap();
+        let mcm = McmConfig::paper_default(16);
+        let mut pipe_last = None;
+        let m_pipe = bench(&format!("dse/{name}@16/pipeline"), 0, 1, || {
+            pipe_last = Some(run(&net, &mcm, ExecModeChoice::Pipeline));
+        });
+        let mut auto_last = None;
+        let m_auto = bench(&format!("dse/{name}@16/auto"), 0, 1, || {
+            auto_last = Some(run(&net, &mcm, ExecModeChoice::Auto));
+        });
+        let pipe = pipe_last.expect("bench ran");
+        let auto = auto_last.expect("bench ran");
+        assert!(pipe.eval.is_valid(), "{name}: {:?}", pipe.eval.error);
+        assert!(auto.eval.is_valid(), "{name}: {:?}", auto.eval.error);
+        assert!(
+            auto.eval.total_cycles <= pipe.eval.total_cycles * (1.0 + 1e-9),
+            "{name}@16: auto ({}) worse than pipeline ({})",
+            auto.eval.total_cycles,
+            pipe.eval.total_cycles
+        );
+        println!(
+            "[fused] {name}@16: pipeline {:.0} cy | auto {:.0} cy ({:.4}x) | {} fused segment(s)",
+            pipe.eval.total_cycles,
+            auto.eval.total_cycles,
+            pipe.eval.total_cycles / auto.eval.total_cycles.max(1e-12),
+            fused_segments(&auto),
+        );
+        rows.push(obj(vec![
+            ("net", s(name)),
+            ("chiplets", num(16.0)),
+            ("sram", s("paper")),
+            ("pipeline_cycles", num(pipe.eval.total_cycles)),
+            ("auto_cycles", num(auto.eval.total_cycles)),
+            ("fused_segments", num(fused_segments(&auto) as f64)),
+        ]));
+        ms.push(m_pipe);
+        ms.push(m_auto);
+    }
+    println!("{}", report("fused — dual-mode DSE wall clock", &ms));
+
+    // Regime 2: memory-bound vgg16/resnet50 — fused must win somewhere.
+    let bound: Vec<(&str, usize, u64)> = if fast {
+        vec![("vgg16", 16, 16)]
+    } else {
+        vec![("vgg16", 16, 4), ("vgg16", 16, 16), ("resnet50", 16, 4), ("resnet50", 16, 16)]
+    };
+    let mut strictly_better = 0usize;
+    for (name, chiplets, factor) in &bound {
+        let net = zoo::by_name(name).unwrap();
+        let mcm = small_sram(*chiplets, *factor);
+        let pipe = run(&net, &mcm, ExecModeChoice::Pipeline);
+        let auto = run(&net, &mcm, ExecModeChoice::Auto);
+        let (p, a) = (pipe.eval.total_cycles, auto.eval.total_cycles);
+        let both_valid = pipe.eval.is_valid() && auto.eval.is_valid();
+        if both_valid {
+            assert!(
+                a <= p * (1.0 + 1e-9),
+                "{name}@{chiplets}/÷{factor}: auto ({a}) worse than pipeline ({p})"
+            );
+        }
+        let wins = both_valid && a < p * (1.0 - 1e-9);
+        let mut tag = "";
+        if wins {
+            strictly_better += 1;
+            tag = " — fused strictly better";
+        }
+        let cell = |valid: bool, cycles: f64| -> String {
+            if valid {
+                format!("{cycles:.0} cy")
+            } else {
+                "invalid".into()
+            }
+        };
+        println!(
+            "[fused] {name}@{chiplets} sram÷{factor}: pipeline {} | auto {} | {} fused segment(s){tag}",
+            cell(pipe.eval.is_valid(), p),
+            cell(auto.eval.is_valid(), a),
+            fused_segments(&auto),
+        );
+        rows.push(obj(vec![
+            ("net", s(name)),
+            ("chiplets", num(*chiplets as f64)),
+            ("sram", s(&format!("/{factor}"))),
+            ("pipeline_cycles", num(p)),
+            ("auto_cycles", num(a)),
+            ("fused_segments", num(fused_segments(&auto) as f64)),
+        ]));
+    }
+    println!(
+        "[fused] memory-bound configs where auto is strictly better: {strictly_better}/{}",
+        bound.len()
+    );
+    assert!(
+        strictly_better > 0,
+        "fused execution should win at least one memory-bound configuration"
+    );
+
+    if json {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fused.json");
+        let doc = obj(vec![
+            ("bench", s("fused")),
+            ("strictly_better", num(strictly_better as f64)),
+            ("rows", arr(rows)),
+        ]);
+        std::fs::write(path, doc.to_string_compact()).expect("write BENCH_fused.json");
+        println!("[fused] wrote {path}");
+    }
+}

@@ -17,12 +17,13 @@ use scope::config::SimOptions;
 use scope::dse::resolve_threads;
 use scope::model::zoo;
 use scope::pipeline::eval_cache::ClusterKey;
-use scope::pipeline::schedule::{Partition, SegmentSchedule};
+use scope::pipeline::schedule::{ExecMode, Partition, SegmentSchedule};
 use scope::pipeline::timeline::EvalContext;
 use scope::report::figures;
 use scope::scope::{schedule_scope, search_segment, SearchOptions};
 use scope::storage::StoragePolicy;
 use scope::util::fxhash::FxHashMap;
+use scope::util::json::{arr, num, obj, s, Json};
 
 /// The cluster-cache key is hashed on every memoized `Forward()`; this
 /// micro-bench times lookups on an identical key population under the
@@ -39,6 +40,7 @@ fn bench_cluster_key_hashers(net: &scope::model::Network) {
                 bounds: vec![0, b, hi],
                 regions: vec![8, 8],
                 partitions: vec![Partition::Wsp; hi],
+                exec_mode: ExecMode::Pipeline,
             };
             for j in 0..2 {
                 keys.push(ClusterKey::of(&seg, j));
@@ -79,6 +81,7 @@ fn bench_cluster_key_hashers(net: &scope::model::Network) {
 
 fn main() {
     let fast = std::env::var("SCOPE_BENCH_FAST").is_ok();
+    let json = std::env::args().any(|a| a == "--json");
     let par_threads: usize = std::env::var("SCOPE_THREADS")
         .ok()
         .and_then(|s| s.parse().ok())
@@ -221,4 +224,25 @@ fn main() {
     println!();
     println!("{}", figures::space_table("resnet152", 256).expect("space"));
     println!("\n[search_time] paper reference: ≈1 h for resnet152@256 on an i7-13700H");
+
+    // `--json`: headline numbers for the CI artifact at the repo root.
+    if json {
+        let rows: Vec<Json> = speedups
+            .iter()
+            .map(|(setting, speedup)| {
+                obj(vec![("setting", s(setting)), ("speedup", num(*speedup))])
+            })
+            .collect();
+        let doc = obj(vec![
+            ("bench", s("search_time")),
+            ("threads", num(resolved as f64)),
+            ("speedups", arr(rows)),
+            ("cluster_cache_hit_rate", num(found.cache_hits as f64 / total as f64)),
+            ("store_cold_secs", num(cold_secs)),
+            ("store_warm_secs", num(warm_secs)),
+        ]);
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_search_time.json");
+        std::fs::write(path, doc.to_string_compact()).expect("write BENCH_search_time.json");
+        println!("[search_time] wrote {path}");
+    }
 }

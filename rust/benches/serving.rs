@@ -13,9 +13,11 @@ use scope::model::WorkloadSet;
 use scope::scope::multi_model::{HybridAllocation, ShareGroup};
 use scope::serve::trace::RequestStream;
 use scope::serve::{prepare, simulate_allocation, ServeOptions};
+use scope::util::json::{num, obj, s};
 
 fn main() {
     let fast = std::env::var("SCOPE_BENCH_FAST").is_ok();
+    let json = std::env::args().any(|a| a == "--json");
     let mut set = WorkloadSet::parse("alexnet,scopenet:2").expect("zoo models");
     set.apply_slo_spec("10000").expect("slo spec");
     let mcm = McmConfig::paper_default(16);
@@ -59,4 +61,18 @@ fn main() {
         baseline.events,
         events_per_sec
     );
+
+    // `--json`: headline numbers for the CI artifact at the repo root.
+    if json {
+        let doc = obj(vec![
+            ("bench", s("serving")),
+            ("arrivals", num(stream.len() as f64)),
+            ("events_per_run", num(baseline.events as f64)),
+            ("events_per_sec", num(events_per_sec)),
+            ("loop_mean_secs", num(m.mean())),
+        ]);
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serving.json");
+        std::fs::write(path, doc.to_string_compact()).expect("write BENCH_serving.json");
+        println!("[serving] wrote {path}");
+    }
 }

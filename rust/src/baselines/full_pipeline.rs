@@ -8,7 +8,7 @@
 use crate::arch::McmConfig;
 use crate::config::SimOptions;
 use crate::model::Network;
-use crate::pipeline::schedule::{Schedule, SegmentSchedule};
+use crate::pipeline::schedule::{ExecMode, Schedule, SegmentSchedule};
 use crate::pipeline::timeline::{eval_schedule, EvalContext};
 use crate::scope::partition::transition_partitions;
 use crate::scope::region_alloc::{improve_regions, proportional_allocate};
@@ -42,6 +42,7 @@ pub fn per_layer_segment(
             bounds: (lo..=hi).collect(),
             regions,
             partitions,
+            exec_mode: ExecMode::Pipeline,
         };
         if let Some(found) = improve_regions(ctx, seed, m, 64) {
             let better = best

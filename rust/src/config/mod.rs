@@ -24,6 +24,7 @@ use std::path::Path;
 use anyhow::{anyhow, Context, Result};
 
 use crate::arch::McmConfig;
+use crate::pipeline::schedule::ExecModeChoice;
 use crate::scope::SegmenterKind;
 
 /// Evaluation options shared by every scheduler/bench.
@@ -73,6 +74,14 @@ pub struct SimOptions {
     /// re-schedules zero spans). Empty = no persistence; setting it
     /// implies `cache_store`.
     pub cache_file: String,
+    /// Segment execution mode (config key `exec_mode`, CLI `--exec-mode`):
+    /// `pipeline` (paper Equ. 1–3), `fused` (depth-first tile fusion,
+    /// [`crate::pipeline::fused`]), or `auto` — the segmenter evaluates
+    /// every span under both and keeps the cheaper mode per segment.
+    pub exec_mode: ExecModeChoice,
+    /// Conv-output rows per tile for the fused evaluator's tile-graph
+    /// lowering (config key `tile_rows`, CLI `--tile-rows`; ≥ 1).
+    pub tile_rows: u64,
 }
 
 impl Default for SimOptions {
@@ -87,6 +96,8 @@ impl Default for SimOptions {
             dp_window_auto: false,
             cache_store: false,
             cache_file: String::new(),
+            exec_mode: ExecModeChoice::Pipeline,
+            tile_rows: 4,
         }
     }
 }
@@ -156,6 +167,19 @@ impl Config {
                 "segmenter" => {
                     cfg.sim.segmenter =
                         SegmenterKind::parse(value).map_err(|e| anyhow!("{e}"))?
+                }
+                "exec_mode" => {
+                    cfg.sim.exec_mode =
+                        ExecModeChoice::parse(value).map_err(|e| anyhow!("{e}"))?
+                }
+                "tile_rows" => {
+                    let v = parse_num(value)?;
+                    if v < 1.0 || v.fract() != 0.0 {
+                        return Err(anyhow!(
+                            "tile_rows expects a positive integer (>= 1), got {value:?}"
+                        ));
+                    }
+                    cfg.sim.tile_rows = v as u64;
                 }
                 "cache_store" => {
                     cfg.sim.cache_store = parse_bool(value)?;
@@ -367,6 +391,22 @@ pub const KNOBS: &[KnobDoc] = &[
         sim_field: "cache_store",
         default_value: "false",
         doc: "process-wide span/cluster store: batched sweeps pay each span once (multi: on)",
+    },
+    KnobDoc {
+        config_key: "exec_mode",
+        cli_flag: "--exec-mode <M>",
+        bench_env: "",
+        sim_field: "exec_mode",
+        default_value: "pipeline",
+        doc: "segment execution: pipeline (Equ. 1-3), fused (tile fusion), auto (DP picks per segment)",
+    },
+    KnobDoc {
+        config_key: "tile_rows",
+        cli_flag: "--tile-rows <R>",
+        bench_env: "",
+        sim_field: "tile_rows",
+        default_value: "4",
+        doc: "conv-output rows per tile in the fused lowering (>= 1; 0 rejected by name)",
     },
     KnobDoc {
         config_key: "cache_file",
@@ -668,6 +708,31 @@ mod tests {
         assert!(err.contains("balanced") && err.contains("dp"), "{err}");
         assert!(Config::from_kv(&parse_kv("dp_window = -1\n").unwrap(), 16).is_err());
         assert!(Config::from_kv(&parse_kv("dp_window = 1.5\n").unwrap(), 16).is_err());
+    }
+
+    #[test]
+    fn exec_mode_and_tile_rows_keys_parse_and_validate() {
+        let cfg = Config::from_kv(
+            &parse_kv("exec_mode = auto\ntile_rows = 8\n").unwrap(),
+            16,
+        )
+        .unwrap();
+        assert_eq!(cfg.sim.exec_mode, ExecModeChoice::Auto);
+        assert_eq!(cfg.sim.tile_rows, 8);
+        let defaults = Config::from_kv(&BTreeMap::new(), 16).unwrap();
+        assert_eq!(defaults.sim.exec_mode, ExecModeChoice::Pipeline);
+        assert_eq!(defaults.sim.tile_rows, 4);
+        // off-range modes list the options; tile_rows 0 is named
+        let err = Config::from_kv(&parse_kv("exec_mode = spatial\n").unwrap(), 16)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("pipeline") && err.contains("fused") && err.contains("auto"), "{err}");
+        let err = Config::from_kv(&parse_kv("tile_rows = 0\n").unwrap(), 16)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("tile_rows"), "{err}");
+        assert!(Config::from_kv(&parse_kv("tile_rows = 1.5\n").unwrap(), 16).is_err());
+        assert!(Config::from_kv(&parse_kv("tile_rows = -2\n").unwrap(), 16).is_err());
     }
 
     #[test]

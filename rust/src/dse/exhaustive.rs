@@ -21,7 +21,7 @@
 
 use crate::dse::parallel::{par_map, resolve_threads};
 use crate::pipeline::eval_cache::{eval_segment_cached, EvalCache};
-use crate::pipeline::schedule::{Partition, SegmentSchedule};
+use crate::pipeline::schedule::{ExecMode, Partition, SegmentSchedule};
 use crate::pipeline::timeline::EvalContext;
 use crate::scope::partition::{mask_partitions, transition_partitions};
 use crate::util::stats::Histogram;
@@ -178,6 +178,7 @@ pub fn exhaustive_segment(
                         bounds: bounds.clone(),
                         regions: regions.to_vec(),
                         partitions: parts.clone(),
+                        exec_mode: ExecMode::Pipeline,
                     };
                     let ev = eval_segment_cached(ctx, &seg, m, Some(&cache));
                     if ev.error.is_some() {
@@ -243,6 +244,7 @@ pub fn exhaustive_segment(
                         bounds: bounds.clone(),
                         regions: regions.to_vec(),
                         partitions: parts.clone(),
+                        exec_mode: ExecMode::Pipeline,
                     };
                     let ev = eval_segment_cached(ctx, &seg, m, Some(&cache));
                     if ev.error.is_some() {
@@ -317,6 +319,86 @@ where
             }
             if ok && best.as_ref().map(|b| total < b.1).unwrap_or(true) {
                 best = Some((bounds, total));
+            }
+            true
+        });
+    }
+    best
+}
+
+/// Exhaustively enumerate every segmentation of the chain `[0, l)` into
+/// `min..=max` contiguous segments of ≤ `max_layers` layers each, **and**
+/// every `[Pipeline, Fused]^k` execution-mode assignment over each
+/// segmentation's `k` segments — the ground truth the per-segment mode
+/// choice of the DP segmenter (`exec_mode=auto`) is validated against.
+/// Returns the best `(bounds, modes, total)`.
+///
+/// Determinism mirrors the DP exactly: totals accumulate left-to-right,
+/// improvements are strict (`<`), and mode masks ascend with Pipeline as
+/// bit 0 — so among cost-tied assignments the all-lowest mask wins, which
+/// is precisely "Fused only when strictly cheaper", the DP's per-span tie
+/// rule. `span_cost` returning `None` marks a `(span, mode)` pair
+/// unschedulable; assignments using it are skipped. Costs are memoized
+/// per `(lo, hi, mode)`, each costed once.
+pub fn exhaustive_mode_segmentations<F>(
+    l: usize,
+    min_segments: usize,
+    max_segments: usize,
+    max_layers: usize,
+    mut span_cost: F,
+) -> Option<(Vec<usize>, Vec<ExecMode>, f64)>
+where
+    F: FnMut(usize, usize, ExecMode) -> Option<f64>,
+{
+    use std::collections::HashMap;
+    let mut memo: HashMap<(usize, usize, bool), Option<f64>> = HashMap::new();
+    let mut best: Option<(Vec<usize>, Vec<ExecMode>, f64)> = None;
+    for s in min_segments.max(1)..=max_segments.min(l) {
+        for_each_composition(l, s, &mut |parts| {
+            if parts.iter().any(|&p| p > max_layers) {
+                return true;
+            }
+            let mut bounds = Vec::with_capacity(s + 1);
+            bounds.push(0usize);
+            for &p in parts {
+                bounds.push(bounds.last().unwrap() + p);
+            }
+            // ascending masks: bit i = segment i fused. The argmin set is
+            // a per-segment product, so the first (smallest) minimal mask
+            // picks Pipeline wherever the two modes tie.
+            for mask in 0u64..(1 << s) {
+                let mut total = 0.0f64;
+                let mut ok = true;
+                for (i, w) in bounds.windows(2).enumerate() {
+                    let fused = (mask >> i) & 1 == 1;
+                    let mode = if fused {
+                        ExecMode::Fused
+                    } else {
+                        ExecMode::Pipeline
+                    };
+                    let c = *memo
+                        .entry((w[0], w[1], fused))
+                        .or_insert_with(|| span_cost(w[0], w[1], mode));
+                    match c {
+                        Some(c) => total += c,
+                        None => {
+                            ok = false;
+                            break;
+                        }
+                    }
+                }
+                if ok && best.as_ref().map(|b| total < b.2).unwrap_or(true) {
+                    let modes = (0..s)
+                        .map(|i| {
+                            if (mask >> i) & 1 == 1 {
+                                ExecMode::Fused
+                            } else {
+                                ExecMode::Pipeline
+                            }
+                        })
+                        .collect();
+                    best = Some((bounds.clone(), modes, total));
+                }
             }
             true
         });
@@ -566,6 +648,78 @@ mod tests {
         assert!(r.0.windows(2).all(|w| w[1] - w[0] <= 2));
         // nothing schedulable → None
         assert!(exhaustive_segmentations(4, 1, 2, usize::MAX, |_, _| None).is_none());
+    }
+
+    #[test]
+    fn mode_segmentations_pick_cheaper_mode_per_segment() {
+        // fused costs less on short spans, pipeline on long ones
+        let cost = |lo: usize, hi: usize, mode: ExecMode| {
+            let d = (hi - lo) as f64;
+            Some(match mode {
+                ExecMode::Fused => d * d,
+                ExecMode::Pipeline => 4.0 * d,
+            })
+        };
+        let (bounds, modes, total) =
+            exhaustive_mode_segmentations(6, 2, 2, usize::MAX, cost).unwrap();
+        // even split (3,3): fused 9 vs pipeline 12 per span → fused both
+        assert_eq!(bounds, vec![0, 3, 6]);
+        assert_eq!(modes, vec![ExecMode::Fused, ExecMode::Fused]);
+        assert_eq!(total, 18.0);
+        // one free segmentation: (1,5) with fused 1 + pipeline 20 = 21 …
+        // the optimizer still prefers the even fused split
+        let (_, modes1, total1) =
+            exhaustive_mode_segmentations(6, 1, 6, usize::MAX, cost).unwrap();
+        assert!(total1 <= total);
+        assert!(!modes1.is_empty());
+    }
+
+    #[test]
+    fn mode_segmentations_break_ties_toward_pipeline() {
+        // span (0,2) ties across modes, span (2,4) is strictly cheaper
+        // fused: the winner must be [Pipeline, Fused] — never Fused on
+        // the tied span (the DP's "fused only when strictly cheaper").
+        let cost = |lo: usize, _hi: usize, mode: ExecMode| {
+            Some(match (lo, mode) {
+                (0, _) => 5.0,
+                (_, ExecMode::Pipeline) => 10.0,
+                (_, ExecMode::Fused) => 3.0,
+            })
+        };
+        let (bounds, modes, total) =
+            exhaustive_mode_segmentations(4, 2, 2, 2, cost).unwrap();
+        assert_eq!(bounds, vec![0, 2, 4]);
+        assert_eq!(modes, vec![ExecMode::Pipeline, ExecMode::Fused]);
+        assert_eq!(total, 8.0);
+        // all-tied: all-pipeline wins outright
+        let (_, modes2, _) =
+            exhaustive_mode_segmentations(4, 2, 2, 2, |_, _, _| Some(1.0)).unwrap();
+        assert_eq!(modes2, vec![ExecMode::Pipeline; 2]);
+    }
+
+    #[test]
+    fn mode_segmentations_skip_unschedulable_pairs() {
+        // pipeline unschedulable everywhere → fused-only assignments
+        let (bounds, modes, _) = exhaustive_mode_segmentations(5, 1, 5, 2, |_, _, mode| {
+            (mode == ExecMode::Fused).then_some(1.0)
+        })
+        .unwrap();
+        assert!(modes.iter().all(|&m| m == ExecMode::Fused));
+        assert!(bounds.windows(2).all(|w| w[1] - w[0] <= 2));
+        // nothing schedulable at all → None
+        assert!(exhaustive_mode_segmentations(4, 1, 2, usize::MAX, |_, _, _| None).is_none());
+        // agrees with the mode-less enumeration when fused never helps
+        let chain = |lo: usize, hi: usize| Some(((hi - lo) * (hi - lo)) as f64 + lo as f64);
+        let plain = exhaustive_segmentations(7, 1, 4, usize::MAX, chain).unwrap();
+        let moded = exhaustive_mode_segmentations(7, 1, 4, usize::MAX, |lo, hi, mode| {
+            match mode {
+                ExecMode::Pipeline => chain(lo, hi),
+                ExecMode::Fused => None,
+            }
+        })
+        .unwrap();
+        assert_eq!(plain.0, moded.0);
+        assert_eq!(plain.1.to_bits(), moded.2.to_bits());
     }
 
     #[test]

@@ -30,6 +30,7 @@
 //! | Table III platform | [`arch`] |
 //! | multi-model serving (SCAR-style extension) | [`scope::multi_model`], [`model::workload_set`] |
 //! | serving latency / SLOs / hybrid temporal shares (SCAR + arXiv:2312.09401) | [`serve`] |
+//! | depth-first layer fusion (Stream/SET-style extension) | [`model::tile`], [`pipeline::fused`] |
 //!
 //! ## Sixty-second tour
 //!
@@ -66,6 +67,14 @@
 //! invocations reuse each other's sweeps. The [`serve`] subsystem replays
 //! trace-driven request streams against co-scheduled packages — batching,
 //! tail latency, SLO pruning, and hybrid spatial/temporal shares.
+//!
+//! Each segment can also execute *fused* instead of pipelined: layers are
+//! lowered to a producer→consumer tile graph ([`model::tile`]) and walked
+//! depth-first on the whole region ([`pipeline::fused`]), charging DRAM
+//! only for live activations that overflow the region's SRAM share.
+//! `SimOptions::exec_mode` (`--exec-mode pipeline|fused|auto`) selects the
+//! execution; under `auto` the DP segmenter costs every span both ways and
+//! keeps the cheaper mode per segment.
 
 // Hot-path cost functions take the full (layer, partition, region, mesh)
 // geometry as parameters by design.

@@ -23,6 +23,7 @@ use scope::dse::{ExhaustiveOptions, PartitionSpace};
 use scope::model::zoo;
 use scope::model::WorkloadSet;
 use scope::pipeline::cache_store::CacheStore;
+use scope::pipeline::ExecModeChoice;
 use scope::report::figures;
 use scope::runtime::Manifest;
 use scope::scope::multi_model::parse_quantum;
@@ -38,7 +39,9 @@ scope — merged pipeline framework for MCM NN accelerators (paper repro)
 USAGE: scope <subcommand> [flags]
 
 SUBCOMMANDS
-  info        --net <name>
+  info        --net <name> [--chiplets C]   layer table; with a DAG also
+              the condensation, and a fused-vs-pipeline per-segment table
+              when --exec-mode auto is in effect
   search      --net <name> --chiplets <C> [--samples M]
   compare     --net <name> --chiplets <C> [--samples M]
   sweep       [--nets a,b,..] [--scales 16,64,256] [--samples M]
@@ -76,6 +79,12 @@ COMMON FLAGS
                     seed (default 4; 0 = no prune, small nets only;
                     'auto' = re-widen whenever the optimum lands on the
                     window edge).
+  --exec-mode <M>   per-segment execution: 'pipeline' (default, merged
+                    pipeline), 'fused' (depth-first tile fusion, single
+                    cluster per segment), or 'auto' (the DP picks the
+                    cheaper mode per segment — never worse than pipeline).
+  --tile-rows <R>   output rows per tile in the fused evaluator's tile
+                    graph (default 4; must be >= 1).
   --cache-store     process-wide keyed span/cluster cache: batched sweeps
                     pay each distinct span once (bit-identical results).
   --cache-file <f>  persist the cache store's span memos to <f> on exit and
@@ -124,6 +133,24 @@ fn load_config(args: &Args, chiplets: usize) -> Result<Config> {
                 .parse()
                 .map_err(|_| anyhow!("--dp-window expects an integer or 'auto', got {v:?}"))?;
             sim.dp_window_auto = false;
+        }
+    }
+    match args.str_or("exec-mode", "").as_str() {
+        "" => {}
+        v => {
+            sim.exec_mode = ExecModeChoice::parse(v).map_err(|e| anyhow!("--exec-mode: {e}"))?;
+        }
+    }
+    match args.str_or("tile-rows", "").as_str() {
+        "" => {}
+        v => {
+            let rows: u64 = v
+                .parse()
+                .map_err(|_| anyhow!("--tile-rows expects a positive integer (>= 1), got {v:?}"))?;
+            if rows == 0 {
+                bail!("--tile-rows expects a positive integer (>= 1), got {v:?}");
+            }
+            sim.tile_rows = rows;
         }
     }
     match args.str_or("cache-store", "").as_str() {
@@ -207,6 +234,12 @@ fn cmd_info(args: &Args) -> Result<()> {
         println!();
         println!("{}", figures::dag_condensation_table(&net)?);
     }
+    let chiplets = args.usize_or("chiplets", 16)?;
+    let (_, sim) = sim_options(args, chiplets)?;
+    if sim.exec_mode == ExecModeChoice::Auto {
+        println!();
+        println!("{}", figures::exec_mode_table(&name, chiplets, &sim)?);
+    }
     Ok(())
 }
 
@@ -220,7 +253,7 @@ fn cmd_search(args: &Args) -> Result<()> {
         (Some(sched), None) => {
             let mut t = Table::new(
                 &format!("Scope schedule — {name} on {chiplets} chiplets"),
-                &["segment", "cluster", "layers", "chiplets", "partitions"],
+                &["segment", "cluster", "layers", "chiplets", "partitions", "mode"],
             );
             for (si, seg) in sched.segments.iter().enumerate() {
                 for j in 0..seg.n_clusters() {
@@ -237,6 +270,7 @@ fn cmd_search(args: &Args) -> Result<()> {
                         format!("[{lo},{hi})"),
                         seg.regions[j].to_string(),
                         parts,
+                        seg.exec_mode.name().to_string(),
                     ]);
                 }
             }

@@ -13,10 +13,12 @@
 pub mod dag;
 pub mod graph;
 pub mod layer;
+pub mod tile;
 pub mod workload_set;
 pub mod zoo;
 
 pub use dag::{CutPoint, DagInfo, DagNetwork};
 pub use graph::Network;
 pub use layer::{Layer, LayerKind};
+pub use tile::{lower_segment, Tile, TileGraph};
 pub use workload_set::{ModelSpec, WorkloadSet};

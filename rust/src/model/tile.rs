@@ -1,0 +1,304 @@
+//! Tile-graph lowering: the layer-fused execution IR (Stream / SET-style).
+//!
+//! The merged-pipeline evaluator schedules whole layers; fused execution
+//! (paper context: layer-fusion frameworks like Stream and SET) lowers a
+//! segment's layers into *spatial row tiles* and walks producer→consumer
+//! tiles depth-first so intermediate activations stay in on-chip SRAM.
+//! This module is the lowering only — pure workload geometry, no cost
+//! model. [`crate::pipeline::fused`] walks the graph and charges DRAM for
+//! live-set overflow.
+//!
+//! **Tiling axis.** Tiles split the *pre-pool conv output rows* (the
+//! compute dimension — the same axis WSP shards): tile `t` of a layer owns
+//! conv rows `[t·tile_rows, min((t+1)·tile_rows, conv_hout))`. Fused pools
+//! are folded into ownership: a pool output row belongs to the tile owning
+//! the conv row its window starts at, so the post-pool output rows (what
+//! the consumer layer reads) partition exactly across tiles.
+//!
+//! **Exactness.** Per-layer tile totals are exact by construction — MACs
+//! split proportionally to owned conv rows (`rows · conv_wout · cout ·
+//! reduction` sums to `pixels · cout · reduction`), output bytes split by
+//! owned post-pool rows — and [`TileGraph::validate`] re-checks the sums
+//! against [`Layer::macs`]/[`Layer::output_bytes`] (the property sweep in
+//! `tests/properties.rs` runs it over seeded tile sizes).
+//!
+//! **Dependencies.** A tile's input rows follow the conv receptive field:
+//! owning conv rows `[r0, r1)` needs input rows `[r0·s − pad,
+//! (r1−1)·s − pad + kh)` (clamped to the input map). Those input rows are
+//! the producer layer's post-pool output rows; the tile depends on every
+//! producer tile whose owned output rows intersect that window. Shapes
+//! that do not tile row-wise (FC after flatten, merge inputs with
+//! mismatched heights) conservatively depend on *all* producer tiles.
+
+use crate::model::{Layer, Network};
+use crate::util::ceil_div;
+
+/// One spatial tile of one layer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tile {
+    /// Global layer index in the network chain.
+    pub layer: usize,
+    /// Owned pre-pool conv output rows `[lo, hi)`.
+    pub conv_rows: (u64, u64),
+    /// Owned post-pool output rows `[lo, hi)` (equal to `conv_rows` when
+    /// the layer has no fused pool; can be empty for tiles whose rows all
+    /// fall inside a neighbour's pool windows).
+    pub out_rows: (u64, u64),
+    /// Input rows `[lo, hi)` of the layer's input map this tile reads
+    /// (receptive field of `conv_rows`, clamped).
+    pub in_rows: (u64, u64),
+    /// MACs computed by this tile (Σ over a layer's tiles == layer MACs).
+    pub macs: u64,
+    /// Output bytes owned (Σ over a layer's tiles == layer output bytes).
+    pub out_bytes: u64,
+    /// Input bytes read (overlapping rows counted per tile — halos).
+    pub in_bytes: u64,
+}
+
+/// The tile graph of a lowered layer range.
+#[derive(Clone, Debug)]
+pub struct TileGraph {
+    /// Layer range `[lo, hi)` this graph lowers.
+    pub lo: usize,
+    pub hi: usize,
+    /// Conv-output rows per tile the lowering was asked for (≥ 1).
+    pub tile_rows: u64,
+    /// All tiles, grouped by layer in chain order, row-ascending.
+    pub tiles: Vec<Tile>,
+    /// Per layer (index `k - lo`): the `tiles` range `[start, end)`.
+    pub layer_tiles: Vec<(usize, usize)>,
+    /// Producer tile indices each tile depends on (edges derived from the
+    /// receptive field; empty for the first layer's tiles).
+    pub preds: Vec<Vec<usize>>,
+}
+
+/// Owned post-pool output rows of the conv-row range `[r0, r1)`.
+fn pool_rows_owned(layer: &Layer, r0: u64, r1: u64) -> (u64, u64) {
+    match layer.post_pool {
+        None => (r0, r1),
+        Some((_k, s)) => {
+            let s = s.max(1);
+            // pool output row j starts its window at conv row j·s; it is
+            // owned by the tile containing that row
+            let j0 = ceil_div(r0, s);
+            let j1 = ceil_div(r1, s); // first j with j·s ≥ r1
+            let hout = layer.hout();
+            (j0.min(hout), j1.min(hout))
+        }
+    }
+}
+
+/// Input rows the conv-row range `[r0, r1)` reads (clamped receptive field).
+fn input_rows_needed(layer: &Layer, r0: u64, r1: u64) -> (u64, u64) {
+    if r1 <= r0 {
+        return (0, 0);
+    }
+    // conv row r reads input rows [r·s − pad, r·s − pad + kh)
+    let lo = (r0 * layer.stride).saturating_sub(layer.pad);
+    let hi = ((r1 - 1) * layer.stride + layer.kh)
+        .saturating_sub(layer.pad)
+        .min(layer.hin);
+    (lo.min(hi), hi)
+}
+
+/// Lower layers `[lo, hi)` of `net` into a tile graph with `tile_rows`
+/// conv-output rows per tile (`tile_rows == 0` is clamped to 1).
+///
+/// Works for chains and linearized DAGs alike: each layer's tiles depend
+/// on its chain producer `k−1` (the tensor that feeds it row-wise); DAG
+/// skip inputs are whole-tensor traffic and are charged separately by the
+/// evaluators, not edges of this graph.
+pub fn lower_segment(net: &Network, lo: usize, hi: usize, tile_rows: u64) -> TileGraph {
+    debug_assert!(lo < hi && hi <= net.len());
+    let tile_rows = tile_rows.max(1);
+    let mut tiles: Vec<Tile> = Vec::new();
+    let mut layer_tiles: Vec<(usize, usize)> = Vec::with_capacity(hi - lo);
+    for k in lo..hi {
+        let layer = &net.layers[k];
+        let rows = layer.conv_hout();
+        let n_tiles = ceil_div(rows.max(1), tile_rows);
+        let start = tiles.len();
+        let row_macs = layer.conv_wout() * layer.cout * layer.reduction();
+        for t in 0..n_tiles {
+            let r0 = t * tile_rows;
+            let r1 = ((t + 1) * tile_rows).min(rows);
+            let (o0, o1) = pool_rows_owned(layer, r0, r1);
+            let (i0, i1) = input_rows_needed(layer, r0, r1);
+            tiles.push(Tile {
+                layer: k,
+                conv_rows: (r0, r1),
+                out_rows: (o0, o1),
+                in_rows: (i0, i1),
+                macs: if layer.is_merge() { 0 } else { (r1 - r0) * row_macs },
+                out_bytes: (o1 - o0) * layer.wout() * layer.cout,
+                in_bytes: (i1 - i0) * layer.win * layer.cin,
+            });
+        }
+        layer_tiles.push((start, tiles.len()));
+    }
+    // dependency edges: consumer input rows ↦ producer output rows
+    let mut preds: Vec<Vec<usize>> = vec![Vec::new(); tiles.len()];
+    for k in lo + 1..hi {
+        let layer = &net.layers[k];
+        let producer = &net.layers[k - 1];
+        // row-wise chaining is only meaningful when the producer's output
+        // map is the consumer's input map (heights line up)
+        let row_wise = producer.hout() == layer.hin && layer.hin > 1;
+        let (ps, pe) = layer_tiles[k - 1 - lo];
+        let (cs, ce) = layer_tiles[k - lo];
+        for ci in cs..ce {
+            let (need_lo, need_hi) = tiles[ci].in_rows;
+            for pi in ps..pe {
+                let (have_lo, have_hi) = tiles[pi].out_rows;
+                let depends = if row_wise {
+                    have_lo < need_hi && need_lo < have_hi
+                } else {
+                    true // conservative: full-tensor dependency
+                };
+                if depends {
+                    preds[ci].push(pi);
+                }
+            }
+        }
+    }
+    TileGraph { lo, hi, tile_rows, tiles, layer_tiles, preds }
+}
+
+impl TileGraph {
+    /// Tiles of layer `k` (global index) as a `tiles` range.
+    pub fn tiles_of(&self, k: usize) -> (usize, usize) {
+        self.layer_tiles[k - self.lo]
+    }
+
+    /// Total tiles in the graph.
+    pub fn len(&self) -> usize {
+        self.tiles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tiles.is_empty()
+    }
+
+    /// Check the lowering is exact: per layer, Σ tile MACs == layer MACs
+    /// and Σ tile output bytes == layer output bytes, and every tile's
+    /// dependencies point at the previous layer.
+    pub fn validate(&self, net: &Network) -> Result<(), String> {
+        for k in self.lo..self.hi {
+            let layer = &net.layers[k];
+            let (s, e) = self.tiles_of(k);
+            if s == e {
+                return Err(format!("layer {k} ({}) lowered to zero tiles", layer.name));
+            }
+            let macs: u64 = self.tiles[s..e].iter().map(|t| t.macs).sum();
+            if macs != layer.macs() {
+                return Err(format!(
+                    "layer {k} ({}): tile MACs {} ≠ layer MACs {}",
+                    layer.name,
+                    macs,
+                    layer.macs()
+                ));
+            }
+            let bytes: u64 = self.tiles[s..e].iter().map(|t| t.out_bytes).sum();
+            if bytes != layer.output_bytes() {
+                return Err(format!(
+                    "layer {k} ({}): tile bytes {} ≠ output bytes {}",
+                    layer.name,
+                    bytes,
+                    layer.output_bytes()
+                ));
+            }
+            for (ti, tile) in self.tiles[s..e].iter().enumerate() {
+                for &p in &self.preds[s + ti] {
+                    if self.tiles[p].layer + 1 != k {
+                        return Err(format!(
+                            "tile {ti} of layer {k}: dep on layer {}",
+                            self.tiles[p].layer
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::{alexnet, resnet18, scopenet};
+
+    #[test]
+    fn lowering_is_exact_on_zoo_chains() {
+        for net in [alexnet(), scopenet(), resnet18()] {
+            for tile_rows in [1u64, 2, 3, 4, 8, 64] {
+                let g = lower_segment(&net, 0, net.len(), tile_rows);
+                g.validate(&net).unwrap_or_else(|e| {
+                    panic!("{} @ tile_rows={tile_rows}: {e}", net.name)
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn tile_counts_follow_tile_rows() {
+        let net = alexnet();
+        let g1 = lower_segment(&net, 0, 1, 1);
+        let g4 = lower_segment(&net, 0, 1, 4);
+        let rows = net.layers[0].conv_hout();
+        assert_eq!(g1.len() as u64, rows);
+        assert_eq!(g4.len() as u64, ceil_div(rows, 4));
+        // zero tile_rows clamps to 1 instead of dividing by zero
+        let g0 = lower_segment(&net, 0, 1, 0);
+        assert_eq!(g0.len(), g1.len());
+    }
+
+    #[test]
+    fn receptive_field_edges_connect_overlapping_rows() {
+        // two 3×3 stride-1 convs on an 8-row map, 4-row tiles: the second
+        // conv's first tile (rows 0..4) reads input rows 0..5 → depends on
+        // both producer tiles (0..4 and 4..8).
+        let net = crate::model::Network::new(
+            "two-conv",
+            (8, 8, 3),
+            vec![
+                crate::model::Layer::conv("c1", 8, 8, 3, 16, 3, 1, 1),
+                crate::model::Layer::conv("c2", 8, 8, 16, 16, 3, 1, 1),
+            ],
+        );
+        let g = lower_segment(&net, 0, 2, 4);
+        let (cs, _) = g.tiles_of(1);
+        assert_eq!(g.preds[cs].len(), 2);
+        // the producer's tiles have no deps at all (first layer)
+        let (ps, pe) = g.tiles_of(0);
+        assert!((ps..pe).all(|i| g.preds[i].is_empty()));
+    }
+
+    #[test]
+    fn pooled_layers_partition_output_rows() {
+        // AlexNet conv1 has a fused 3/2 pool: post-pool rows must still
+        // partition exactly across tiles (no double counting at window
+        // overlaps).
+        let net = alexnet();
+        let pooled = net
+            .layers
+            .iter()
+            .position(|l| l.post_pool.is_some())
+            .expect("alexnet has pooled layers");
+        for tile_rows in [1u64, 3, 5, 16] {
+            let g = lower_segment(&net, pooled, pooled + 1, tile_rows);
+            g.validate(&net).unwrap();
+        }
+    }
+
+    #[test]
+    fn fc_layers_become_single_tiles() {
+        let net = alexnet();
+        let fc = net.len() - 1; // classifier
+        let g = lower_segment(&net, fc - 1, fc + 1, 4);
+        let (s, e) = g.tiles_of(fc);
+        assert_eq!(e - s, 1);
+        // the 1-row FC tile conservatively depends on every producer tile
+        let (ps, pe) = g.tiles_of(fc - 1);
+        assert_eq!(g.preds[s].len(), pe - ps);
+    }
+}

@@ -66,7 +66,7 @@ use crate::util::fxhash::{FxHashMap, FxHasher};
 use crate::util::json::{arr, num, obj, s, Json};
 
 use super::eval_cache::EvalCache;
-use super::schedule::{Partition, SegmentSchedule};
+use super::schedule::{ExecMode, Partition, SegmentSchedule};
 
 /// Fingerprint a string with the in-crate Fx hasher (process-local in
 /// spirit: deterministic for a given build of this crate, not stable
@@ -110,16 +110,21 @@ impl StoreKey {
             geom: fingerprint_debug(mcm),
             method: fingerprint_str(method),
             sim: fingerprint_str(&format!(
-                "m={} dw={} ov={}",
-                sim.samples, sim.distributed_weights, sim.overlap_comm
+                "m={} dw={} ov={} em={} tr={}",
+                sim.samples,
+                sim.distributed_weights,
+                sim.overlap_comm,
+                sim.exec_mode.name(),
+                sim.tile_rows
             )),
         }
     }
 }
 
 /// Cache-file format version ([`CacheStore::to_json`]); bumped whenever
-/// the span/schedule encoding changes.
-const CACHE_FILE_VERSION: usize = 1;
+/// the span/schedule encoding changes. v2 added the per-segment
+/// execution mode — v1 files predate fused execution and cold-start.
+const CACHE_FILE_VERSION: usize = 2;
 
 fn hex(v: u64) -> String {
     format!("{v:016x}")
@@ -145,6 +150,7 @@ fn sched_to_json(sched: &SegmentSchedule) -> Json {
         ("bounds", arr(sched.bounds.iter().map(|&b| num(b as f64)).collect())),
         ("regions", arr(sched.regions.iter().map(|&r| num(r as f64)).collect())),
         ("parts", s(&parts)),
+        ("mode", s(sched.exec_mode.name())),
     ])
 }
 
@@ -159,12 +165,14 @@ fn sched_from_json(j: &Json) -> Result<SegmentSchedule> {
             other => Err(anyhow!("bad partition char {other:?}")),
         })
         .collect::<Result<Vec<Partition>>>()?;
+    let exec_mode = ExecMode::parse(j.get("mode")?.as_str()?).map_err(|e| anyhow!(e))?;
     Ok(SegmentSchedule {
         lo: j.get("lo")?.as_usize()?,
         hi: j.get("hi")?.as_usize()?,
         bounds: j.get("bounds")?.usize_list()?,
         regions: j.get("regions")?.usize_list()?,
         partitions,
+        exec_mode,
     })
 }
 
@@ -493,6 +501,24 @@ mod tests {
         assert_ne!(base, other_geom);
         assert_ne!(base, other_method);
         assert_ne!(base, other_sim);
+        // fused execution and tile sizing change span values, so they key
+        let other_mode = StoreKey::new(
+            &alexnet(),
+            &McmConfig::paper_default(16),
+            "scope",
+            &SimOptions {
+                exec_mode: crate::pipeline::ExecModeChoice::Auto,
+                ..SimOptions::default()
+            },
+        );
+        let other_tiles = StoreKey::new(
+            &alexnet(),
+            &McmConfig::paper_default(16),
+            "scope",
+            &SimOptions { tile_rows: 7, ..SimOptions::default() },
+        );
+        assert_ne!(base, other_mode);
+        assert_ne!(base, other_tiles);
         // threads are excluded on purpose (bit-identical at every count)
         let threaded = StoreKey::new(
             &alexnet(),
@@ -556,6 +582,18 @@ mod tests {
             partitions: (0..hi - lo)
                 .map(|i| if i % 2 == 0 { Partition::Wsp } else { Partition::Isp })
                 .collect(),
+            exec_mode: ExecMode::Pipeline,
+        }
+    }
+
+    fn demo_fused(lo: usize, hi: usize) -> SegmentSchedule {
+        SegmentSchedule {
+            lo,
+            hi,
+            bounds: vec![lo, hi],
+            regions: vec![3],
+            partitions: vec![Partition::Wsp; hi - lo],
+            exec_mode: ExecMode::Fused,
         }
     }
 
@@ -568,7 +606,7 @@ mod tests {
         store.with_span_memo(key, |memo: &mut SpanMemo<SegmentSchedule>| {
             let mut eval = |lo: usize, hi: usize| match lo {
                 0 => Some((demo_sched(lo, hi), lat)),
-                2 => Some((demo_sched(lo, hi), 4096.0)),
+                2 => Some((demo_fused(lo, hi), 4096.0)), // fused modes round-trip
                 _ => None, // unschedulable spans persist too
             };
             memo.get_or_eval(0, 2, &mut eval);
@@ -591,10 +629,12 @@ mod tests {
             let a = memo.get_or_eval(0, 2, &mut eval).expect("restored span");
             assert_eq!(a.1.to_bits(), lat.to_bits(), "latency must round-trip exactly");
             assert_eq!(a.0, demo_sched(0, 2), "schedule must round-trip exactly");
+            let f = memo.get_or_eval(2, 5, &mut eval).expect("restored fused span");
+            assert_eq!(f.0, demo_fused(2, 5), "exec mode must round-trip exactly");
             assert!(memo.get_or_eval(5, 7, &mut eval).is_none(), "None spans carried");
             let stats = memo.stats();
             assert_eq!(stats.misses, 0, "warm-from-disk re-schedules zero spans");
-            assert_eq!(stats.cross_hits, 2, "restored entries count as cross-sweep");
+            assert_eq!(stats.cross_hits, 3, "restored entries count as cross-sweep");
         });
         assert_eq!(calls.load(Ordering::Relaxed), 0);
         // the document itself is stable: re-serializing the warm store
@@ -645,7 +685,7 @@ mod tests {
         // "unschedulable"
         std::fs::write(
             &path,
-            r#"{"version": 1, "memos": [{"net": "00", "geom": "00", "method": "00",
+            r#"{"version": 2, "memos": [{"net": "00", "geom": "00", "method": "00",
                 "sim": "00", "spans": [{"lo": 0, "hi": 2}]}]}"#,
         )
         .unwrap();

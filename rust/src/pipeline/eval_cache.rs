@@ -24,7 +24,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::RwLock;
 
-use super::schedule::{Partition, SegmentSchedule};
+use super::schedule::{ExecMode, Partition, SegmentSchedule};
 use super::timeline::{assemble_segment, eval_cluster, ClusterEval, EvalContext, SegmentEval};
 use crate::util::fxhash::FxHashMap;
 
@@ -47,6 +47,10 @@ pub struct ClusterKey {
     /// layer's `comm_phase` crosses. `None` for the final cluster (no NoP
     /// phase is charged there).
     next: Option<(usize, usize, Partition)>,
+    /// Execution mode of the owning segment: a fused evaluation of the
+    /// same layer range / region / partitions is a different result than
+    /// the pipeline one, so the discriminant keeps them apart.
+    mode: ExecMode,
 }
 
 impl ClusterKey {
@@ -67,6 +71,7 @@ impl ClusterKey {
             n: seg.regions[j],
             parts,
             next,
+            mode: seg.exec_mode,
         }
     }
 }
@@ -189,6 +194,7 @@ mod tests {
                 Partition::Isp,
                 Partition::Isp,
             ],
+            exec_mode: ExecMode::Pipeline,
         }
     }
 
@@ -275,6 +281,7 @@ mod tests {
             bounds: vec![0, 2, 5, 8],
             regions: vec![6, 5, 5],
             partitions: vec![Partition::Wsp; 8],
+            exec_mode: ExecMode::Pipeline,
         };
         let mut b = a.clone();
         b.bounds = vec![0, 2, 6, 8]; // later boundary moved; cluster 0 identical

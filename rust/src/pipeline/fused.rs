@@ -1,0 +1,289 @@
+//! Depth-first fused-schedule evaluator (ROADMAP item 2; Stream/SET-style
+//! layer fusion).
+//!
+//! A fused segment is a *single cluster* spanning the whole segment
+//! region: every layer computes on all `R` chiplets in turn, and
+//! producer→consumer tiles ([`crate::model::tile`]) are walked depth-first
+//! so intermediate activations stay in the region's global SRAM. Costs:
+//!
+//! * per-layer preparation — the same §III-B residency model as the
+//!   pipeline path ([`plan_cluster`]): resident / tiled-exchange /
+//!   streamed, so weight capacity is honoured identically in both modes;
+//! * per-layer computation — [`comp_cycles`] on the full region;
+//! * **no** communication phases and **no** Equ. 2 warm-up bubbles: with
+//!   one cluster, `assemble_segment`'s `(m + N − 1) · stage` collapses to
+//!   `m · per_sample` naturally;
+//! * DRAM is charged only for the *overflow* of the depth-first live
+//!   activation set beyond the region's SRAM share (`R × global_buf`):
+//!   every byte the walk cannot keep on-chip round-trips through
+//!   [`dram_transfer`] ([`overflow_bytes`] computes the volume).
+//!
+//! The evaluator returns the ordinary
+//! [`ClusterEval`](super::timeline::ClusterEval), so `eval_segment` /
+//! `eval_schedule`, the memoized `eval_cache` (keys carry the execution
+//! mode), and the exhaustive ground truths all work unchanged —
+//! [`eval_cluster`](super::timeline::eval_cluster) dispatches here on
+//! [`ExecMode::Fused`](super::schedule::ExecMode).
+
+use crate::arch::McmConfig;
+use crate::cost::{
+    comp_cycles, compute_energy, dram_transfer, ring_all_gather, NopCost, RegionGeom,
+};
+use crate::model::tile::{lower_segment, TileGraph};
+use crate::model::Network;
+use crate::storage::{plan_cluster, LayerResidency};
+
+use super::schedule::{ExecMode, Partition, SegmentSchedule};
+use super::timeline::{ClusterEval, EvalContext};
+
+/// DRAM overflow volume (bytes, one direction) of the depth-first tile
+/// walk under an on-chip activation budget of `share` bytes.
+///
+/// The walk produces tiles in depth-first order from the last layer's
+/// tiles (deterministic: roots ascending, predecessor lists in lowering
+/// order). A tile's output joins the live set when produced and leaves it
+/// once its last consumer has been produced; the sum of *positive
+/// increments* of `(live − share)` is the volume that must be written out
+/// to DRAM — the caller charges a round trip (store + reload) for it.
+/// Zero whenever the peak live set fits the share.
+pub fn overflow_bytes(g: &TileGraph, share: u64) -> u64 {
+    let n = g.len();
+    if n == 0 {
+        return 0;
+    }
+    // remaining-consumer counts (within-graph edges only)
+    let mut rem: Vec<u32> = vec![0; n];
+    for ps in &g.preds {
+        for &p in ps {
+            rem[p] += 1;
+        }
+    }
+    let mut produced = vec![false; n];
+    let mut live: u64 = 0;
+    let mut excess: u64 = 0;
+    let mut spilled: u64 = 0;
+    // iterative DFS: (tile, next predecessor index) frames
+    let mut stack: Vec<(usize, usize)> = Vec::new();
+    let (ls, le) = g.layer_tiles[g.hi - g.lo - 1];
+    for root in ls..le {
+        if produced[root] {
+            continue;
+        }
+        stack.push((root, 0));
+        while let Some((t, pi)) = stack.pop() {
+            if let Some(&p) = g.preds[t].get(pi) {
+                stack.push((t, pi + 1));
+                if !produced[p] {
+                    stack.push((p, 0));
+                }
+                continue;
+            }
+            if produced[t] {
+                continue;
+            }
+            produced[t] = true;
+            // peak: the tile's output joins while its inputs are still live
+            live += g.tiles[t].out_bytes;
+            let peak = live.saturating_sub(share);
+            if peak > excess {
+                spilled += peak - excess;
+            }
+            // free predecessors whose last consumer this was
+            for &p in &g.preds[t] {
+                rem[p] -= 1;
+                if rem[p] == 0 {
+                    live -= g.tiles[p].out_bytes;
+                }
+            }
+            excess = live.saturating_sub(share);
+        }
+    }
+    spilled
+}
+
+/// Evaluate a fused segment's single cluster (per sample).
+pub fn eval_cluster_fused(ctx: &EvalContext, seg: &SegmentSchedule, j: usize) -> ClusterEval {
+    debug_assert_eq!(seg.exec_mode, ExecMode::Fused);
+    let (lo, hi) = seg.cluster_range(j);
+    let layers = &ctx.net.layers[lo..hi];
+    let parts = &seg.partitions[lo - seg.lo..hi - seg.lo];
+    let r = seg.regions[j] as u64;
+    let region = RegionGeom { start: seg.region_start(j), n: seg.regions[j] };
+    let freq = ctx.mcm.chiplet.freq_hz;
+    let plan = plan_cluster(layers, parts, r, ctx.policy, ctx.mcm.chiplet.weight_capacity());
+    let mut out = ClusterEval::default();
+    for (i, layer) in layers.iter().enumerate() {
+        // preparation phase — identical residency handling to the
+        // pipeline evaluator's Equ. 4 path
+        let mut dram_pre_pj = 0.0f64;
+        let pre: NopCost = match plan.residency[i] {
+            LayerResidency::Resident => NopCost::zero(),
+            LayerResidency::TiledExchange if r > 1 => ring_all_gather(
+                layer.weight_bytes() as f64,
+                &ctx.mcm.mesh,
+                &ctx.mcm.nop,
+                freq,
+                region,
+            ),
+            LayerResidency::TiledExchange => NopCost::zero(),
+            LayerResidency::Streamed => {
+                let d = dram_transfer(layer.weight_bytes() as f64, &ctx.mcm.dram, freq, 1.0);
+                dram_pre_pj = d.energy_pj;
+                NopCost { cycles: d.cycles, energy_pj: 0.0, volume: d.bytes }
+            }
+        };
+        let comp = comp_cycles(layer, parts[i], r, &ctx.mcm.chiplet);
+        let mut energy = compute_energy(layer, parts[i], r, &ctx.mcm.chiplet);
+        energy.nop_pj += pre.energy_pj;
+        energy.dram_pj += dram_pre_pj;
+        out.cycles += pre.cycles + comp;
+        out.energy = out.energy.add(energy);
+        out.macs += layer.macs();
+    }
+    // depth-first tile walk: activation overflow beyond the SRAM share
+    let g = lower_segment(ctx.net, lo, hi, ctx.opts.tile_rows);
+    let share = r * ctx.mcm.chiplet.global_buf;
+    let over = overflow_bytes(&g, share);
+    if over > 0 {
+        let d = dram_transfer((2 * over) as f64, &ctx.mcm.dram, freq, 1.0);
+        out.cycles += d.cycles;
+        out.energy.dram_pj += d.energy_pj;
+    }
+    out.footprint = plan.footprint;
+    out.streamed_layers = plan.streamed_count();
+    out
+}
+
+/// Build the fused-execution candidate for span `[lo, hi)` on `chiplets`
+/// chiplets: one cluster over the whole region, per-layer partitions
+/// picked by compute time (ties → WSP, matching the pipeline search's
+/// preference order so `auto` stays deterministic).
+pub fn fused_candidate(
+    net: &Network,
+    mcm: &McmConfig,
+    lo: usize,
+    hi: usize,
+    chiplets: usize,
+) -> SegmentSchedule {
+    let r = chiplets as u64;
+    let partitions = net.layers[lo..hi]
+        .iter()
+        .map(|l| {
+            let w = comp_cycles(l, Partition::Wsp, r, &mcm.chiplet);
+            let i = comp_cycles(l, Partition::Isp, r, &mcm.chiplet);
+            if i < w {
+                Partition::Isp
+            } else {
+                Partition::Wsp
+            }
+        })
+        .collect();
+    SegmentSchedule {
+        lo,
+        hi,
+        bounds: vec![lo, hi],
+        regions: vec![chiplets],
+        partitions,
+        exec_mode: ExecMode::Fused,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::McmConfig;
+    use crate::config::SimOptions;
+    use crate::model::zoo::scopenet;
+    use crate::model::{Layer, Network};
+    use crate::pipeline::timeline::{eval_segment, EvalContext};
+    use crate::storage::StoragePolicy;
+
+    fn ctx<'a>(net: &'a Network, mcm: &'a McmConfig, opts: &'a SimOptions) -> EvalContext<'a> {
+        EvalContext {
+            net,
+            mcm,
+            opts,
+            policy: StoragePolicy::Distributed,
+            dram_fallback: true,
+        }
+    }
+
+    #[test]
+    fn fused_segment_has_no_bubbles() {
+        let net = scopenet();
+        let mcm = McmConfig::paper_default(16);
+        let opts = SimOptions { samples: 10, ..Default::default() };
+        let c = ctx(&net, &mcm, &opts);
+        let seg = fused_candidate(&net, &mcm, 0, net.len(), 16);
+        assert!(seg.validate(&net, 16).is_ok());
+        let ev = eval_segment(&c, &seg, 10);
+        assert!(ev.error.is_none(), "{:?}", ev.error);
+        assert_eq!(ev.clusters.len(), 1);
+        // single cluster: (m + 1 − 1) · stage = m · per-sample, no bubbles
+        assert!((ev.pipeline_cycles - 10.0 * ev.stage_cycles).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overflow_is_exact_on_a_two_layer_chain() {
+        // one tile per layer: the walk holds out0 while computing t1, so
+        // with share = 0 the spilled volume is exactly out0 + out1.
+        let net = Network::new(
+            "two",
+            (8, 8, 4),
+            vec![
+                Layer::conv("c1", 8, 8, 4, 8, 3, 1, 1),
+                Layer::conv("c2", 8, 8, 8, 8, 3, 1, 1),
+            ],
+        );
+        let g = lower_segment(&net, 0, 2, 64);
+        assert_eq!(g.len(), 2);
+        let out0 = net.layers[0].output_bytes();
+        let out1 = net.layers[1].output_bytes();
+        assert_eq!(overflow_bytes(&g, 0), out0 + out1);
+        // a share covering the peak live set spills nothing
+        assert_eq!(overflow_bytes(&g, out0 + out1), 0);
+        // an intermediate share spills exactly the excess over it
+        assert_eq!(overflow_bytes(&g, out0), out1);
+    }
+
+    #[test]
+    fn overflow_is_monotone_in_share() {
+        let net = scopenet();
+        let g = lower_segment(&net, 0, net.len(), 2);
+        let spills: Vec<u64> =
+            [0u64, 1 << 10, 1 << 16, 1 << 24].iter().map(|&s| overflow_bytes(&g, s)).collect();
+        assert!(spills.windows(2).all(|w| w[0] >= w[1]), "monotone in share: {spills:?}");
+        assert_eq!(*spills.last().unwrap(), 0, "16 MiB holds scopenet's live set");
+        assert!(spills[0] > 0);
+    }
+
+    #[test]
+    fn fused_spill_charges_dram_at_tiny_share() {
+        let net = scopenet();
+        let mut small = McmConfig::paper_default(16);
+        small.chiplet.global_buf = 16; // 16 B/chiplet: everything spills
+        let big = McmConfig::paper_default(16);
+        let opts = SimOptions { samples: 4, ..Default::default() };
+        let seg = fused_candidate(&net, &big, 0, net.len(), 16);
+        let ev_small = eval_segment(&ctx(&net, &small, &opts), &seg, 4);
+        let ev_big = eval_segment(&ctx(&net, &big, &opts), &seg, 4);
+        let dram = |ev: &crate::pipeline::timeline::SegmentEval| {
+            ev.clusters.iter().map(|c| c.energy.dram_pj).sum::<f64>()
+        };
+        assert!(dram(&ev_small) > dram(&ev_big));
+        assert!(ev_small.stage_cycles > ev_big.stage_cycles);
+    }
+
+    #[test]
+    fn fused_candidate_partitions_follow_compute_time() {
+        let net = scopenet();
+        let mcm = McmConfig::paper_default(16);
+        let seg = fused_candidate(&net, &mcm, 0, net.len(), 16);
+        for (i, l) in net.layers.iter().enumerate() {
+            let w = comp_cycles(l, Partition::Wsp, 16, &mcm.chiplet);
+            let p = comp_cycles(l, Partition::Isp, 16, &mcm.chiplet);
+            let expect = if p < w { Partition::Isp } else { Partition::Wsp };
+            assert_eq!(seg.partitions[i], expect, "layer {i}");
+        }
+    }
+}

@@ -5,13 +5,14 @@
 
 pub mod cache_store;
 pub mod eval_cache;
+pub mod fused;
 pub mod schedule;
 pub mod timeline;
 
 pub use cache_store::{CacheStore, StoreKey, StoreSnapshot};
 pub use eval_cache::{eval_segment_cached, ClusterKey, EvalCache};
-pub use schedule::{Partition, Schedule, SegmentSchedule};
+pub use schedule::{ExecMode, ExecModeChoice, Partition, Schedule, SegmentSchedule};
 pub use timeline::{
-    boundary_spill, eval_cluster, eval_layer, eval_schedule, eval_segment,
-    ClusterEval, EvalContext, LayerPhases, ScheduleEval, SegmentEval,
+    boundary_spill, dag_skip_traffic, eval_cluster, eval_layer, eval_schedule,
+    eval_segment, ClusterEval, EvalContext, LayerPhases, ScheduleEval, SegmentEval,
 };

@@ -14,6 +14,78 @@ pub enum Partition {
     Wsp,
 }
 
+/// How a segment executes on its chiplet region(s).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ExecMode {
+    /// Merged-pipeline execution (paper Equ. 1–3, 7): clusters form
+    /// pipeline stages, samples stream through with `(m + N − 1)` fills.
+    Pipeline,
+    /// Depth-first tile-fused execution (Stream/SET-style): the segment's
+    /// layers are lowered to a tile graph ([`crate::model::tile`]) and
+    /// walked producer→consumer on a *single* cluster, keeping
+    /// intermediate activations in SRAM ([`crate::pipeline::fused`]).
+    Fused,
+}
+
+impl ExecMode {
+    /// Names accepted by [`ExecMode::parse`] (CLI help / validation).
+    pub const NAMES: &'static [&'static str] = &["pipeline", "fused"];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecMode::Pipeline => "pipeline",
+            ExecMode::Fused => "fused",
+        }
+    }
+
+    /// Parse a CLI/config value; unknown values list the options.
+    pub fn parse(s: &str) -> Result<ExecMode, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "pipeline" => Ok(ExecMode::Pipeline),
+            "fused" => Ok(ExecMode::Fused),
+            other => Err(format!(
+                "unknown exec mode {other:?}; options: {}",
+                ExecMode::NAMES.join(" ")
+            )),
+        }
+    }
+}
+
+/// The `exec_mode` knob: a fixed per-segment mode, or `Auto` letting the
+/// segmenter pick the cheaper of the two per segment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecModeChoice {
+    Pipeline,
+    Fused,
+    Auto,
+}
+
+impl ExecModeChoice {
+    /// Names accepted by [`ExecModeChoice::parse`] (CLI help / validation).
+    pub const NAMES: &'static [&'static str] = &["pipeline", "fused", "auto"];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecModeChoice::Pipeline => "pipeline",
+            ExecModeChoice::Fused => "fused",
+            ExecModeChoice::Auto => "auto",
+        }
+    }
+
+    /// Parse a CLI/config value; unknown values list the options.
+    pub fn parse(s: &str) -> Result<ExecModeChoice, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "pipeline" => Ok(ExecModeChoice::Pipeline),
+            "fused" => Ok(ExecModeChoice::Fused),
+            "auto" => Ok(ExecModeChoice::Auto),
+            other => Err(format!(
+                "unknown exec mode {other:?}; options: {}",
+                ExecModeChoice::NAMES.join(" ")
+            )),
+        }
+    }
+}
+
 /// One segment's deployment: clusters of merged layers, each mapped to a
 /// region (a contiguous ZigZag range of chiplets), plus per-layer
 /// partitions.
@@ -31,13 +103,17 @@ pub struct SegmentSchedule {
     pub regions: Vec<usize>,
     /// Per-layer partition for layers `lo..hi`.
     pub partitions: Vec<Partition>,
+    /// How the segment executes. `Fused` segments must be a single
+    /// cluster (the tile walk owns the whole region) — enforced by
+    /// [`SegmentSchedule::validate`].
+    pub exec_mode: ExecMode,
 }
 
 impl SegmentSchedule {
     /// Every layer of `[lo, hi)` its own cluster (segmented-pipeline shape).
     pub fn one_layer_per_cluster(lo: usize, hi: usize, regions: Vec<usize>, partitions: Vec<Partition>) -> Self {
         let bounds = (lo..=hi).collect();
-        SegmentSchedule { lo, hi, bounds, regions, partitions }
+        SegmentSchedule { lo, hi, bounds, regions, partitions, exec_mode: ExecMode::Pipeline }
     }
 
     pub fn n_layers(&self) -> usize {
@@ -98,6 +174,12 @@ impl SegmentSchedule {
         }
         if self.partitions.len() != self.n_layers() {
             return Err("partitions.len() != n_layers".into());
+        }
+        if self.exec_mode == ExecMode::Fused && self.n_clusters() != 1 {
+            return Err(format!(
+                "fused segment must be a single cluster, got {}",
+                self.n_clusters()
+            ));
         }
         Ok(())
     }
@@ -162,6 +244,7 @@ mod tests {
             bounds: vec![0, 2, 4, 6],
             regions: vec![4, 8, 4],
             partitions: vec![Partition::Wsp; 6],
+            exec_mode: ExecMode::Pipeline,
         }
     }
 
@@ -227,12 +310,45 @@ mod tests {
             bounds: vec![lo, hi],
             regions: vec![4],
             partitions: vec![Partition::Wsp; hi - lo],
+            exec_mode: ExecMode::Pipeline,
         };
         let ok = Schedule { method: "scope".into(), segments: vec![seg(0, 4), seg(4, 5)] };
         assert!(ok.validate(&net, 16).is_ok());
         let bad = Schedule { method: "scope".into(), segments: vec![seg(0, 2), seg(2, 5)] };
         let err = bad.validate(&net, 16).unwrap_err();
         assert!(err.contains("clean cut"), "{err}");
+    }
+
+    #[test]
+    fn fused_segments_must_be_single_cluster() {
+        let net = scopenet();
+        let mut bad = seg();
+        bad.exec_mode = ExecMode::Fused; // 3 clusters → invalid
+        let err = bad.validate(&net, 16).unwrap_err();
+        assert!(err.contains("single cluster"), "{err}");
+        let ok = SegmentSchedule {
+            lo: 0,
+            hi: 6,
+            bounds: vec![0, 6],
+            regions: vec![8],
+            partitions: vec![Partition::Wsp; 6],
+            exec_mode: ExecMode::Fused,
+        };
+        assert!(ok.validate(&net, 16).is_ok());
+    }
+
+    #[test]
+    fn exec_mode_names_round_trip() {
+        for &n in ExecMode::NAMES {
+            assert_eq!(ExecMode::parse(n).unwrap().name(), n);
+        }
+        for &n in ExecModeChoice::NAMES {
+            assert_eq!(ExecModeChoice::parse(n).unwrap().name(), n);
+        }
+        let err = ExecMode::parse("spatial").unwrap_err();
+        assert!(err.contains("pipeline") && err.contains("fused"), "{err}");
+        let err = ExecModeChoice::parse("both").unwrap_err();
+        assert!(err.contains("auto"), "{err}");
     }
 
     #[test]

@@ -19,7 +19,7 @@ use crate::cost::{
 use crate::model::Network;
 use crate::storage::{plan_cluster, LayerResidency, StoragePolicy};
 
-use super::schedule::{Schedule, SegmentSchedule};
+use super::schedule::{ExecMode, Schedule, SegmentSchedule};
 
 /// Everything an evaluation needs (threaded through the DSE hot loop).
 #[derive(Clone, Copy)]
@@ -64,8 +64,12 @@ pub struct SegmentEval {
     pub clusters: Vec<ClusterEval>,
     /// Bottleneck stage latency (cycles/sample).
     pub stage_cycles: f64,
-    /// Pipelined latency for the batch, Equ. 2.
+    /// Pipelined latency for the batch, Equ. 2 (plus `skip_cycles`).
     pub pipeline_cycles: f64,
+    /// Within-segment DAG skip-edge NoP traffic for the batch (cycles),
+    /// already folded into `pipeline_cycles` — see [`dag_skip_traffic`].
+    pub skip_cycles: f64,
+    pub skip_energy_pj: f64,
     /// Weight preload from DRAM (cycles + energy), once per batch.
     pub preload_cycles: f64,
     pub preload_energy_pj: f64,
@@ -186,7 +190,16 @@ pub fn eval_layer(
 }
 
 /// Evaluate one cluster (per sample): Equ. 3 plus the capacity footprint.
+///
+/// Fused segments route to the depth-first tile-walk evaluator
+/// ([`crate::pipeline::fused`]) here — the single dispatch point keeps
+/// every downstream consumer (`eval_segment`, the memoized
+/// `eval_segment_cached`, `eval_schedule`, the exhaustive ground truths)
+/// execution-mode aware without signature changes.
 pub fn eval_cluster(ctx: &EvalContext, seg: &SegmentSchedule, j: usize) -> ClusterEval {
+    if seg.exec_mode == ExecMode::Fused {
+        return super::fused::eval_cluster_fused(ctx, seg, j);
+    }
     let (lo, hi) = seg.cluster_range(j);
     let layers = &ctx.net.layers[lo..hi];
     let parts = &seg.partitions[lo - seg.lo..hi - seg.lo];
@@ -242,6 +255,16 @@ pub(crate) fn assemble_segment<F: FnMut(usize) -> ClusterEval>(
         .fold(0.0, f64::max);
     ev.pipeline_cycles =
         (m as f64 + seg.n_clusters() as f64 - 1.0) * ev.stage_cycles;
+    // Within-segment DAG skip edges: per-sample NoP traffic between the
+    // producer's and consumer's cluster regions, folded into the pipelined
+    // latency so every segmenter optimizes exactly the objective the
+    // evaluator reports.
+    let skip = dag_skip_traffic(ctx, seg);
+    if skip.cycles > 0.0 || skip.energy_pj > 0.0 {
+        ev.skip_cycles = m as f64 * skip.cycles;
+        ev.skip_energy_pj = m as f64 * skip.energy_pj;
+        ev.pipeline_cycles += ev.skip_cycles;
+    }
     // Segment weight preload: the whole segment's weights enter the package
     // once per batch through the shared DRAM channel.
     let seg_weights: u64 = ctx.net.layers[seg.lo..seg.hi]
@@ -257,6 +280,47 @@ pub(crate) fn assemble_segment<F: FnMut(usize) -> ClusterEval>(
     ev.preload_cycles = preload.cycles;
     ev.preload_energy_pj = preload.energy_pj;
     ev
+}
+
+/// Within-segment DAG skip traffic (per sample): every DAG edge `p → q`
+/// internal to the segment that is not the chain-adjacent edge `q−1 → q`
+/// (already charged as `p`'s communication phase) and whose endpoints sit
+/// in *different clusters* moves one copy of `p`'s output between the two
+/// regions over the NoP. Chains and linearized chains (`preds[q] ==
+/// [q−1]`) have no such edges; fused segments are a single cluster, so
+/// the traffic is zero there by construction. Edges from *before* the
+/// segment are the boundary-spill path ([`boundary_spill`]), not this one.
+pub fn dag_skip_traffic(ctx: &EvalContext, seg: &SegmentSchedule) -> NopCost {
+    let Some(info) = &ctx.net.dag else {
+        return NopCost::zero();
+    };
+    let freq = ctx.mcm.chiplet.freq_hz;
+    let mut total = NopCost::zero();
+    for q in seg.lo..seg.hi {
+        for &p in &info.preds[q] {
+            if p < seg.lo || p + 1 == q {
+                continue;
+            }
+            let (jp, jq) = (seg.layer_cluster(p), seg.layer_cluster(q));
+            if jp == jq {
+                continue; // stays inside the cluster's region
+            }
+            let c = comm_phase(
+                &ctx.net.layers[p],
+                seg.partition(p),
+                region_of(seg, jp),
+                seg.partition(q),
+                region_of(seg, jq),
+                &ctx.mcm.mesh,
+                &ctx.mcm.nop,
+                freq,
+            );
+            total.cycles += c.cycles;
+            total.energy_pj += c.energy_pj;
+            total.volume += c.volume;
+        }
+    }
+    total
 }
 
 /// DRAM spill of the skip/branch activations crossing a DAG segment
@@ -296,6 +360,7 @@ pub fn eval_schedule(ctx: &EvalContext, sched: &Schedule) -> ScheduleEval {
             .fold(EnergyBreakdown::zero(), |acc, c| acc.add(c.energy));
         out.energy = out.energy.add(per_sample.scale(m as f64));
         out.energy.dram_pj += ev.preload_energy_pj;
+        out.energy.nop_pj += ev.skip_energy_pj;
         if si + 1 < sched.segments.len() {
             // cut-edge activation traffic crossing into the next segment
             let spill = boundary_spill(ctx.net, ctx.mcm, seg.hi, m);
@@ -343,6 +408,7 @@ mod tests {
                 bounds: vec![0, 2, 4, 6],
                 regions: vec![6, 6, 4],
                 partitions: vec![Partition::Wsp; 6],
+                exec_mode: ExecMode::Pipeline,
             }],
         }
     }
@@ -458,6 +524,7 @@ mod tests {
             bounds: vec![lo, hi],
             regions: vec![8],
             partitions: vec![Partition::Wsp; hi - lo],
+            exec_mode: ExecMode::Pipeline,
         };
         let split = Schedule {
             method: "scope".into(),
@@ -478,6 +545,74 @@ mod tests {
             seg_only,
             spill.cycles
         );
+    }
+
+    #[test]
+    fn within_segment_skip_edges_are_charged_across_clusters() {
+        use crate::model::dag::DagNetwork;
+        use crate::model::Layer;
+        // the x → a → b → add(b, x) → c graph again, scheduled as ONE
+        // segment with x in cluster 0 and the add in cluster 1: the skip
+        // edge x → add crosses the cluster boundary and must pay a NoP
+        // communication phase between the two real regions.
+        let mut g = DagNetwork::builder("skip", (8, 8, 16));
+        let x = g.node(Layer::conv("x", 8, 8, 16, 16, 3, 1, 1), &[]);
+        let a = g.node(Layer::conv("a", 8, 8, 16, 16, 3, 1, 1), &[x]);
+        let b = g.node(Layer::conv("b", 8, 8, 16, 16, 3, 1, 1), &[a]);
+        let s = g.node(Layer::add_merge("add", 8, 8, 16), &[b, x]);
+        g.node(Layer::conv("c", 8, 8, 16, 32, 3, 1, 1), &[s]);
+        let net = g.build().to_network();
+        let mcm = McmConfig::paper_default(16);
+        let m = 8u64;
+        let opts = SimOptions { samples: m, ..Default::default() };
+        let c = ctx(&net, &mcm, &opts);
+        let split = SegmentSchedule {
+            lo: 0,
+            hi: 5,
+            bounds: vec![0, 2, 5], // {x, a} | {b, add, c}
+            regions: vec![8, 8],
+            partitions: vec![Partition::Wsp; 5],
+            exec_mode: ExecMode::Pipeline,
+        };
+        let skip = dag_skip_traffic(&c, &split);
+        assert!(skip.cycles > 0.0 && skip.energy_pj > 0.0);
+        // exactly one skip edge: x's output moving region 0 → region 1
+        let expect = comm_phase(
+            &net.layers[0],
+            Partition::Wsp,
+            RegionGeom { start: 0, n: 8 },
+            Partition::Wsp,
+            RegionGeom { start: 8, n: 8 },
+            &mcm.mesh,
+            &mcm.nop,
+            mcm.chiplet.freq_hz,
+        );
+        assert_eq!(skip, expect);
+        // folded into the segment evaluation, scaled by the batch
+        let ev = eval_segment(&c, &split, m);
+        assert!((ev.skip_cycles - m as f64 * skip.cycles).abs() < 1e-9);
+        let equ2 = (m as f64 + 1.0) * ev.stage_cycles;
+        assert!(
+            (ev.pipeline_cycles - (equ2 + ev.skip_cycles)).abs() < 1e-9,
+            "pipeline {} vs Equ.2 {} + skip {}",
+            ev.pipeline_cycles,
+            equ2,
+            ev.skip_cycles
+        );
+        // producer and consumer in the same cluster: nothing to charge
+        let joint = SegmentSchedule {
+            lo: 0,
+            hi: 5,
+            bounds: vec![0, 5],
+            regions: vec![8],
+            partitions: vec![Partition::Wsp; 5],
+            exec_mode: ExecMode::Pipeline,
+        };
+        assert_eq!(dag_skip_traffic(&c, &joint), NopCost::zero());
+        // chains have no skip edges at all
+        let chain = scopenet();
+        let chain_ctx = ctx(&chain, &mcm, &opts);
+        assert_eq!(dag_skip_traffic(&chain_ctx, &sched3().segments[0]), NopCost::zero());
     }
 
     #[test]

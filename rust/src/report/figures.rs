@@ -484,6 +484,70 @@ pub fn dag_condensation_table(net: &crate::model::Network) -> Result<Table> {
     Ok(t)
 }
 
+/// Fused-vs-pipeline per-segment table (the `info` subcommand under
+/// `--exec-mode auto`): schedules the network with the dual-mode DP, then
+/// re-costs every chosen segment span under *both* executions — the best
+/// merged-pipeline candidate and the fused depth-first candidate — so the
+/// row shows what the per-segment mode choice actually bought.
+pub fn exec_mode_table(net_name: &str, chiplets: usize, sim: &SimOptions) -> Result<Table> {
+    use crate::pipeline::fused::fused_candidate;
+    use crate::pipeline::schedule::ExecModeChoice;
+    use crate::pipeline::timeline::eval_segment;
+
+    let net = zoo::by_name(net_name).ok_or_else(|| anyhow!("unknown net {net_name}"))?;
+    let mcm = McmConfig::paper_default(chiplets);
+    let auto_sim = SimOptions { exec_mode: ExecModeChoice::Auto, ..sim.clone() };
+    let r = schedule_scope(&net, &mcm, &auto_sim);
+    let sched = match &r.schedule {
+        Some(sched) => sched,
+        None => return Err(anyhow!("no valid schedule: {:?}", r.eval.error)),
+    };
+    let ctx = EvalContext {
+        net: &net,
+        mcm: &mcm,
+        opts: &auto_sim,
+        policy: StoragePolicy::Distributed,
+        dram_fallback: true,
+    };
+    let mut t = Table::new(
+        &format!(
+            "fused vs pipeline per segment — {net_name} on {chiplets} chiplets (tile rows {})",
+            auto_sim.tile_rows
+        ),
+        &[
+            "segment",
+            "layers",
+            "pipeline (cycles)",
+            "fused (cycles)",
+            "fused/pipeline",
+            "chosen",
+        ],
+    );
+    for (si, seg) in sched.segments.iter().enumerate() {
+        let pipe = search_segment(&ctx, seg.lo, seg.hi, auto_sim.samples, SearchOptions::default())
+            .map(|s| s.latency);
+        let fseg = fused_candidate(&net, &mcm, seg.lo, seg.hi, mcm.chiplets);
+        let fev = eval_segment(&ctx, &fseg, auto_sim.samples);
+        let mut fused = None;
+        if fev.error.is_none() && (fev.preload_cycles + fev.pipeline_cycles).is_finite() {
+            fused = Some(fev.preload_cycles + fev.pipeline_cycles);
+        }
+        let cell = |v: Option<f64>| v.map(f3).unwrap_or_else(|| "-".into());
+        t.row(vec![
+            si.to_string(),
+            format!("[{},{})", seg.lo, seg.hi),
+            cell(pipe),
+            cell(fused),
+            match (pipe, fused) {
+                (Some(p), Some(f)) if p > 0.0 => format!("{:.3}x", f / p),
+                _ => "-".into(),
+            },
+            seg.exec_mode.name().to_string(),
+        ]);
+    }
+    Ok(t)
+}
+
 /// §V-B(1) / Equ. 8–9: search-space size rows.
 pub fn space_table(net_name: &str, chiplets: usize) -> Result<Table> {
     let net = zoo::by_name(net_name).ok_or_else(|| anyhow!("unknown net {net_name}"))?;
@@ -558,6 +622,19 @@ mod tests {
     fn unknown_net_errors() {
         assert!(fig7(&["nope"], &[16], 4).is_err());
         assert!(space_table("nope", 16).is_err());
+        assert!(exec_mode_table("nope", 16, &SimOptions::default()).is_err());
+    }
+
+    #[test]
+    fn exec_mode_table_costs_both_modes_per_segment() {
+        let sim = SimOptions { samples: 8, ..Default::default() };
+        let t = exec_mode_table("alexnet", 16, &sim).unwrap();
+        let s = t.render();
+        assert!(s.contains("fused vs pipeline per segment"), "{s}");
+        // every chosen mode is one of the two executions
+        assert!(s.contains("pipeline") || s.contains("fused"), "{s}");
+        // the ratio column rendered for at least one segment
+        assert!(s.contains('x'), "{s}");
     }
 
     #[test]

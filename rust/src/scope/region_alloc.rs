@@ -9,7 +9,7 @@
 //!    and reported in EXPERIMENTS.md).
 
 use crate::pipeline::eval_cache::{eval_segment_cached, EvalCache};
-use crate::pipeline::schedule::SegmentSchedule;
+use crate::pipeline::schedule::{ExecMode, SegmentSchedule};
 use crate::pipeline::timeline::EvalContext;
 
 /// Proportional-to-load initial allocation of `c` chiplets over cluster
@@ -225,6 +225,7 @@ mod tests {
                 Partition::Isp,
                 Partition::Isp,
             ],
+            exec_mode: ExecMode::Pipeline,
         };
         let (seed_lat, _, _) = super::forward(&ctx, &seg, opts.samples, None);
         let found = improve_regions(&ctx, seg, opts.samples, 64).unwrap();
@@ -261,6 +262,7 @@ mod tests {
                 Partition::Isp,
                 Partition::Isp,
             ],
+            exec_mode: ExecMode::Pipeline,
         };
         let plain = improve_regions(&ctx, seg.clone(), opts.samples, 64).unwrap();
         let cache = EvalCache::new();

@@ -15,7 +15,7 @@
 
 use crate::dse::parallel::par_map;
 use crate::pipeline::eval_cache::EvalCache;
-use crate::pipeline::schedule::SegmentSchedule;
+use crate::pipeline::schedule::{ExecMode, SegmentSchedule};
 use crate::pipeline::timeline::EvalContext;
 
 use super::cmt::gen_cmt;
@@ -95,6 +95,7 @@ fn eval_bounds(
         bounds: bounds.to_vec(),
         regions,
         partitions: partitions.to_vec(),
+        exec_mode: ExecMode::Pipeline,
     };
     let found = improve_regions_cached(ctx, seed, m, max_region_iters, cache)?;
     let iters = found.iterations + 1;
@@ -280,6 +281,7 @@ pub fn search_segment_cached(
             bounds,
             regions,
             partitions,
+            exec_mode: ExecMode::Pipeline,
         };
         match improve_regions_cached(ctx, seed, m, opts.max_region_iters, Some(cache)) {
             Some(found) => CandidateOutcome::Found(found),

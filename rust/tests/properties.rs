@@ -4,11 +4,13 @@
 
 use scope::arch::{ChipletConfig, McmConfig, Mesh};
 use scope::config::SimOptions;
-use scope::cost::{comp_cycles, shard, utilization};
+use scope::cost::{comp_cycles, dram_transfer, shard, utilization};
 use scope::dse::{exhaustive_segment, ExhaustiveOptions};
+use scope::model::tile::lower_segment;
 use scope::model::{Layer, Network};
-use scope::pipeline::schedule::{Partition, Schedule, SegmentSchedule};
-use scope::pipeline::timeline::{eval_schedule, EvalContext};
+use scope::pipeline::fused::{fused_candidate, overflow_bytes};
+use scope::pipeline::schedule::{ExecMode, ExecModeChoice, Partition, Schedule, SegmentSchedule};
+use scope::pipeline::timeline::{eval_schedule, eval_segment, EvalContext};
 use scope::scope::cmt::gen_cmt;
 use scope::scope::region_alloc::proportional_allocate;
 use scope::scope::segmenter::balanced_split;
@@ -232,7 +234,14 @@ fn prop_eval_is_finite_and_positive_for_valid_schedules() {
             .collect();
         let sched = Schedule {
             method: "rand".into(),
-            segments: vec![SegmentSchedule { lo: 0, hi: l, bounds, regions, partitions }],
+            segments: vec![SegmentSchedule {
+                lo: 0,
+                hi: l,
+                bounds,
+                regions,
+                partitions,
+                exec_mode: ExecMode::Pipeline,
+            }],
         };
         let ev = eval_schedule(&ctx, &sched);
         assert!(ev.is_valid(), "{:?}", ev.error);
@@ -287,6 +296,118 @@ fn prop_search_never_beaten_by_exhaustive_and_lands_near_top() {
             found.latency,
             ex.best_latency
         );
+    }
+}
+
+#[test]
+fn prop_fused_dram_never_exceeds_pipeline_beyond_declared_overflow() {
+    // For the same span on the same region, the fused evaluator's DRAM
+    // traffic is *exactly* the same-geometry pipeline evaluation's DRAM
+    // (identical residency plan → identical weight streaming) plus the
+    // declared activation-overflow round trip. In particular it never
+    // reports more DRAM than pipeline whenever its live set fits the
+    // region's SRAM share — the overflow surcharge is the only extra.
+    let mut rng = Rng::new(11);
+    for _ in 0..CASES / 3 {
+        let net = rand_network(&mut rng);
+        let chiplets = 16usize;
+        let shrink = *[1u64, 4, 64].get(rng.usize_in(0, 3)).unwrap();
+        let mut mcm = McmConfig::paper_default(chiplets);
+        mcm.chiplet.global_buf /= shrink;
+        let tile_rows = 1 + rng.gen_range(8);
+        let opts = SimOptions { samples: 4, tile_rows, ..Default::default() };
+        let ctx = EvalContext {
+            net: &net,
+            mcm: &mcm,
+            opts: &opts,
+            policy: StoragePolicy::Distributed,
+            dram_fallback: true,
+        };
+        let lo = rng.usize_in(0, net.len());
+        let hi = rng.usize_in(lo + 1, net.len() + 1);
+        let fused = fused_candidate(&net, &mcm, lo, hi, chiplets);
+        let mut pipe = fused.clone();
+        pipe.exec_mode = ExecMode::Pipeline;
+        let ev_f = eval_segment(&ctx, &fused, 4);
+        let ev_p = eval_segment(&ctx, &pipe, 4);
+        assert!(ev_f.error.is_none(), "{:?}", ev_f.error);
+        assert!(ev_p.error.is_none(), "{:?}", ev_p.error);
+        let dram = |ev: &scope::pipeline::timeline::SegmentEval| ev.clusters[0].energy.dram_pj;
+        let g = lower_segment(&net, lo, hi, tile_rows);
+        let over = overflow_bytes(&g, chiplets as u64 * mcm.chiplet.global_buf);
+        let surcharge = if over > 0 {
+            dram_transfer((2 * over) as f64, &mcm.dram, mcm.chiplet.freq_hz, 1.0).energy_pj
+        } else {
+            0.0
+        };
+        let (f, p) = (dram(&ev_f), dram(&ev_p));
+        assert!(f >= p - 1e-9, "[{lo},{hi}) ÷{shrink}: fused dram {f} < pipeline {p}");
+        assert!(
+            (f - (p + surcharge)).abs() <= 1e-9 * (p + surcharge).max(1.0),
+            "[{lo},{hi}) ÷{shrink}: fused dram {f} != pipeline {p} + overflow {surcharge}"
+        );
+        if over == 0 {
+            assert!(
+                f <= p + 1e-9,
+                "[{lo},{hi}) ÷{shrink}: live set fits but fused dram {f} > pipeline {p}"
+            );
+        }
+        // the no-bubble trade: fused also never charges NoP comm phases
+        assert!(ev_f.clusters[0].energy.nop_pj <= ev_p.clusters[0].energy.nop_pj + 1e-9);
+    }
+}
+
+#[test]
+fn prop_tile_lowering_is_exact_over_tile_sizes() {
+    // Σ tile MACs / output bytes per layer equal the layer totals for any
+    // tile size — lowering redistributes work, it never creates or drops
+    // any (the seeded sweep the fused evaluator's costs rest on).
+    let mut rng = Rng::new(12);
+    for _ in 0..CASES / 2 {
+        let net = rand_network(&mut rng);
+        let lo = rng.usize_in(0, net.len());
+        let hi = rng.usize_in(lo + 1, net.len() + 1);
+        for tile_rows in [1u64, 2, 3, 5, 8, 1 + rng.gen_range(61)] {
+            let g = lower_segment(&net, lo, hi, tile_rows);
+            g.validate(&net).unwrap_or_else(|e| {
+                panic!("[{lo},{hi}) tile_rows={tile_rows}: {e}");
+            });
+            for k in lo..hi {
+                let (s, e) = g.tiles_of(k);
+                let macs: u64 = g.tiles[s..e].iter().map(|t| t.macs).sum();
+                let bytes: u64 = g.tiles[s..e].iter().map(|t| t.out_bytes).sum();
+                assert_eq!(macs, net.layers[k].macs(), "layer {k} MACs");
+                assert_eq!(bytes, net.layers[k].output_bytes(), "layer {k} bytes");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_auto_mode_is_thread_invariant() {
+    // `exec_mode = auto` doubles the DP's candidate set; the parallel
+    // engine must still reproduce the serial schedule bit-for-bit.
+    for name in ["alexnet", "resnet18"] {
+        let net = scope::model::zoo::by_name(name).unwrap();
+        let mcm = McmConfig::paper_default(16);
+        let base = SimOptions {
+            samples: 8,
+            exec_mode: ExecModeChoice::Auto,
+            ..Default::default()
+        };
+        let sim1 = SimOptions { threads: 1, ..base.clone() };
+        let serial = scope::scope::schedule_scope(&net, &mcm, &sim1);
+        assert!(serial.eval.is_valid(), "{name}: {:?}", serial.eval.error);
+        for threads in [2usize, 8] {
+            let simt = SimOptions { threads, ..base.clone() };
+            let par = scope::scope::schedule_scope(&net, &mcm, &simt);
+            assert_eq!(
+                serial.eval.total_cycles.to_bits(),
+                par.eval.total_cycles.to_bits(),
+                "{name}: auto drifted at {threads} threads"
+            );
+            assert_eq!(serial.schedule, par.schedule, "{name} @ {threads} threads");
+        }
     }
 }
 
