@@ -82,6 +82,15 @@ pub struct SimOptions {
     /// Conv-output rows per tile for the fused evaluator's tile-graph
     /// lowering (config key `tile_rows`, CLI `--tile-rows`; ≥ 1).
     pub tile_rows: u64,
+    /// Branch-and-bound pruning (config key `prune`, CLI `--prune`):
+    /// admissible analytic lower bounds ([`crate::cost::bound`]) let the
+    /// segment DP, the share-split allocator, and the serving planner skip
+    /// candidates that provably cannot beat an already-evaluated
+    /// incumbent. Results are bit-identical with pruning on or off (the
+    /// bounds are admissible; `SCOPE_PRUNE_AUDIT=1` re-checks the
+    /// invariant against every exact evaluation); `prune = false` is the
+    /// escape hatch that forces every candidate through the evaluator.
+    pub prune: bool,
 }
 
 impl Default for SimOptions {
@@ -98,6 +107,7 @@ impl Default for SimOptions {
             cache_file: String::new(),
             exec_mode: ExecModeChoice::Pipeline,
             tile_rows: 4,
+            prune: true,
         }
     }
 }
@@ -185,6 +195,7 @@ impl Config {
                     cfg.sim.cache_store = parse_bool(value)?;
                     cfg.cache_store_explicit = true;
                 }
+                "prune" => cfg.sim.prune = parse_bool(value)?,
                 "cache_file" => {
                     if value.is_empty() {
                         return Err(anyhow!("cache_file expects a path"));
@@ -407,6 +418,14 @@ pub const KNOBS: &[KnobDoc] = &[
         sim_field: "tile_rows",
         default_value: "4",
         doc: "conv-output rows per tile in the fused lowering (>= 1; 0 rejected by name)",
+    },
+    KnobDoc {
+        config_key: "prune",
+        cli_flag: "--prune [true|false]",
+        bench_env: "SCOPE_PRUNE",
+        sim_field: "prune",
+        default_value: "true",
+        doc: "branch-and-bound on admissible bounds; results bit-identical, 'false' = evaluate all",
     },
     KnobDoc {
         config_key: "cache_file",
@@ -752,6 +771,16 @@ mod tests {
         assert!(!SimOptions::default().cache_store, "off by default");
         assert!(!Config::paper_default(16).cache_store_explicit);
         assert!(Config::from_kv(&parse_kv("cache_store = maybe\n").unwrap(), 16).is_err());
+    }
+
+    #[test]
+    fn prune_key_parses_and_defaults_on() {
+        assert!(SimOptions::default().prune, "pruning is on by default");
+        let off = Config::from_kv(&parse_kv("prune = false\n").unwrap(), 16).unwrap();
+        assert!(!off.sim.prune, "escape hatch");
+        let on = Config::from_kv(&parse_kv("prune = 1\n").unwrap(), 16).unwrap();
+        assert!(on.sim.prune);
+        assert!(Config::from_kv(&parse_kv("prune = maybe\n").unwrap(), 16).is_err());
     }
 
     #[test]

@@ -1,0 +1,234 @@
+//! Admissible analytic lower bounds for the branch-and-bound searches.
+//!
+//! Every pruning decision in the segment DP ([`crate::scope::segment_dp`])
+//! and the multi-model share allocator ([`crate::scope::multi_model`])
+//! rests on the bounds here being *admissible*: a bound may never exceed
+//! the exact evaluated cost of the thing it bounds, so "this candidate's
+//! bound already loses to the incumbent" is a proof the exact evaluation
+//! would lose too. Pruned candidates are then skipped without ever calling
+//! the real scheduler, and the search result stays bit-identical to the
+//! unpruned one.
+//!
+//! ## Span latency bound ([`SpanBound`])
+//!
+//! For a span `[lo, hi)` evaluated at pipeline depth `m` on a package of
+//! `C` chiplets, every execution path (merged pipeline, fused, and the
+//! sequential baseline) pays at least
+//!
+//! ```text
+//! bound(lo, hi) = preload_cycles(lo, hi)                 (minimum traffic)
+//!               + m · Σ macs(l) / (C · macs_per_cycle)   (compute roofline)
+//! ```
+//!
+//! * *Minimum traffic:* the span's weights cross the DRAM channel exactly
+//!   once under every §III-B storage policy; `preload_cycles` is the
+//!   [`dram_transfer`] latency of that copy at the full channel — linear in
+//!   bytes, so it is computed from prefix sums in O(1) per span.
+//! * *Compute roofline:* summing per-chiplet busy cycles, each pipelined
+//!   round processes one sample through every layer of the span, and no
+//!   schedule can execute more than `C · macs_per_cycle` MACs per package
+//!   cycle. The pipeline's critical-path latency `m · max_j cycles_j` is
+//!   ≥ the chiplet-cycle average `m · Σ macs / (C · mpc)`; the fused path
+//!   runs the whole span on one cluster of `R ≤ C` chiplets; the
+//!   sequential baseline's per-layer optimum obeys the same roofline
+//!   layer by layer. Merge layers (Add/Concat) report 0 MACs, so DAG
+//!   spans are bounded correctly too.
+//!
+//! Both terms are exact lower bounds of quantities the evaluators add on
+//! top of further (non-negative) comm/bubble/spill charges, so the sum is
+//! admissible for every method routed through the segment DP. The debug
+//! audit (`SCOPE_PRUNE_AUDIT=1`) re-checks the invariant against every
+//! exactly-evaluated span.
+//!
+//! ## Share throughput upper bound ([`share_rate_ub`])
+//!
+//! The mirror image for the share-split allocators: a model of `M` total
+//! MACs on a `c`-chiplet share can never exceed
+//! `freq · c · macs_per_cycle / M` samples per second, so a share whose
+//! *upper* bound already loses to an incumbent min-rate cannot be part of
+//! a winning split.
+
+use crate::arch::{DramConfig, McmConfig};
+use crate::cost::dram::dram_transfer;
+use crate::model::Network;
+
+/// O(1) admissible span lower bounds from prefix sums (see module docs).
+#[derive(Clone, Debug)]
+pub struct SpanBound {
+    /// `weights[i]` = Σ weight bytes of layers `[0, i)`.
+    weights: Vec<f64>,
+    /// `macs[i]` = Σ MACs of layers `[0, i)`.
+    macs: Vec<f64>,
+    dram: DramConfig,
+    freq: f64,
+    /// Pipeline depth `m` the spans are evaluated at.
+    samples: f64,
+    /// `C · macs_per_cycle` — the package-wide compute roofline.
+    package_macs_per_cycle: f64,
+}
+
+impl SpanBound {
+    pub fn new(net: &Network, mcm: &McmConfig, samples: u64) -> SpanBound {
+        let mut weights = Vec::with_capacity(net.len() + 1);
+        let mut macs = Vec::with_capacity(net.len() + 1);
+        weights.push(0.0);
+        macs.push(0.0);
+        for l in &net.layers {
+            weights.push(weights.last().unwrap() + l.weight_bytes() as f64);
+            macs.push(macs.last().unwrap() + l.macs() as f64);
+        }
+        SpanBound {
+            weights,
+            macs,
+            dram: mcm.dram.clone(),
+            freq: mcm.chiplet.freq_hz,
+            samples: samples as f64,
+            package_macs_per_cycle: (mcm.chiplets as f64)
+                * mcm.chiplet.macs_per_cycle() as f64,
+        }
+    }
+
+    /// Σ weight bytes of span `[lo, hi)`.
+    #[inline]
+    pub fn span_weight_bytes(&self, lo: usize, hi: usize) -> f64 {
+        self.weights[hi] - self.weights[lo]
+    }
+
+    /// Σ MACs of span `[lo, hi)`.
+    #[inline]
+    pub fn span_macs(&self, lo: usize, hi: usize) -> f64 {
+        self.macs[hi] - self.macs[lo]
+    }
+
+    /// Admissible latency lower bound (cycles) for span `[lo, hi)`:
+    /// minimum-traffic preload + the `m`-sample compute roofline.
+    #[inline]
+    pub fn lower_bound(&self, lo: usize, hi: usize) -> f64 {
+        debug_assert!(lo < hi && hi < self.weights.len());
+        let preload =
+            dram_transfer(self.span_weight_bytes(lo, hi), &self.dram, self.freq, 1.0).cycles;
+        let roofline = self.samples * self.span_macs(lo, hi) / self.package_macs_per_cycle;
+        preload + roofline
+    }
+}
+
+/// Throughput *upper* bound (samples/s) of a model with `total_macs` MACs
+/// on a `share`-chiplet slice of `mcm`'s package: the compute roofline
+/// `freq · share · macs_per_cycle / total_macs`. `INFINITY` for MAC-free
+/// workloads (nothing to bound — the caller must not prune on it).
+#[inline]
+pub fn share_rate_ub(total_macs: f64, share: usize, mcm: &McmConfig) -> f64 {
+    if total_macs <= 0.0 {
+        return f64::INFINITY;
+    }
+    mcm.chiplet.freq_hz * (share as f64) * mcm.chiplet.macs_per_cycle() as f64 / total_macs
+}
+
+/// Batch-1 service-latency *lower* bound (ns) of a model with `total_macs`
+/// MACs on a `share`-chiplet group: the same roofline expressed in time.
+/// Used by the serving allocator to discard hybrid allocations that
+/// provably cannot meet a declared p99 SLO before simulating them.
+#[inline]
+pub fn batch1_latency_lb_ns(total_macs: f64, share: usize, mcm: &McmConfig) -> f64 {
+    if share == 0 {
+        return f64::INFINITY;
+    }
+    let cycles =
+        total_macs / ((share as f64) * mcm.chiplet.macs_per_cycle() as f64);
+    cycles / mcm.chiplet.freq_hz * 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn prefix_sums_match_direct_sums() {
+        let net = zoo::alexnet();
+        let mcm = McmConfig::paper_default(16);
+        let b = SpanBound::new(&net, &mcm, 64);
+        for lo in 0..net.len() {
+            for hi in (lo + 1)..=net.len() {
+                let w: f64 = net.layers[lo..hi].iter().map(|l| l.weight_bytes() as f64).sum();
+                let m: f64 = net.layers[lo..hi].iter().map(|l| l.macs() as f64).sum();
+                assert_eq!(b.span_weight_bytes(lo, hi).to_bits(), w.to_bits());
+                assert_eq!(b.span_macs(lo, hi).to_bits(), m.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn bound_is_monotone_and_additive_parts() {
+        let net = zoo::vgg16();
+        let mcm = McmConfig::paper_default(64);
+        let b = SpanBound::new(&net, &mcm, 32);
+        // growing a span can only grow the bound
+        for hi in 2..=net.len() {
+            assert!(b.lower_bound(0, hi) >= b.lower_bound(0, hi - 1));
+        }
+        // the two terms are each individually non-negative
+        let lb = b.lower_bound(0, net.len());
+        let preload =
+            dram_transfer(b.span_weight_bytes(0, net.len()), &mcm.dram, mcm.chiplet.freq_hz, 1.0)
+                .cycles;
+        assert!(lb >= preload);
+        assert!(lb > 0.0);
+    }
+
+    /// The load-bearing property: the bound never exceeds the exact
+    /// evaluated span latency, for every schedulable span, every method
+    /// family the DP serves. (The full-scheduler cross-check runs in
+    /// `scope/mod.rs` tests and under `SCOPE_PRUNE_AUDIT`.)
+    #[test]
+    fn bound_is_admissible_against_the_real_scheduler() {
+        use crate::config::SimOptions;
+        use crate::pipeline::eval_cache::{eval_segment_cached, EvalCache};
+        use crate::pipeline::timeline::EvalContext;
+        use crate::scope::search_segment;
+        use crate::scope::SearchOptions;
+        use crate::storage::StoragePolicy;
+        let net = zoo::alexnet();
+        let mcm = McmConfig::paper_default(16);
+        let sim = SimOptions { samples: 16, threads: 1, ..Default::default() };
+        let b = SpanBound::new(&net, &mcm, sim.samples);
+        let ctx = EvalContext {
+            net: &net,
+            mcm: &mcm,
+            opts: &sim,
+            policy: StoragePolicy::Distributed,
+            dram_fallback: true,
+        };
+        let cache = EvalCache::new();
+        for lo in 0..net.len() {
+            for hi in (lo + 1)..=net.len() {
+                let Some(found) = search_segment(&ctx, lo, hi, sim.samples, SearchOptions::default())
+                else {
+                    continue;
+                };
+                let ev = eval_segment_cached(&ctx, &found.schedule, sim.samples, &cache);
+                if ev.error.is_some() {
+                    continue;
+                }
+                let exact = ev.preload_cycles + ev.pipeline_cycles;
+                let lb = b.lower_bound(lo, hi);
+                assert!(
+                    lb <= exact * (1.0 + 1e-9),
+                    "span [{lo},{hi}): bound {lb} > exact {exact}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn share_bounds_scale_with_the_share() {
+        let mcm = McmConfig::paper_default(64);
+        let macs = 1e9;
+        assert!(share_rate_ub(macs, 32, &mcm) > share_rate_ub(macs, 16, &mcm));
+        // rate ub × batch-1 latency lb = 1e9 ns/s exactly (same roofline)
+        let prod = share_rate_ub(macs, 16, &mcm) * batch1_latency_lb_ns(macs, 16, &mcm);
+        assert!((prod - 1e9).abs() < 1.0, "{prod}");
+        assert_eq!(share_rate_ub(0.0, 16, &mcm), f64::INFINITY);
+        assert_eq!(batch1_latency_lb_ns(macs, 0, &mcm), f64::INFINITY);
+    }
+}

@@ -2,11 +2,13 @@
 //! compute (Timeloop substitute), NoP (BookSim2 substitute), DRAM
 //! (Ramulator2 substitute), and the energy breakdown.
 
+pub mod bound;
 pub mod compute;
 pub mod dram;
 pub mod energy;
 pub mod nop;
 
+pub use bound::{batch1_latency_lb_ns, share_rate_ub, SpanBound};
 pub use compute::{comp_cycles, shard, utilization};
 pub use dram::{dram_transfer, DramCost};
 pub use energy::{compute_energy, EnergyBreakdown};

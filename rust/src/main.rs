@@ -31,6 +31,7 @@ use scope::scope::{co_schedule, schedule_scope, AllocatorKind, MultiOptions, Seg
 use scope::serve::trace::RequestStream;
 use scope::serve::{self, ServeOptions};
 use scope::util::cli::Args;
+use scope::util::json::Json;
 use scope::util::table::{eng, f3, Table};
 
 const HELP: &str = "\
@@ -66,6 +67,12 @@ SUBCOMMANDS
               Deterministic: one seed = one bit-identical report.
   pipeline    [--mode merged|isp|single|all] [--samples N] [--artifacts DIR]
   sensitivity [--net resnet50] [--chiplets 256] [--knob nop|dram]
+  bench-diff  --old <baseline.json> --new <candidate.json>
+              [--metric headline_speedup] [--fail-over 25]   compare two
+              bench --json artifacts; errors when the headline metric
+              regresses past the gate (metrics ending in _secs count as
+              lower-is-better). A missing or \"provisional\" baseline
+              records without gating.
   help
 
 COMMON FLAGS
@@ -85,6 +92,11 @@ COMMON FLAGS
                     cheaper mode per segment — never worse than pipeline).
   --tile-rows <R>   output rows per tile in the fused evaluator's tile
                     graph (default 4; must be >= 1).
+  --prune <B>       branch-and-bound on admissible analytic lower bounds
+                    (segment DP, share-split allocator, serving planner).
+                    Default on; results are bit-identical either way —
+                    '--prune off' forces every candidate through the
+                    evaluator (the escape hatch / A-B baseline).
   --cache-store     process-wide keyed span/cluster cache: batched sweeps
                     pay each distinct span once (bit-identical results).
   --cache-file <f>  persist the cache store's span memos to <f> on exit and
@@ -158,6 +170,12 @@ fn load_config(args: &Args, chiplets: usize) -> Result<Config> {
         "true" | "1" => sim.cache_store = true,
         "false" | "0" => sim.cache_store = false,
         other => bail!("--cache-store expects true/false, got {other:?}"),
+    }
+    match args.str_or("prune", "").as_str() {
+        "" => {}
+        "true" | "1" | "on" => sim.prune = true,
+        "false" | "0" | "off" => sim.prune = false,
+        other => bail!("--prune expects true/false, got {other:?}"),
     }
     match args.str_or("cache-file", "").as_str() {
         "" => {}
@@ -455,15 +473,17 @@ fn cmd_multi(args: &Args) -> Result<()> {
     );
     match r.speedup_vs_tm() {
         Some(x) => println!(
-            "co-schedule vs time-multiplexed: {:.3}x | allocator: {} ({} (model, share) evals)",
+            "co-schedule vs time-multiplexed: {:.3}x | allocator: {} ({} (model, share) evals, {} bounded out)",
             x,
             r.allocator.name(),
-            r.evals
+            r.evals,
+            r.pruned_pairs
         ),
         None => println!(
-            "allocator: {} ({} (model, share) evals); baseline infeasible on the full package",
+            "allocator: {} ({} (model, share) evals, {} bounded out); baseline infeasible on the full package",
             r.allocator.name(),
-            r.evals
+            r.evals,
+            r.pruned_pairs
         ),
     }
     if let Some(s) = &r.store {
@@ -556,8 +576,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
     println!(
-        "allocations: {} simulated ({} schedulable, {} meeting every SLO) | (model, share) evals: {}",
-        r.allocations, r.feasible_allocations, r.slo_feasible_allocations, r.evals
+        "allocations: {} enumerated ({} bounded out, {} schedulable, {} meeting every SLO) | (model, share) evals: {}",
+        r.allocations,
+        r.pruned_allocations,
+        r.feasible_allocations,
+        r.slo_feasible_allocations,
+        r.evals
     );
     let hybrid = r.hybrid.as_ref().ok_or_else(|| anyhow!("no allocation was enumerated"))?;
     println!(
@@ -617,6 +641,87 @@ fn cmd_sensitivity(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `scope bench-diff --old <baseline.json> --new <candidate.json>`:
+/// compare two bench `--json` artifacts field by field and gate on the
+/// headline metric. Metrics whose name ends in `_secs` are treated as
+/// lower-is-better; everything else as higher-is-better. A missing
+/// baseline, or one marked `"provisional": true`, records without
+/// gating so the first real run on new hardware can seed the file.
+fn cmd_bench_diff(args: &Args) -> Result<()> {
+    let old_path = args.str_or("old", "");
+    let new_path = args.str_or("new", "");
+    if old_path.is_empty() || new_path.is_empty() {
+        bail!("bench-diff needs --old <baseline.json> and --new <candidate.json>");
+    }
+    let metric = args.str_or("metric", "headline_speedup");
+    let fail_over = args.f64_or("fail-over", 25.0)?;
+    if !(fail_over >= 0.0) {
+        bail!("--fail-over expects a non-negative percentage, got {fail_over}");
+    }
+    let old_text = match std::fs::read_to_string(&old_path) {
+        Ok(text) => text,
+        Err(_) => {
+            println!("bench-diff: no baseline at {old_path}; recording only (no gate)");
+            return Ok(());
+        }
+    };
+    let new_text = std::fs::read_to_string(&new_path)
+        .map_err(|e| anyhow!("reading --new {new_path}: {e}"))?;
+    let old = Json::parse(&old_text).map_err(|e| anyhow!("parsing --old {old_path}: {e}"))?;
+    let new = Json::parse(&new_text).map_err(|e| anyhow!("parsing --new {new_path}: {e}"))?;
+    let (Json::Obj(old_map), Json::Obj(new_map)) = (&old, &new) else {
+        bail!("bench artifacts must be JSON objects");
+    };
+    // Side-by-side table of every shared numeric top-level field.
+    // BTreeMap iteration keeps the row order deterministic.
+    let mut t = Table::new("bench-diff", &["metric", "old", "new", "delta"]);
+    for (key, old_val) in old_map {
+        let (Json::Num(o), Some(Json::Num(n))) = (old_val, new_map.get(key)) else {
+            continue;
+        };
+        let delta = if *o != 0.0 {
+            format!("{:+.1}%", (n - o) / o * 100.0)
+        } else {
+            "-".to_string()
+        };
+        t.row(vec![key.clone(), f3(*o), f3(*n), delta]);
+    }
+    println!("{t}");
+    if matches!(old_map.get("provisional"), Some(Json::Bool(true))) {
+        println!("bench-diff: baseline {old_path} is provisional; recording only (no gate)");
+        return Ok(());
+    }
+    let o = old
+        .get(&metric)
+        .and_then(|j| j.as_f64())
+        .map_err(|e| anyhow!("--old {old_path} metric {metric:?}: {e}"))?;
+    let n = new
+        .get(&metric)
+        .and_then(|j| j.as_f64())
+        .map_err(|e| anyhow!("--new {new_path} metric {metric:?}: {e}"))?;
+    let lower_is_better = metric.ends_with("_secs");
+    let regression_pct = if o > 0.0 {
+        if lower_is_better {
+            (n - o) / o * 100.0
+        } else {
+            (o - n) / o * 100.0
+        }
+    } else {
+        0.0
+    };
+    if regression_pct > fail_over {
+        bail!(
+            "bench-diff: {metric} regressed {regression_pct:.1}% \
+             ({o:.4} -> {n:.4}, gate {fail_over}%)"
+        );
+    }
+    println!(
+        "bench-diff: {metric} {o:.4} -> {n:.4} ({:+.1}% vs gate {fail_over}%) — ok",
+        -regression_pct
+    );
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env()?;
     let out = match args.subcommand.as_deref() {
@@ -632,6 +737,7 @@ fn main() -> Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("pipeline") => cmd_pipeline(&args),
         Some("sensitivity") => cmd_sensitivity(&args),
+        Some("bench-diff") => cmd_bench_diff(&args),
         Some("help") | None => {
             print!("{HELP}");
             println!();

@@ -35,16 +35,21 @@
 //! Cluster caches are internally synchronized and shared by `Arc`.
 //!
 //! **Persistence.** `--cache-file <path>` (config key `cache_file`)
-//! serializes the span memos to JSON on exit ([`CacheStore::persist`])
-//! and reloads them on startup ([`CacheStore::load_file`]), so repeated
-//! CLI invocations reuse each other's sweeps — a warm-from-disk run
-//! re-schedules **zero** spans. Only memos of the pipeline-schedule type
-//! ([`SegmentSchedule`]) are written (the expensive ones — scope and the
-//! pipelined baselines; the sequential baseline's additive spans are
-//! cheap to recompute). Latencies round-trip exactly: the JSON writer
-//! emits shortest-roundtrip floats. Keys are Fx fingerprints — stable for
-//! a given build of this crate; a file written by a different build or
-//! platform simply never matches and costs nothing but misses.
+//! serializes the store on exit ([`CacheStore::persist`]) and reloads it
+//! on startup ([`CacheStore::load_file`]), so repeated CLI invocations
+//! reuse each other's sweeps — a warm-from-disk run re-schedules **zero**
+//! spans. The on-disk format (v3) is packed little-endian binary —
+//! magic [`MAGIC`], then three sections: the pipeline-schedule span
+//! memos ([`SegmentSchedule`]), the sequential baseline's additive span
+//! memos, and the shared cluster caches ([`EvalCache`]) — floats travel
+//! as raw IEEE bits, so every latency, energy, and cluster evaluation
+//! round-trips exactly. [`CacheStore::to_json`] remains as the readable
+//! export of the span sections (same exact round-trip via
+//! shortest-roundtrip floats), and v2 JSON files from earlier builds
+//! still load (one-way migration: the exit-time persist rewrites them as
+//! v3 binary). Keys are Fx fingerprints — stable for a given build of
+//! this crate; a file written by a different build or platform simply
+//! never matches and costs nothing but misses.
 //!
 //! Enabled by `SimOptions::cache_store` (config key `cache_store`, CLI
 //! `--cache-store`, bench env `SCOPE_CACHE_STORE`); the `multi` and
@@ -60,13 +65,15 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::arch::McmConfig;
 use crate::config::SimOptions;
+use crate::cost::EnergyBreakdown;
 use crate::model::Network;
 use crate::scope::segment_dp::SpanMemo;
 use crate::util::fxhash::{FxHashMap, FxHasher};
 use crate::util::json::{arr, num, obj, s, Json};
 
-use super::eval_cache::EvalCache;
+use super::eval_cache::{ClusterKey, EvalCache, PartBits};
 use super::schedule::{ExecMode, Partition, SegmentSchedule};
+use super::timeline::ClusterEval;
 
 /// Fingerprint a string with the in-crate Fx hasher (process-local in
 /// spirit: deterministic for a given build of this crate, not stable
@@ -121,10 +128,26 @@ impl StoreKey {
     }
 }
 
-/// Cache-file format version ([`CacheStore::to_json`]); bumped whenever
-/// the span/schedule encoding changes. v2 added the per-segment
-/// execution mode — v1 files predate fused execution and cold-start.
-const CACHE_FILE_VERSION: usize = 2;
+/// Cache-file format version; bumped whenever the span/schedule encoding
+/// changes. v2 (JSON) added the per-segment execution mode; v3 moved the
+/// on-disk format to packed binary (exact float bits, plus the
+/// sequential-span and cluster-cache sections). [`CacheStore::load_json`]
+/// still accepts v2 documents so existing cache files migrate on first
+/// load.
+const CACHE_FILE_VERSION: usize = 3;
+
+/// Oldest JSON document version [`CacheStore::load_json`] still restores.
+const OLDEST_JSON_VERSION: usize = 2;
+
+/// First bytes of a v3 binary cache file. The trailing digit is the
+/// format version: a future v4 bumps it, and [`CacheStore::load_file`]
+/// treats an unrecognized `SCOPECH?` prefix as a cold start (expected
+/// lifecycle, like a JSON version mismatch — not corruption).
+const MAGIC: &[u8; 8] = b"SCOPECH3";
+
+/// The sequential baseline's span value: `(total cycles, energy)` — see
+/// `baselines::sequential::sequential_span`.
+type SeqSpan = (f64, EnergyBreakdown);
 
 fn hex(v: u64) -> String {
     format!("{v:016x}")
@@ -174,6 +197,262 @@ fn sched_from_json(j: &Json) -> Result<SegmentSchedule> {
         partitions,
         exec_mode,
     })
+}
+
+// ----------------------------------------------------------------------
+// v3 binary codec — packed little-endian, floats as raw IEEE bits
+// ----------------------------------------------------------------------
+
+/// Append-only little-endian byte writer for the v3 cache format.
+#[derive(Default)]
+struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    /// Floats travel as raw bits — the exact round-trip guarantee.
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    /// Counts and indices; nothing in a cache file approaches 2^32.
+    fn count(&mut self, v: usize) {
+        self.u32(u32::try_from(v).expect("cache section exceeds u32::MAX entries"));
+    }
+}
+
+/// Bounds-checked little-endian reader; every read names what it was
+/// after and the byte offset it failed at, so a truncated or corrupt
+/// file reports its offender instead of a bare parse failure.
+struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    fn new(buf: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.buf.len());
+        match end {
+            Some(end) => {
+                let out = &self.buf[self.pos..end];
+                self.pos = end;
+                Ok(out)
+            }
+            None => Err(anyhow!(
+                "truncated at byte {} reading {what} ({n} bytes needed, {} left)",
+                self.pos,
+                self.buf.len() - self.pos
+            )),
+        }
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+    fn u16(&mut self, what: &str) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2, what)?.try_into().unwrap()))
+    }
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+    fn f64(&mut self, what: &str) -> Result<f64> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+    fn count(&mut self, what: &str) -> Result<usize> {
+        Ok(self.u32(what)? as usize)
+    }
+
+    fn finish(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(anyhow!(
+                "{} trailing bytes after the last section (byte {})",
+                self.buf.len() - self.pos,
+                self.pos
+            ));
+        }
+        Ok(())
+    }
+}
+
+fn write_store_key(w: &mut ByteWriter, key: &StoreKey) {
+    w.u64(key.net);
+    w.u64(key.geom);
+    w.u64(key.method);
+    w.u64(key.sim);
+}
+
+fn read_store_key(r: &mut ByteReader, what: &str) -> Result<StoreKey> {
+    Ok(StoreKey {
+        net: r.u64(what)?,
+        geom: r.u64(what)?,
+        method: r.u64(what)?,
+        sim: r.u64(what)?,
+    })
+}
+
+fn partition_byte(p: Partition) -> u8 {
+    match p {
+        Partition::Wsp => 0,
+        Partition::Isp => 1,
+    }
+}
+
+fn partition_from_byte(b: u8, what: &str) -> Result<Partition> {
+    match b {
+        0 => Ok(Partition::Wsp),
+        1 => Ok(Partition::Isp),
+        other => Err(anyhow!("{what}: bad partition byte {other}")),
+    }
+}
+
+fn mode_byte(m: ExecMode) -> u8 {
+    match m {
+        ExecMode::Pipeline => 0,
+        ExecMode::Fused => 1,
+    }
+}
+
+fn mode_from_byte(b: u8, what: &str) -> Result<ExecMode> {
+    match b {
+        0 => Ok(ExecMode::Pipeline),
+        1 => Ok(ExecMode::Fused),
+        other => Err(anyhow!("{what}: bad exec-mode byte {other}")),
+    }
+}
+
+fn write_sched(w: &mut ByteWriter, sched: &SegmentSchedule) {
+    w.count(sched.lo);
+    w.count(sched.hi);
+    w.count(sched.bounds.len());
+    for &b in &sched.bounds {
+        w.count(b);
+    }
+    w.count(sched.regions.len());
+    for &n in &sched.regions {
+        w.count(n);
+    }
+    w.count(sched.partitions.len());
+    for &p in &sched.partitions {
+        w.u8(partition_byte(p));
+    }
+    w.u8(mode_byte(sched.exec_mode));
+}
+
+fn read_sched(r: &mut ByteReader, what: &str) -> Result<SegmentSchedule> {
+    let lo = r.count(what)?;
+    let hi = r.count(what)?;
+    let nb = r.count(what)?;
+    let mut bounds = Vec::with_capacity(nb);
+    for _ in 0..nb {
+        bounds.push(r.count(what)?);
+    }
+    let nr = r.count(what)?;
+    let mut regions = Vec::with_capacity(nr);
+    for _ in 0..nr {
+        regions.push(r.count(what)?);
+    }
+    let np = r.count(what)?;
+    let mut partitions = Vec::with_capacity(np);
+    for _ in 0..np {
+        partitions.push(partition_from_byte(r.u8(what)?, what)?);
+    }
+    let exec_mode = mode_from_byte(r.u8(what)?, what)?;
+    Ok(SegmentSchedule { lo, hi, bounds, regions, partitions, exec_mode })
+}
+
+fn write_energy(w: &mut ByteWriter, e: &EnergyBreakdown) {
+    w.f64(e.mac_pj);
+    w.f64(e.sram_pj);
+    w.f64(e.nop_pj);
+    w.f64(e.dram_pj);
+}
+
+fn read_energy(r: &mut ByteReader, what: &str) -> Result<EnergyBreakdown> {
+    Ok(EnergyBreakdown {
+        mac_pj: r.f64(what)?,
+        sram_pj: r.f64(what)?,
+        nop_pj: r.f64(what)?,
+        dram_pj: r.f64(what)?,
+    })
+}
+
+fn write_cluster_entry(w: &mut ByteWriter, key: &ClusterKey, eval: &ClusterEval) {
+    w.count(key.lo);
+    w.count(key.hi);
+    w.count(key.start);
+    w.count(key.n);
+    w.u16(key.parts.len);
+    for word in key.parts.bits {
+        w.u64(word);
+    }
+    match key.next {
+        None => w.u8(0),
+        Some((start, n, p)) => {
+            w.u8(1);
+            w.count(start);
+            w.count(n);
+            w.u8(partition_byte(p));
+        }
+    }
+    w.u8(mode_byte(key.mode));
+    w.f64(eval.cycles);
+    write_energy(w, &eval.energy);
+    w.u64(eval.footprint);
+    w.u64(eval.macs);
+    w.count(eval.streamed_layers);
+}
+
+fn read_cluster_entry(r: &mut ByteReader, what: &str) -> Result<(ClusterKey, ClusterEval)> {
+    let lo = r.count(what)?;
+    let hi = r.count(what)?;
+    let start = r.count(what)?;
+    let n = r.count(what)?;
+    let parts_len = r.u16(what)?;
+    if parts_len as usize > PartBits::MAX {
+        return Err(anyhow!("{what}: partition count {parts_len} exceeds {}", PartBits::MAX));
+    }
+    let mut bits = [0u64; 4];
+    for word in &mut bits {
+        *word = r.u64(what)?;
+    }
+    let parts = PartBits { len: parts_len, bits };
+    let next = match r.u8(what)? {
+        0 => None,
+        1 => {
+            let start = r.count(what)?;
+            let n = r.count(what)?;
+            Some((start, n, partition_from_byte(r.u8(what)?, what)?))
+        }
+        other => return Err(anyhow!("{what}: bad next-edge tag {other}")),
+    };
+    let mode = mode_from_byte(r.u8(what)?, what)?;
+    let key = ClusterKey { lo, hi, start, n, parts, next, mode };
+    let eval = ClusterEval {
+        cycles: r.f64(what)?,
+        energy: read_energy(r, what)?,
+        footprint: r.u64(what)?,
+        macs: r.u64(what)?,
+        streamed_layers: r.count(what)?,
+    };
+    Ok((key, eval))
 }
 
 /// Aggregate counters of the store (cumulative over the process life).
@@ -285,11 +564,11 @@ impl CacheStore {
         }
     }
 
-    /// Serialize the pipeline-schedule span memos to `path` (see the
-    /// module docs for scope and format). Returns the spans written.
+    /// Serialize the store to `path` in the v3 binary format (see the
+    /// module docs for scope and layout). Returns the spans written.
     /// The document lands in a process-unique sibling `.tmp` file first
     /// and is renamed into place, so neither a crash mid-write nor two
-    /// processes sharing one cache file can install truncated JSON.
+    /// processes sharing one cache file can install a truncated file.
     /// Current on-disk contents are merged in before writing (existing
     /// entries win), so concurrent processes sharing one cache file
     /// union their spans instead of last-writer-wins dropping them — a
@@ -298,35 +577,61 @@ impl CacheStore {
     pub fn save_file(&self, path: &Path) -> Result<usize> {
         // an unreadable/corrupt existing file is overwritten fresh
         let _ = self.load_file(path);
-        let (json, n) = self.to_json();
+        let (bytes, n) = self.to_bytes();
         let mut tmp = path.as_os_str().to_owned();
         tmp.push(format!(".{}.tmp", std::process::id()));
         let tmp = std::path::PathBuf::from(tmp);
-        std::fs::write(&tmp, json.to_string_compact())
+        std::fs::write(&tmp, bytes)
             .with_context(|| format!("writing cache file {}", tmp.display()))?;
         std::fs::rename(&tmp, path)
             .with_context(|| format!("installing cache file {}", path.display()))?;
         Ok(n)
     }
 
-    /// Restore span memos from `path`; a missing file is an empty cache
-    /// (`Ok(0)`), a corrupt one errors. Returns the spans restored.
+    /// Restore the store from `path`; a missing file is an empty cache
+    /// (`Ok(0)`), a corrupt one errors naming the offending section and
+    /// byte offset. Returns the spans restored. Sniffs the format: v3
+    /// binary by [`MAGIC`], anything else is parsed as a JSON document
+    /// (v2 migration — rewritten as binary on the exit-time persist). A
+    /// `SCOPECH`-prefixed file of a *different* binary generation is a
+    /// cold start, not an error, matching the JSON version-mismatch
+    /// policy.
     pub fn load_file(&self, path: &Path) -> Result<usize> {
         if !path.exists() {
             return Ok(0);
         }
-        let text = std::fs::read_to_string(path)
+        let bytes = std::fs::read(path)
             .with_context(|| format!("reading cache file {}", path.display()))?;
-        let json = Json::parse(&text)
+        if bytes.starts_with(MAGIC) {
+            return self
+                .from_bytes(&bytes)
+                .with_context(|| format!("cache file {}", path.display()));
+        }
+        if bytes.starts_with(b"SCOPECH") {
+            return Ok(0); // another binary generation: cold start
+        }
+        let text = std::str::from_utf8(&bytes).map_err(|_| {
+            anyhow!(
+                "cache file {} is neither v3 binary nor JSON text",
+                path.display()
+            )
+        })?;
+        let json = Json::parse(text)
             .with_context(|| format!("parsing cache file {}", path.display()))?;
         self.load_json(&json)
     }
 
-    /// The persistable view: every [`SegmentSchedule`]-typed span memo,
+    /// The readable JSON export: every [`SegmentSchedule`]-typed span
+    /// memo plus the sequential baseline's additive spans (`"seq"`),
     /// finite-latency entries only. Returns the document and span count.
+    /// The exact same data round-trips through [`CacheStore::to_bytes`] —
+    /// asserted by tests — so this stays a faithful, human-inspectable
+    /// view of what the binary file carries (minus the cluster caches,
+    /// which would dwarf the document).
     pub fn to_json(&self) -> (Json, usize) {
         let map = self.spans.lock().expect("cache store poisoned");
         let mut memos: Vec<Json> = Vec::new();
+        let mut seq: Vec<Json> = Vec::new();
         let mut total = 0usize;
         // BTreeMap-backed JSON objects sort keys, but the memo list order
         // follows the hash map; sort by key fingerprints so the file is
@@ -334,48 +639,262 @@ impl CacheStore {
         let mut keyed: Vec<_> = map.iter().collect();
         keyed.sort_by_key(|(k, _)| **k);
         for (key, boxed) in keyed {
-            let Some(memo) = boxed.downcast_ref::<SpanMemo<SegmentSchedule>>() else {
-                continue; // e.g. the sequential baseline's additive spans
+            let key_fields = |spans: Vec<Json>| {
+                obj(vec![
+                    ("net", s(&hex(key.net))),
+                    ("geom", s(&hex(key.geom))),
+                    ("method", s(&hex(key.method))),
+                    ("sim", s(&hex(key.sim))),
+                    ("spans", arr(spans)),
+                ])
             };
-            let mut spans: Vec<((usize, usize), &Option<(SegmentSchedule, f64)>)> =
-                memo.entries().collect();
-            spans.sort_by_key(|(k, _)| *k);
-            let mut list: Vec<Json> = Vec::with_capacity(spans.len());
-            for ((lo, hi), result) in spans {
-                let mut fields = vec![("lo", num(lo as f64)), ("hi", num(hi as f64))];
-                match result {
-                    None => fields.push(("ok", Json::Bool(false))),
-                    Some((sched, latency)) => {
-                        if !latency.is_finite() {
-                            continue;
+            if let Some(memo) = boxed.downcast_ref::<SpanMemo<SegmentSchedule>>() {
+                let mut spans: Vec<((usize, usize), &Option<(SegmentSchedule, f64)>)> =
+                    memo.entries().collect();
+                spans.sort_by_key(|(k, _)| *k);
+                let mut list: Vec<Json> = Vec::with_capacity(spans.len());
+                for ((lo, hi), result) in spans {
+                    let mut fields = vec![("lo", num(lo as f64)), ("hi", num(hi as f64))];
+                    match result {
+                        None => fields.push(("ok", Json::Bool(false))),
+                        Some((sched, latency)) => {
+                            if !latency.is_finite() {
+                                continue;
+                            }
+                            fields.push(("lat", num(*latency)));
+                            fields.push(("sched", sched_to_json(sched)));
                         }
-                        fields.push(("lat", num(*latency)));
-                        fields.push(("sched", sched_to_json(sched)));
                     }
+                    list.push(obj(fields));
+                    total += 1;
                 }
-                list.push(obj(fields));
-                total += 1;
+                memos.push(key_fields(list));
+            } else if let Some(memo) = boxed.downcast_ref::<SpanMemo<SeqSpan>>() {
+                let mut spans: Vec<((usize, usize), &Option<(SeqSpan, f64)>)> =
+                    memo.entries().collect();
+                spans.sort_by_key(|(k, _)| *k);
+                let mut list: Vec<Json> = Vec::with_capacity(spans.len());
+                for ((lo, hi), result) in spans {
+                    let mut fields = vec![("lo", num(lo as f64)), ("hi", num(hi as f64))];
+                    match result {
+                        None => fields.push(("ok", Json::Bool(false))),
+                        Some(((cycles, energy), latency)) => {
+                            if !latency.is_finite() {
+                                continue;
+                            }
+                            fields.push(("lat", num(*latency)));
+                            fields.push(("cycles", num(*cycles)));
+                            fields.push((
+                                "energy",
+                                arr(vec![
+                                    num(energy.mac_pj),
+                                    num(energy.sram_pj),
+                                    num(energy.nop_pj),
+                                    num(energy.dram_pj),
+                                ]),
+                            ));
+                        }
+                    }
+                    list.push(obj(fields));
+                    total += 1;
+                }
+                seq.push(key_fields(list));
             }
-            memos.push(obj(vec![
-                ("net", s(&hex(key.net))),
-                ("geom", s(&hex(key.geom))),
-                ("method", s(&hex(key.method))),
-                ("sim", s(&hex(key.sim))),
-                ("spans", arr(list)),
-            ]));
         }
         (
-            obj(vec![("version", num(CACHE_FILE_VERSION as f64)), ("memos", arr(memos))]),
+            obj(vec![
+                ("version", num(CACHE_FILE_VERSION as f64)),
+                ("memos", arr(memos)),
+                ("seq", arr(seq)),
+            ]),
             total,
         )
     }
 
-    /// Merge a persisted document into the store (existing entries win —
-    /// memoized values are pure functions of their key). Returns the
-    /// spans restored. A format-version mismatch is expected lifecycle
-    /// (a file written by another generation of this code), not
-    /// corruption: it warm-starts empty (`Ok(0)`) and the file is
-    /// rewritten in the current format on exit.
+    /// Serialize the store into the v3 binary format: [`MAGIC`], then the
+    /// pipeline-schedule span memos, the sequential span memos, and the
+    /// shared cluster caches — each section length-prefixed, entries
+    /// sorted by key, every float as raw IEEE bits. Returns the bytes and
+    /// the span count written (cluster entries ride along uncounted,
+    /// mirroring [`CacheStore::to_json`]'s span accounting).
+    pub fn to_bytes(&self) -> (Vec<u8>, usize) {
+        let mut w = ByteWriter::default();
+        w.buf.extend_from_slice(MAGIC);
+        let mut total = 0usize;
+        {
+            let map = self.spans.lock().expect("cache store poisoned");
+            // section 1: pipeline-schedule span memos
+            let mut sched_memos: Vec<(&StoreKey, &SpanMemo<SegmentSchedule>)> = map
+                .iter()
+                .filter_map(|(k, b)| b.downcast_ref::<SpanMemo<SegmentSchedule>>().map(|m| (k, m)))
+                .collect();
+            sched_memos.sort_by_key(|(k, _)| **k);
+            w.count(sched_memos.len());
+            for (key, memo) in sched_memos {
+                write_store_key(&mut w, key);
+                let mut spans: Vec<_> = memo
+                    .entries()
+                    .filter(|(_, r)| match r {
+                        Some((_, lat)) => lat.is_finite(),
+                        None => true,
+                    })
+                    .collect();
+                spans.sort_by_key(|(k, _)| *k);
+                w.count(spans.len());
+                for ((lo, hi), result) in spans {
+                    w.count(lo);
+                    w.count(hi);
+                    match result {
+                        None => w.u8(0),
+                        Some((sched, lat)) => {
+                            w.u8(1);
+                            w.f64(*lat);
+                            write_sched(&mut w, sched);
+                        }
+                    }
+                    total += 1;
+                }
+            }
+            // section 2: sequential span memos
+            let mut seq_memos: Vec<(&StoreKey, &SpanMemo<SeqSpan>)> = map
+                .iter()
+                .filter_map(|(k, b)| b.downcast_ref::<SpanMemo<SeqSpan>>().map(|m| (k, m)))
+                .collect();
+            seq_memos.sort_by_key(|(k, _)| **k);
+            w.count(seq_memos.len());
+            for (key, memo) in seq_memos {
+                write_store_key(&mut w, key);
+                let mut spans: Vec<_> = memo
+                    .entries()
+                    .filter(|(_, r)| match r {
+                        Some((_, lat)) => lat.is_finite(),
+                        None => true,
+                    })
+                    .collect();
+                spans.sort_by_key(|(k, _)| *k);
+                w.count(spans.len());
+                for ((lo, hi), result) in spans {
+                    w.count(lo);
+                    w.count(hi);
+                    match result {
+                        None => w.u8(0),
+                        Some(((cycles, energy), lat)) => {
+                            w.u8(1);
+                            w.f64(*lat);
+                            w.f64(*cycles);
+                            write_energy(&mut w, energy);
+                        }
+                    }
+                    total += 1;
+                }
+            }
+        }
+        // section 3: shared cluster caches
+        let clusters = self.clusters.lock().expect("cache store poisoned");
+        let mut caches: Vec<_> = clusters.iter().collect();
+        caches.sort_by_key(|(k, _)| **k);
+        w.count(caches.len());
+        for (key, cache) in caches {
+            write_store_key(&mut w, key);
+            let entries = cache.entries_sorted();
+            w.count(entries.len());
+            for (ck, ev) in &entries {
+                write_cluster_entry(&mut w, ck, ev);
+            }
+        }
+        (w.buf, total)
+    }
+
+    /// Parse and merge a v3 binary document (the inverse of
+    /// [`CacheStore::to_bytes`]). The whole document is parsed before
+    /// anything touches the store — same all-or-nothing policy as
+    /// [`CacheStore::load_json`]. Returns the spans restored.
+    pub fn from_bytes(&self, bytes: &[u8]) -> Result<usize> {
+        let mut r = ByteReader::new(bytes);
+        let magic = r.take(MAGIC.len(), "magic")?;
+        if magic != MAGIC {
+            return Err(anyhow!("bad magic {magic:?} (expected {MAGIC:?})"));
+        }
+        let mut sched: Vec<(StoreKey, SpanMemo<SegmentSchedule>)> = Vec::new();
+        let n_memos = r.count("schedule-memo count")?;
+        for i in 0..n_memos {
+            let what = format!("schedule memo {i}");
+            let key = read_store_key(&mut r, &what)?;
+            let n_spans = r.count(&what)?;
+            let mut memo: SpanMemo<SegmentSchedule> = SpanMemo::new();
+            for j in 0..n_spans {
+                let what = format!("schedule memo {i} span {j}");
+                let lo = r.count(&what)?;
+                let hi = r.count(&what)?;
+                let result = match r.u8(&what)? {
+                    0 => None,
+                    1 => {
+                        let lat = r.f64(&what)?;
+                        Some((read_sched(&mut r, &what)?, lat))
+                    }
+                    other => return Err(anyhow!("{what}: bad span tag {other}")),
+                };
+                memo.restore(lo, hi, result);
+            }
+            sched.push((key, memo));
+        }
+        let mut seq: Vec<(StoreKey, SpanMemo<SeqSpan>)> = Vec::new();
+        let n_memos = r.count("sequential-memo count")?;
+        for i in 0..n_memos {
+            let what = format!("sequential memo {i}");
+            let key = read_store_key(&mut r, &what)?;
+            let n_spans = r.count(&what)?;
+            let mut memo: SpanMemo<SeqSpan> = SpanMemo::new();
+            for j in 0..n_spans {
+                let what = format!("sequential memo {i} span {j}");
+                let lo = r.count(&what)?;
+                let hi = r.count(&what)?;
+                let result = match r.u8(&what)? {
+                    0 => None,
+                    1 => {
+                        let lat = r.f64(&what)?;
+                        let cycles = r.f64(&what)?;
+                        Some(((cycles, read_energy(&mut r, &what)?), lat))
+                    }
+                    other => return Err(anyhow!("{what}: bad span tag {other}")),
+                };
+                memo.restore(lo, hi, result);
+            }
+            seq.push((key, memo));
+        }
+        let mut clusters: Vec<(StoreKey, Vec<(ClusterKey, ClusterEval)>)> = Vec::new();
+        let n_caches = r.count("cluster-cache count")?;
+        for i in 0..n_caches {
+            let what = format!("cluster cache {i}");
+            let key = read_store_key(&mut r, &what)?;
+            let n_entries = r.count(&what)?;
+            let mut entries = Vec::new();
+            for j in 0..n_entries {
+                let what = format!("cluster cache {i} entry {j}");
+                entries.push(read_cluster_entry(&mut r, &what)?);
+            }
+            clusters.push((key, entries));
+        }
+        r.finish()?;
+        // everything parsed — now merge
+        let mut total = self.merge_span_memos(sched);
+        total += self.merge_span_memos(seq);
+        for (key, entries) in clusters {
+            let cache = self.cluster_cache(key);
+            for (ck, ev) in entries {
+                cache.insert_restored(ck, ev);
+            }
+        }
+        Ok(total)
+    }
+
+    /// Merge a persisted JSON document into the store (existing entries
+    /// win — memoized values are pure functions of their key). Returns
+    /// the spans restored. Accepts the current version and v2 (the last
+    /// JSON-on-disk format — the migration path); anything else is
+    /// expected lifecycle (a file written by another generation of this
+    /// code), not corruption: it warm-starts empty (`Ok(0)`) and the
+    /// file is rewritten in the current format on exit.
     ///
     /// The whole document is parsed before anything touches the store, so
     /// a mangled entry mid-file leaves the store untouched (a partial
@@ -383,17 +902,20 @@ impl CacheStore {
     /// the file's remaining valid spans).
     pub fn load_json(&self, json: &Json) -> Result<usize> {
         let version = json.get("version")?.as_usize()?;
-        if version != CACHE_FILE_VERSION {
+        if !(OLDEST_JSON_VERSION..=CACHE_FILE_VERSION).contains(&version) {
             return Ok(0);
         }
-        let mut parsed: Vec<(StoreKey, SpanMemo<SegmentSchedule>)> = Vec::new();
-        for (i, entry) in json.get("memos")?.as_arr()?.iter().enumerate() {
-            let key = StoreKey {
+        let parse_key = |entry: &Json| -> Result<StoreKey> {
+            Ok(StoreKey {
                 net: from_hex(entry.get("net")?)?,
                 geom: from_hex(entry.get("geom")?)?,
                 method: from_hex(entry.get("method")?)?,
                 sim: from_hex(entry.get("sim")?)?,
-            };
+            })
+        };
+        let mut parsed: Vec<(StoreKey, SpanMemo<SegmentSchedule>)> = Vec::new();
+        for (i, entry) in json.get("memos")?.as_arr()?.iter().enumerate() {
+            let key = parse_key(entry)?;
             let mut memo: SpanMemo<SegmentSchedule> = SpanMemo::new();
             for (j, span) in entry.get("spans")?.as_arr()?.iter().enumerate() {
                 let at = || format!("memo {i} span {j}");
@@ -423,21 +945,75 @@ impl CacheStore {
             }
             parsed.push((key, memo));
         }
+        // the sequential section arrived with v3; absent in v2 documents
+        let mut seq: Vec<(StoreKey, SpanMemo<SeqSpan>)> = Vec::new();
+        if let Ok(entries) = json.get("seq") {
+            for (i, entry) in entries.as_arr()?.iter().enumerate() {
+                let key = parse_key(entry)?;
+                let mut memo: SpanMemo<SeqSpan> = SpanMemo::new();
+                for (j, span) in entry.get("spans")?.as_arr()?.iter().enumerate() {
+                    let at = || format!("seq memo {i} span {j}");
+                    let lo = span.get("lo")?.as_usize().with_context(at)?;
+                    let hi = span.get("hi")?.as_usize().with_context(at)?;
+                    let result = match span.get("cycles") {
+                        Ok(cycles) => {
+                            let latency = span.get("lat")?.as_f64().with_context(at)?;
+                            let e = span.get("energy")?.as_arr().with_context(at)?;
+                            if e.len() != 4 {
+                                return Err(anyhow!("{}: energy needs 4 entries", at()));
+                            }
+                            let energy = EnergyBreakdown {
+                                mac_pj: e[0].as_f64().with_context(at)?,
+                                sram_pj: e[1].as_f64().with_context(at)?,
+                                nop_pj: e[2].as_f64().with_context(at)?,
+                                dram_pj: e[3].as_f64().with_context(at)?,
+                            };
+                            Some(((cycles.as_f64().with_context(at)?, energy), latency))
+                        }
+                        Err(_) => match span.get("ok") {
+                            Ok(Json::Bool(false)) => None,
+                            _ => {
+                                return Err(anyhow!(
+                                    "{}: span has neither a value nor the \
+                                     \"ok\": false marker",
+                                    at()
+                                ))
+                            }
+                        },
+                    };
+                    memo.restore(lo, hi, result);
+                }
+                seq.push((key, memo));
+            }
+        }
         // everything parsed — now merge
+        let mut total = self.merge_span_memos(parsed);
+        total += self.merge_span_memos(seq);
+        Ok(total)
+    }
+
+    /// Merge parsed span memos into the store (existing entries win —
+    /// memoized values are pure functions of their key). An incompatible
+    /// live memo keeps its key; the loaded spans for it are dropped (and
+    /// not counted as restored). Returns the spans merged in.
+    fn merge_span_memos<S: Clone + Send + 'static>(
+        &self,
+        parsed: Vec<(StoreKey, SpanMemo<S>)>,
+    ) -> usize {
         let mut total = 0usize;
         for (key, memo) in parsed {
             let restored = memo.len();
             let mut map = self.spans.lock().expect("cache store poisoned");
             let compatible = map
                 .get(&key)
-                .map(|existing| existing.is::<SpanMemo<SegmentSchedule>>())
+                .map(|existing| existing.is::<SpanMemo<S>>())
                 .unwrap_or(true);
             if compatible {
                 match map.remove(&key) {
                     Some(boxed) => {
                         // a live memo owns this key: merge, existing wins
                         let mut live = *boxed
-                            .downcast::<SpanMemo<SegmentSchedule>>()
+                            .downcast::<SpanMemo<S>>()
                             .expect("type checked above");
                         live.absorb(memo);
                         map.insert(key, Box::new(live));
@@ -448,10 +1024,8 @@ impl CacheStore {
                 }
                 total += restored;
             }
-            // an incompatible live memo keeps its key; the loaded spans
-            // for it are dropped (and not counted as restored)
         }
-        Ok(total)
+        total
     }
 
     pub fn snapshot(&self) -> StoreSnapshot {
@@ -694,6 +1268,166 @@ mod tests {
         let _ = std::fs::remove_file(&path);
         // no persist path → persist is a no-op
         assert!(CacheStore::new().persist().unwrap().is_none());
+    }
+
+    /// A populated store with all three section kinds (schedule memos,
+    /// sequential memos, a cluster cache) for the binary round-trip tests.
+    fn populated_store() -> (CacheStore, StoreKey, StoreKey, StoreKey) {
+        let store = CacheStore::new();
+        let sim = SimOptions::default();
+        let mcm = McmConfig::paper_default(16);
+        let sched_key = StoreKey::new(&alexnet(), &mcm, "scope", &sim);
+        store.with_span_memo(sched_key, |memo: &mut SpanMemo<SegmentSchedule>| {
+            let mut eval = |lo: usize, hi: usize| match lo {
+                0 => Some((demo_sched(lo, hi), 123.456_789_012_345_f64)),
+                2 => Some((demo_fused(lo, hi), 4096.0)),
+                _ => None,
+            };
+            memo.get_or_eval(0, 2, &mut eval);
+            memo.get_or_eval(2, 5, &mut eval);
+            memo.get_or_eval(5, 7, &mut eval);
+        });
+        let seq_key = StoreKey::new(&alexnet(), &mcm, "sequential", &sim);
+        store.with_span_memo(seq_key, |memo: &mut SpanMemo<SeqSpan>| {
+            let mut eval = |lo: usize, hi: usize| match lo {
+                0 => Some((
+                    (
+                        0.1 + 0.2, // a non-representable sum: bits must survive
+                        EnergyBreakdown {
+                            mac_pj: 1.5,
+                            sram_pj: 0.125,
+                            nop_pj: 1.0 / 3.0,
+                            dram_pj: 7e9,
+                        },
+                    ),
+                    0.1 + 0.2,
+                )),
+                _ => None,
+            };
+            memo.get_or_eval(0, 3, &mut eval);
+            memo.get_or_eval(3, 4, &mut eval);
+        });
+        let cluster_key = StoreKey::new(&scopenet(), &mcm, "scope", &sim);
+        let cache = store.cluster_cache(cluster_key);
+        for j in 0..2 {
+            let key = super::ClusterKey::of(&demo_sched(0, 5), j);
+            cache.insert_restored(
+                key,
+                ClusterEval {
+                    cycles: 1234.5 + j as f64 / 3.0,
+                    energy: EnergyBreakdown {
+                        mac_pj: 1.0,
+                        sram_pj: 2.0,
+                        nop_pj: 3.0,
+                        dram_pj: 4.0,
+                    },
+                    footprint: 1 << 20,
+                    macs: 987_654_321,
+                    streamed_layers: j,
+                },
+            );
+        }
+        (store, sched_key, seq_key, cluster_key)
+    }
+
+    #[test]
+    fn binary_round_trip_preserves_every_section_bit_for_bit() {
+        let (store, _, _, cluster_key) = populated_store();
+        let (bytes, written) = store.to_bytes();
+        assert_eq!(written, 5, "3 schedule + 2 sequential spans");
+        assert_eq!(&bytes[..8], MAGIC);
+        let warm = CacheStore::new();
+        assert_eq!(warm.from_bytes(&bytes).unwrap(), 5);
+        // the readable export of the reloaded store matches the original
+        // exactly — the round-trip property the format is built around
+        let (orig_json, _) = store.to_json();
+        let (warm_json, _) = warm.to_json();
+        assert_eq!(
+            warm_json.to_string_compact(),
+            orig_json.to_string_compact(),
+            "JSON export must survive the binary round trip bit-for-bit"
+        );
+        // cluster entries restored too, values bit-exact
+        let orig: Vec<_> = store.cluster_cache(cluster_key).entries_sorted();
+        let restored: Vec<_> = warm.cluster_cache(cluster_key).entries_sorted();
+        assert_eq!(orig.len(), 2);
+        assert_eq!(restored.len(), 2);
+        for ((ka, va), (kb, vb)) in orig.iter().zip(&restored) {
+            assert_eq!(ka, kb);
+            assert_eq!(va.cycles.to_bits(), vb.cycles.to_bits());
+            assert_eq!(va.energy, vb.energy);
+            assert_eq!(
+                (va.footprint, va.macs, va.streamed_layers),
+                (vb.footprint, vb.macs, vb.streamed_layers)
+            );
+        }
+        // and a re-serialization of the warm store is byte-identical
+        let (rebytes, rewritten) = warm.to_bytes();
+        assert_eq!(rewritten, 5);
+        assert_eq!(rebytes, bytes, "binary format must be deterministic");
+    }
+
+    #[test]
+    fn corrupt_binary_files_name_their_offender() {
+        let (store, ..) = populated_store();
+        let (bytes, _) = store.to_bytes();
+        let fresh = || CacheStore::new();
+        // truncation anywhere inside a section names it with the offset
+        let err = fresh().from_bytes(&bytes[..bytes.len() - 3]).unwrap_err().to_string();
+        assert!(err.contains("truncated at byte"), "{err}");
+        let err = fresh().from_bytes(&bytes[..9]).unwrap_err().to_string();
+        assert!(
+            err.contains("truncated at byte") && err.contains("count"),
+            "{err}"
+        );
+        // a mangled span tag is named, and the store stays untouched
+        let mut bad = bytes.clone();
+        // magic(8) + memo count(4) + store key(32) + span count(4)
+        //  + lo(4) + hi(4) = offset 56 is the first span's tag byte
+        assert_eq!(bad[56], 1, "layout check: first span is schedulable");
+        bad[56] = 9;
+        let victim = fresh();
+        let err = victim.from_bytes(&bad).unwrap_err().to_string();
+        assert!(err.contains("bad span tag 9"), "{err}");
+        assert_eq!(victim.snapshot().span_slots, 0, "all-or-nothing restore");
+        // trailing garbage is rejected (a concatenated/overwritten file)
+        let mut long = bytes.clone();
+        long.push(0);
+        let err = fresh().from_bytes(&long).unwrap_err().to_string();
+        assert!(err.contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn v2_json_files_migrate_into_the_binary_store() {
+        // a file as the previous release wrote it: version 2, no seq
+        // section, schedule spans only
+        let v2 = r#"{"version": 2, "memos": [{"net": "00000000000000aa",
+            "geom": "00000000000000bb", "method": "00000000000000cc",
+            "sim": "00000000000000dd", "spans": [
+              {"lo": 0, "hi": 2, "lat": 7.5, "sched": {"lo": 0, "hi": 2,
+               "bounds": [0, 1, 2], "regions": [3, 3], "parts": "WI",
+               "mode": "pipeline"}},
+              {"lo": 2, "hi": 4, "ok": false}]}]}"#;
+        let path = std::env::temp_dir()
+            .join(format!("scope-cache-v2-migrate-{}.json", std::process::id()));
+        std::fs::write(&path, v2).unwrap();
+        let store = CacheStore::new();
+        assert_eq!(store.load_file(&path).unwrap(), 2, "v2 spans restored");
+        // the exit-time persist rewrites the file as v3 binary...
+        assert_eq!(store.save_file(&path).unwrap(), 2);
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[..8], MAGIC, "rewritten as v3 binary");
+        // ...which a fresh store loads with everything intact
+        let warm = CacheStore::new();
+        assert_eq!(warm.load_file(&path).unwrap(), 2);
+        let key = StoreKey { net: 0xaa, geom: 0xbb, method: 0xcc, sim: 0xdd };
+        warm.with_span_memo(key, |memo: &mut SpanMemo<SegmentSchedule>| {
+            let mut eval = |_: usize, _: usize| panic!("must be restored");
+            let a = memo.get_or_eval(0, 2, &mut eval).expect("restored span");
+            assert_eq!(a.1.to_bits(), 7.5f64.to_bits());
+            assert!(memo.get_or_eval(2, 4, &mut eval).is_none());
+        });
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

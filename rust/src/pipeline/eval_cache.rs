@@ -28,36 +28,106 @@ use super::schedule::{ExecMode, Partition, SegmentSchedule};
 use super::timeline::{assemble_segment, eval_cluster, ClusterEval, EvalContext, SegmentEval};
 use crate::util::fxhash::FxHashMap;
 
+/// A cluster's partition slice packed into four words (`Isp` = 1,
+/// `Wsp` = 0, indexed from the cluster's `lo`). This is what lets
+/// [`ClusterKey`] be `Copy`: the DSE's inner loop builds and hashes a key
+/// per `Forward()` candidate, and the `Vec<Partition>` it used to carry
+/// meant a heap allocation + pointer-chasing hash on every one of them.
+/// Packed, the whole key lives in registers/cache lines and hashing is
+/// four word loads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PartBits {
+    /// Number of packed partitions (cluster layer count).
+    pub(crate) len: u16,
+    /// Bit `i` of the concatenated words = partition of layer `lo + i`.
+    pub(crate) bits: [u64; 4],
+}
+
+impl PartBits {
+    /// Hard capacity: 4 × 64 layers per cluster. Every zoo network is far
+    /// under this; exceeding it panics loudly rather than truncating the
+    /// key (a truncated key would silently alias distinct clusters).
+    pub const MAX: usize = 256;
+
+    /// Pack a partition slice (panics past [`PartBits::MAX`] entries).
+    #[inline]
+    pub fn pack(parts: &[Partition]) -> PartBits {
+        assert!(
+            parts.len() <= Self::MAX,
+            "cluster has {} layers; PartBits packs at most {}",
+            parts.len(),
+            Self::MAX
+        );
+        let mut bits = [0u64; 4];
+        for (i, p) in parts.iter().enumerate() {
+            if matches!(p, Partition::Isp) {
+                bits[i / 64] |= 1u64 << (i % 64);
+            }
+        }
+        PartBits { len: parts.len() as u16, bits }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Partition of layer `lo + i` of the owning cluster.
+    #[inline]
+    pub fn get(&self, i: usize) -> Partition {
+        assert!(i < self.len(), "partition index {i} out of {}", self.len());
+        if self.bits[i / 64] >> (i % 64) & 1 == 1 {
+            Partition::Isp
+        } else {
+            Partition::Wsp
+        }
+    }
+
+    /// The packed partitions, in layer order.
+    pub fn iter(&self) -> impl Iterator<Item = Partition> + '_ {
+        (0..self.len()).map(move |i| self.get(i))
+    }
+}
+
 /// Everything a cluster evaluation depends on besides the (per-search
 /// constant) context: its global layer range, its region geometry, its
 /// layers' partitions, and — because the last layer's communication phase
 /// looks ahead — the next cluster's region geometry and first partition.
-#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+///
+/// `Copy` (nothing heap-allocated — partitions are a [`PartBits`]): the
+/// hot loop constructs one per memoized `Forward()` without allocating.
+/// `Ord` so persisted cache files ([`super::cache_store`]) can list
+/// cluster entries deterministically.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct ClusterKey {
     /// Global layer range `[lo, hi)` of the cluster.
-    lo: usize,
-    hi: usize,
+    pub(crate) lo: usize,
+    pub(crate) hi: usize,
     /// Region geometry: zigzag start + chiplet count.
-    start: usize,
-    n: usize,
-    /// Partitions of layers `lo..hi`.
-    parts: Vec<Partition>,
+    pub(crate) start: usize,
+    pub(crate) n: usize,
+    /// Partitions of layers `lo..hi`, packed.
+    pub(crate) parts: PartBits,
     /// `(next region start, next region size, partition of layer hi)` when
     /// the cluster is not the segment's last — the hand-off edge the last
     /// layer's `comm_phase` crosses. `None` for the final cluster (no NoP
     /// phase is charged there).
-    next: Option<(usize, usize, Partition)>,
+    pub(crate) next: Option<(usize, usize, Partition)>,
     /// Execution mode of the owning segment: a fused evaluation of the
     /// same layer range / region / partitions is a different result than
     /// the pipeline one, so the discriminant keeps them apart.
-    mode: ExecMode,
+    pub(crate) mode: ExecMode,
 }
 
 impl ClusterKey {
     /// Key of cluster `j` inside `seg`.
+    #[inline]
     pub fn of(seg: &SegmentSchedule, j: usize) -> ClusterKey {
         let (lo, hi) = seg.cluster_range(j);
-        let parts = seg.partitions[lo - seg.lo..hi - seg.lo].to_vec();
+        let parts = PartBits::pack(&seg.partitions[lo - seg.lo..hi - seg.lo]);
         let next = if hi < seg.hi {
             // bounds are strictly ascending, so layer `hi` opens cluster j+1
             Some((seg.region_start(j + 1), seg.regions[j + 1], seg.partition(hi)))
@@ -138,6 +208,28 @@ impl EvalCache {
             .expect("eval cache poisoned")
             .insert(key, val.clone());
         val
+    }
+
+    /// Snapshot every memoized entry, sorted by key — the deterministic
+    /// iteration order cache-file persistence needs
+    /// ([`super::cache_store`]).
+    pub(crate) fn entries_sorted(&self) -> Vec<(ClusterKey, ClusterEval)> {
+        let map = self.map.read().expect("eval cache poisoned");
+        let mut entries: Vec<_> = map.iter().map(|(k, v)| (*k, v.clone())).collect();
+        entries.sort_by(|(a, _), (b, _)| a.cmp(b));
+        entries
+    }
+
+    /// Install an entry restored from a persisted cache file (existing
+    /// entries win, matching the span-memo merge policy). Restored values
+    /// are exact evaluator outputs (purity is what makes the cache sound
+    /// at all), so hits on them stay bit-identical.
+    pub(crate) fn insert_restored(&self, key: ClusterKey, val: ClusterEval) {
+        self.map
+            .write()
+            .expect("eval cache poisoned")
+            .entry(key)
+            .or_insert(val);
     }
 }
 
@@ -235,6 +327,31 @@ mod tests {
         assert_eq!(cache.misses(), 3);
         assert_eq!(cache.hits(), 6);
         assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn part_bits_round_trip_across_word_boundaries() {
+        // patterns straddling the 64-bit word boundary must unpack exactly
+        for len in [0usize, 1, 63, 64, 65, 127, 128, 200, 256] {
+            let parts: Vec<Partition> = (0..len)
+                .map(|i| if (i * 7 + i / 64) % 3 == 0 { Partition::Isp } else { Partition::Wsp })
+                .collect();
+            let packed = PartBits::pack(&parts);
+            assert_eq!(packed.len(), len);
+            let unpacked: Vec<Partition> = packed.iter().collect();
+            assert_eq!(unpacked, parts, "len {len}");
+            for (i, &p) in parts.iter().enumerate() {
+                assert_eq!(packed.get(i), p, "len {len} index {i}");
+            }
+        }
+        // equal slices pack equal, differing slices pack different
+        let a = PartBits::pack(&[Partition::Wsp, Partition::Isp, Partition::Wsp]);
+        let b = PartBits::pack(&[Partition::Wsp, Partition::Isp, Partition::Wsp]);
+        let c = PartBits::pack(&[Partition::Wsp, Partition::Isp, Partition::Isp]);
+        let d = PartBits::pack(&[Partition::Wsp, Partition::Isp]);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(a, d, "length is part of the identity, not just set bits");
     }
 
     #[test]

@@ -10,7 +10,7 @@ pub mod schedule;
 pub mod timeline;
 
 pub use cache_store::{CacheStore, StoreKey, StoreSnapshot};
-pub use eval_cache::{eval_segment_cached, ClusterKey, EvalCache};
+pub use eval_cache::{eval_segment_cached, ClusterKey, EvalCache, PartBits};
 pub use schedule::{ExecMode, ExecModeChoice, Partition, Schedule, SegmentSchedule};
 pub use timeline::{
     boundary_spill, dag_skip_traffic, eval_cluster, eval_layer, eval_schedule,

@@ -6,7 +6,7 @@ use crate::model::Network;
 
 /// Intra-layer partitioning scheme (paper §II-B; OSP excluded as in the
 /// paper).
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Partition {
     /// Input-shared: inputs replicated, weights split on output channels.
     Isp,
@@ -15,7 +15,7 @@ pub enum Partition {
 }
 
 /// How a segment executes on its chiplet region(s).
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum ExecMode {
     /// Merged-pipeline execution (paper Equ. 1–3, 7): clusters form
     /// pipeline stages, samples stream through with `(m + N − 1)` fills.

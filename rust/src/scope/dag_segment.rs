@@ -63,6 +63,13 @@ impl<P: SegmentCost> SegmentCost for CutCost<'_, P> {
             None => Some((sched, lat)),
         }
     }
+
+    /// The surcharge is exactly additive on the exact cost, so adding it
+    /// to the inner bound keeps admissibility (and tightens the bound).
+    fn lower_bound(&self, lo: usize, hi: usize) -> Option<f64> {
+        let inner = self.inner.lower_bound(lo, hi)?;
+        Some(inner + self.entry.get(&lo).copied().unwrap_or(0.0))
+    }
 }
 
 /// The segmenter entry point for every method: boundary domain restriction

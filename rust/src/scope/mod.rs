@@ -35,7 +35,7 @@ pub use multi_model::{co_schedule, AllocatorKind, MultiModelResult, MultiOptions
 pub use search::{search_segment, search_segment_cached, SearchOptions, SegmentSearch};
 pub use segment_dp::{
     search_segments_opts, SegmentCost, SegmenterKind, SegmenterOptions, SegmenterReport,
-    SegmenterResult, SpanStats,
+    SegmenterResult, SpanStats, WithBound,
 };
 
 /// A scheduling method's outcome (uniform across Scope and baselines).
@@ -140,6 +140,13 @@ pub fn schedule_scope_opts(
             (p, f) => p.or(f),
         }
     };
+    // Arm the DP's branch-and-bound corridor with the analytic span bound
+    // (preload minimum traffic + compute roofline). The wrapper is always
+    // attached; `SimOptions::prune` (via `seg_opts.prune`) decides whether
+    // the corridor actually runs, so on/off stays a pure search-control
+    // knob with bit-identical results.
+    let bound = crate::cost::SpanBound::new(net, mcm, opts.samples);
+    let provider = WithBound { inner: &provider, bound };
     let found = search_segments_dag(
         net,
         mcm,
@@ -362,6 +369,35 @@ mod tests {
             let dp_modes: Vec<ExecMode> =
                 sched.segments.iter().map(|s| s.exec_mode).collect();
             assert_eq!(dp_modes, ex_modes);
+        }
+    }
+
+    #[test]
+    fn pruned_scope_is_bit_identical_to_unpruned_with_the_real_scheduler() {
+        // The acceptance invariant of the branch-and-bound corridor, run
+        // against the full Algorithm-1 scheduler rather than a synthetic
+        // provider: pruning is a pure search-control knob.
+        for net in [alexnet(), resnet18()] {
+            let mcm = McmConfig::paper_default(16);
+            for exec_mode in [ExecModeChoice::Pipeline, ExecModeChoice::Auto] {
+                let base = SimOptions {
+                    segmenter: SegmenterKind::Dp,
+                    exec_mode,
+                    ..Default::default()
+                };
+                let on = schedule_scope(&net, &mcm, &SimOptions { prune: true, ..base.clone() });
+                let off = schedule_scope(&net, &mcm, &SimOptions { prune: false, ..base });
+                assert!(on.eval.is_valid() && off.eval.is_valid(), "{}", net.name);
+                assert_eq!(on.schedule, off.schedule, "{} {exec_mode:?}", net.name);
+                assert_eq!(
+                    on.eval.total_cycles.to_bits(),
+                    off.eval.total_cycles.to_bits(),
+                    "{} {exec_mode:?}",
+                    net.name
+                );
+                let off_rep = off.segmenter.expect("report");
+                assert_eq!(off_rep.stats.bounded_out, 0, "prune off must not bound");
+            }
         }
     }
 

@@ -51,6 +51,14 @@
 //!   `tests/multi_model.rs`).
 //!
 //! Ties prefer fewer chiplets, then the lexicographically earlier split.
+//! With `SimOptions::prune` on (the default), the table itself is
+//! branch-and-bound filtered before any scheduling runs: an optimistic
+//! split seeded from the compute-roofline rate bound
+//! ([`share_rate_ub`]) is evaluated exactly, and every (model, share)
+//! pair that no budget-feasible split can carry past that incumbent —
+//! even on the bounds — is skipped (`MultiModelResult::pruned_pairs`).
+//! The filter is lossless (see `share_keep_mask`), so winners, rates,
+//! and the TM baseline stay bit-identical with pruning on or off.
 //! Results are bit-identical at every thread count, and — with
 //! `SimOptions::cache_store` on (the `multi` subcommand's default) —
 //! repeated models and repeated shares pay each distinct span once
@@ -76,6 +84,7 @@
 use crate::arch::{McmConfig, Mesh};
 use crate::baselines::{run_method, METHOD_NAMES};
 use crate::config::SimOptions;
+use crate::cost::bound::share_rate_ub;
 use crate::cost::dram::dram_transfer;
 use crate::dse::exhaustive::for_each_share_split;
 use crate::dse::parallel::par_map;
@@ -175,6 +184,11 @@ pub struct MultiModelResult {
     pub allocator: AllocatorKind,
     /// (model, share) schedulings paid for the allocation table.
     pub evals: usize,
+    /// (model, share) pairs the analytic rate bound
+    /// ([`share_rate_ub`]) proved irrelevant — skipped without scheduling.
+    /// `evals + pruned_pairs` always equals the full table size; 0 with
+    /// `SimOptions::prune` off.
+    pub pruned_pairs: usize,
     /// Cache-store counters after the run (`SimOptions::cache_store`).
     pub store: Option<StoreSnapshot>,
     pub error: Option<String>,
@@ -487,6 +501,107 @@ fn dp_alloc(
     Some((split, best_rate))
 }
 
+/// Branch-and-bound filter for the (model, share) evaluation table.
+///
+/// `ub[i][j]` is an admissible upper bound on model `i`'s weighted rate at
+/// share `j` ([`share_rate_ub`] — the compute roofline, so `ub ≥` the
+/// exact rate); `incumbent` is the *exact* min-rate of one evaluated
+/// split. Pair `(i, j)` is kept iff some budget-feasible complete split
+/// through it reaches `incumbent` on the bounds:
+///
+/// ```text
+/// through(i, j) = max over splits S ∋ (i, j) of min over S of ub
+/// ```
+///
+/// computed with forward/backward max-min DPs over (model prefix,
+/// chiplets used). Dropping `through < incumbent` pairs is lossless: any
+/// split using such a pair has exact min-rate `≤ through < incumbent ≤`
+/// the optimum, so neither allocator's winner — nor any rate tie with it —
+/// can involve a dropped pair, and every pair of the winning split
+/// satisfies `through ≥` its own exact rate `≥ incumbent` and survives.
+/// The allocators therefore return bit-identical splits and rates on the
+/// filtered table.
+fn share_keep_mask(
+    k: usize,
+    sizes: &[usize],
+    budget: usize,
+    ub: &[Vec<f64>],
+    incumbent: f64,
+) -> Vec<bool> {
+    let n = sizes.len();
+    const NEG: f64 = f64::NEG_INFINITY;
+    // fwd[i][u]: best min-ub over models 0..i packed into exactly u
+    // chiplets; NEG = unreachable, ∞ at the empty prefix (min identity).
+    let mut fwd = vec![vec![NEG; budget + 1]; k + 1];
+    fwd[0][0] = f64::INFINITY;
+    for i in 0..k {
+        for u in 0..=budget {
+            let base = fwd[i][u];
+            if base == NEG {
+                continue;
+            }
+            for (j, &s) in sizes.iter().enumerate() {
+                let nu = u + s;
+                if nu > budget {
+                    break; // ascending sizes
+                }
+                let v = base.min(ub[i][j]);
+                if v > fwd[i + 1][nu] {
+                    fwd[i + 1][nu] = v;
+                }
+            }
+        }
+    }
+    // bwd[i][u]: models i..k on exactly u chiplets, then running max over
+    // u so `bwd_best[i][u]` = best suffix using *at most* u.
+    let mut bwd_best = vec![vec![NEG; budget + 1]; k + 1];
+    bwd_best[k][0] = f64::INFINITY;
+    for i in (0..k).rev() {
+        for u in 0..=budget {
+            let base = bwd_best[i + 1][u];
+            if base == NEG {
+                continue;
+            }
+            for (j, &s) in sizes.iter().enumerate() {
+                let nu = u + s;
+                if nu > budget {
+                    break;
+                }
+                let v = base.min(ub[i][j]);
+                if v > bwd_best[i][nu] {
+                    bwd_best[i][nu] = v;
+                }
+            }
+        }
+    }
+    for row in bwd_best.iter_mut() {
+        for u in 1..=budget {
+            if row[u - 1] > row[u] {
+                row[u] = row[u - 1];
+            }
+        }
+    }
+    let mut keep = vec![false; k * n];
+    for i in 0..k {
+        for (j, &s) in sizes.iter().enumerate() {
+            let room = budget - s; // grid shares never exceed the package
+            let mut through = NEG;
+            for u1 in 0..=room {
+                let f = fwd[i][u1];
+                if f == NEG {
+                    continue;
+                }
+                let t = f.min(ub[i][j]).min(bwd_best[i + 1][room - u1]);
+                if t > through {
+                    through = t;
+                }
+            }
+            keep[i * n + j] = through >= incumbent;
+        }
+    }
+    keep
+}
+
 /// Co-schedule `set` onto the package described by `mcm` (its `chiplets`
 /// is the budget; its micro-architecture/NoP/DRAM knobs — config-file
 /// overrides included — apply to every share): evaluate every
@@ -512,6 +627,7 @@ pub fn co_schedule(
         total_chiplets,
         allocator: mopts.allocator,
         evals: 0,
+        pruned_pairs: 0,
         store: None,
         error: Some(msg),
     };
@@ -530,23 +646,89 @@ pub fn co_schedule(
         ));
     }
     let sizes = share_grid(total_chiplets, mopts.share_quantum);
+    let full_j = sizes.len() - 1;
     // Every (model, share) evaluation is independent: fan across the
     // worker pool with each job's method running serially (threads = 1),
     // so results are bit-identical at every outer thread count.
     let inner = SimOptions { threads: 1, ..sim.clone() };
-    let mut jobs: Vec<(usize, usize)> = Vec::with_capacity(k * sizes.len());
-    for i in 0..k {
-        for &share in &sizes {
-            jobs.push((i, share));
+    let idx = |i: usize, j: usize| i * sizes.len() + j;
+    let mut slots: Vec<Option<MethodResult>> = (0..k * sizes.len()).map(|_| None).collect();
+    let mut keep = vec![true; k * sizes.len()];
+    if sim.prune {
+        // Branch-and-bound over the evaluation table: the compute-roofline
+        // rate bound ([`share_rate_ub`]) seeds an optimistic split, the
+        // seed's *exact* min-rate becomes the incumbent, and
+        // [`share_keep_mask`] drops every (model, share) pair no
+        // budget-feasible split can carry past the incumbent. The winning
+        // split survives by construction (its pairs bound above the
+        // incumbent), so the allocator's answer is bit-identical — only
+        // the number of schedulings shrinks.
+        let ub: Vec<Vec<f64>> = (0..k)
+            .map(|i| {
+                let macs = set.models[i].net.total_macs() as f64;
+                let w = set.models[i].weight;
+                sizes.iter().map(|&s| share_rate_ub(macs, s, mcm) / w).collect()
+            })
+            .collect();
+        let ub_opt: Vec<Vec<Option<f64>>> =
+            ub.iter().map(|r| r.iter().map(|&v| Some(v)).collect()).collect();
+        if let Some((seed_split, _)) = dp_alloc(k, &sizes, total_chiplets, &ub_opt) {
+            let seed_jobs: Vec<(usize, usize)> = seed_split
+                .iter()
+                .enumerate()
+                .map(|(i, &share)| {
+                    (i, sizes.iter().position(|&x| x == share).expect("grid share"))
+                })
+                .collect();
+            let seed_res = par_map(sim.threads, seed_jobs.clone(), |_, (i, j)| {
+                run_method(
+                    &mopts.method,
+                    &set.models[i].net,
+                    &sub_package(mcm, sizes[j]),
+                    &inner,
+                )
+            });
+            let mut incumbent = Some(f64::INFINITY);
+            for ((i, j), res) in seed_jobs.into_iter().zip(seed_res) {
+                let r = if res.eval.is_valid() && res.throughput() > 0.0 {
+                    Some(res.throughput() / set.models[i].weight)
+                } else {
+                    None
+                };
+                slots[idx(i, j)] = Some(res);
+                incumbent = match (incumbent, r) {
+                    (Some(inc), Some(r)) => Some(inc.min(r)),
+                    // an infeasible seed share yields no exact incumbent:
+                    // keep everything (no pruning without a proof)
+                    _ => None,
+                };
+            }
+            if let Some(inc) = incumbent {
+                keep = share_keep_mask(k, &sizes, total_chiplets, &ub, inc);
+            }
         }
     }
-    let evals = jobs.len();
-    let results: Vec<MethodResult> = par_map(sim.threads, jobs, |_, (i, share)| {
-        run_method(&mopts.method, &set.models[i].net, &sub_package(mcm, share), &inner)
+    // Evaluate what survived. The full-package column is always kept: the
+    // time-multiplexed baseline and the per-model `full_package` outcomes
+    // need it whether or not any split uses it.
+    let mut jobs: Vec<(usize, usize)> = Vec::with_capacity(k * sizes.len());
+    for i in 0..k {
+        for j in 0..sizes.len() {
+            if slots[idx(i, j)].is_none() && (keep[idx(i, j)] || j == full_j) {
+                jobs.push((i, j));
+            }
+        }
+    }
+    let fresh = par_map(sim.threads, jobs.clone(), |_, (i, j)| {
+        run_method(&mopts.method, &set.models[i].net, &sub_package(mcm, sizes[j]), &inner)
     });
-    let idx = |i: usize, j: usize| i * sizes.len() + j;
+    for ((i, j), res) in jobs.into_iter().zip(fresh) {
+        slots[idx(i, j)] = Some(res);
+    }
+    let evals = slots.iter().filter(|s| s.is_some()).count();
+    let pruned_pairs = k * sizes.len() - evals;
     let tput = |i: usize, j: usize| -> Option<f64> {
-        let r = &results[idx(i, j)];
+        let r = slots[idx(i, j)].as_ref()?;
         if r.eval.is_valid() && r.throughput() > 0.0 {
             Some(r.throughput())
         } else {
@@ -574,7 +756,6 @@ pub fn co_schedule(
     };
     // Time-multiplexed sequential baseline: every model on the full
     // package (the grid's last entry), round-robined to the mix.
-    let full_j = sizes.len() - 1;
     let mut tm_denominator = 0.0f64;
     let mut tm_feasible = true;
     let mut outcomes = Vec::with_capacity(k);
@@ -593,7 +774,7 @@ pub fn co_schedule(
             name: spec.net.name.clone(),
             weight: spec.weight,
             share,
-            result: results[idx(i, j)].clone(),
+            result: slots[idx(i, j)].clone().expect("winning shares are always evaluated"),
             full_package: full.unwrap_or(0.0),
         });
     }
@@ -613,6 +794,7 @@ pub fn co_schedule(
         total_chiplets,
         allocator: mopts.allocator,
         evals,
+        pruned_pairs,
         store: if sim.cache_store {
             Some(CacheStore::global().snapshot())
         } else {
@@ -694,6 +876,61 @@ mod tests {
         assert_eq!(dr.to_bits(), er.to_bits());
         assert_eq!(ds, vec![2, 2]);
         assert_eq!(es, vec![2, 2]);
+    }
+
+    #[test]
+    fn keep_mask_prunes_exactly_the_unreachable_pairs() {
+        // Two models, rate == share on the bounds, budget 4. With an
+        // incumbent of 2 (the exact rate of the (2, 2) split), a share of
+        // 1 caps its own model at 1, a share of 3 starves the partner at
+        // 1, and the full package leaves the partner no room at all —
+        // only the (share 2) column can still tie the incumbent.
+        let sizes = [1usize, 2, 3, 4];
+        let ub = vec![vec![1.0, 2.0, 3.0, 4.0]; 2];
+        let keep = share_keep_mask(2, &sizes, 4, &ub, 2.0);
+        let expect = [false, true, false, false, false, true, false, false];
+        assert_eq!(keep, expect);
+        // a lower incumbent keeps strictly more; an impossible one keeps
+        // nothing
+        let lax = share_keep_mask(2, &sizes, 4, &ub, 1.0);
+        assert!(lax.iter().zip(keep.iter()).all(|(l, k)| l >= k));
+        assert_eq!(lax.iter().filter(|&&b| b).count(), 6, "shares 1..=3 all reach 1.0");
+        assert!(share_keep_mask(2, &sizes, 4, &ub, 10.0).iter().all(|&b| !b));
+    }
+
+    #[test]
+    fn pruned_co_schedule_is_bit_identical_and_skips_starved_shares() {
+        // The 8:1 weight skew makes tiny shares of the heavy-weight model
+        // provably unable to reach the seed split's exact rate, so the
+        // bound filter must fire — and the surviving table must still
+        // produce the exact same winner, rates, and TM baseline.
+        let set = WorkloadSet::parse("scopenet,scopenet:8").unwrap();
+        let mcm = McmConfig::paper_default(8);
+        let mopts = MultiOptions { share_quantum: 1, ..Default::default() };
+        let pairs = 2 * share_grid(8, 1).len();
+        for allocator in [AllocatorKind::Dp, AllocatorKind::Exhaustive] {
+            let mopts = MultiOptions { allocator, ..mopts.clone() };
+            let base = SimOptions { samples: 8, ..Default::default() };
+            let on = co_schedule(&set, &mcm, &SimOptions { prune: true, ..base.clone() }, &mopts);
+            let off = co_schedule(&set, &mcm, &SimOptions { prune: false, ..base }, &mopts);
+            assert!(on.is_valid() && off.is_valid(), "{:?} / {:?}", on.error, off.error);
+            assert_eq!(on.rate.to_bits(), off.rate.to_bits(), "{allocator:?}");
+            assert_eq!(on.tm_rate.to_bits(), off.tm_rate.to_bits(), "{allocator:?}");
+            assert_eq!(on.used_chiplets, off.used_chiplets);
+            for (a, b) in on.outcomes.iter().zip(off.outcomes.iter()) {
+                assert_eq!(a.share, b.share, "{allocator:?}");
+                assert_eq!(
+                    a.result.eval.total_cycles.to_bits(),
+                    b.result.eval.total_cycles.to_bits()
+                );
+                assert_eq!(a.full_package.to_bits(), b.full_package.to_bits());
+            }
+            // accounting: every pair is evaluated or pruned, never both
+            assert_eq!(off.pruned_pairs, 0, "{allocator:?}");
+            assert_eq!(off.evals, pairs, "{allocator:?}");
+            assert_eq!(on.evals + on.pruned_pairs, pairs, "{allocator:?}");
+            assert!(on.pruned_pairs > 0, "{allocator:?}: bound never fired");
+        }
     }
 
     #[test]

@@ -44,6 +44,7 @@
 //! `tests/segmenter_dp.rs`.
 
 use crate::config::SimOptions;
+use crate::cost::bound::SpanBound;
 use crate::dse::parallel::par_map;
 use crate::model::Network;
 use crate::pipeline::cache_store::{CacheStore, StoreKey};
@@ -105,6 +106,14 @@ pub struct SegmenterOptions {
     /// [`cache_store`](crate::pipeline::cache_store)). `None` keeps the
     /// classic per-sweep memo.
     pub store: Option<StoreKey>,
+    /// Branch-and-bound pruning (`SimOptions::prune`, default on): when the
+    /// provider exposes an admissible analytic lower bound
+    /// ([`SegmentCost::lower_bound`]), candidate spans that provably cannot
+    /// sit on a chain matching the balanced-seed incumbent are bounded out
+    /// before the parallel prefill ever schedules them. Results are
+    /// bit-identical either way; `false` (or a bound-less provider) takes
+    /// the classic exhaustive prefill.
+    pub prune: bool,
 }
 
 impl Default for SegmenterOptions {
@@ -114,6 +123,7 @@ impl Default for SegmenterOptions {
             dp_window: 4,
             dp_window_auto: false,
             store: None,
+            prune: true,
         }
     }
 }
@@ -129,6 +139,7 @@ impl SegmenterOptions {
             dp_window: sim.dp_window,
             dp_window_auto: sim.dp_window_auto,
             store: None,
+            prune: sim.prune,
         }
     }
 
@@ -151,10 +162,15 @@ pub struct SpanStats {
     /// reuse a batched run gets for free. Always 0 without
     /// `SimOptions::cache_store`.
     pub cross_hits: usize,
+    /// Candidate spans the branch-and-bound corridor proved could not sit
+    /// on a winning chain — skipped without running the scheduler at all.
+    /// Always 0 with `prune` off or a provider that exposes no bound.
+    pub bounded_out: usize,
 }
 
 impl SpanStats {
     /// Fraction of span requests served from the memo.
+    #[inline]
     pub fn hit_rate(&self) -> f64 {
         let total = self.hits + self.misses;
         if total == 0 {
@@ -172,6 +188,7 @@ impl SpanStats {
             hits: self.hits - earlier.hits,
             misses: self.misses - earlier.misses,
             cross_hits: self.cross_hits - earlier.cross_hits,
+            bounded_out: self.bounded_out - earlier.bounded_out,
         }
     }
 }
@@ -210,6 +227,15 @@ impl SegmenterReport {
 pub trait SegmentCost: Sync {
     type Sched: Clone + Send + 'static;
     fn cost(&self, lo: usize, hi: usize) -> SegResult<Self::Sched>;
+
+    /// Admissible analytic lower bound on `cost(lo, hi)`'s latency, used
+    /// by the DP's branch-and-bound corridor: a returned bound must never
+    /// exceed the exact latency of a schedulable span (`SCOPE_PRUNE_AUDIT=1`
+    /// asserts it against every evaluated span). `None` (the default)
+    /// disables pruning for this provider entirely.
+    fn lower_bound(&self, _lo: usize, _hi: usize) -> Option<f64> {
+        None
+    }
 }
 
 impl<S, F> SegmentCost for F
@@ -220,6 +246,30 @@ where
     type Sched = S;
     fn cost(&self, lo: usize, hi: usize) -> SegResult<S> {
         self(lo, hi)
+    }
+}
+
+/// Attach an analytic [`SpanBound`] to any provider: costs pass through
+/// untouched, [`SegmentCost::lower_bound`] answers from the bound's prefix
+/// sums in O(1). This is how `schedule_scope` arms the DP's
+/// branch-and-bound corridor without the provider closures knowing about
+/// bounds at all.
+pub struct WithBound<'a, P> {
+    pub inner: &'a P,
+    pub bound: SpanBound,
+}
+
+impl<P: SegmentCost> SegmentCost for WithBound<'_, P> {
+    type Sched = P::Sched;
+
+    #[inline]
+    fn cost(&self, lo: usize, hi: usize) -> SegResult<Self::Sched> {
+        self.inner.cost(lo, hi)
+    }
+
+    #[inline]
+    fn lower_bound(&self, lo: usize, hi: usize) -> Option<f64> {
+        Some(self.bound.lower_bound(lo, hi))
     }
 }
 
@@ -240,6 +290,7 @@ pub struct SpanMemo<S> {
     hits: usize,
     misses: usize,
     cross_hits: usize,
+    bounded_out: usize,
 }
 
 impl<S> Default for SpanMemo<S> {
@@ -250,6 +301,7 @@ impl<S> Default for SpanMemo<S> {
             hits: 0,
             misses: 0,
             cross_hits: 0,
+            bounded_out: 0,
         }
     }
 }
@@ -260,7 +312,27 @@ impl<S: Clone> SpanMemo<S> {
     }
 
     pub fn stats(&self) -> SpanStats {
-        SpanStats { hits: self.hits, misses: self.misses, cross_hits: self.cross_hits }
+        SpanStats {
+            hits: self.hits,
+            misses: self.misses,
+            cross_hits: self.cross_hits,
+            bounded_out: self.bounded_out,
+        }
+    }
+
+    /// Record `n` candidate spans the branch-and-bound corridor proved
+    /// irrelevant (never evaluated, never inserted).
+    pub fn note_bounded_out(&mut self, n: usize) {
+        self.bounded_out += n;
+    }
+
+    /// Peek a cached span's latency without cloning its schedule: `None` =
+    /// not cached, `Some(None)` = cached as unschedulable. Feeds the DP's
+    /// dense latency plane; does not count as a hit (the plane is an
+    /// internal view, not a span request).
+    #[inline]
+    pub fn cached_latency(&self, lo: usize, hi: usize) -> Option<Option<f64>> {
+        self.map.get(&(lo, hi)).map(|(r, _)| r.as_ref().map(|&(_, lat)| lat))
     }
 
     /// Distinct spans currently cached.
@@ -281,6 +353,7 @@ impl<S: Clone> SpanMemo<S> {
 
     /// Memoized span evaluation (serial path — the balanced sweep and the
     /// DP's lookups).
+    #[inline]
     pub fn get_or_eval<F>(&mut self, lo: usize, hi: usize, f: &mut F) -> SegResult<S>
     where
         F: FnMut(usize, usize) -> SegResult<S>,
@@ -545,6 +618,20 @@ struct DpPassOut {
 /// worker pool, then run `best[k][i] = min_j best[k-1][j] + cost(j, i)`
 /// per segment count and keep the cheapest total (ties keep the smaller
 /// count, then the smaller predecessor — the balanced sweep's order).
+///
+/// With pruning armed (`prune` + a bound-equipped provider), a
+/// branch-and-bound corridor runs first: per segment count the balanced
+/// seed is evaluated *exactly* as an incumbent, then forward/backward DPs
+/// over the analytic bounds discard every span whose cheapest completion
+/// already exceeds that incumbent (strictly — ties survive). Discarded
+/// spans are never scheduled and their DP edges are skipped
+/// unconditionally, which provably cannot change any count's winner: a
+/// chain through a pruned span has exact total ≥ its bound > incumbent ≥
+/// that count's optimum, and the optimal chain's own edges always satisfy
+/// the bound test (each prefix/suffix bound ≤ its exact part). The DP
+/// reads costs from a dense index-addressed latency plane either way — no
+/// hashing or schedule cloning on the relaxation hot path.
+#[allow(clippy::too_many_arguments)]
 fn dp_pass<P: SegmentCost>(
     net: &Network,
     domain: &[usize],
@@ -553,6 +640,7 @@ fn dp_pass<P: SegmentCost>(
     max_layers: usize,
     threads: usize,
     window: usize,
+    prune: bool,
     provider: &P,
     memo: &mut SpanMemo<P::Sched>,
 ) -> DpPassOut {
@@ -575,8 +663,13 @@ fn dp_pass<P: SegmentCost>(
     // Deterministic candidate span list across all counts (deduped), then
     // one parallel fill — the DP below only ever hits the memo. Re-runs at
     // a widened window only pay for the newly exposed spans.
-    let mut seen: FxHashSet<(usize, usize)> = FxHashSet::default();
-    let mut spans: Vec<(usize, usize)> = Vec::new();
+    let edge_cap: usize = per_s
+        .iter()
+        .map(|(_, a)| a.windows(2).map(|p| p[0].len() * p[1].len()).sum::<usize>())
+        .sum();
+    let mut seen: FxHashSet<(usize, usize)> =
+        FxHashSet::with_capacity_and_hasher(edge_cap, Default::default());
+    let mut spans: Vec<(usize, usize)> = Vec::with_capacity(edge_cap);
     for (_, allowed) in &per_s {
         for pair in allowed.windows(2) {
             for &j in &pair[0] {
@@ -588,8 +681,189 @@ fn dp_pass<P: SegmentCost>(
             }
         }
     }
-    memo.prefill(threads, &spans, provider);
     let mut eval = |lo: usize, hi: usize| provider.cost(lo, hi);
+
+    // Branch-and-bound corridor (no-op unless the provider has bounds).
+    let lb_map: Option<FxHashMap<(usize, usize), f64>> = if prune {
+        let mut m: FxHashMap<(usize, usize), f64> =
+            FxHashMap::with_capacity_and_hasher(spans.len(), Default::default());
+        for &(j, i) in &spans {
+            if let Some(b) = provider.lower_bound(j, i) {
+                m.insert((j, i), b);
+            }
+        }
+        if m.is_empty() {
+            None
+        } else {
+            Some(m)
+        }
+    } else {
+        None
+    };
+    let mut kept: Option<FxHashSet<(usize, usize)>> = None;
+    if let Some(lbm) = &lb_map {
+        let mut keep: FxHashSet<(usize, usize)> = FxHashSet::default();
+        for (s, allowed) in &per_s {
+            let s = *s;
+            // Exact incumbent: the balanced seed chain, scheduled for real
+            // (∞ when the seed is missing or unschedulable — every edge of
+            // this count then survives).
+            let mut incumbent = f64::INFINITY;
+            let raw = balanced_split_capped(net, s, max_layers);
+            if raw.len() == s + 1 {
+                if let Some(seed) = snap_to_domain(&raw, domain, max_layers, l) {
+                    let mut total = 0.0f64;
+                    let mut ok = true;
+                    for w in seed.windows(2) {
+                        match memo.get_or_eval(w[0], w[1], &mut eval) {
+                            Some((_, lat)) => total += lat,
+                            None => {
+                                ok = false;
+                                break;
+                            }
+                        }
+                    }
+                    if ok {
+                        incumbent = total;
+                    }
+                }
+            }
+            if !incumbent.is_finite() {
+                for pair in allowed.windows(2) {
+                    for &j in &pair[0] {
+                        for &i in &pair[1] {
+                            if j < i && i - j <= max_layers {
+                                keep.insert((j, i));
+                            }
+                        }
+                    }
+                }
+                continue;
+            }
+            // Per-span bound, tightened by the memo: spans the sweep has
+            // already scheduled exactly (seed chains of earlier counts,
+            // prior auto-widen passes, warm store-backed memos) use their
+            // exact latency — admissible because exact ≥ analytic bound —
+            // and spans known unschedulable drop out entirely. The pure
+            // analytic bound is additive across chain partitions, so this
+            // memo mixing is what lets the corridor discriminate between
+            // chains on real workloads.
+            let lb = |j: usize, i: usize| -> f64 {
+                match memo.cached_latency(j, i) {
+                    Some(Some(lat)) => lat,
+                    Some(None) => f64::INFINITY,
+                    None => lbm.get(&(j, i)).copied().unwrap_or(0.0),
+                }
+            };
+            // Forward/backward DPs in bound space over the same edges.
+            let mut fwd: Vec<FxHashMap<usize, f64>> = vec![FxHashMap::default(); s + 1];
+            fwd[0].insert(0, 0.0);
+            for k in 1..=s {
+                for &i in &allowed[k] {
+                    let mut best = f64::INFINITY;
+                    for (&j, &fj) in &fwd[k - 1] {
+                        if j < i && i - j <= max_layers {
+                            let v = fj + lb(j, i);
+                            if v < best {
+                                best = v;
+                            }
+                        }
+                    }
+                    if best.is_finite() {
+                        fwd[k].insert(i, best);
+                    }
+                }
+            }
+            let mut bwd: Vec<FxHashMap<usize, f64>> = vec![FxHashMap::default(); s + 1];
+            bwd[s].insert(l, 0.0);
+            for k in (0..s).rev() {
+                for &j in &allowed[k] {
+                    let mut best = f64::INFINITY;
+                    for (&i, &bi) in &bwd[k + 1] {
+                        if j < i && i - j <= max_layers {
+                            let v = lb(j, i) + bi;
+                            if v < best {
+                                best = v;
+                            }
+                        }
+                    }
+                    if best.is_finite() {
+                        bwd[k].insert(j, best);
+                    }
+                }
+            }
+            // Keep an edge iff the cheapest complete chain through it can
+            // still match the incumbent (strict >: ties survive).
+            for k in 1..=s {
+                for &j in &allowed[k - 1] {
+                    let Some(&fj) = fwd[k - 1].get(&j) else { continue };
+                    for &i in &allowed[k] {
+                        if j >= i || i - j > max_layers {
+                            continue;
+                        }
+                        let Some(&bi) = bwd[k].get(&i) else { continue };
+                        if fj + lb(j, i) + bi <= incumbent {
+                            keep.insert((j, i));
+                        }
+                    }
+                }
+            }
+        }
+        kept = Some(keep);
+    }
+    let plane_spans: Vec<(usize, usize)> = match &kept {
+        Some(keep) => spans.iter().copied().filter(|sp| keep.contains(sp)).collect(),
+        None => spans.clone(),
+    };
+    if kept.is_some() {
+        memo.note_bounded_out(spans.len() - plane_spans.len());
+    }
+    let audit = lb_map.is_some() && std::env::var_os("SCOPE_PRUNE_AUDIT").is_some();
+    if audit {
+        // Audit mode: schedule *everything* and re-verify admissibility of
+        // every bound against the exact latency. The DP itself still runs
+        // on the pruned plane (the result is proven identical).
+        memo.prefill(threads, &spans, provider);
+        let lbm = lb_map.as_ref().expect("audit implies bounds");
+        for &(j, i) in &spans {
+            let (Some(&b), Some(Some(lat))) = (lbm.get(&(j, i)), memo.cached_latency(j, i))
+            else {
+                continue;
+            };
+            assert!(
+                b <= lat * (1.0 + 1e-9),
+                "SCOPE_PRUNE_AUDIT: span [{j},{i}) bound {b} exceeds exact latency {lat}"
+            );
+        }
+    } else {
+        memo.prefill(threads, &plane_spans, provider);
+    }
+
+    // Dense latency plane over the candidate boundary positions: the DP
+    // relaxation below is pure index arithmetic — no hashing, cloning, or
+    // allocation per edge. NaN = bounded out or unschedulable.
+    let mut is_pos = vec![false; l + 1];
+    for (_, allowed) in &per_s {
+        for level in allowed {
+            for &p in level {
+                is_pos[p] = true;
+            }
+        }
+    }
+    let mut pos_index = vec![usize::MAX; l + 1];
+    let mut npos = 0usize;
+    for (p, seen) in is_pos.iter().enumerate() {
+        if *seen {
+            pos_index[p] = npos;
+            npos += 1;
+        }
+    }
+    let mut plane = vec![f64::NAN; npos * npos];
+    for &(j, i) in &plane_spans {
+        if let Some(Some(lat)) = memo.cached_latency(j, i) {
+            plane[pos_index[j] * npos + pos_index[i]] = lat;
+        }
+    }
 
     for (s, allowed) in &per_s {
         // levels[k] = reachable boundary positions after placing k bounds
@@ -600,14 +874,16 @@ fn dp_pass<P: SegmentCost>(
             let prev = &levels[k - 1];
             let mut cur: Vec<DpNode> = Vec::with_capacity(allowed[k].len());
             for &i in &allowed[k] {
+                let col = pos_index[i];
                 let mut node: Option<DpNode> = None;
                 for (pi, p) in prev.iter().enumerate() {
                     if p.pos >= i || i - p.pos > max_layers {
                         continue;
                     }
-                    let Some((_, lat)) = memo.get_or_eval(p.pos, i, &mut eval) else {
+                    let lat = plane[pos_index[p.pos] * npos + col];
+                    if lat.is_nan() {
                         continue;
-                    };
+                    }
                     let total = p.total + lat;
                     if node.as_ref().map(|n| total < n.total).unwrap_or(true) {
                         node = Some(DpNode { pos: i, total, parent: pi });
@@ -705,6 +981,7 @@ fn dp_sweep<P: SegmentCost>(
             max_layers,
             threads,
             window,
+            opts.prune,
             provider,
             memo,
         );
@@ -1046,16 +1323,20 @@ mod tests {
         let mut eval = |lo: usize, hi: usize| fake_provider(lo, hi);
         memo.get_or_eval(0, 2, &mut eval);
         memo.get_or_eval(0, 2, &mut eval); // same-epoch hit
-        assert_eq!(memo.stats(), SpanStats { hits: 1, misses: 1, cross_hits: 0 });
+        assert_eq!(
+            memo.stats(),
+            SpanStats { hits: 1, misses: 1, cross_hits: 0, bounded_out: 0 }
+        );
         memo.begin_epoch();
         memo.get_or_eval(0, 2, &mut eval); // carried entry → cross-sweep hit
         memo.get_or_eval(2, 4, &mut eval); // new span in the new epoch
         memo.get_or_eval(2, 4, &mut eval); // same-epoch hit, not cross
+        memo.note_bounded_out(4);
         let s = memo.stats();
-        assert_eq!(s, SpanStats { hits: 3, misses: 2, cross_hits: 1 });
+        assert_eq!(s, SpanStats { hits: 3, misses: 2, cross_hits: 1, bounded_out: 4 });
         assert_eq!(
-            s.since(SpanStats { hits: 1, misses: 1, cross_hits: 0 }),
-            SpanStats { hits: 2, misses: 1, cross_hits: 1 }
+            s.since(SpanStats { hits: 1, misses: 1, cross_hits: 0, bounded_out: 1 }),
+            SpanStats { hits: 2, misses: 1, cross_hits: 1, bounded_out: 3 }
         );
         assert_eq!(memo.len(), 2);
         // absorb keeps existing entries and adds the missing ones
@@ -1179,6 +1460,99 @@ mod tests {
         assert_eq!(snap_to_domain(&[0, 2, 3, 4, 6, 8], &cuts, usize::MAX, 8), None);
         // layer cap violated after snapping → None
         assert_eq!(snap_to_domain(&[0, 4, 8], &[1], 5, 8), None);
+    }
+
+    /// Fake provider with a *tight* admissible bound (bound == exact
+    /// cost): the corridor prunes exactly the spans that sit on no chain
+    /// matching the balanced-seed incumbent, the strongest stress of the
+    /// ties-survive rule.
+    struct BoundedFake;
+
+    impl SegmentCost for BoundedFake {
+        type Sched = (usize, usize);
+        fn cost(&self, lo: usize, hi: usize) -> SegResult<(usize, usize)> {
+            fake_provider(lo, hi)
+        }
+        fn lower_bound(&self, lo: usize, hi: usize) -> Option<f64> {
+            Some(fake_cost(lo, hi))
+        }
+    }
+
+    #[test]
+    fn pruned_dp_is_bit_identical_to_unpruned() {
+        for net in [alexnet(), vgg16()] {
+            for window in [0usize, 2] {
+                for cap in [usize::MAX, 6] {
+                    let pruned = search_segments_opts(
+                        &net,
+                        1,
+                        5,
+                        cap,
+                        1,
+                        dp_opts(window),
+                        &BoundedFake,
+                    );
+                    let off = SegmenterOptions { prune: false, ..dp_opts(window) };
+                    let plain = search_segments_opts(&net, 1, 5, cap, 1, off, &BoundedFake);
+                    match (pruned, plain) {
+                        (None, None) => {}
+                        (Some(p), Some(u)) => {
+                            assert_eq!(p.bounds, u.bounds, "{} w={window}", net.name);
+                            assert_eq!(
+                                p.total_latency.to_bits(),
+                                u.total_latency.to_bits(),
+                                "{} w={window}",
+                                net.name
+                            );
+                            assert_eq!(u.stats.bounded_out, 0, "prune off must not bound");
+                        }
+                        (p, u) => panic!(
+                            "pruned {:?} vs unpruned {:?}",
+                            p.map(|r| r.bounds),
+                            u.map(|r| r.bounds)
+                        ),
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pruning_actually_bounds_spans_out_and_skips_their_evaluation() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static CALLS: AtomicUsize = AtomicUsize::new(0);
+        struct Counting;
+        impl SegmentCost for Counting {
+            type Sched = (usize, usize);
+            fn cost(&self, lo: usize, hi: usize) -> SegResult<(usize, usize)> {
+                CALLS.fetch_add(1, Ordering::Relaxed);
+                fake_provider(lo, hi)
+            }
+            fn lower_bound(&self, lo: usize, hi: usize) -> Option<f64> {
+                Some(fake_cost(lo, hi))
+            }
+        }
+        let net = vgg16();
+        let pruned = search_segments_opts(&net, 1, 5, usize::MAX, 1, dp_opts(0), &Counting)
+            .expect("feasible");
+        let pruned_calls = CALLS.swap(0, Ordering::Relaxed);
+        let off = SegmenterOptions { prune: false, ..dp_opts(0) };
+        search_segments_opts(&net, 1, 5, usize::MAX, 1, off, &Counting).expect("feasible");
+        let full_calls = CALLS.swap(0, Ordering::Relaxed);
+        assert!(
+            pruned.stats.bounded_out > 0,
+            "quadratic costs must bound out lopsided spans: {:?}",
+            pruned.stats
+        );
+        assert!(
+            pruned_calls < full_calls,
+            "pruning must skip scheduler calls ({pruned_calls} vs {full_calls})"
+        );
+        assert_eq!(
+            pruned.stats.bounded_out + pruned.stats.misses,
+            full_calls,
+            "every candidate span is either evaluated once or bounded out"
+        );
     }
 
     #[test]

@@ -44,6 +44,7 @@ pub mod trace;
 use crate::arch::McmConfig;
 use crate::baselines::{run_method, METHOD_NAMES};
 use crate::config::SimOptions;
+use crate::cost::bound::batch1_latency_lb_ns;
 use crate::dse::parallel::par_map;
 use crate::model::workload_set::WorkloadSet;
 use crate::scope::multi_model::{
@@ -56,8 +57,12 @@ use self::slo::{SloStats, SloTracker};
 use self::trace::RequestStream;
 
 /// Hybrid enumeration visits `Bell(k)` partitions; beyond this the serve
-/// surface asks for a smaller set instead of silently exploding.
-pub const MAX_SERVE_MODELS: usize = 6;
+/// surface asks for a smaller set instead of silently exploding. The
+/// analytic SLO bound ([`batch1_latency_lb_ns`]) prunes provably
+/// SLO-infeasible hybrids before their event-loop replays (see
+/// [`serve()`]), which is what makes `Bell(8) = 4140` affordable where
+/// the cap used to sit at 6.
+pub const MAX_SERVE_MODELS: usize = 8;
 
 /// Serving knobs (`serve` subcommand flags).
 #[derive(Clone, Debug)]
@@ -585,9 +590,14 @@ pub struct ServingReport {
     pub arrival_counts: Vec<u64>,
     /// (model, share) schedulings paid for the service tables.
     pub evals: usize,
-    /// Allocations enumerated and simulated.
+    /// Allocations enumerated (simulated + pruned).
     pub allocations: usize,
-    /// Allocations whose every share had a valid schedule.
+    /// Allocations the analytic SLO bound proved unable to meet a
+    /// declared SLO, skipped without an event-loop replay
+    /// (`SimOptions::prune`; 0 when pruning is off, no SLO is declared,
+    /// or the fallback pass had to simulate everything).
+    pub pruned_allocations: usize,
+    /// Simulated allocations whose every share had a valid schedule.
     pub feasible_allocations: usize,
     /// Feasible allocations meeting every declared SLO.
     pub slo_feasible_allocations: usize,
@@ -636,6 +646,7 @@ pub fn serve(
         arrival_counts: Vec::new(),
         evals: 0,
         allocations: 0,
+        pruned_allocations: 0,
         feasible_allocations: 0,
         slo_feasible_allocations: 0,
         spatial: None,
@@ -670,22 +681,72 @@ pub fn serve(
         ));
     }
     let allocations = allocs.len();
+    let arrival_counts = stream.counts(k);
+    // SLO branch-and-bound: a model whose analytic batch-1 latency floor
+    // ([`batch1_latency_lb_ns`] — the whole net's compute roofline on the
+    // share, which every service time and therefore every recorded
+    // latency dominates) already exceeds its declared SLO violates it on
+    // every arrival, so the allocation can never meet all SLOs. Skipping
+    // its replay is lossless for the reported winners as long as some
+    // simulated allocation *does* meet every SLO (the `better` ordering
+    // prefers it over every doomed candidate); spatial and
+    // time-multiplexed corners are always simulated so their class
+    // winners rank on exact ratios, and if nothing meets the SLOs the
+    // doomed set is simulated after all (fallback below) — so the report
+    // is bit-identical with pruning on or off.
+    let has_slo = prepared.slo_ns.iter().any(|s| s.is_some());
+    let doomed = |alloc: &HybridAllocation| -> bool {
+        alloc.groups.iter().any(|g| {
+            g.members.iter().any(|&m| match prepared.slo_ns[m] {
+                Some(slo) if arrival_counts[m] > 0 => {
+                    batch1_latency_lb_ns(set.models[m].net.total_macs() as f64, g.chiplets, mcm)
+                        > slo as f64
+                }
+                _ => false,
+            })
+        })
+    };
+    let mut simulate_now: Vec<(usize, HybridAllocation)> = Vec::with_capacity(allocations);
+    let mut deferred: Vec<(usize, HybridAllocation)> = Vec::new();
+    for (index, alloc) in allocs.into_iter().enumerate() {
+        let skip = sim.prune
+            && has_slo
+            && !alloc.is_spatial()
+            && !alloc.is_time_multiplexed()
+            && doomed(&alloc);
+        if skip {
+            deferred.push((index, alloc));
+        } else {
+            simulate_now.push((index, alloc));
+        }
+    }
     // Each simulation is a pure function of (alloc, prepared, stream):
     // fan the replays across the deterministic worker pool, log-free
     // (winners are re-simulated with the replay log on below — same
     // outcome by determinism), and fold winners in enumeration order.
-    let results: Vec<(HybridAllocation, SimOutcome)> =
-        par_map(sim.threads, allocs, |_, alloc| {
+    let replay = |batch: Vec<(usize, HybridAllocation)>| {
+        par_map(sim.threads, batch, |_, (index, alloc)| {
             let outcome =
                 simulate_allocation(&alloc, &prepared, stream, sopts.max_batch, max_wait_ns, false);
-            (alloc, outcome)
-        });
+            (index, alloc, outcome)
+        })
+    };
+    let mut results = replay(simulate_now);
+    let mut pruned_allocations = deferred.len();
+    if pruned_allocations > 0 && !results.iter().any(|(_, _, o)| o.meets_all_slos()) {
+        // nothing meets every SLO, so winners rank on worst-ratio
+        // comparisons the bound says nothing about — replay the doomed
+        // set after all
+        results.extend(replay(deferred));
+        results.sort_by_key(|&(index, _, _)| index);
+        pruned_allocations = 0;
+    }
     let mut feasible = 0usize;
     let mut slo_feasible = 0usize;
     let mut best: Option<ServingOutcome> = None;
     let mut best_spatial: Option<ServingOutcome> = None;
     let mut best_tm: Option<ServingOutcome> = None;
-    for (index, (alloc, outcome)) in results.into_iter().enumerate() {
+    for (index, alloc, outcome) in results.into_iter() {
         let group_of = alloc.group_of(k);
         let cand = ServingOutcome {
             meets_all_slos: outcome.meets_all_slos(),
@@ -744,9 +805,10 @@ pub fn serve(
     ServingReport {
         set: set.clone(),
         total_chiplets: mcm.chiplets,
-        arrival_counts: stream.counts(k),
+        arrival_counts,
         evals: prepared.evals,
         allocations,
+        pruned_allocations,
         feasible_allocations: feasible,
         slo_feasible_allocations: slo_feasible,
         sizes: prepared.sizes,
@@ -943,11 +1005,38 @@ mod tests {
         let bad_method = ServeOptions { method: "warp".into(), ..ServeOptions::default() };
         let r = serve(&set, &mcm, &sim, &bad_method, &stream);
         assert!(r.error.as_deref().unwrap_or("").contains("scope"), "{:?}", r.error);
-        let seven = WorkloadSet::parse(
-            "scopenet,scopenet,scopenet,scopenet,scopenet,scopenet,scopenet",
-        )
-        .unwrap();
-        let r = serve(&seven, &mcm, &sim, &sopts, &stream);
-        assert!(r.error.as_deref().unwrap_or("").contains("7 models"), "{:?}", r.error);
+        let nine = WorkloadSet::parse(&vec!["scopenet"; 9].join(",")).unwrap();
+        let r = serve(&nine, &mcm, &sim, &sopts, &stream);
+        assert!(r.error.as_deref().unwrap_or("").contains("9 models"), "{:?}", r.error);
+    }
+
+    #[test]
+    fn slo_pruned_serve_reports_identical_winners() {
+        let mut set = WorkloadSet::parse("scopenet,scopenet:2").unwrap();
+        set.apply_slo_spec("5").unwrap(); // 5 ms p99 for both models
+        let mcm = McmConfig::paper_default(8);
+        let sopts = ServeOptions { share_quantum: 4, ..ServeOptions::default() };
+        let stream = RequestStream::poisson(&set, 200.0, 100_000_000, 11);
+        assert!(!stream.is_empty());
+        let base = SimOptions { samples: 4, ..SimOptions::default() };
+        let on = serve(&set, &mcm, &SimOptions { prune: true, ..base.clone() }, &sopts, &stream);
+        let off = serve(&set, &mcm, &SimOptions { prune: false, ..base }, &sopts, &stream);
+        assert!(on.is_valid() && off.is_valid(), "{:?} / {:?}", on.error, off.error);
+        assert_eq!(off.pruned_allocations, 0, "prune off must replay everything");
+        assert_eq!(on.allocations, off.allocations);
+        assert_eq!(on.slo_feasible_allocations, off.slo_feasible_allocations);
+        let (on_modes, off_modes) = (on.modes(), off.modes());
+        assert_eq!(on_modes.len(), off_modes.len());
+        for ((la, a), (lb, b)) in on_modes.iter().zip(off_modes.iter()) {
+            assert_eq!(la, lb);
+            assert_eq!(a.alloc, b.alloc, "{la}: winner drifted under pruning");
+            assert_eq!(a.index, b.index, "{la}");
+            assert_eq!(a.sim, b.sim, "{la}: simulated outcome drifted");
+            assert_eq!(
+                a.worst_slo_ratio.to_bits(),
+                b.worst_slo_ratio.to_bits(),
+                "{la}"
+            );
+        }
     }
 }

@@ -1,0 +1,70 @@
+//! Cache-file v3 acceptance: the CLI writes the packed binary format on
+//! exit, and a warm-from-binary run re-schedules zero spans — cluster
+//! caches included — while reporting bit-identical results.
+
+use std::process::Command;
+
+fn run_cli(args: &[&str]) -> String {
+    let out = Command::new(env!("CARGO_BIN_EXE_scope"))
+        .args(args)
+        .output()
+        .expect("scope binary runs");
+    assert!(
+        out.status.success(),
+        "scope {:?} failed: {}",
+        args,
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8(out.stdout).expect("utf8 stdout")
+}
+
+/// Misses of the shared cluster cache in the `cache store:` totals line.
+fn cluster_misses(out: &str) -> u64 {
+    let line = out
+        .lines()
+        .find(|l| l.contains("shared cluster cache:"))
+        .unwrap_or_else(|| panic!("no store totals line in: {out}"));
+    let tail = line.split("shared cluster cache:").nth(1).unwrap();
+    let misses = tail.split('/').nth(1).unwrap(); // " M misses"
+    misses.trim().split(' ').next().unwrap().parse().expect("miss count")
+}
+
+#[test]
+fn warm_from_binary_cli_reschedules_zero_spans_and_clusters() {
+    let path = std::env::temp_dir()
+        .join(format!("scope-cache-v3-cli-{}.bin", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let p = path.to_str().unwrap();
+    // `multi` exercises the whole stack: many (model, share) sweeps, the
+    // shared cluster caches, and the store-backed span memos.
+    let args = [
+        "multi",
+        "--models",
+        "scopenet,scopenet:2",
+        "--chiplets",
+        "8",
+        "--quantum",
+        "4",
+        "--samples",
+        "4",
+        "--cache-file",
+        p,
+    ];
+    let cold = run_cli(&args);
+    let bytes = std::fs::read(&path).expect("cache file written on exit");
+    assert_eq!(&bytes[..8], b"SCOPECH3", "cache files persist as v3 packed binary");
+    assert!(cluster_misses(&cold) > 0, "the cold run must cost clusters: {cold}");
+    let warm = run_cli(&args);
+    assert_eq!(
+        cluster_misses(&warm),
+        0,
+        "a warm-from-binary run must re-cost zero clusters: {warm}"
+    );
+    // the co-schedule outcome itself is identical — only cache counters
+    // (the store totals line) may differ between the runs
+    let strip = |s: &str| -> String {
+        s.lines().filter(|l| !l.contains("cache store:")).collect::<Vec<_>>().join("\n")
+    };
+    assert_eq!(strip(&cold), strip(&warm), "warm results must be bit-identical");
+    let _ = std::fs::remove_file(&path);
+}
