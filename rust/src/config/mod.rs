@@ -24,6 +24,7 @@ use std::path::Path;
 use anyhow::{anyhow, Context, Result};
 
 use crate::arch::McmConfig;
+use crate::obs::TraceLevel;
 use crate::pipeline::schedule::ExecModeChoice;
 use crate::scope::SegmenterKind;
 
@@ -91,6 +92,22 @@ pub struct SimOptions {
     /// invariant against every exact evaluation); `prune = false` is the
     /// escape hatch that forces every candidate through the evaluator.
     pub prune: bool,
+    /// Chrome trace-event output path (config key `trace_out`, CLI
+    /// `--trace-out`): arms the global [`crate::obs::TraceSink`] and
+    /// writes the recorded timeline on exit — simulated-time Gantt for
+    /// `search`, per-share batch service for `serve`. Empty = tracing
+    /// off (the recording calls stay no-ops).
+    pub trace_out: String,
+    /// Metrics registry output path (config key `metrics_out`, CLI
+    /// `--metrics-out`): the [`crate::obs::Registry`] is written on exit
+    /// — Prometheus text when the path ends in `.prom`/`.txt`, the
+    /// stable JSON document otherwise. Empty = no metrics file.
+    pub metrics_out: String,
+    /// Trace detail (config key `trace_level`, CLI `--trace-level`):
+    /// `sim` records simulated-time events only (output bit-identical
+    /// across `--threads` and runs); `full` adds wall-clock DSE phase
+    /// spans, which are inherently not bit-stable.
+    pub trace_level: TraceLevel,
 }
 
 impl Default for SimOptions {
@@ -108,6 +125,9 @@ impl Default for SimOptions {
             exec_mode: ExecModeChoice::Pipeline,
             tile_rows: 4,
             prune: true,
+            trace_out: String::new(),
+            metrics_out: String::new(),
+            trace_level: TraceLevel::Sim,
         }
     }
 }
@@ -201,6 +221,21 @@ impl Config {
                         return Err(anyhow!("cache_file expects a path"));
                     }
                     cfg.sim.cache_file = value.clone();
+                }
+                "trace_out" => {
+                    if value.is_empty() {
+                        return Err(anyhow!("trace_out expects a path"));
+                    }
+                    cfg.sim.trace_out = value.clone();
+                }
+                "metrics_out" => {
+                    if value.is_empty() {
+                        return Err(anyhow!("metrics_out expects a path"));
+                    }
+                    cfg.sim.metrics_out = value.clone();
+                }
+                "trace_level" => {
+                    cfg.sim.trace_level = TraceLevel::parse(value).map_err(|e| anyhow!("{e}"))?
                 }
                 "models" => cfg.models = parse_models(value)?,
                 "dp_window" => {
@@ -434,6 +469,30 @@ pub const KNOBS: &[KnobDoc] = &[
         sim_field: "cache_file",
         default_value: "(none)",
         doc: "persist span memos to JSON on exit, reload on startup (implies cache_store)",
+    },
+    KnobDoc {
+        config_key: "trace_out",
+        cli_flag: "--trace-out <path>",
+        bench_env: "",
+        sim_field: "trace_out",
+        default_value: "(none)",
+        doc: "write a Chrome trace-event JSON of the run on exit (Perfetto / chrome://tracing)",
+    },
+    KnobDoc {
+        config_key: "metrics_out",
+        cli_flag: "--metrics-out <path>",
+        bench_env: "",
+        sim_field: "metrics_out",
+        default_value: "(none)",
+        doc: "write the metrics registry on exit (.prom/.txt = Prometheus text, else stable JSON)",
+    },
+    KnobDoc {
+        config_key: "trace_level",
+        cli_flag: "--trace-level sim|full",
+        bench_env: "",
+        sim_field: "trace_level",
+        default_value: "sim",
+        doc: "sim = simulated-time events only (bit-identical); full adds wall-clock DSE spans",
     },
     KnobDoc {
         config_key: "models",

@@ -27,7 +27,9 @@ impl PipelineReport {
     }
 
     pub fn p99_latency(&self) -> f64 {
-        crate::util::stats::percentile(&self.latencies, 99.0)
+        let mut sorted = self.latencies.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        crate::util::stats::percentile_nearest_rank(&sorted, 0.99)
     }
 
     /// Did every sample match the golden outputs to tolerance?

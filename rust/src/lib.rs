@@ -31,6 +31,7 @@
 //! | multi-model serving (SCAR-style extension) | [`scope::multi_model`], [`model::workload_set`] |
 //! | serving latency / SLOs / hybrid temporal shares (SCAR + arXiv:2312.09401) | [`serve`] |
 //! | depth-first layer fusion (Stream/SET-style extension) | [`model::tile`], [`pipeline::fused`] |
+//! | observability: trace timelines + metrics registry | [`obs`] (`--trace-out`, `--metrics-out`) |
 //!
 //! ## Sixty-second tour
 //!
@@ -88,6 +89,7 @@ pub mod dse;
 pub mod config;
 pub mod coordinator;
 pub mod model;
+pub mod obs;
 pub mod pipeline;
 pub mod report;
 pub mod runtime;

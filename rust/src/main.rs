@@ -104,6 +104,19 @@ COMMON FLAGS
                     that flag explicitly disables the store): repeated
                     invocations reuse each other's sweeps — a warm run
                     re-schedules zero spans.
+  --trace-out <f>   write a Chrome trace-event JSON of the run to <f> on
+                    exit (open in Perfetto / chrome://tracing): simulated-
+                    time Gantt of the winning schedule for 'search', per-
+                    share batch service + arrivals for 'serve'. Simulated
+                    timestamps make the file bit-identical at every
+                    --threads setting.
+  --metrics-out <f> write the metrics registry (span-memo hits, bounded-out
+                    counts, serving tails, queue high-water, ...) to <f> on
+                    exit: Prometheus text when <f> ends in .prom/.txt, a
+                    stable JSON document otherwise.
+  --trace-level <L> 'sim' (default): simulated-time events only, output
+                    bit-identical across runs. 'full': also record wall-
+                    clock DSE phase spans (where search time goes).
 
 `scope help` appends the full generated knob table (every config key,
 CLI flag, and bench env var).
@@ -189,6 +202,23 @@ fn load_config(args: &Args, chiplets: usize) -> Result<Config> {
             }
         }
     }
+    match args.str_or("trace-out", "").as_str() {
+        "" => {}
+        path => sim.trace_out = path.to_string(),
+    }
+    match args.str_or("metrics-out", "").as_str() {
+        "" => {}
+        path => sim.metrics_out = path.to_string(),
+    }
+    match args.str_or("trace-level", "").as_str() {
+        "" => {}
+        v => {
+            sim.trace_level =
+                scope::obs::TraceLevel::parse(v).map_err(|e| anyhow!("--trace-level: {e}"))?
+        }
+    }
+    // arm the global trace sink / output paths before any scheduling runs
+    scope::obs::configure(sim);
     if !sim.cache_file.is_empty() && sim.cache_store {
         let path = std::path::PathBuf::from(&sim.cache_file);
         // warm the process-wide store from disk; main() persists on exit.
@@ -318,6 +348,9 @@ fn cmd_search(args: &Args) -> Result<()> {
                     rep.stats.cross_hits,
                 );
             }
+            // --trace-out: replay the winner into the global sink as a
+            // simulated-time Gantt (no-op while tracing is off)
+            scope::pipeline::timeline::trace_schedule(&net, &mcm, &sim, sched);
         }
         (_, err) => println!("no valid schedule: {err:?}"),
     }
@@ -750,7 +783,12 @@ fn main() -> Result<()> {
     // even when the subcommand failed late, the spans it paid for are
     // pure values worth keeping (the subcommand's error still wins).
     let persisted = CacheStore::global().persist();
+    if let Some(summary) = scope::obs::prune_audit_summary() {
+        println!("{summary}");
+    }
+    let emitted = scope::obs::emit();
     out?;
     persisted?;
+    emitted.map_err(|e| anyhow!("writing observability outputs: {e}"))?;
     Ok(())
 }

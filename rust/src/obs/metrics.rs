@@ -1,0 +1,309 @@
+//! Process-wide metrics registry: named counters and gauges behind cheap
+//! `Arc` handles, absorbing the stats that used to live as hand-threaded
+//! struct fields (span-memo hits, bounded-out counts, serving queue
+//! high-water marks, …).
+//!
+//! Two export surfaces with different stability contracts:
+//!
+//! * [`Registry::to_json`] — the `--metrics-out` document. **Stable**
+//!   metrics only: values that are bit-identical across `--threads`
+//!   settings and across process runs of the same invocation. The file is
+//!   byte-comparable in CI.
+//! * [`Registry::prometheus`] — a Prometheus-style text exposition of
+//!   *everything*, including [`Class::Informational`] metrics (e.g. the
+//!   racy-by-design [`crate::pipeline::EvalCache`] hit counters, which may
+//!   legitimately differ run-to-run under concurrency).
+//!
+//! Handles are `Clone` and lock-free after lookup: a counter bump is one
+//! relaxed atomic add, and looking a handle up by name allocates only on
+//! first registration — warm paths stay allocation-clean (pinned by
+//! `tests/alloc_count.rs`).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::json::{self, Json};
+
+/// Schema tag stamped into the `--metrics-out` JSON document.
+pub const METRICS_SCHEMA: &str = "scope-metrics-v1";
+
+/// Stability class of a metric — decides which export surfaces carry it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Class {
+    /// Deterministic: identical across thread counts and process runs.
+    /// Exported in the `--metrics-out` JSON *and* the Prometheus text.
+    Stable,
+    /// Best-effort under concurrency (e.g. relaxed cache-hit counters
+    /// where a double miss is benign). Prometheus text only.
+    Informational,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Kind {
+    Counter,
+    Gauge,
+}
+
+struct Metric {
+    class: Class,
+    kind: Kind,
+    /// Counter: the count. Gauge: an `f64` as raw IEEE bits.
+    bits: AtomicU64,
+}
+
+/// Monotonic `u64` counter handle. Cheap to clone, lock-free to bump.
+#[derive(Clone)]
+pub struct Counter(Arc<Metric>);
+
+impl Counter {
+    pub fn add(&self, n: u64) {
+        self.0.bits.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.bits.load(Ordering::Relaxed)
+    }
+}
+
+/// `f64` gauge handle (stored as raw bits in an `AtomicU64`).
+#[derive(Clone)]
+pub struct Gauge(Arc<Metric>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Raise the gauge to `v` if larger (NaN never wins). Order-free, so
+    /// the result is deterministic even when workers race to report.
+    pub fn set_max(&self, v: f64) {
+        if v.is_nan() {
+            return;
+        }
+        let mut cur = self.0.bits.load(Ordering::Relaxed);
+        loop {
+            if v <= f64::from_bits(cur) {
+                return;
+            }
+            match self.0.bits.compare_exchange_weak(
+                cur,
+                v.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// A named metric map. Use [`Registry::global`] for the process-wide
+/// instance the CLI exports; tests build their own to stay isolated.
+#[derive(Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Arc<Metric>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The process-wide registry `--metrics-out` exports.
+    pub fn global() -> &'static Registry {
+        static GLOBAL: OnceLock<Registry> = OnceLock::new();
+        GLOBAL.get_or_init(Registry::new)
+    }
+
+    fn handle(&self, name: &str, class: Class, kind: Kind) -> Arc<Metric> {
+        let mut map = self.metrics.lock().unwrap();
+        if let Some(m) = map.get(name) {
+            debug_assert_eq!((m.class, m.kind), (class, kind), "metric {name:?} re-registered");
+            return Arc::clone(m);
+        }
+        let m = Arc::new(Metric { class, kind, bits: AtomicU64::new(0) });
+        map.insert(name.to_string(), Arc::clone(&m));
+        m
+    }
+
+    /// A stable (deterministic) counter, registered on first use.
+    pub fn counter(&self, name: &str) -> Counter {
+        Counter(self.handle(name, Class::Stable, Kind::Counter))
+    }
+
+    /// An informational counter — Prometheus exposition only.
+    pub fn counter_info(&self, name: &str) -> Counter {
+        Counter(self.handle(name, Class::Informational, Kind::Counter))
+    }
+
+    /// A stable (deterministic) gauge, registered on first use.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        Gauge(self.handle(name, Class::Stable, Kind::Gauge))
+    }
+
+    /// An informational gauge — Prometheus exposition only.
+    pub fn gauge_info(&self, name: &str) -> Gauge {
+        Gauge(self.handle(name, Class::Informational, Kind::Gauge))
+    }
+
+    /// Zero every registered metric (registrations survive). Tests use
+    /// this between runs to compare absorbed values.
+    pub fn reset(&self) {
+        let map = self.metrics.lock().unwrap();
+        for m in map.values() {
+            m.bits.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// The stable JSON document (`--metrics-out`): counters and gauges of
+    /// [`Class::Stable`] only, under a schema tag. Keys sort
+    /// deterministically (the map is a `BTreeMap`), so the document is
+    /// byte-comparable across runs.
+    pub fn to_json(&self) -> Json {
+        let map = self.metrics.lock().unwrap();
+        let mut counters = Vec::new();
+        let mut gauges = Vec::new();
+        for (name, m) in map.iter() {
+            if m.class != Class::Stable {
+                continue;
+            }
+            let bits = m.bits.load(Ordering::Relaxed);
+            match m.kind {
+                Kind::Counter => counters.push((name.as_str(), json::num(bits as f64))),
+                Kind::Gauge => gauges.push((name.as_str(), json::num(f64::from_bits(bits)))),
+            }
+        }
+        json::obj(vec![
+            ("schema", json::s(METRICS_SCHEMA)),
+            ("counters", json::obj(counters)),
+            ("gauges", json::obj(gauges)),
+        ])
+    }
+
+    /// Prometheus-style text exposition of every metric, informational
+    /// ones included (flagged in a `# HELP` line).
+    pub fn prometheus(&self) -> String {
+        let map = self.metrics.lock().unwrap();
+        let mut out = String::new();
+        for (name, m) in map.iter() {
+            if m.class == Class::Informational {
+                out.push_str(&format!(
+                    "# HELP {name} informational: not bit-stable across thread counts\n"
+                ));
+            }
+            let kind = match m.kind {
+                Kind::Counter => "counter",
+                Kind::Gauge => "gauge",
+            };
+            out.push_str(&format!("# TYPE {name} {kind}\n"));
+            match m.kind {
+                Kind::Counter => {
+                    out.push_str(&format!("{name} {}\n", m.bits.load(Ordering::Relaxed)))
+                }
+                Kind::Gauge => out.push_str(&format!(
+                    "{name} {}\n",
+                    f64::from_bits(m.bits.load(Ordering::Relaxed))
+                )),
+            }
+        }
+        out
+    }
+}
+
+/// Fold a DP sweep's span-memo stats into `reg`. [`crate::scope::SpanStats`]
+/// is thread-count-invariant (asserted by the DP bit-identity tests), so
+/// these are stable metrics.
+pub fn absorb_span_stats(reg: &Registry, stats: &crate::scope::SpanStats) {
+    reg.counter("scope_span_memo_hits").add(stats.hits as u64);
+    reg.counter("scope_span_memo_misses").add(stats.misses as u64);
+    reg.counter("scope_span_memo_cross_hits").add(stats.cross_hits as u64);
+    reg.counter("scope_dp_bounded_out").add(stats.bounded_out as u64);
+}
+
+/// Fold a cache-store snapshot into `reg`. Span traffic is deterministic;
+/// the cluster-cache hit counters are relaxed atomics and go in as
+/// informational.
+pub fn absorb_store_snapshot(reg: &Registry, snap: &crate::pipeline::StoreSnapshot) {
+    reg.counter("scope_store_span_checkouts").add(snap.span_checkouts);
+    reg.counter("scope_store_span_reuses").add(snap.span_reuses);
+    reg.counter("scope_store_spans_carried").add(snap.spans_carried);
+    reg.gauge("scope_store_span_slots").set_max(snap.span_slots as f64);
+    reg.gauge("scope_store_cluster_slots").set_max(snap.cluster_slots as f64);
+    reg.counter_info("scope_store_cluster_hits").add(snap.cluster_hits);
+    reg.counter_info("scope_store_cluster_misses").add(snap.cluster_misses);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_roundtrip() {
+        let reg = Registry::new();
+        let c = reg.counter("c_total");
+        c.add(3);
+        c.incr();
+        assert_eq!(c.get(), 4);
+        // Same name → same underlying metric.
+        assert_eq!(reg.counter("c_total").get(), 4);
+
+        let g = reg.gauge("g_high_water");
+        g.set_max(2.0);
+        g.set_max(5.0);
+        g.set_max(3.0);
+        g.set_max(f64::NAN); // NaN never wins
+        assert_eq!(g.get(), 5.0);
+        g.set(1.5);
+        assert_eq!(g.get(), 1.5);
+
+        reg.reset();
+        assert_eq!(c.get(), 0);
+        assert_eq!(g.get(), 0.0);
+    }
+
+    #[test]
+    fn json_carries_stable_only_prometheus_carries_everything() {
+        let reg = Registry::new();
+        reg.counter("stable_total").add(7);
+        reg.gauge("stable_gauge").set(2.5);
+        reg.counter_info("racy_total").add(9);
+
+        let doc = reg.to_json();
+        assert_eq!(doc.get("schema").unwrap().as_str().unwrap(), METRICS_SCHEMA);
+        let counters = doc.get("counters").expect("counters object");
+        assert_eq!(counters.get("stable_total").unwrap().as_f64().unwrap(), 7.0);
+        assert!(counters.get("racy_total").is_err(), "informational leaked into JSON");
+        let gauges = doc.get("gauges").expect("gauges object");
+        assert_eq!(gauges.get("stable_gauge").unwrap().as_f64().unwrap(), 2.5);
+
+        let text = reg.prometheus();
+        assert!(text.contains("# TYPE stable_total counter"));
+        assert!(text.contains("stable_total 7"));
+        assert!(text.contains("# TYPE stable_gauge gauge"));
+        assert!(text.contains("stable_gauge 2.5"));
+        assert!(text.contains("racy_total 9"));
+        assert!(text.contains("# HELP racy_total informational"));
+    }
+
+    #[test]
+    fn json_document_is_byte_stable() {
+        let build = || {
+            let reg = Registry::new();
+            reg.counter("b_total").add(1);
+            reg.counter("a_total").add(2);
+            reg.gauge("z_gauge").set(0.25);
+            reg.to_json().to_string_compact()
+        };
+        assert_eq!(build(), build());
+    }
+}

@@ -1,0 +1,87 @@
+//! Observability: a unified metrics registry and a deterministic trace
+//! sink shared by the search, multi-model, and serving paths.
+//!
+//! * [`metrics`] — process-wide counters/gauges behind cheap handles,
+//!   exported as a stable JSON document (`--metrics-out m.json`) or a
+//!   Prometheus-style text exposition (`--metrics-out m.prom`).
+//! * [`trace`] — simulated-time (integer ns) and wall-clock events,
+//!   exported as Chrome trace-event JSON (`--trace-out t.json`,
+//!   viewable in Perfetto / `chrome://tracing`).
+//!
+//! Both are armed by the CLI from `SimOptions` ([`configure`]) and
+//! flushed once at process exit ([`emit`]). Everything stays a cheap
+//! no-op when the flags are absent: recording checks one relaxed atomic
+//! and returns, so hot loops keep their allocation budget
+//! (`tests/alloc_count.rs`).
+
+pub mod metrics;
+pub mod trace;
+
+use std::sync::{Mutex, OnceLock};
+
+pub use metrics::{absorb_span_stats, absorb_store_snapshot, Class, Counter, Gauge, Registry};
+pub use trace::{TraceLevel, TraceSink, PID_PACKAGE, PID_SEARCH, PID_SERVE};
+
+#[derive(Clone, Default)]
+struct OutputPaths {
+    trace_out: String,
+    metrics_out: String,
+}
+
+fn outputs() -> &'static Mutex<OutputPaths> {
+    static OUT: OnceLock<Mutex<OutputPaths>> = OnceLock::new();
+    OUT.get_or_init(|| Mutex::new(OutputPaths::default()))
+}
+
+/// Arm the global sink and remember the output paths. Called by the CLI
+/// once options are parsed; idempotent.
+pub fn configure(sim: &crate::config::SimOptions) {
+    let sink = TraceSink::global();
+    sink.set_level(sim.trace_level);
+    sink.set_enabled(!sim.trace_out.is_empty());
+    let mut out = outputs().lock().unwrap();
+    out.trace_out = sim.trace_out.clone();
+    out.metrics_out = sim.metrics_out.clone();
+}
+
+/// Flush the configured outputs: the Chrome trace to `--trace-out` and
+/// the registry to `--metrics-out` (Prometheus text when the path ends
+/// in `.prom` or `.txt`, the stable JSON document otherwise). Prints one
+/// line per file written; does nothing when no flag was given.
+pub fn emit() -> std::io::Result<()> {
+    let paths = outputs().lock().unwrap().clone();
+    if !paths.trace_out.is_empty() {
+        let n = TraceSink::global().write_chrome(std::path::Path::new(&paths.trace_out))?;
+        println!(
+            "trace: wrote {n} events to {} (open in Perfetto / chrome://tracing)",
+            paths.trace_out
+        );
+    }
+    if !paths.metrics_out.is_empty() {
+        let reg = Registry::global();
+        let body = if paths.metrics_out.ends_with(".prom") || paths.metrics_out.ends_with(".txt") {
+            reg.prometheus()
+        } else {
+            reg.to_json().to_string_compact() + "\n"
+        };
+        std::fs::write(&paths.metrics_out, body)?;
+        println!("metrics: wrote {}", paths.metrics_out);
+    }
+    Ok(())
+}
+
+/// Human-readable summary of a `SCOPE_PRUNE_AUDIT=1` run, read from the
+/// registry — `None` when no span was audited (audit off, or pruning
+/// produced no bounds to check).
+pub fn prune_audit_summary() -> Option<String> {
+    let reg = Registry::global();
+    let spans = reg.counter("scope_prune_audit_spans").get();
+    if spans == 0 {
+        return None;
+    }
+    let slack = reg.gauge("scope_prune_audit_max_rel_slack").get();
+    Some(format!(
+        "prune audit: {spans} spans re-verified, every bound admissible \
+         (max relative slack {slack:.3e})"
+    ))
+}

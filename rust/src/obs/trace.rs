@@ -1,0 +1,403 @@
+//! Deterministic trace sink with Chrome trace-event export.
+//!
+//! Two clocks feed the same sink:
+//!
+//! * **Simulated time** — integer nanoseconds from the timeline evaluator
+//!   and the serving event loop. These events are bit-identical across
+//!   `--threads` settings and process runs, because the timestamps come
+//!   from the cost model, not the host.
+//! * **Wall clock** — DSE phase spans ([`TraceSink::wall_span`]), only
+//!   recorded at [`TraceLevel::Full`]. Useful for "where does `sweep`
+//!   spend its time", inherently not bit-stable.
+//!
+//! The export is Chrome trace-event JSON (the `{"traceEvents": [...]}`
+//! array form): open `chrome://tracing` or <https://ui.perfetto.dev> and
+//! load the file. Simulated nanoseconds map to trace microseconds
+//! (`ts = ns / 1000`), so one trace "ms" is one simulated millisecond.
+//!
+//! When the sink is disabled (the default), every recording call is one
+//! relaxed atomic load and an early return — no allocation, no lock —
+//! which keeps the DP hot loops clean (`tests/alloc_count.rs`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::{self, Json};
+
+/// Synthetic "process" ids grouping trace tracks in the viewer.
+pub const PID_PACKAGE: u32 = 1;
+/// Serving-simulation tracks (shares + arrival streams).
+pub const PID_SERVE: u32 = 2;
+/// Wall-clock DSE phase spans.
+pub const PID_SEARCH: u32 = 3;
+
+/// How much the sink records.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TraceLevel {
+    /// Simulated-time events only — output is bit-identical across
+    /// `--threads` and process runs.
+    #[default]
+    Sim,
+    /// Also record wall-clock DSE spans (not bit-stable by nature).
+    Full,
+}
+
+impl TraceLevel {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "sim" => Ok(TraceLevel::Sim),
+            "full" => Ok(TraceLevel::Full),
+            other => Err(format!("unknown trace level {other:?} (expected sim|full)")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceLevel::Sim => "sim",
+            TraceLevel::Full => "full",
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase {
+    /// Chrome `"X"`: a complete span with a duration.
+    Complete,
+    /// Chrome `"i"`: a thread-scoped instant.
+    Instant,
+}
+
+/// One recorded event, timestamps in (simulated or epoch-relative) ns.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    name: String,
+    cat: &'static str,
+    ph: Phase,
+    ts_ns: u64,
+    dur_ns: u64,
+    pid: u32,
+    tid: u32,
+    args: Vec<(&'static str, f64)>,
+}
+
+#[derive(Default)]
+struct Inner {
+    events: Vec<TraceEvent>,
+    process_names: BTreeMap<u32, String>,
+    thread_names: BTreeMap<(u32, u32), String>,
+}
+
+/// The event sink. Use [`TraceSink::global`] — the CLI arms it from
+/// `--trace-out` / `--trace-level` and exports it on exit.
+pub struct TraceSink {
+    enabled: AtomicBool,
+    level: AtomicU8,
+    inner: Mutex<Inner>,
+}
+
+impl Default for TraceSink {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TraceSink {
+    pub fn new() -> Self {
+        TraceSink {
+            enabled: AtomicBool::new(false),
+            level: AtomicU8::new(TraceLevel::Sim as u8),
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    /// The process-wide sink.
+    pub fn global() -> &'static TraceSink {
+        static GLOBAL: OnceLock<TraceSink> = OnceLock::new();
+        GLOBAL.get_or_init(TraceSink::new)
+    }
+
+    /// The disabled-path check: one relaxed load, nothing else.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn level(&self) -> TraceLevel {
+        if self.level.load(Ordering::Relaxed) == TraceLevel::Full as u8 {
+            TraceLevel::Full
+        } else {
+            TraceLevel::Sim
+        }
+    }
+
+    pub fn set_level(&self, level: TraceLevel) {
+        self.level.store(level as u8, Ordering::Relaxed);
+    }
+
+    /// Drop every recorded event and name (enabled/level are untouched).
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.events.clear();
+        inner.process_names.clear();
+        inner.thread_names.clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Record a complete span (`ph: "X"`). No-op while disabled.
+    pub fn complete(
+        &self,
+        pid: u32,
+        tid: u32,
+        name: String,
+        cat: &'static str,
+        ts_ns: u64,
+        dur_ns: u64,
+        args: Vec<(&'static str, f64)>,
+    ) {
+        if !self.enabled() {
+            return;
+        }
+        self.inner.lock().unwrap().events.push(TraceEvent {
+            name,
+            cat,
+            ph: Phase::Complete,
+            ts_ns,
+            dur_ns,
+            pid,
+            tid,
+            args,
+        });
+    }
+
+    /// Record a thread-scoped instant (`ph: "i"`). No-op while disabled.
+    pub fn instant(
+        &self,
+        pid: u32,
+        tid: u32,
+        name: String,
+        cat: &'static str,
+        ts_ns: u64,
+        args: Vec<(&'static str, f64)>,
+    ) {
+        if !self.enabled() {
+            return;
+        }
+        self.inner.lock().unwrap().events.push(TraceEvent {
+            name,
+            cat,
+            ph: Phase::Instant,
+            ts_ns,
+            dur_ns: 0,
+            pid,
+            tid,
+            args,
+        });
+    }
+
+    /// Name a synthetic process (a top-level group in the viewer).
+    pub fn name_process(&self, pid: u32, name: &str) {
+        if !self.enabled() {
+            return;
+        }
+        self.inner.lock().unwrap().process_names.insert(pid, name.to_string());
+    }
+
+    /// Name a track within a process.
+    pub fn name_thread(&self, pid: u32, tid: u32, name: &str) {
+        if !self.enabled() {
+            return;
+        }
+        self.inner.lock().unwrap().thread_names.insert((pid, tid), name.to_string());
+    }
+
+    /// True when wall-clock DSE spans should be recorded.
+    pub fn wall_enabled(&self) -> bool {
+        self.enabled() && self.level() == TraceLevel::Full
+    }
+
+    /// A guard that records a wall-clock span on drop — or nothing at all
+    /// below [`TraceLevel::Full`]. The handle is `Option`-free so callers
+    /// hold it unconditionally.
+    pub fn wall_span(&'static self, name: &'static str) -> WallSpan {
+        let active = self.wall_enabled();
+        WallSpan { sink: self, name, start_ns: if active { wall_now_ns() } else { 0 }, active }
+    }
+
+    /// The Chrome trace-event document. Events are stably sorted by
+    /// (pid, tid, ts) — insertion order breaks ties — and prefixed with
+    /// `"M"` metadata records carrying the process/track names.
+    pub fn to_chrome_json(&self) -> Json {
+        let inner = self.inner.lock().unwrap();
+        let mut events = inner.events.clone();
+        events.sort_by_key(|e| (e.pid, e.tid, e.ts_ns));
+
+        let mut out: Vec<Json> = Vec::with_capacity(events.len() + 8);
+        for (pid, name) in &inner.process_names {
+            out.push(json::obj(vec![
+                ("name", json::s("process_name")),
+                ("ph", json::s("M")),
+                ("ts", json::num(0.0)),
+                ("pid", json::num(*pid as f64)),
+                ("tid", json::num(0.0)),
+                ("args", json::obj(vec![("name", json::s(name))])),
+            ]));
+        }
+        for ((pid, tid), name) in &inner.thread_names {
+            out.push(json::obj(vec![
+                ("name", json::s("thread_name")),
+                ("ph", json::s("M")),
+                ("ts", json::num(0.0)),
+                ("pid", json::num(*pid as f64)),
+                ("tid", json::num(*tid as f64)),
+                ("args", json::obj(vec![("name", json::s(name))])),
+            ]));
+        }
+        for e in &events {
+            let ph = match e.ph {
+                Phase::Complete => "X",
+                Phase::Instant => "i",
+            };
+            let mut pairs = vec![
+                ("name", json::s(&e.name)),
+                ("cat", json::s(e.cat)),
+                ("ph", json::s(ph)),
+                ("ts", json::num(e.ts_ns as f64 / 1000.0)),
+                ("pid", json::num(e.pid as f64)),
+                ("tid", json::num(e.tid as f64)),
+            ];
+            match e.ph {
+                Phase::Complete => pairs.push(("dur", json::num(e.dur_ns as f64 / 1000.0))),
+                Phase::Instant => pairs.push(("s", json::s("t"))),
+            }
+            if !e.args.is_empty() {
+                let args = e.args.iter().map(|(k, v)| (*k, json::num(*v))).collect();
+                pairs.push(("args", json::obj(args)));
+            }
+            out.push(json::obj(pairs));
+        }
+        json::obj(vec![
+            ("traceEvents", Json::Arr(out)),
+            ("displayTimeUnit", json::s("ms")),
+        ])
+    }
+
+    /// Write the Chrome trace to `path`; returns the event count.
+    pub fn write_chrome(&self, path: &Path) -> std::io::Result<usize> {
+        let n = self.len();
+        std::fs::write(path, self.to_chrome_json().to_string_compact() + "\n")?;
+        Ok(n)
+    }
+}
+
+/// Nanoseconds since the first wall-clock observation this process made.
+fn wall_now_ns() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// RAII wall-clock span — see [`TraceSink::wall_span`].
+pub struct WallSpan {
+    sink: &'static TraceSink,
+    name: &'static str,
+    start_ns: u64,
+    active: bool,
+}
+
+impl Drop for WallSpan {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        let end = wall_now_ns();
+        self.sink.complete(
+            PID_SEARCH,
+            0,
+            self.name.to_string(),
+            "dse",
+            self.start_ns,
+            end.saturating_sub(self.start_ns),
+            Vec::new(),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_sink_records_nothing() {
+        let sink = TraceSink::new();
+        sink.complete(PID_PACKAGE, 0, "x".into(), "c", 0, 10, vec![]);
+        sink.instant(PID_PACKAGE, 0, "y".into(), "c", 5, vec![]);
+        sink.name_process(PID_PACKAGE, "p");
+        assert!(sink.is_empty());
+        let doc = sink.to_chrome_json();
+        assert_eq!(doc.get("traceEvents").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn chrome_export_sorts_per_track_and_carries_schema_fields() {
+        let sink = TraceSink::new();
+        sink.set_enabled(true);
+        sink.name_process(PID_PACKAGE, "package");
+        sink.name_thread(PID_PACKAGE, 1, "cluster 1");
+        // Recorded out of order on one track; a second track interleaves.
+        sink.complete(PID_PACKAGE, 1, "late".into(), "compute", 2000, 500, vec![("n", 4.0)]);
+        sink.complete(PID_PACKAGE, 1, "early".into(), "compute", 1000, 500, vec![]);
+        sink.instant(PID_PACKAGE, 2, "mark".into(), "comm", 1500, vec![]);
+
+        let doc = sink.to_chrome_json();
+        let events = doc.get("traceEvents").unwrap().as_arr().expect("traceEvents");
+        assert_eq!(events.len(), 5); // 2 metadata + 3 events
+        let mut last_ts: BTreeMap<(u64, u64), f64> = BTreeMap::new();
+        for e in events {
+            for key in ["name", "ph", "ts", "pid", "tid"] {
+                assert!(e.get(key).is_ok(), "missing {key} in {e:?}");
+            }
+            let ph = e.get("ph").unwrap().as_str().unwrap().to_string();
+            if ph == "M" {
+                continue;
+            }
+            if ph == "X" {
+                assert!(e.get("dur").is_ok(), "X event without dur");
+            }
+            let track = (
+                e.get("pid").unwrap().as_f64().unwrap() as u64,
+                e.get("tid").unwrap().as_f64().unwrap() as u64,
+            );
+            let ts = e.get("ts").unwrap().as_f64().unwrap();
+            if let Some(prev) = last_ts.insert(track, ts) {
+                assert!(prev <= ts, "track {track:?} out of order: {prev} > {ts}");
+            }
+        }
+        // ns → µs conversion: 1000 ns = 1 µs.
+        let first = events
+            .iter()
+            .find(|e| e.get("name").unwrap().as_str().unwrap() == "early")
+            .unwrap();
+        assert_eq!(first.get("ts").unwrap().as_f64().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn trace_level_parses() {
+        assert_eq!(TraceLevel::parse("sim").unwrap(), TraceLevel::Sim);
+        assert_eq!(TraceLevel::parse("full").unwrap(), TraceLevel::Full);
+        assert!(TraceLevel::parse("loud").is_err());
+        assert_eq!(TraceLevel::default().name(), "sim");
+    }
+}

@@ -154,6 +154,25 @@ pub fn eval_cluster_fused(ctx: &EvalContext, seg: &SegmentSchedule, j: usize) ->
     out
 }
 
+/// A fused cluster's per-sample live-set overflow: activation bytes
+/// beyond the region's pooled SRAM share, and the DRAM round-trip cycles
+/// [`eval_cluster_fused`] charges for them (`(0, 0.0)` when the live set
+/// fits). The trace replay uses this to label DRAM-overflow events on
+/// fused segments without re-deriving the charge.
+pub fn overflow_round_trip(ctx: &EvalContext, seg: &SegmentSchedule, j: usize) -> (u64, f64) {
+    debug_assert_eq!(seg.exec_mode, ExecMode::Fused);
+    let (lo, hi) = seg.cluster_range(j);
+    let r = seg.regions[j] as u64;
+    let g = lower_segment(ctx.net, lo, hi, ctx.opts.tile_rows);
+    let share = r * ctx.mcm.chiplet.global_buf;
+    let over = overflow_bytes(&g, share);
+    if over == 0 {
+        return (0, 0.0);
+    }
+    let d = dram_transfer((2 * over) as f64, &ctx.mcm.dram, ctx.mcm.chiplet.freq_hz, 1.0);
+    (over, d.cycles)
+}
+
 /// Build the fused-execution candidate for span `[lo, hi)` on `chiplets`
 /// chiplets: one cluster over the whole region, per-layer partitions
 /// picked by compute time (ties → WSP, matching the pipeline search's

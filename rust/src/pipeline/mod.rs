@@ -14,5 +14,6 @@ pub use eval_cache::{eval_segment_cached, ClusterKey, EvalCache, PartBits};
 pub use schedule::{ExecMode, ExecModeChoice, Partition, Schedule, SegmentSchedule};
 pub use timeline::{
     boundary_spill, dag_skip_traffic, eval_cluster, eval_layer, eval_schedule,
-    eval_segment, ClusterEval, EvalContext, LayerPhases, ScheduleEval, SegmentEval,
+    eval_segment, trace_schedule, ClusterEval, EvalContext, LayerPhases, ScheduleEval,
+    SegmentEval,
 };

@@ -17,6 +17,7 @@ use crate::cost::{
     DramCost, EnergyBreakdown, NopCost, RegionGeom,
 };
 use crate::model::Network;
+use crate::obs::{TraceSink, PID_PACKAGE};
 use crate::storage::{plan_cluster, LayerResidency, StoragePolicy};
 
 use super::schedule::{ExecMode, Schedule, SegmentSchedule};
@@ -379,6 +380,146 @@ pub fn eval_schedule(ctx: &EvalContext, sched: &Schedule) -> ScheduleEval {
         out.throughput = 0.0;
     }
     out
+}
+
+/// Replay a finished schedule into the global [`TraceSink`] as a
+/// simulated-time Gantt: one trace track per cluster, with weight
+/// preloads, warm-up bubbles (cluster `j` idles `j` stage latencies
+/// before its first sample), the busy span for the batch, DAG skip
+/// traffic, fused DRAM-overflow round-trips, and inter-segment boundary
+/// spills on a dedicated DRAM track. Timestamps are simulated integer
+/// nanoseconds (`cycles / freq`), so the trace is bit-identical at every
+/// `--threads` setting. No-op while tracing is off.
+///
+/// Call this once on a *winner* (the CLI does, after `search`), not from
+/// inside a sweep — every call appends a full Gantt to the sink.
+pub fn trace_schedule(net: &Network, mcm: &McmConfig, opts: &SimOptions, sched: &Schedule) {
+    let sink = TraceSink::global();
+    if !sink.enabled() {
+        return;
+    }
+    let policy = if opts.distributed_weights {
+        StoragePolicy::Distributed
+    } else {
+        StoragePolicy::Replicated
+    };
+    let ctx = EvalContext { net, mcm, opts, policy, dram_fallback: true };
+    let freq = mcm.chiplet.freq_hz;
+    let ns = |cycles: f64| -> u64 { (cycles * 1e9 / freq).max(0.0).round() as u64 };
+    let m = opts.samples;
+    // track id for the shared DRAM channel (boundary spills)
+    const DRAM_TID: u32 = u32::MAX;
+    sink.name_process(PID_PACKAGE, &format!("{} schedule — simulated time", sched.method));
+    sink.name_thread(PID_PACKAGE, DRAM_TID, "DRAM channel (boundary spills)");
+
+    let mut t: u64 = 0;
+    let mut track: u32 = 0;
+    for (si, seg) in sched.segments.iter().enumerate() {
+        let ev = eval_segment(&ctx, seg, m);
+        if ev.error.is_some() {
+            sink.instant(PID_PACKAGE, track, format!("segment {si}: invalid"), "error", t, vec![]);
+            continue;
+        }
+        let preload = ns(ev.preload_cycles);
+        let n = seg.n_clusters();
+        for j in 0..n {
+            let tid = track + j as u32;
+            let (lo, hi) = seg.cluster_range(j);
+            let cl = &ev.clusters[j];
+            sink.name_thread(
+                PID_PACKAGE,
+                tid,
+                &format!(
+                    "seg {si} cluster {j} — layers [{lo},{hi}) on {} chiplets ({})",
+                    seg.regions[j],
+                    seg.exec_mode.name()
+                ),
+            );
+            if preload > 0 {
+                sink.complete(
+                    PID_PACKAGE,
+                    tid,
+                    "weight preload".to_string(),
+                    "dram",
+                    t,
+                    preload,
+                    vec![("cycles", ev.preload_cycles)],
+                );
+            }
+            let start = t + preload;
+            let bubble = ns(j as f64 * ev.stage_cycles);
+            if bubble > 0 {
+                sink.complete(
+                    PID_PACKAGE,
+                    tid,
+                    "warm-up bubble".to_string(),
+                    "pipeline",
+                    start,
+                    bubble,
+                    vec![],
+                );
+            }
+            let busy = ns(m.saturating_sub(1) as f64 * ev.stage_cycles + cl.cycles);
+            sink.complete(
+                PID_PACKAGE,
+                tid,
+                format!("{} x{m} samples", seg.exec_mode.name()),
+                "compute",
+                start + bubble,
+                busy,
+                vec![
+                    ("cycles_per_sample", cl.cycles),
+                    ("stage_cycles", ev.stage_cycles),
+                    ("macs", cl.macs as f64),
+                    ("streamed_layers", cl.streamed_layers as f64),
+                ],
+            );
+            if seg.exec_mode == ExecMode::Fused {
+                let (bytes, cycles) = super::fused::overflow_round_trip(&ctx, seg, j);
+                if bytes > 0 {
+                    sink.instant(
+                        PID_PACKAGE,
+                        tid,
+                        "DRAM overflow round-trip".to_string(),
+                        "dram",
+                        start + bubble,
+                        vec![("bytes_per_sample", bytes as f64), ("cycles_per_sample", cycles)],
+                    );
+                }
+            }
+        }
+        if ev.skip_cycles > 0.0 {
+            // skip traffic is folded into pipeline_cycles — show it at
+            // the tail of the segment on the last cluster's track
+            let fill = ns((m + n as u64 - 1) as f64 * ev.stage_cycles);
+            sink.complete(
+                PID_PACKAGE,
+                track + n.saturating_sub(1) as u32,
+                "DAG skip traffic".to_string(),
+                "nop",
+                t + preload + fill,
+                ns(ev.skip_cycles),
+                vec![("cycles", ev.skip_cycles)],
+            );
+        }
+        t += preload + ns(ev.pipeline_cycles);
+        if si + 1 < sched.segments.len() {
+            let spill = boundary_spill(net, mcm, seg.hi, m);
+            if spill.bytes > 0.0 {
+                sink.complete(
+                    PID_PACKAGE,
+                    DRAM_TID,
+                    format!("boundary spill after segment {si}"),
+                    "dram",
+                    t,
+                    ns(spill.cycles),
+                    vec![("bytes", spill.bytes)],
+                );
+                t += ns(spill.cycles);
+            }
+        }
+        track += n as u32;
+    }
 }
 
 #[cfg(test)]

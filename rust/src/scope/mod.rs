@@ -158,6 +158,13 @@ pub fn schedule_scope_opts(
         seg_opts,
         &provider,
     );
+    // shared cluster-cache traffic: relaxed high-water gauges (the cache
+    // counters are cumulative and racy-by-design), informational only
+    if let Some(cache) = &cluster_cache {
+        let reg = crate::obs::Registry::global();
+        reg.gauge_info("scope_eval_cache_hits").set_max(cache.hits() as f64);
+        reg.gauge_info("scope_eval_cache_misses").set_max(cache.misses() as f64);
+    }
     match found {
         None => MethodResult::invalid("scope", "no valid segmentation"),
         Some(r) => {

@@ -784,6 +784,18 @@ pub fn co_schedule(
         0.0
     };
     let total_weight = set.total_weight();
+    let store = if sim.cache_store {
+        Some(CacheStore::global().snapshot())
+    } else {
+        None
+    };
+    // fold the co-schedule's search traffic into the metrics registry
+    let reg = crate::obs::Registry::global();
+    reg.counter("scope_multi_evals").add(evals as u64);
+    reg.counter("scope_multi_pruned_pairs").add(pruned_pairs as u64);
+    if let Some(snap) = &store {
+        crate::obs::absorb_store_snapshot(reg, snap);
+    }
     MultiModelResult {
         outcomes,
         rate,
@@ -795,11 +807,7 @@ pub fn co_schedule(
         allocator: mopts.allocator,
         evals,
         pruned_pairs,
-        store: if sim.cache_store {
-            Some(CacheStore::global().snapshot())
-        } else {
-            None
-        },
+        store,
         error: None,
     }
 }

@@ -645,6 +645,8 @@ fn dp_pass<P: SegmentCost>(
     memo: &mut SpanMemo<P::Sched>,
 ) -> DpPassOut {
     let l = net.len();
+    // wall-clock DSE phase span (recorded only at --trace-level full)
+    let _pass = crate::obs::TraceSink::global().wall_span("dp pass: windows + relaxation");
     let lo_s = min_segments.max(1);
     let hi_s = max_segments.min(l);
     let mut out = DpPassOut { best: None, count_winners: Vec::new() };
@@ -822,9 +824,13 @@ fn dp_pass<P: SegmentCost>(
     if audit {
         // Audit mode: schedule *everything* and re-verify admissibility of
         // every bound against the exact latency. The DP itself still runs
-        // on the pruned plane (the result is proven identical).
+        // on the pruned plane (the result is proven identical). Audited
+        // span counts and the loosest bound observed land in the metrics
+        // registry so an audited run reports what it checked.
         memo.prefill(threads, &spans, provider);
         let lbm = lb_map.as_ref().expect("audit implies bounds");
+        let mut audited = 0u64;
+        let mut max_slack = 0.0f64;
         for &(j, i) in &spans {
             let (Some(&b), Some(Some(lat))) = (lbm.get(&(j, i)), memo.cached_latency(j, i))
             else {
@@ -834,8 +840,16 @@ fn dp_pass<P: SegmentCost>(
                 b <= lat * (1.0 + 1e-9),
                 "SCOPE_PRUNE_AUDIT: span [{j},{i}) bound {b} exceeds exact latency {lat}"
             );
+            audited += 1;
+            if lat > 0.0 {
+                max_slack = max_slack.max((lat - b) / lat);
+            }
         }
+        let reg = crate::obs::Registry::global();
+        reg.counter("scope_prune_audit_spans").add(audited);
+        reg.gauge("scope_prune_audit_max_rel_slack").set_max(max_slack);
     } else {
+        let _prefill = crate::obs::TraceSink::global().wall_span("dp: span prefill");
         memo.prefill(threads, &plane_spans, provider);
     }
 
@@ -1055,18 +1069,21 @@ pub fn search_segments_opts<P: SegmentCost>(
                 &mut memo,
             )
         }
-        Some(key) => CacheStore::global().with_span_memo(key, |memo: &mut SpanMemo<P::Sched>| {
-            search_segments_memo(
-                net,
-                min_segments,
-                max_segments,
-                max_layers,
-                threads,
-                opts,
-                provider,
-                memo,
-            )
-        }),
+        Some(key) => {
+            let _checkout = crate::obs::TraceSink::global().wall_span("store checkout + sweep");
+            CacheStore::global().with_span_memo(key, |memo: &mut SpanMemo<P::Sched>| {
+                search_segments_memo(
+                    net,
+                    min_segments,
+                    max_segments,
+                    max_layers,
+                    threads,
+                    opts,
+                    provider,
+                    memo,
+                )
+            })
+        }
     }
 }
 
@@ -1116,6 +1133,9 @@ fn search_segments_memo<P: SegmentCost>(
         )?,
     };
     result.stats = memo.stats().since(before);
+    // fold this sweep's stats into the process-wide registry (SpanStats
+    // is thread-count-invariant, so the metrics stay bit-stable)
+    crate::obs::absorb_span_stats(crate::obs::Registry::global(), &result.stats);
     Some(result)
 }
 

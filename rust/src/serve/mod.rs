@@ -47,6 +47,7 @@ use crate::config::SimOptions;
 use crate::cost::bound::batch1_latency_lb_ns;
 use crate::dse::parallel::par_map;
 use crate::model::workload_set::WorkloadSet;
+use crate::obs::{Registry, TraceSink, PID_SERVE};
 use crate::scope::multi_model::{
     for_each_hybrid_allocation, share_grid, sub_package, weight_swap_ns, HybridAllocation,
 };
@@ -802,7 +803,7 @@ pub fn serve(
         })
     };
     let (best_spatial, best_tm, best) = (with_log(best_spatial), with_log(best_tm), with_log(best));
-    ServingReport {
+    let report = ServingReport {
         set: set.clone(),
         total_chiplets: mcm.chiplets,
         arrival_counts,
@@ -811,11 +812,114 @@ pub fn serve(
         pruned_allocations,
         feasible_allocations: feasible,
         slo_feasible_allocations: slo_feasible,
-        sizes: prepared.sizes,
+        sizes: prepared.sizes.clone(),
         spatial: best_spatial,
         tm: best_tm,
         hybrid: best,
         error: None,
+    };
+    absorb_serve_metrics(&report);
+    trace_winner(&report, &prepared);
+    report
+}
+
+/// Fold a finished serve run into the global metrics registry. Every
+/// value here is deterministic (the report is bit-identical across
+/// `--threads` and process runs), so these all class as stable.
+fn absorb_serve_metrics(report: &ServingReport) {
+    let reg = Registry::global();
+    reg.counter("scope_serve_allocations").add(report.allocations as u64);
+    reg.counter("scope_serve_pruned_allocations").add(report.pruned_allocations as u64);
+    reg.counter("scope_serve_feasible_allocations").add(report.feasible_allocations as u64);
+    reg.counter("scope_serve_slo_feasible_allocations")
+        .add(report.slo_feasible_allocations as u64);
+    reg.counter("scope_serve_evals").add(report.evals as u64);
+    let Some(winner) = &report.hybrid else { return };
+    reg.counter("scope_serve_completed").add(winner.sim.completed);
+    reg.counter("scope_serve_events").add(winner.sim.events);
+    reg.counter("scope_serve_swaps").add(winner.sim.swaps);
+    reg.gauge("scope_serve_makespan_ns").set_max(winner.sim.makespan_ns as f64);
+    for (i, stats) in winner.sim.per_model.iter().enumerate() {
+        let name = report.set.models[i].net.name.as_str();
+        reg.gauge(&format!("scope_serve_p99_ns_{name}")).set_max(stats.p99_ns as f64);
+        reg.gauge(&format!("scope_serve_queue_high_water_{name}"))
+            .set_max(stats.queue_high_water as f64);
+        reg.counter(&format!("scope_serve_batches_{name}")).add(stats.batches);
+        reg.counter(&format!("scope_serve_violations_{name}")).add(stats.violations);
+        if stats.batches > 0 {
+            // mean requests served per dispatched batch on the winner
+            reg.gauge(&format!("scope_serve_batch_occupancy_{name}"))
+                .set_max(stats.completed as f64 / stats.batches as f64);
+        }
+    }
+}
+
+/// Replay the winning allocation's event log into the global trace sink:
+/// one track per share carrying batch-service spans (Dispatch→Complete,
+/// tagged with batch size and whether the dispatch paid the weight
+/// swap), plus one arrivals track per model. Timestamps are the
+/// simulation's integer nanoseconds, so the trace is bit-identical
+/// across `--threads` and runs. No-op while tracing is off.
+fn trace_winner(report: &ServingReport, prepared: &Prepared) {
+    let sink = TraceSink::global();
+    if !sink.enabled() {
+        return;
+    }
+    let Some(winner) = &report.hybrid else { return };
+    let set = &report.set;
+    sink.name_process(PID_SERVE, &format!("serving — winner {}", winner.alloc.label(set)));
+    // per-model arrival tracks sit after the share tracks
+    let arrivals_tid = |model: usize| (winner.alloc.groups.len() + model) as u32;
+    for (g, group) in winner.alloc.groups.iter().enumerate() {
+        let names: Vec<&str> =
+            group.members.iter().map(|&m| set.models[m].net.name.as_str()).collect();
+        sink.name_thread(
+            PID_SERVE,
+            g as u32,
+            &format!("share {g} @{} chiplets: {}", group.chiplets, names.join("+")),
+        );
+    }
+    for (m, spec) in set.models.iter().enumerate() {
+        sink.name_thread(PID_SERVE, arrivals_tid(m), &format!("arrivals: {}", spec.net.name));
+    }
+    // A share serves one batch at a time (the next dispatch waits for
+    // BatchComplete), so Dispatch→Complete pairs FIFO per share; the
+    // swap charge replays exactly as the simulator applied it — a
+    // dispatch pays when the share's resident model changes.
+    let mut open: Vec<Option<&LogEntry>> = vec![None; winner.alloc.groups.len()];
+    let mut resident: Vec<Option<usize>> = vec![None; winner.alloc.groups.len()];
+    for entry in &winner.sim.log {
+        let name = set.models[entry.model].net.name.as_str();
+        match entry.kind {
+            LogKind::Arrival => sink.instant(
+                PID_SERVE,
+                arrivals_tid(entry.model),
+                format!("{name} arrival"),
+                "arrival",
+                entry.t_ns,
+                vec![],
+            ),
+            LogKind::Dispatch => open[entry.share] = Some(entry),
+            LogKind::Complete => {
+                let Some(dispatch) = open[entry.share].take() else { continue };
+                debug_assert_eq!((dispatch.model, dispatch.n), (entry.model, entry.n));
+                let swapped = resident[entry.share] != Some(entry.model);
+                resident[entry.share] = Some(entry.model);
+                sink.complete(
+                    PID_SERVE,
+                    entry.share as u32,
+                    format!("{name} x{}{}", entry.n, if swapped { " (swap)" } else { "" }),
+                    "batch",
+                    dispatch.t_ns,
+                    entry.t_ns.saturating_sub(dispatch.t_ns),
+                    vec![
+                        ("batch", entry.n as f64),
+                        ("swapped", if swapped { 1.0 } else { 0.0 }),
+                        ("swap_ns", if swapped { prepared.swap_ns[entry.model] as f64 } else { 0.0 }),
+                    ],
+                );
+            }
+        }
     }
 }
 

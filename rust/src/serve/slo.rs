@@ -9,14 +9,10 @@
 
 /// Nearest-rank percentile of a **sorted** latency sample: the smallest
 /// value with at least `q` of the mass at or below it (`q` in `(0, 1]`).
-/// `0` on an empty sample.
+/// `0` on an empty sample. Delegates to the repo-wide helper in
+/// [`crate::util::stats`] so every subsystem shares one definition.
 pub fn percentile_ns(sorted: &[u64], q: f64) -> u64 {
-    if sorted.is_empty() {
-        return 0;
-    }
-    debug_assert!(q > 0.0 && q <= 1.0);
-    let rank = (q * sorted.len() as f64).ceil() as usize;
-    sorted[rank.clamp(1, sorted.len()) - 1]
+    crate::util::stats::percentile_nearest_rank_u64(sorted, q)
 }
 
 /// One model's serving statistics over a finished simulation.

@@ -33,22 +33,31 @@ pub fn cv(xs: &[f64]) -> f64 {
     }
 }
 
-/// Percentile via linear interpolation on the sorted copy; `p` in [0, 100].
-pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    assert!((0.0..=100.0).contains(&p));
-    if xs.is_empty() {
+/// Nearest-rank percentile of a **sorted ascending** sample: the smallest
+/// element with at least `q·n` observations at or below it
+/// (`rank = ceil(q·n)`, `q ∈ (0, 1]`); 0 on an empty slice. The one
+/// percentile definition in the repo — the serving SLO tracker
+/// (`serve::slo`) and the coordinator's pipeline report both route here,
+/// so a "p99" means the same thing everywhere. Nearest-rank returns an
+/// *observed* value (never an interpolated one), which keeps integer-ns
+/// latency stats `Eq`-comparable in the determinism tests.
+pub fn percentile_nearest_rank_u64(sorted: &[u64], q: f64) -> u64 {
+    debug_assert!(q > 0.0 && q <= 1.0, "quantile out of range: {q}");
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// [`percentile_nearest_rank_u64`] over `f64` samples (sorted ascending).
+pub fn percentile_nearest_rank(sorted: &[f64], q: f64) -> f64 {
+    debug_assert!(q > 0.0 && q <= 1.0, "quantile out of range: {q}");
+    if sorted.is_empty() {
         return 0.0;
     }
-    let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = p / 100.0 * (v.len() - 1) as f64;
-    let lo = rank.floor() as usize;
-    let hi = rank.ceil() as usize;
-    if lo == hi {
-        v[lo]
-    } else {
-        v[lo] + (v[hi] - v[lo]) * (rank - lo as f64)
-    }
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
 }
 
 /// Fixed-width histogram over `[lo, hi)` with `bins` buckets; values outside
@@ -132,11 +141,23 @@ mod tests {
     }
 
     #[test]
-    fn percentile_interpolates() {
-        let xs = [1.0, 2.0, 3.0, 4.0];
-        assert_eq!(percentile(&xs, 0.0), 1.0);
-        assert_eq!(percentile(&xs, 100.0), 4.0);
-        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    fn nearest_rank_pins_known_percentiles() {
+        // 1..=100: pN is exactly N — the textbook nearest-rank vector
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile_nearest_rank_u64(&v, 0.50), 50);
+        assert_eq!(percentile_nearest_rank_u64(&v, 0.95), 95);
+        assert_eq!(percentile_nearest_rank_u64(&v, 0.99), 99);
+        assert_eq!(percentile_nearest_rank_u64(&v, 1.00), 100);
+        // small samples: always an observed value, never interpolated
+        assert_eq!(percentile_nearest_rank_u64(&[10, 20], 0.50), 10);
+        assert_eq!(percentile_nearest_rank_u64(&[10, 20], 0.99), 20);
+        assert_eq!(percentile_nearest_rank_u64(&[42], 0.99), 42);
+        assert_eq!(percentile_nearest_rank_u64(&[], 0.50), 0);
+        // the f64 twin agrees with the integer version
+        let f: Vec<f64> = v.iter().map(|&x| x as f64).collect();
+        assert_eq!(percentile_nearest_rank(&f, 0.99), 99.0);
+        assert_eq!(percentile_nearest_rank(&f, 0.50), 50.0);
+        assert_eq!(percentile_nearest_rank(&[], 0.5), 0.0);
     }
 
     #[test]

@@ -1,0 +1,242 @@
+//! Observability acceptance tests: `--trace-out` / `--metrics-out` leave
+//! every subcommand's results bit-identical (tracing on/off, repeat runs,
+//! `--threads 1/2/8`), the emitted Chrome trace-event JSON carries the
+//! schema fields Perfetto needs and is time-ordered per track, and the
+//! metrics document is byte-stable with the documented schema tag.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use scope::util::json::Json;
+
+fn run_cli(args: &[&str]) -> String {
+    let out = Command::new(env!("CARGO_BIN_EXE_scope"))
+        .args(args)
+        .output()
+        .expect("scope binary runs");
+    assert!(
+        out.status.success(),
+        "scope {:?} failed: {}",
+        args,
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8(out.stdout).expect("utf8 stdout")
+}
+
+/// Unique temp path per (process, label) so parallel tests never collide.
+fn tmp(label: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("scope_obs_{}_{label}", std::process::id()))
+}
+
+/// Stdout with the observability `wrote ...` lines removed (their paths
+/// differ per invocation); everything else must be unaffected by tracing.
+fn strip_obs_lines(out: &str) -> String {
+    out.lines()
+        .filter(|l| !l.starts_with("trace: wrote") && !l.starts_with("metrics: wrote"))
+        .map(|l| format!("{l}\n"))
+        .collect()
+}
+
+/// Parse + schema-check a Chrome trace-event document: every event
+/// carries name/ph/ts/pid/tid, `"X"` events carry `dur`, and timestamps
+/// are non-decreasing per (pid, tid) track. Returns the number of
+/// non-metadata events.
+fn validate_chrome(text: &str) -> usize {
+    let doc = Json::parse(text).expect("trace parses as JSON");
+    assert_eq!(doc.get("displayTimeUnit").unwrap().as_str().unwrap(), "ms");
+    let events = doc.get("traceEvents").unwrap().as_arr().expect("traceEvents array");
+    let mut last_ts: std::collections::BTreeMap<(u64, u64), f64> = Default::default();
+    let mut real = 0usize;
+    for e in events {
+        for key in ["name", "ph", "ts", "pid", "tid"] {
+            assert!(e.get(key).is_ok(), "missing {key} in {e:?}");
+        }
+        let ph = e.get("ph").unwrap().as_str().unwrap().to_string();
+        if ph == "M" {
+            continue;
+        }
+        real += 1;
+        assert!(ph == "X" || ph == "i", "unexpected phase {ph:?}");
+        if ph == "X" {
+            assert!(e.get("dur").is_ok(), "complete event without dur: {e:?}");
+        }
+        let track = (
+            e.get("pid").unwrap().as_f64().unwrap() as u64,
+            e.get("tid").unwrap().as_f64().unwrap() as u64,
+        );
+        let ts = e.get("ts").unwrap().as_f64().unwrap();
+        if let Some(prev) = last_ts.insert(track, ts) {
+            assert!(prev <= ts, "track {track:?} out of order: {prev} > {ts}");
+        }
+    }
+    real
+}
+
+fn counter(doc: &Json, name: &str) -> f64 {
+    doc.get("counters")
+        .unwrap()
+        .get(name)
+        .unwrap_or_else(|_| panic!("metrics missing counter {name}"))
+        .as_f64()
+        .unwrap()
+}
+
+const SERVE_ARGS: &[&str] = &[
+    "serve",
+    "--models",
+    "serving_mix",
+    "--seed",
+    "7",
+    "--chiplets",
+    "16",
+    "--quantum",
+    "8",
+    "--samples",
+    "4",
+    "--batch",
+    "2",
+    "--arrival-rate",
+    "40",
+    "--horizon",
+    "0.05",
+];
+
+#[test]
+fn serve_trace_and_metrics_are_bit_identical_and_leave_results_unchanged() {
+    let base = run_cli(SERVE_ARGS);
+    assert!(base.contains("serving simulation"), "{base}");
+
+    let mut traces: Vec<String> = Vec::new();
+    let mut metrics: Vec<String> = Vec::new();
+    // threads 1/2/8 plus a plain repeat of threads 1: every emitted file
+    // must match byte for byte, and the report must not notice tracing
+    for (i, threads) in ["1", "2", "8", "1"].iter().enumerate() {
+        let t_path = tmp(&format!("serve_t{i}.json"));
+        let m_path = tmp(&format!("serve_m{i}.json"));
+        let (t_s, m_s) = (t_path.display().to_string(), m_path.display().to_string());
+        let mut args = SERVE_ARGS.to_vec();
+        args.extend(["--threads", threads, "--trace-out", &t_s, "--metrics-out", &m_s]);
+        let out = run_cli(&args);
+        assert!(out.contains("trace: wrote"), "{out}");
+        assert!(out.contains("metrics: wrote"), "{out}");
+        assert_eq!(
+            strip_obs_lines(&out),
+            base,
+            "--threads {threads} with tracing drifted from the untraced run"
+        );
+        traces.push(std::fs::read_to_string(&t_path).expect("trace file"));
+        metrics.push(std::fs::read_to_string(&m_path).expect("metrics file"));
+        let _ = std::fs::remove_file(&t_path);
+        let _ = std::fs::remove_file(&m_path);
+    }
+    for i in 1..traces.len() {
+        assert_eq!(traces[0], traces[i], "trace file {i} differs from the first");
+        assert_eq!(metrics[0], metrics[i], "metrics file {i} differs from the first");
+    }
+
+    // Chrome schema: per-share batch spans + per-model arrival instants
+    let n = validate_chrome(&traces[0]);
+    assert!(n > 0, "serve trace recorded no events");
+    assert!(traces[0].contains("\"cat\":\"batch\""), "no batch-service spans in trace");
+    assert!(traces[0].contains("\"cat\":\"arrival\""), "no arrival instants in trace");
+
+    // metrics document: schema tag + the serving counters
+    let doc = Json::parse(&metrics[0]).expect("metrics parse");
+    assert_eq!(doc.get("schema").unwrap().as_str().unwrap(), "scope-metrics-v1");
+    assert!(counter(&doc, "scope_serve_completed") > 0.0);
+    assert!(counter(&doc, "scope_serve_evals") > 0.0);
+    assert!(counter(&doc, "scope_serve_allocations") > 0.0);
+}
+
+#[test]
+fn serve_metrics_prometheus_text_when_path_says_prom() {
+    let m_path = tmp("serve.prom");
+    let m_s = m_path.display().to_string();
+    let mut args = SERVE_ARGS.to_vec();
+    args.extend(["--metrics-out", &m_s]);
+    run_cli(&args);
+    let text = std::fs::read_to_string(&m_path).expect("prom file");
+    let _ = std::fs::remove_file(&m_path);
+    assert!(text.contains("# TYPE scope_serve_completed counter"), "{text}");
+    assert!(text.contains("scope_serve_evals "), "{text}");
+}
+
+const SEARCH_ARGS: &[&str] = &[
+    "search",
+    "--net",
+    "alexnet",
+    "--chiplets",
+    "16",
+    "--samples",
+    "4",
+    "--segmenter",
+    "dp",
+];
+
+#[test]
+fn search_trace_gantt_is_stable_and_leaves_results_unchanged() {
+    let base = run_cli(SEARCH_ARGS);
+    assert!(base.contains("Scope schedule"), "{base}");
+
+    let mut traces: Vec<String> = Vec::new();
+    for (i, threads) in ["1", "2", "1"].iter().enumerate() {
+        let t_path = tmp(&format!("search_t{i}.json"));
+        let m_path = tmp(&format!("search_m{i}.json"));
+        let (t_s, m_s) = (t_path.display().to_string(), m_path.display().to_string());
+        let mut args = SEARCH_ARGS.to_vec();
+        args.extend(["--threads", threads, "--trace-out", &t_s, "--metrics-out", &m_s]);
+        let out = run_cli(&args);
+        assert_eq!(strip_obs_lines(&out), base, "--threads {threads} drifted under tracing");
+        traces.push(std::fs::read_to_string(&t_path).expect("trace file"));
+
+        // the DP sweep's span-memo traffic lands in the metrics registry
+        let doc = Json::parse(&std::fs::read_to_string(&m_path).expect("metrics file"))
+            .expect("metrics parse");
+        assert!(counter(&doc, "scope_span_memo_misses") > 0.0, "dp sweep scheduled no spans");
+        assert!(doc.get("counters").unwrap().get("scope_dp_bounded_out").is_ok());
+        let _ = std::fs::remove_file(&t_path);
+        let _ = std::fs::remove_file(&m_path);
+    }
+    for i in 1..traces.len() {
+        assert_eq!(traces[0], traces[i], "trace file {i} differs from the first");
+    }
+    let n = validate_chrome(&traces[0]);
+    assert!(n > 0, "search trace recorded no events");
+    assert!(traces[0].contains("\"cat\":\"compute\""), "no compute spans in the Gantt");
+    assert!(traces[0].contains("cluster"), "no cluster track names in the Gantt");
+}
+
+#[test]
+fn trace_level_full_adds_wall_clock_search_spans() {
+    let t_path = tmp("search_full.json");
+    let t_s = t_path.display().to_string();
+    let mut args = SEARCH_ARGS.to_vec();
+    args.extend(["--trace-out", &t_s, "--trace-level", "full"]);
+    run_cli(&args);
+    let text = std::fs::read_to_string(&t_path).expect("trace file");
+    let _ = std::fs::remove_file(&t_path);
+    validate_chrome(&text);
+    // wall-clock DSE spans carry the "dse" category on the search pid
+    assert!(text.contains("\"cat\":\"dse\""), "no wall-clock spans at --trace-level full");
+}
+
+#[test]
+fn multi_results_unchanged_and_metrics_carry_co_schedule_counters() {
+    let args: Vec<&str> = vec![
+        "multi", "--models", "alexnet,scopenet:2", "--chiplets", "16", "--samples", "4",
+    ];
+    let base = run_cli(&args);
+    assert!(base.contains("co-scheduled"), "{base}");
+
+    let m_path = tmp("multi_m.json");
+    let m_s = m_path.display().to_string();
+    let mut traced = args.clone();
+    traced.extend(["--metrics-out", &m_s]);
+    let out = run_cli(&traced);
+    assert_eq!(strip_obs_lines(&out), base, "multi drifted under --metrics-out");
+    let doc = Json::parse(&std::fs::read_to_string(&m_path).expect("metrics file"))
+        .expect("metrics parse");
+    let _ = std::fs::remove_file(&m_path);
+    assert!(counter(&doc, "scope_multi_evals") > 0.0);
+    assert!(doc.get("counters").unwrap().get("scope_multi_pruned_pairs").is_ok());
+}

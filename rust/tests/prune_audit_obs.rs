@@ -1,0 +1,34 @@
+//! `SCOPE_PRUNE_AUDIT=1` surfaces its re-verification work through the
+//! metrics registry: the audited span count and the loosest relative
+//! bound slack observed. Lives in its own integration-test binary so the
+//! env var never leaks into other tests' processes.
+
+use scope::arch::McmConfig;
+use scope::config::SimOptions;
+use scope::model::zoo;
+use scope::obs::Registry;
+use scope::scope::{schedule_scope, SegmenterKind};
+
+#[test]
+fn audited_run_reports_span_count_and_bound_slack() {
+    std::env::set_var("SCOPE_PRUNE_AUDIT", "1");
+    let net = zoo::by_name("alexnet").unwrap();
+    let mcm = McmConfig::paper_default(16);
+    let sim = SimOptions {
+        samples: 4,
+        threads: 1,
+        segmenter: SegmenterKind::Dp,
+        ..SimOptions::default()
+    };
+    let r = schedule_scope(&net, &mcm, &sim);
+    assert!(r.schedule.is_some(), "alexnet must schedule: {:?}", r.eval.error);
+
+    let audited = Registry::global().counter("scope_prune_audit_spans").get();
+    assert!(audited > 0, "SCOPE_PRUNE_AUDIT=1 + dp segmenter must audit spans");
+    let summary = scope::obs::prune_audit_summary().expect("summary for an audited run");
+    assert!(summary.contains(&audited.to_string()), "{summary}");
+    // admissible bounds sit at or under the exact latency, so the
+    // relative slack (lat - bound) / lat stays within [0, 1]
+    let slack = Registry::global().gauge("scope_prune_audit_max_rel_slack").get();
+    assert!((0.0..=1.0).contains(&slack), "relative slack out of range: {slack}");
+}
