@@ -1,0 +1,410 @@
+//! Heterogeneous package description: named chiplet *classes* mapped onto
+//! mesh slots (SCAR-style big/little mixes) plus per-link NoP bandwidth
+//! overrides (MCMComm-style non-uniform interconnect, e.g. slow
+//! cross-reticle column links).
+//!
+//! Design rules that keep the rest of the system honest:
+//!
+//! * **Package-synchronous clock.** Classes may differ in compute scale,
+//!   buffer sizes, and energy constants, but they all share the base
+//!   chiplet's `freq_hz` — every cycles↔seconds conversion and the shared
+//!   DRAM-channel model stay single-frequency.
+//! * **Degenerate specs are uniform.** A spec that resolves to a single
+//!   class with no link overrides routes through the exact uniform code
+//!   paths (the cost models branch on [`HeteroSpec::mixed`] /
+//!   [`Mesh::has_link_overrides`]), so its results are bit-identical to a
+//!   plain package — locked down by `tests/hetero.rs`.
+//! * **Zigzag slots.** The class map indexes mesh slots in zigzag order —
+//!   the same linearization regions and shares are placed in — so
+//!   "which classes does range `[s, s+n)` touch" is an O(#classes) prefix
+//!   query on the DSE hot path.
+
+use super::chiplet::ChipletConfig;
+use super::McmConfig;
+
+/// One named chiplet class of a heterogeneous package.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChipletClass {
+    pub name: String,
+    pub chip: ChipletConfig,
+}
+
+/// Per-slot class assignment of a heterogeneous package.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HeteroSpec {
+    /// Distinct classes in first-appearance order of the spec.
+    classes: Vec<ChipletClass>,
+    /// Mesh slot (zigzag index) → index into `classes`.
+    class_map: Vec<u8>,
+    /// `prefix[c][i]` = slots of class `c` among zigzag slots `[0, i)`.
+    prefix: Vec<Vec<u32>>,
+    /// True when at least two slots carry classes with *different*
+    /// hardware parameters — the gate every hetero cost branch keys on.
+    mixed: bool,
+    /// The spec string this was parsed from (display / `info`).
+    spec: String,
+}
+
+impl HeteroSpec {
+    /// Build a spec from explicit classes and a per-slot map (the parser
+    /// and the property tests both come through here).
+    pub fn new(
+        classes: Vec<ChipletClass>,
+        class_map: Vec<u8>,
+        spec: impl Into<String>,
+    ) -> Result<HeteroSpec, String> {
+        if classes.is_empty() {
+            return Err("hetero spec declares no chiplet classes".into());
+        }
+        if classes.len() > u8::MAX as usize {
+            return Err(format!("hetero spec declares {} classes (max 255)", classes.len()));
+        }
+        for (slot, &c) in class_map.iter().enumerate() {
+            if c as usize >= classes.len() {
+                return Err(format!(
+                    "hetero class map assigns slot {slot} to class index {c}, but only {} classes are declared",
+                    classes.len()
+                ));
+            }
+        }
+        let mut prefix = vec![Vec::with_capacity(class_map.len() + 1); classes.len()];
+        for p in &mut prefix {
+            p.push(0);
+        }
+        for (i, &c) in class_map.iter().enumerate() {
+            for (k, p) in prefix.iter_mut().enumerate() {
+                let prev = p[i];
+                p.push(prev + u32::from(k == c as usize));
+            }
+        }
+        let mut mixed = false;
+        'outer: for a in 0..classes.len() {
+            for b in (a + 1)..classes.len() {
+                let (pa, pb) = (&prefix[a], &prefix[b]);
+                let present =
+                    |p: &Vec<u32>| p.last().copied().unwrap_or(0) > 0;
+                if present(pa) && present(pb) && classes[a].chip != classes[b].chip {
+                    mixed = true;
+                    break 'outer;
+                }
+            }
+        }
+        Ok(HeteroSpec { classes, class_map, prefix, mixed, spec: spec.into() })
+    }
+
+    /// All declared classes (first-appearance order).
+    pub fn classes(&self) -> &[ChipletClass] {
+        &self.classes
+    }
+
+    pub fn class(&self, idx: usize) -> &ChipletClass {
+        &self.classes[idx]
+    }
+
+    /// Class index of a mesh slot (zigzag order).
+    pub fn class_of(&self, slot: usize) -> usize {
+        self.class_map[slot] as usize
+    }
+
+    pub fn chip_at(&self, slot: usize) -> &ChipletConfig {
+        &self.classes[self.class_of(slot)].chip
+    }
+
+    /// Slots of class `c` inside zigzag range `[start, start+n)` — O(1).
+    pub fn count_in(&self, c: usize, start: usize, n: usize) -> u64 {
+        u64::from(self.prefix[c][start + n] - self.prefix[c][start])
+    }
+
+    /// `(class index, slot count)` of every class present in the range.
+    pub fn classes_in(
+        &self,
+        start: usize,
+        n: usize,
+    ) -> impl Iterator<Item = (usize, u64)> + '_ {
+        (0..self.classes.len()).filter_map(move |c| {
+            let cnt = self.count_in(c, start, n);
+            (cnt > 0).then_some((c, cnt))
+        })
+    }
+
+    /// True when the package genuinely mixes different hardware.
+    pub fn mixed(&self) -> bool {
+        self.mixed
+    }
+
+    /// The spec string this was parsed from (e.g. `big8little8`).
+    pub fn spec(&self) -> &str {
+        &self.spec
+    }
+
+    /// Human label of a range's class composition, e.g. `big×3+little×1`.
+    pub fn label(&self, start: usize, n: usize) -> String {
+        let mut out = String::new();
+        for (c, cnt) in self.classes_in(start, n) {
+            if !out.is_empty() {
+                out.push('+');
+            }
+            out.push_str(&format!("{}×{}", self.classes[c].name, cnt));
+        }
+        out
+    }
+}
+
+/// Known class presets, derived from the package's base chiplet (so
+/// `freq` / `mac_energy_pj` / buffer config keys applied *before* the
+/// hetero spec scale every class consistently). `None` for unknown names.
+///
+/// * `big` — the base chiplet unchanged.
+/// * `little` — half the PE array (half MACs/cycle, half weight capacity),
+///   half the global buffer, 0.7× MAC energy.
+/// * `micro` — a quarter of the PE array, quarter global buffer, 0.55×
+///   MAC energy.
+pub fn class_preset(name: &str, base: &ChipletConfig) -> Option<ChipletConfig> {
+    match name {
+        "big" => Some(base.clone()),
+        "little" => Some(ChipletConfig {
+            pes: (base.pes / 2).max(1),
+            global_buf: (base.global_buf / 2).max(1),
+            mac_energy_pj: base.mac_energy_pj * 0.7,
+            ..base.clone()
+        }),
+        "micro" => Some(ChipletConfig {
+            pes: (base.pes / 4).max(1),
+            global_buf: (base.global_buf / 4).max(1),
+            mac_energy_pj: base.mac_energy_pj * 0.55,
+            ..base.clone()
+        }),
+        _ => None,
+    }
+}
+
+/// Preset names [`class_preset`] understands (error messages).
+pub const CLASS_PRESETS: &[&str] = &["big", "little", "micro"];
+
+/// Parse and apply a hetero spec to a package, in place.
+///
+/// Grammar: `<class><count>[<class><count>…][/<link>[,<link>…]]` where a
+/// `<link>` override is `xcol<J>=<S>` (scale every link between mesh
+/// columns `J` and `J+1` by `S`) or `xrow<J>=<S>` (rows). Counts must sum
+/// to the package's chiplet count; classes fill mesh slots in zigzag
+/// order. Examples: `big8little8`, `big16/xcol1=0.5`,
+/// `big4little8micro4/xcol1=0.25,xrow0=0.5`.
+///
+/// Single-class specs with no link overrides resolve to a plain uniform
+/// package of that class (bit-identical to constructing it directly).
+pub fn apply_hetero(mcm: &mut McmConfig, spec: &str) -> Result<(), String> {
+    let spec = spec.trim();
+    if spec.is_empty() {
+        return Err("empty --hetero spec".into());
+    }
+    let mut parts = spec.split('/');
+    let class_part = parts.next().unwrap_or_default();
+
+    // ---- class runs ----
+    let mut classes: Vec<ChipletClass> = Vec::new();
+    let mut class_map: Vec<u8> = Vec::new();
+    let bytes = class_part.as_bytes();
+    let mut i = 0usize;
+    while i < bytes.len() {
+        let name_start = i;
+        while i < bytes.len() && bytes[i].is_ascii_alphabetic() {
+            i += 1;
+        }
+        let name = &class_part[name_start..i];
+        if name.is_empty() {
+            return Err(format!(
+                "--hetero spec \"{spec}\": expected a class name at \"{}\" (classes are <name><count> runs, e.g. big8little8)",
+                &class_part[i..]
+            ));
+        }
+        let count_start = i;
+        while i < bytes.len() && bytes[i].is_ascii_digit() {
+            i += 1;
+        }
+        let count: usize = class_part[count_start..i].parse().map_err(|_| {
+            format!("--hetero spec \"{spec}\": class \"{name}\" is missing its chiplet count")
+        })?;
+        if count == 0 {
+            return Err(format!("--hetero spec \"{spec}\": class \"{name}\" has count 0"));
+        }
+        let chip = class_preset(name, &mcm.chiplet).ok_or_else(|| {
+            format!(
+                "--hetero spec \"{spec}\": unknown chiplet class \"{name}\" (known: {})",
+                CLASS_PRESETS.join(", ")
+            )
+        })?;
+        let idx = match classes.iter().position(|c| c.name == name) {
+            Some(idx) => idx,
+            None => {
+                classes.push(ChipletClass { name: name.to_string(), chip });
+                classes.len() - 1
+            }
+        };
+        for _ in 0..count {
+            class_map.push(idx as u8);
+        }
+    }
+    if class_map.len() != mcm.chiplets {
+        return Err(format!(
+            "--hetero spec \"{spec}\" covers {} chiplets but the package has {}",
+            class_map.len(),
+            mcm.chiplets
+        ));
+    }
+
+    // ---- link overrides ----
+    let mut col = vec![1.0f64; mcm.mesh.width.saturating_sub(1)];
+    let mut row = vec![1.0f64; mcm.mesh.height.saturating_sub(1)];
+    let mut any_link = false;
+    for tok in parts.flat_map(|p| p.split(',')) {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        let (kind, rest) = if let Some(r) = tok.strip_prefix("xcol") {
+            ("xcol", r)
+        } else if let Some(r) = tok.strip_prefix("xrow") {
+            ("xrow", r)
+        } else {
+            return Err(format!(
+                "--hetero spec \"{spec}\": unknown link override \"{tok}\" (expected xcol<J>=<scale> or xrow<J>=<scale>)"
+            ));
+        };
+        let (j_str, s_str) = rest.split_once('=').ok_or_else(|| {
+            format!("--hetero spec \"{spec}\": link override \"{tok}\" is missing \"=<scale>\"")
+        })?;
+        let j: usize = j_str.parse().map_err(|_| {
+            format!("--hetero spec \"{spec}\": bad link index in \"{tok}\"")
+        })?;
+        let s: f64 = s_str.parse().map_err(|_| {
+            format!("--hetero spec \"{spec}\": bad link scale in \"{tok}\"")
+        })?;
+        if !(s.is_finite() && s > 0.0) {
+            return Err(format!(
+                "--hetero spec \"{spec}\": link scale in \"{tok}\" must be a positive finite number"
+            ));
+        }
+        let slots = if kind == "xcol" { &mut col } else { &mut row };
+        if j >= slots.len() {
+            return Err(format!(
+                "--hetero spec \"{spec}\": \"{tok}\" names crossing {j} but the {}×{} mesh only has {} {} crossings",
+                mcm.mesh.width,
+                mcm.mesh.height,
+                slots.len(),
+                if kind == "xcol" { "column" } else { "row" },
+            ));
+        }
+        slots[j] = s;
+        any_link = any_link || s != 1.0;
+    }
+    if any_link {
+        mcm.mesh.set_link_scales(col, row);
+    }
+
+    let h = HeteroSpec::new(classes, class_map, spec)?;
+    if !h.mixed() {
+        // Degenerate single-class spec: the package *is* uniform — route
+        // everything through the uniform paths with that class's chiplet.
+        mcm.chiplet = h.class(0).chip.clone();
+    }
+    mcm.hetero = Some(h);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::McmConfig;
+
+    #[test]
+    fn parse_big_little_maps_slots_in_order() {
+        let mut m = McmConfig::paper_default(16);
+        apply_hetero(&mut m, "big8little8").unwrap();
+        let h = m.hetero.as_ref().unwrap();
+        assert!(h.mixed());
+        assert_eq!(h.classes().len(), 2);
+        assert_eq!(h.count_in(0, 0, 16), 8);
+        assert_eq!(h.count_in(1, 0, 16), 8);
+        assert_eq!(h.class_of(0), 0);
+        assert_eq!(h.class_of(15), 1);
+        // prefix query agrees with a direct scan on every range
+        for s in 0..16 {
+            for n in 0..=(16 - s) {
+                let direct =
+                    (s..s + n).filter(|&i| h.class_of(i) == 1).count() as u64;
+                assert_eq!(h.count_in(1, s, n), direct, "[{s},{}) ", s + n);
+            }
+        }
+        assert_eq!(h.label(6, 4), "big×2+little×2");
+        assert!(m.is_hetero());
+    }
+
+    #[test]
+    fn single_class_spec_is_uniform() {
+        let mut m = McmConfig::paper_default(16);
+        apply_hetero(&mut m, "big16").unwrap();
+        assert!(!m.is_hetero());
+        assert!(!m.hetero.as_ref().unwrap().mixed());
+        assert_eq!(m.chiplet, McmConfig::paper_default(16).chiplet);
+        // little16: uniform too, but the *package chiplet* becomes little
+        let mut l = McmConfig::paper_default(16);
+        apply_hetero(&mut l, "little16").unwrap();
+        assert!(!l.is_hetero());
+        assert_eq!(l.chiplet.macs_per_cycle(), 512);
+    }
+
+    #[test]
+    fn named_offender_errors() {
+        let mut m = McmConfig::paper_default(16);
+        let e = apply_hetero(&mut m, "turbo8little8").unwrap_err();
+        assert!(e.contains("turbo") && e.contains("known"), "{e}");
+        let e = apply_hetero(&mut m, "big8little4").unwrap_err();
+        assert!(e.contains("12") && e.contains("16"), "{e}");
+        let e = apply_hetero(&mut m, "big16/xfoo1=0.5").unwrap_err();
+        assert!(e.contains("xfoo1=0.5"), "{e}");
+        let e = apply_hetero(&mut m, "big16/xcol9=0.5").unwrap_err();
+        assert!(e.contains("crossing"), "{e}");
+        let e = apply_hetero(&mut m, "big16/xcol1=-2").unwrap_err();
+        assert!(e.contains("positive"), "{e}");
+        let e = apply_hetero(&mut m, "big").unwrap_err();
+        assert!(e.contains("count"), "{e}");
+    }
+
+    #[test]
+    fn link_overrides_mark_the_package_hetero() {
+        let mut m = McmConfig::paper_default(16);
+        apply_hetero(&mut m, "big16/xcol1=0.5").unwrap();
+        assert!(m.is_hetero(), "slow links alone are non-uniform");
+        assert!(!m.hetero.as_ref().unwrap().mixed());
+        assert!(m.mesh.has_link_overrides());
+        // an all-1.0 override list stays uniform
+        let mut u = McmConfig::paper_default(16);
+        apply_hetero(&mut u, "big16/xcol1=1.0").unwrap();
+        assert!(!u.is_hetero());
+        assert!(!u.mesh.has_link_overrides());
+    }
+
+    #[test]
+    fn repeated_class_names_merge() {
+        let mut m = McmConfig::paper_default(16);
+        apply_hetero(&mut m, "big4little8big4").unwrap();
+        let h = m.hetero.as_ref().unwrap();
+        assert_eq!(h.classes().len(), 2);
+        assert_eq!(h.count_in(0, 0, 16), 8);
+        assert_eq!(h.class_of(0), 0);
+        assert_eq!(h.class_of(7), 1);
+        assert_eq!(h.class_of(12), 0);
+    }
+
+    #[test]
+    fn presets_scale_down() {
+        let base = crate::arch::ChipletConfig::paper_default();
+        let little = class_preset("little", &base).unwrap();
+        assert_eq!(little.macs_per_cycle(), base.macs_per_cycle() / 2);
+        assert_eq!(little.weight_capacity(), base.weight_capacity() / 2);
+        assert_eq!(little.freq_hz, base.freq_hz, "package-synchronous clock");
+        let micro = class_preset("micro", &base).unwrap();
+        assert_eq!(micro.macs_per_cycle(), base.macs_per_cycle() / 4);
+        assert!(class_preset("huge", &base).is_none());
+    }
+}

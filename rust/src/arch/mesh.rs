@@ -26,6 +26,14 @@ pub struct Mesh {
     /// prefix sums of x and y along zigzag order (len = chiplets + 1)
     prefix_x: Vec<u64>,
     prefix_y: Vec<u64>,
+    /// Per-crossing link bandwidth scales (non-uniform NoP, e.g. slow
+    /// cross-reticle links): `link_scale_col[j]` scales every link between
+    /// mesh columns `j` and `j+1`, `link_scale_row[j]` between rows `j`
+    /// and `j+1`. Empty = uniform links (the fast path — cost models
+    /// branch on [`Mesh::has_link_overrides`] and keep the original
+    /// count-based expressions bit-for-bit).
+    link_scale_col: Vec<f64>,
+    link_scale_row: Vec<f64>,
 }
 
 impl Mesh {
@@ -46,7 +54,16 @@ impl Mesh {
             prefix_x.push(prefix_x[idx] + x as u64);
             prefix_y.push(prefix_y[idx] + y as u64);
         }
-        Mesh { width, height, coords, inv, prefix_x, prefix_y }
+        Mesh {
+            width,
+            height,
+            coords,
+            inv,
+            prefix_x,
+            prefix_y,
+            link_scale_col: Vec::new(),
+            link_scale_row: Vec::new(),
+        }
     }
 
     /// Near-square mesh for a chiplet count (power-of-two counts give exact
@@ -139,6 +156,94 @@ impl Mesh {
             1.0
         }
     }
+
+    /// True when any NoP link carries a non-unit bandwidth scale.
+    #[inline]
+    pub fn has_link_overrides(&self) -> bool {
+        !self.link_scale_col.is_empty() || !self.link_scale_row.is_empty()
+    }
+
+    /// Install per-crossing link bandwidth scales. `col` must have
+    /// `width − 1` entries and `row` `height − 1` (or be empty to clear).
+    /// All-unit scale lists are dropped — the mesh stays on the uniform
+    /// fast path, so a no-op override set cannot perturb results.
+    pub fn set_link_scales(&mut self, col: Vec<f64>, row: Vec<f64>) {
+        assert!(
+            col.is_empty() || col.len() == self.width.saturating_sub(1),
+            "column scale list must cover the {} column crossings",
+            self.width.saturating_sub(1)
+        );
+        assert!(
+            row.is_empty() || row.len() == self.height.saturating_sub(1),
+            "row scale list must cover the {} row crossings",
+            self.height.saturating_sub(1)
+        );
+        let unit = |v: &[f64]| v.iter().all(|&s| s == 1.0);
+        if unit(&col) && unit(&row) {
+            self.link_scale_col = Vec::new();
+            self.link_scale_row = Vec::new();
+        } else {
+            self.link_scale_col = col;
+            self.link_scale_row = row;
+        }
+    }
+
+    /// Bandwidth scale of the link between two *adjacent* coordinates.
+    #[inline]
+    fn link_scale_at(&self, x: usize, y: usize, nx: usize, ny: usize) -> f64 {
+        debug_assert_eq!(x.abs_diff(nx) + y.abs_diff(ny), 1);
+        if y == ny {
+            self.link_scale_col.get(x.min(nx)).copied().unwrap_or(1.0)
+        } else {
+            self.link_scale_row.get(y.min(ny)).copied().unwrap_or(1.0)
+        }
+    }
+
+    /// [`cut_width`](Mesh::cut_width) generalized to non-uniform links:
+    /// the sum of bandwidth scales of the crossing links. Equals the link
+    /// count exactly when every scale is 1.0.
+    pub fn cut_capacity(&self, a0: usize, an: usize, b0: usize, bn: usize) -> f64 {
+        debug_assert!(a0 + an <= self.chiplets() && b0 + bn <= self.chiplets());
+        let in_b = |x: usize, y: usize| -> bool {
+            let idx = self.inv[y * self.width + x] as usize;
+            (b0..b0 + bn).contains(&idx)
+        };
+        let mut cap = 0.0f64;
+        for i in a0..a0 + an {
+            let (x, y) = self.zigzag_coord(i);
+            if x > 0 && in_b(x - 1, y) {
+                cap += self.link_scale_at(x, y, x - 1, y);
+            }
+            if x + 1 < self.width && in_b(x + 1, y) {
+                cap += self.link_scale_at(x, y, x + 1, y);
+            }
+            if y > 0 && in_b(x, y - 1) {
+                cap += self.link_scale_at(x, y, x, y - 1);
+            }
+            if y + 1 < self.height && in_b(x, y + 1) {
+                cap += self.link_scale_at(x, y, x, y + 1);
+            }
+        }
+        cap
+    }
+
+    /// Slowest link scale along a zigzag-contiguous range's ring
+    /// (consecutive zigzag indices are mesh neighbours, so the ring uses
+    /// exactly the links between consecutive indices). 1.0 for uniform
+    /// links or ranges of ≤ 1 chiplet — intra-region collectives are
+    /// paced by their slowest hop.
+    pub fn region_min_link_scale(&self, s: usize, n: usize) -> f64 {
+        if !self.has_link_overrides() || n <= 1 {
+            return 1.0;
+        }
+        let mut min = f64::INFINITY;
+        for i in s..s + n - 1 {
+            let (x, y) = self.zigzag_coord(i);
+            let (nx, ny) = self.zigzag_coord(i + 1);
+            min = min.min(self.link_scale_at(x, y, nx, ny));
+        }
+        min
+    }
 }
 
 #[cfg(test)]
@@ -196,6 +301,37 @@ mod tests {
         assert_eq!(m.cut_width(0, 1, 8, 1), 0);
         // Symmetry.
         assert_eq!(m.cut_width(0, 6, 6, 5), m.cut_width(6, 5, 0, 6));
+    }
+
+    #[test]
+    fn cut_capacity_sums_link_scales() {
+        let mut m = Mesh::new(4, 4);
+        // uniform: capacity == count on every cut
+        for (a0, an, b0, bn) in [(0, 4, 4, 4), (0, 1, 1, 1), (0, 6, 6, 5)] {
+            assert_eq!(m.cut_capacity(a0, an, b0, bn), m.cut_width(a0, an, b0, bn) as f64);
+        }
+        assert!(!m.has_link_overrides());
+        // unit scales are dropped (no-op overrides cannot perturb results)
+        m.set_link_scales(vec![1.0; 3], vec![1.0; 3]);
+        assert!(!m.has_link_overrides());
+        // halve the row-0/row-1 crossing: the 4 vertical links of the
+        // first-row cut each count 0.5
+        m.set_link_scales(vec![1.0; 3], vec![0.5, 1.0, 1.0]);
+        assert!(m.has_link_overrides());
+        assert_eq!(m.cut_capacity(0, 4, 4, 4), 2.0);
+        // a horizontal cut through untouched columns keeps full capacity
+        assert_eq!(m.cut_capacity(4, 4, 8, 4), 4.0);
+        // the slowest link paces a ring spanning the scaled crossing
+        assert_eq!(m.region_min_link_scale(0, 8), 0.5);
+        assert_eq!(m.region_min_link_scale(0, 4), 1.0);
+        assert_eq!(m.region_min_link_scale(4, 8), 1.0);
+        assert_eq!(m.region_min_link_scale(3, 1), 1.0);
+        // column scales hit horizontal links: row 0 moves x=1→2 at step 1
+        let mut c = Mesh::new(4, 4);
+        c.set_link_scales(vec![1.0, 0.25, 1.0], vec![1.0; 3]);
+        assert_eq!(c.region_min_link_scale(0, 4), 0.25);
+        // one crossing link (1,0)–(2,0), scaled to 0.25
+        assert_eq!(c.cut_capacity(0, 2, 2, 2), 0.25);
     }
 
     #[test]

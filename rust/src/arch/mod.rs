@@ -2,9 +2,11 @@
 //! and the combined configuration consumed by the cost models.
 
 pub mod chiplet;
+pub mod hetero;
 pub mod mesh;
 
 pub use chiplet::{ChipletConfig, DramConfig, NopConfig};
+pub use hetero::{apply_hetero, class_preset, ChipletClass, HeteroSpec, CLASS_PRESETS};
 pub use mesh::Mesh;
 
 /// Full MCM platform description (paper Table III + package scale).
@@ -12,9 +14,17 @@ pub use mesh::Mesh;
 pub struct McmConfig {
     pub chiplets: usize,
     pub mesh: Mesh,
+    /// The base chiplet. On heterogeneous packages this stays the
+    /// *reference* class: its `freq_hz` is the package-synchronous clock
+    /// every class shares, and capability queries route through the
+    /// accessors below instead of reading this field directly.
     pub chiplet: ChipletConfig,
     pub nop: NopConfig,
     pub dram: DramConfig,
+    /// Per-slot chiplet classes (None = uniform package). Degenerate
+    /// single-class specs keep `chiplet` authoritative — see
+    /// [`hetero::apply_hetero`].
+    pub hetero: Option<HeteroSpec>,
 }
 
 impl McmConfig {
@@ -26,20 +36,102 @@ impl McmConfig {
             chiplet: ChipletConfig::paper_default(),
             nop: NopConfig::paper_default(),
             dram: DramConfig::paper_default(),
+            hetero: None,
+        }
+    }
+
+    /// True when the package is *genuinely* non-uniform: mixed chiplet
+    /// classes and/or non-uniform NoP link bandwidths. Degenerate
+    /// single-class specs report false and route through the uniform
+    /// code paths bit-for-bit.
+    pub fn is_hetero(&self) -> bool {
+        self.hetero.as_ref().is_some_and(|h| h.mixed()) || self.mesh.has_link_overrides()
+    }
+
+    /// The class map, but only when classes genuinely differ — the gate
+    /// every class-aware cost branch keys on.
+    pub fn hetero_classes(&self) -> Option<&HeteroSpec> {
+        self.hetero.as_ref().filter(|h| h.mixed())
+    }
+
+    /// Chiplet hardware at mesh slot `slot` (zigzag order).
+    pub fn chip_at(&self, slot: usize) -> &ChipletConfig {
+        match self.hetero_classes() {
+            Some(h) => h.chip_at(slot),
+            None => &self.chiplet,
+        }
+    }
+
+    /// Per-chiplet weight capacity the §III-B residency planner may assume
+    /// for region `[start, start+n)`: distributed storage splits weights
+    /// evenly across the region, so the *smallest* class present binds.
+    pub fn region_weight_capacity(&self, start: usize, n: usize) -> u64 {
+        match self.hetero_classes() {
+            None => self.chiplet.weight_capacity(),
+            Some(h) => h
+                .classes_in(start, n)
+                .map(|(c, _)| h.class(c).chip.weight_capacity())
+                .min()
+                .unwrap_or_else(|| self.chiplet.weight_capacity()),
+        }
+    }
+
+    /// Pooled activation SRAM (bytes) of region `[start, start+n)` — the
+    /// fused evaluator's on-chip share.
+    pub fn region_global_buf(&self, start: usize, n: usize) -> u64 {
+        match self.hetero_classes() {
+            None => n as u64 * self.chiplet.global_buf,
+            Some(h) => h
+                .classes_in(start, n)
+                .map(|(c, cnt)| cnt * h.class(c).chip.global_buf)
+                .sum(),
+        }
+    }
+
+    /// Package compute roofline in MACs/cycle: Σ per-slot capability.
+    pub fn package_macs_per_cycle(&self) -> u64 {
+        match self.hetero_classes() {
+            None => self.chiplets as u64 * self.chiplet.macs_per_cycle(),
+            Some(h) => h
+                .classes_in(0, self.chiplets)
+                .map(|(c, cnt)| cnt * h.class(c).chip.macs_per_cycle())
+                .sum(),
+        }
+    }
+
+    /// MACs/cycle of the *fastest* class present — the admissible
+    /// per-chiplet capability the share bounds must assume.
+    pub fn max_macs_per_cycle(&self) -> u64 {
+        match self.hetero_classes() {
+            None => self.chiplet.macs_per_cycle(),
+            Some(h) => h
+                .classes_in(0, self.chiplets)
+                .map(|(c, _)| h.class(c).chip.macs_per_cycle())
+                .max()
+                .unwrap_or_else(|| self.chiplet.macs_per_cycle()),
         }
     }
 
     /// Package-wide weight storage (bytes) available for resident weights.
     pub fn package_weight_capacity(&self) -> u64 {
-        self.chiplet.weight_capacity() * self.chiplets as u64
+        match self.hetero_classes() {
+            None => self.chiplet.weight_capacity() * self.chiplets as u64,
+            Some(h) => h
+                .classes_in(0, self.chiplets)
+                .map(|(c, cnt)| cnt * h.class(c).chip.weight_capacity())
+                .sum(),
+        }
     }
 
     /// Package peak compute in MAC/s.
     pub fn peak_macs_per_sec(&self) -> f64 {
-        self.chiplet.peak_macs_per_sec() * self.chiplets as f64
+        match self.hetero_classes() {
+            None => self.chiplet.peak_macs_per_sec() * self.chiplets as f64,
+            Some(_) => self.package_macs_per_cycle() as f64 * self.chiplet.freq_hz,
+        }
     }
 
-    /// Convert cycles → seconds at the chiplet clock.
+    /// Convert cycles → seconds at the (package-synchronous) chiplet clock.
     pub fn cycles_to_secs(&self, cycles: f64) -> f64 {
         cycles / self.chiplet.freq_hz
     }
@@ -56,5 +148,28 @@ mod tests {
         assert_eq!(m.package_weight_capacity(), 64 << 20);
         assert!((m.peak_macs_per_sec() - 64.0 * 819.2e9).abs() < 1e6);
         assert!((m.cycles_to_secs(800e6) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hetero_capability_accessors() {
+        let mut m = McmConfig::paper_default(16);
+        // uniform: accessors collapse to the single class
+        assert_eq!(m.package_macs_per_cycle(), 16 * 1024);
+        assert_eq!(m.max_macs_per_cycle(), 1024);
+        assert_eq!(m.region_weight_capacity(0, 4), 1 << 20);
+        assert_eq!(m.region_global_buf(0, 4), 4 * 64 * 1024);
+        apply_hetero(&mut m, "big8little8").unwrap();
+        assert!(m.is_hetero());
+        // 8×1024 + 8×512
+        assert_eq!(m.package_macs_per_cycle(), 8 * 1024 + 8 * 512);
+        assert_eq!(m.max_macs_per_cycle(), 1024);
+        // big-only prefix keeps full capacity; any little slot halves it
+        assert_eq!(m.region_weight_capacity(0, 8), 1 << 20);
+        assert_eq!(m.region_weight_capacity(4, 8), 1 << 19);
+        assert_eq!(m.region_global_buf(6, 4), 2 * 64 * 1024 + 2 * 32 * 1024);
+        assert_eq!(m.package_weight_capacity(), (8 << 20) + (8 << 19));
+        assert_eq!(m.chip_at(0).macs_per_cycle(), 1024);
+        assert_eq!(m.chip_at(15).macs_per_cycle(), 512);
+        assert!((m.peak_macs_per_sec() - (8.0 * 1024.0 + 8.0 * 512.0) * 800e6).abs() < 1e3);
     }
 }

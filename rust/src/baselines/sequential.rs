@@ -11,7 +11,7 @@
 use crate::arch::McmConfig;
 use crate::config::SimOptions;
 use crate::cost::{
-    comm_phase, comp_cycles, compute_energy, dram_transfer, EnergyBreakdown,
+    comm_phase, comp_cycles_region, compute_energy_region, dram_transfer, EnergyBreakdown,
     NopCost, RegionGeom,
 };
 use crate::model::Network;
@@ -31,7 +31,9 @@ fn best_partition(
     let freq = mcm.chiplet.freq_hz;
     let mut best: Option<(Partition, f64, NopCost)> = None;
     for p in [Partition::Wsp, Partition::Isp] {
-        let comp = comp_cycles(layer, p, mcm.chiplets as u64, &mcm.chiplet);
+        // full-package region: on hetero packages the slowest class paces
+        // each layer (sequential runs every layer on all chiplets)
+        let comp = comp_cycles_region(layer, p, region, mcm);
         // Inter-layer redistribution stays inside the full-package region —
         // the Case-1 rows of Table II against the next layer's partition.
         // Use the same partition for the consumer side (the next layer's
@@ -69,6 +71,7 @@ pub fn sequential_span(
 ) -> (f64, EnergyBreakdown) {
     let m = opts.samples as f64;
     let freq = mcm.chiplet.freq_hz;
+    let region = RegionGeom { start: 0, n: mcm.chiplets };
     let mut total_cycles = 0.0f64;
     let mut energy = EnergyBreakdown::zero();
     for k in lo..hi {
@@ -79,7 +82,7 @@ pub fn sequential_span(
         let dram = dram_transfer(layer.weight_bytes() as f64, &mcm.dram, freq, 1.0);
         total_cycles += dram.cycles + m * per_sample_cycles;
         energy.dram_pj += dram.energy_pj;
-        let mut e = compute_energy(layer, p, mcm.chiplets as u64, &mcm.chiplet);
+        let mut e = compute_energy_region(layer, p, region, mcm);
         e.nop_pj += comm.energy_pj;
         energy = energy.add(e.scale(m));
     }

@@ -23,7 +23,7 @@ use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::arch::McmConfig;
+use crate::arch::{apply_hetero, McmConfig};
 use crate::obs::TraceLevel;
 use crate::pipeline::schedule::ExecModeChoice;
 use crate::scope::SegmenterKind;
@@ -175,9 +175,11 @@ impl Config {
             None => chiplets_hint,
         };
         let mut cfg = Config::paper_default(chiplets);
+        let mut hetero_spec: Option<&str> = None;
         for (key, value) in kv {
             match key.as_str() {
                 "chiplets" => {}
+                "hetero" => hetero_spec = Some(value),
                 "samples" => cfg.sim.samples = parse_num(value)? as u64,
                 "distributed_weights" => cfg.sim.distributed_weights = parse_bool(value)?,
                 "overlap_comm" => cfg.sim.overlap_comm = parse_bool(value)?,
@@ -272,6 +274,12 @@ impl Config {
         // parse map's key order
         if !cfg.sim.cache_file.is_empty() && !cfg.cache_store_explicit {
             cfg.sim.cache_store = true;
+        }
+        // hetero applies after every platform override so the class chips
+        // derive from the final base chiplet (`freq`, `mac_energy_pj`, …),
+        // regardless of the map's alphabetical key order
+        if let Some(spec) = hetero_spec {
+            apply_hetero(&mut cfg.mcm, spec).map_err(|e| anyhow!(e))?;
         }
         Ok(cfg)
     }
@@ -373,6 +381,14 @@ pub const KNOBS: &[KnobDoc] = &[
         sim_field: "",
         default_value: "per command",
         doc: "package scale (paper sweeps 16-256); builds the near-square mesh",
+    },
+    KnobDoc {
+        config_key: "hetero",
+        cli_flag: "--hetero <spec>",
+        bench_env: "",
+        sim_field: "",
+        default_value: "(uniform)",
+        doc: "heterogeneous package: <class><count> runs + /xcol<J>=<S> link scales, e.g. big8little8/xcol1=0.5",
     },
     KnobDoc {
         config_key: "samples",
@@ -916,6 +932,29 @@ mod tests {
             assert!(rendered.contains(key), "knob table must document {key}");
         }
         assert!(rendered.contains("SCOPE_THREADS") && rendered.contains("SCOPE_CACHE_STORE"));
+    }
+
+    #[test]
+    fn hetero_key_applies_after_platform_overrides() {
+        let kv = parse_kv("chiplets = 16\nhetero = big8little8\n").unwrap();
+        let cfg = Config::from_kv(&kv, 16).unwrap();
+        assert!(cfg.mcm.is_hetero());
+        assert_eq!(cfg.mcm.hetero_classes().unwrap().classes().len(), 2);
+        // "hetero" sorts before "mac_energy_pj" in the BTreeMap, but the
+        // little class must still derive from the overridden base energy
+        // (hetero is applied after the parse loop).
+        let kv = parse_kv("chiplets = 8\nhetero = big4little4\nmac_energy_pj = 2.0\n").unwrap();
+        let cfg = Config::from_kv(&kv, 8).unwrap();
+        let h = cfg.mcm.hetero_classes().unwrap();
+        assert_eq!(h.class(0).chip.mac_energy_pj, 2.0);
+        assert!((h.class(1).chip.mac_energy_pj - 1.4).abs() < 1e-12, "little = 0.7x base");
+        // named-offender validation propagates through anyhow
+        let kv = parse_kv("chiplets = 8\nhetero = turbo8\n").unwrap();
+        let err = Config::from_kv(&kv, 8).unwrap_err().to_string();
+        assert!(err.contains("turbo") && err.contains("known"), "{err}");
+        let kv = parse_kv("chiplets = 8\nhetero = big4\n").unwrap();
+        let err = Config::from_kv(&kv, 8).unwrap_err().to_string();
+        assert!(err.contains('4') && err.contains('8'), "{err}");
     }
 
     #[test]

@@ -47,6 +47,15 @@
 //! `freq · c · macs_per_cycle / M` samples per second, so a share whose
 //! *upper* bound already loses to an incumbent min-rate cannot be part of
 //! a winning split.
+//!
+//! ## Heterogeneous packages
+//!
+//! Non-uniform chiplet classes and slow NoP links only *raise* exact
+//! costs relative to an all-fastest-class package, so admissibility is
+//! preserved by bounding optimistically: the span roofline uses the
+//! package-wide Σ of per-slot capability, and the share bounds assume the
+//! share lands entirely on the fastest class present. Slow links are
+//! ignored by the bounds (exact comm cost ≥ uniform comm cost ≥ 0).
 
 use crate::arch::{DramConfig, McmConfig};
 use crate::cost::dram::dram_transfer;
@@ -83,8 +92,11 @@ impl SpanBound {
             dram: mcm.dram.clone(),
             freq: mcm.chiplet.freq_hz,
             samples: samples as f64,
-            package_macs_per_cycle: (mcm.chiplets as f64)
-                * mcm.chiplet.macs_per_cycle() as f64,
+            // Σ per-slot capability: on heterogeneous packages the summed
+            // roofline stays admissible (no schedule can beat the
+            // aggregate), and on uniform ones the integer product equals
+            // the old float product exactly.
+            package_macs_per_cycle: mcm.package_macs_per_cycle() as f64,
         }
     }
 
@@ -121,7 +133,10 @@ pub fn share_rate_ub(total_macs: f64, share: usize, mcm: &McmConfig) -> f64 {
     if total_macs <= 0.0 {
         return f64::INFINITY;
     }
-    mcm.chiplet.freq_hz * (share as f64) * mcm.chiplet.macs_per_cycle() as f64 / total_macs
+    // Fastest class present: a share's slots are chosen by placement, so
+    // the bound must assume the best case. Uniform packages have a single
+    // class and this is the old `chiplet.macs_per_cycle()` exactly.
+    mcm.chiplet.freq_hz * (share as f64) * mcm.max_macs_per_cycle() as f64 / total_macs
 }
 
 /// Batch-1 service-latency *lower* bound (ns) of a model with `total_macs`
@@ -134,7 +149,7 @@ pub fn batch1_latency_lb_ns(total_macs: f64, share: usize, mcm: &McmConfig) -> f
         return f64::INFINITY;
     }
     let cycles =
-        total_macs / ((share as f64) * mcm.chiplet.macs_per_cycle() as f64);
+        total_macs / ((share as f64) * mcm.max_macs_per_cycle() as f64);
     cycles / mcm.chiplet.freq_hz * 1e9
 }
 
@@ -206,7 +221,7 @@ mod tests {
                 else {
                     continue;
                 };
-                let ev = eval_segment_cached(&ctx, &found.schedule, sim.samples, &cache);
+                let ev = eval_segment_cached(&ctx, &found.schedule, sim.samples, Some(&cache));
                 if ev.error.is_some() {
                     continue;
                 }

@@ -14,10 +14,12 @@
 //! parallelizable weight dimension"), WSP shrinks pixels (px/R below one
 //! row rounds up — over-partitioning waste).
 
-use crate::arch::ChipletConfig;
+use crate::arch::{ChipletConfig, McmConfig};
 use crate::model::Layer;
 use crate::pipeline::schedule::Partition;
 use crate::util::ceil_div;
+
+use super::nop::RegionGeom;
 
 /// Per-chiplet shard of a layer under a partitioning over `r` chiplets.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -63,6 +65,28 @@ pub fn comp_cycles(layer: &Layer, p: Partition, r: u64, chip: &ChipletConfig) ->
     let oc_tiles = ceil_div(s.co, chip.oc_slots());
     let red_tiles = ceil_div(s.red.max(1), chip.macs_per_lane);
     (oc_tiles * red_tiles * s.px) as f64
+}
+
+/// Computation-phase cycles of a *placed* region: the per-chiplet Equ. 5
+/// time of the slowest chiplet class present in `[start, start+n)`.
+///
+/// ISP/WSP hand every chiplet an equal `1/R` shard, so on a mixed region
+/// the stage finishes when the weakest class finishes its shard — the max
+/// over the classes present. Uniform packages take the original
+/// single-class expression verbatim (bit-identical), which also makes a
+/// degenerate single-class hetero spec exactly equal to the uniform run.
+pub fn comp_cycles_region(layer: &Layer, p: Partition, region: RegionGeom, mcm: &McmConfig) -> f64 {
+    match mcm.hetero_classes() {
+        None => comp_cycles(layer, p, region.n as u64, &mcm.chiplet),
+        Some(h) => {
+            let r = region.n as u64;
+            let mut worst = 0.0f64;
+            for (c, _) in h.classes_in(region.start, region.n) {
+                worst = worst.max(comp_cycles(layer, p, r, &h.class(c).chip));
+            }
+            worst
+        }
+    }
 }
 
 /// Hardware utilization of the partitioned layer: useful MACs over issued
@@ -153,6 +177,41 @@ mod tests {
             < comp_cycles(&c, Partition::Wsp, 1, &chip()));
         // and contributes no useful MACs
         assert_eq!(utilization(&a, Partition::Wsp, 4, &chip()), 0.0);
+    }
+
+    #[test]
+    fn region_cycles_are_paced_by_the_slowest_class() {
+        use crate::arch::{apply_hetero, McmConfig};
+        let l = Layer::conv("c", 56, 56, 256, 512, 3, 1, 1);
+        let uniform = McmConfig::paper_default(16);
+        let r = RegionGeom { start: 0, n: 8 };
+        // uniform routes through the plain helper, bit-for-bit
+        assert_eq!(
+            comp_cycles_region(&l, Partition::Wsp, r, &uniform).to_bits(),
+            comp_cycles(&l, Partition::Wsp, 8, &uniform.chiplet).to_bits()
+        );
+        let mut hetero = McmConfig::paper_default(16);
+        apply_hetero(&mut hetero, "big8little8").unwrap();
+        // an all-big region matches uniform exactly; a mixed region is
+        // paced by little (half the oc slots → more tiles)
+        assert_eq!(
+            comp_cycles_region(&l, Partition::Wsp, r, &hetero).to_bits(),
+            comp_cycles(&l, Partition::Wsp, 8, &uniform.chiplet).to_bits()
+        );
+        let mixed = RegionGeom { start: 4, n: 8 };
+        let little = class_preset_little();
+        assert_eq!(
+            comp_cycles_region(&l, Partition::Wsp, mixed, &hetero).to_bits(),
+            comp_cycles(&l, Partition::Wsp, 8, &little).to_bits()
+        );
+        assert!(
+            comp_cycles_region(&l, Partition::Wsp, mixed, &hetero)
+                > comp_cycles_region(&l, Partition::Wsp, r, &hetero)
+        );
+    }
+
+    fn class_preset_little() -> ChipletConfig {
+        crate::arch::class_preset("little", &ChipletConfig::paper_default()).unwrap()
     }
 
     #[test]

@@ -1,6 +1,12 @@
 //! DRAM cost model (paper Equ. 4's memory side) — the Ramulator2
 //! substitute: a bandwidth/efficiency model of the Table III 128-bit
 //! LPDDR5 channel (100 GB/s aggregate, shared package-wide).
+//!
+//! The `freq` argument converts channel bandwidth to package cycles.
+//! Heterogeneous packages keep a single package-synchronous clock (every
+//! chiplet class runs at the reference `chiplet.freq_hz`; class presets
+//! scale compute width and buffers, never frequency), so one scalar
+//! frequency remains correct even on mixed packages.
 
 use crate::arch::DramConfig;
 

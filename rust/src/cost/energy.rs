@@ -9,12 +9,13 @@
 //!   assumption).
 //! * NoP / DRAM: accumulated by the respective phase models.
 
-use crate::arch::ChipletConfig;
+use crate::arch::{ChipletConfig, McmConfig};
 use crate::model::Layer;
 use crate::pipeline::schedule::Partition;
 use crate::util::ceil_div;
 
 use super::compute::shard;
+use super::nop::RegionGeom;
 
 /// Energy breakdown in pJ.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -74,6 +75,32 @@ pub fn compute_energy(layer: &Layer, p: Partition, r: u64, chip: &ChipletConfig)
     }
 }
 
+/// [`compute_energy`] of a *placed* region: per-class energy constants
+/// weighted by each class's share of the region's chiplets (the `1/R`
+/// shards are equal, so class `c`'s `count_c / R` fraction of the region's
+/// work is charged at `c`'s constants — this also picks up the per-class
+/// `oc_slots` tiling in the SRAM re-read term). Uniform packages take the
+/// original single-class expression verbatim (bit-identical).
+pub fn compute_energy_region(
+    layer: &Layer,
+    p: Partition,
+    region: RegionGeom,
+    mcm: &McmConfig,
+) -> EnergyBreakdown {
+    match mcm.hetero_classes() {
+        None => compute_energy(layer, p, region.n as u64, &mcm.chiplet),
+        Some(h) => {
+            let r = region.n as u64;
+            let mut e = EnergyBreakdown::zero();
+            for (c, cnt) in h.classes_in(region.start, region.n) {
+                let frac = cnt as f64 / r as f64;
+                e = e.add(compute_energy(layer, p, r, &h.class(c).chip).scale(frac));
+            }
+            e
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -97,6 +124,29 @@ mod tests {
         let wsp = compute_energy(&l, Partition::Wsp, 4, &chip());
         assert!(isp.sram_pj > wsp.sram_pj);
         assert_eq!(isp.mac_pj, wsp.mac_pj);
+    }
+
+    #[test]
+    fn region_energy_blends_class_constants() {
+        use crate::arch::{apply_hetero, McmConfig};
+        let l = Layer::conv("c", 16, 16, 64, 128, 3, 1, 1);
+        let uniform = McmConfig::paper_default(16);
+        let r = RegionGeom { start: 4, n: 8 };
+        // uniform: the region helper is the plain helper, bit-for-bit
+        let a = compute_energy_region(&l, Partition::Wsp, r, &uniform);
+        let b = compute_energy(&l, Partition::Wsp, 8, &uniform.chiplet);
+        assert_eq!(a, b);
+        // big8little8: region [4,12) is 4 big + 4 little — MAC energy
+        // blends 0.2 and 0.14 pJ at equal weight
+        let mut hetero = McmConfig::paper_default(16);
+        apply_hetero(&mut hetero, "big8little8").unwrap();
+        let e = compute_energy_region(&l, Partition::Wsp, r, &hetero);
+        let expect_mac = l.macs() as f64 * (0.5 * 0.2 + 0.5 * (0.2 * 0.7));
+        assert!((e.mac_pj - expect_mac).abs() < 1e-6, "{} vs {expect_mac}", e.mac_pj);
+        // an all-big region charges exactly the uniform energy
+        let big = compute_energy_region(&l, Partition::Wsp, RegionGeom { start: 0, n: 4 }, &hetero);
+        let plain = compute_energy(&l, Partition::Wsp, 4, &uniform.chiplet);
+        assert!((big.total_pj() - plain.total_pj()).abs() < 1e-9);
     }
 
     #[test]

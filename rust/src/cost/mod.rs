@@ -9,7 +9,7 @@ pub mod energy;
 pub mod nop;
 
 pub use bound::{batch1_latency_lb_ns, share_rate_ub, SpanBound};
-pub use compute::{comp_cycles, shard, utilization};
+pub use compute::{comp_cycles, comp_cycles_region, shard, utilization};
 pub use dram::{dram_transfer, DramCost};
-pub use energy::{compute_energy, EnergyBreakdown};
+pub use energy::{compute_energy, compute_energy_region, EnergyBreakdown};
 pub use nop::{comm_phase, ring_all_gather, NopCost, RegionGeom};

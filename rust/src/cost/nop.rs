@@ -53,8 +53,14 @@ fn cross_region(bytes: f64, mesh: &Mesh, nop: &NopConfig, freq: f64, a: RegionGe
     let link_bpc = nop.link_bytes_per_cycle(freq);
     // Regions are zigzag-contiguous, hence physically adjacent; a zero cut
     // (possible for snake-wrap corner cases) still routes through the mesh
-    // with at least one link.
-    let w = mesh.cut_width(a.start, a.n, b.start, b.n).max(1) as f64;
+    // with at least one link. With non-uniform links the cut is no longer
+    // a pure count: each crossing link contributes its bandwidth scale
+    // (uniform meshes keep the exact count expression, bit-for-bit).
+    let w = if mesh.has_link_overrides() {
+        mesh.cut_capacity(a.start, a.n, b.start, b.n).max(1.0)
+    } else {
+        mesh.cut_width(a.start, a.n, b.start, b.n).max(1) as f64
+    };
     let hops = mesh.centroid_hops(a.start, a.n, b.start, b.n);
     NopCost {
         cycles: hops * nop.hop_cycles + bytes / (w * link_bpc),
@@ -70,7 +76,14 @@ pub fn ring_all_gather(total_bytes: f64, mesh: &Mesh, nop: &NopConfig, freq: f64
     if r.n <= 1 || total_bytes == 0.0 {
         return NopCost::zero();
     }
-    let link_bpc = nop.link_bytes_per_cycle(freq);
+    // A ring step moves every chunk one zigzag neighbour at once, so the
+    // slowest link in the region paces the collective (uniform meshes
+    // skip the scaling entirely).
+    let link_bpc = if mesh.has_link_overrides() {
+        nop.link_bytes_per_cycle(freq) * mesh.region_min_link_scale(r.start, r.n)
+    } else {
+        nop.link_bytes_per_cycle(freq)
+    };
     let n = r.n as f64;
     let steps = n - 1.0;
     let hop = mesh.intra_hops(r.start, r.n).max(1.0);
@@ -88,7 +101,13 @@ fn halo_exchange(layer: &Layer, mesh: &Mesh, nop: &NopConfig, freq: f64, r: Regi
     if total == 0.0 {
         return NopCost::zero();
     }
-    let link_bpc = nop.link_bytes_per_cycle(freq);
+    // Boundary swaps run in parallel; the slowest internal link finishes
+    // last and paces the phase.
+    let link_bpc = if mesh.has_link_overrides() {
+        nop.link_bytes_per_cycle(freq) * mesh.region_min_link_scale(r.start, r.n)
+    } else {
+        nop.link_bytes_per_cycle(freq)
+    };
     let per_boundary = total / (r.n as f64 - 1.0);
     let hop = mesh.intra_hops(r.start, r.n).max(1.0);
     NopCost {
@@ -234,6 +253,37 @@ mod tests {
             ring_all_gather(0.0, &mesh, &nop, FREQ, RegionGeom { start: 0, n: 8 }),
             NopCost::zero()
         );
+    }
+
+    #[test]
+    fn slow_links_raise_comm_costs_and_unit_scales_do_not() {
+        let (mesh, nop) = env();
+        let a = RegionGeom { start: 0, n: 4 };
+        let b = RegionGeom { start: 4, n: 4 };
+        let base = cross_region(1e6, &mesh, &nop, FREQ, a, b);
+        let gather_base = ring_all_gather(1e6, &mesh, &nop, FREQ, RegionGeom { start: 0, n: 8 });
+        // halve the row-0/1 crossing: the a↔b cut loses half its capacity
+        let mut slow_mesh = mesh.clone();
+        slow_mesh.set_link_scales(vec![1.0; 3], vec![0.5, 1.0, 1.0]);
+        let slow = cross_region(1e6, &slow_mesh, &nop, FREQ, a, b);
+        assert!(slow.cycles > base.cycles);
+        // hop-energy charges volume × hops — bandwidth scales don't touch it
+        assert_eq!(slow.energy_pj.to_bits(), base.energy_pj.to_bits());
+        // a ring spanning the slow crossing is paced by the slowest link
+        let gather_slow =
+            ring_all_gather(1e6, &slow_mesh, &nop, FREQ, RegionGeom { start: 0, n: 8 });
+        assert!(gather_slow.cycles > gather_base.cycles);
+        // ... but a region not touching it is unchanged, bit-for-bit
+        let gather_far =
+            ring_all_gather(1e6, &slow_mesh, &nop, FREQ, RegionGeom { start: 8, n: 8 });
+        let gather_far_base =
+            ring_all_gather(1e6, &mesh, &nop, FREQ, RegionGeom { start: 8, n: 8 });
+        assert_eq!(gather_far.cycles.to_bits(), gather_far_base.cycles.to_bits());
+        // all-unit overrides are dropped and cannot perturb anything
+        let mut unit = mesh.clone();
+        unit.set_link_scales(vec![1.0; 3], vec![1.0; 3]);
+        let same = cross_region(1e6, &unit, &nop, FREQ, a, b);
+        assert_eq!(same.cycles.to_bits(), base.cycles.to_bits());
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //!   space       Equ. 8–9 search-space counts
 //!   multi       co-schedule several models on one package [SCAR-style]
 //!   serve       discrete-event serving sim: batching, SLOs, hybrid shares
+//!   hetero      uniform-vs-heterogeneous package comparison
 //!   pipeline    run the functional AOT pipeline (PJRT)   [E2E]
 
 use anyhow::{anyhow, bail, Result};
@@ -65,6 +66,12 @@ SUBCOMMANDS
               temporal shares charged the DRAM weight-swap; allocations
               whose simulated p99 breaks a --slo bound are pruned.
               Deterministic: one seed = one bit-identical report.
+  hetero      [--net resnet50] [--chiplets 16] [--specs 's1;s2;..'] [--samples M]
+              schedule the same workload on a uniform package and on each
+              heterogeneous spec, side by side (default specs: all-big,
+              half big / half little, and the same mix with a slow
+              cross-reticle column link). Specs separate on ';' or
+              whitespace — a spec's own link list keeps its commas.
   pipeline    [--mode merged|isp|single|all] [--samples N] [--artifacts DIR]
   sensitivity [--net resnet50] [--chiplets 256] [--knob nop|dram]
   bench-diff  --old <baseline.json> --new <candidate.json>
@@ -117,6 +124,13 @@ COMMON FLAGS
   --trace-level <L> 'sim' (default): simulated-time events only, output
                     bit-identical across runs. 'full': also record wall-
                     clock DSE phase spans (where search time goes).
+  --hetero <spec>   heterogeneous package: <class><count> runs filling the
+                    zigzag mesh slots, plus optional /xcol<J>=<S>,xrow<J>=<S>
+                    per-crossing NoP link scales — e.g. big8little8/xcol1=0.5.
+                    Classes: big (the base chiplet), little (half the PE
+                    array and global buffer, 0.7x MAC energy), micro (a
+                    quarter, 0.55x). A single-class spec with unit links is
+                    bit-identical to the plain uniform package.
 
 `scope help` appends the full generated knob table (every config key,
 CLI flag, and bench env var).
@@ -229,6 +243,12 @@ fn load_config(args: &Args, chiplets: usize) -> Result<Config> {
         }
         CacheStore::global().set_persist_path(Some(path));
     }
+    // applied last so the CLI wins over a config-file `hetero` key and the
+    // class chips derive from the fully-overridden base chiplet
+    match args.str_or("hetero", "").as_str() {
+        "" => {}
+        spec => scope::arch::apply_hetero(&mut cfg.mcm, spec).map_err(|e| anyhow!(e))?,
+    }
     Ok(cfg)
 }
 
@@ -312,17 +332,36 @@ fn cmd_search(args: &Args) -> Result<()> {
                             scope::pipeline::Partition::Isp => 'I',
                         })
                         .collect();
+                    // on a mixed package, show which classes the region
+                    // lands on; uniform output stays byte-identical
+                    let mut chips = seg.regions[j].to_string();
+                    if let Some(h) = mcm.hetero_classes() {
+                        chips.push_str(&format!(
+                            " [{}]",
+                            h.label(seg.region_start(j), seg.regions[j])
+                        ));
+                    }
                     t.row(vec![
                         si.to_string(),
                         j.to_string(),
                         format!("[{lo},{hi})"),
-                        seg.regions[j].to_string(),
+                        chips,
                         parts,
                         seg.exec_mode.name().to_string(),
                     ]);
                 }
             }
             println!("{t}");
+            if let Some(h) = mcm.hetero_classes() {
+                println!("package: {} ({})", h.spec(), h.label(0, mcm.chiplets));
+            }
+            scope::obs::class_busy_metrics(
+                scope::obs::Registry::global(),
+                &mcm,
+                sched,
+                &r.eval,
+                sim.samples,
+            );
             println!(
                 "throughput: {} samples/s | energy: {} J/batch | cycles: {}",
                 f3(r.throughput()),
@@ -627,6 +666,33 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_hetero(args: &Args) -> Result<()> {
+    let name = net_flag(args, "resnet50")?;
+    let chiplets = args.usize_or("chiplets", 16)?;
+    let (_, sim) = sim_options(args, chiplets)?;
+    let specs = match args.str_or("specs", "").as_str() {
+        "" => {
+            // default comparison: all-big, an even big/little mix, and the
+            // same mix with the first column crossing at half bandwidth
+            let h = chiplets / 2;
+            if chiplets >= 2 && chiplets % 2 == 0 {
+                format!("big{chiplets};big{h}little{h};big{h}little{h}/xcol0=0.5")
+            } else {
+                format!("big{chiplets}")
+            }
+        }
+        s => s.to_string(),
+    };
+    // ';' or whitespace separates specs — a spec's link list keeps its commas
+    let specs: Vec<&str> = specs
+        .split(|c: char| c == ';' || c.is_whitespace())
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .collect();
+    println!("{}", figures::hetero_table(&name, chiplets, &specs, &sim)?);
+    Ok(())
+}
+
 fn cmd_pipeline(args: &Args) -> Result<()> {
     let dir = match args.str_or("artifacts", "").as_str() {
         "" => Manifest::default_dir(),
@@ -695,6 +761,11 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
         Ok(text) => text,
         Err(_) => {
             println!("bench-diff: no baseline at {old_path}; recording only (no gate)");
+            eprintln!(
+                "bench-diff: WARNING: performance gating is DISARMED — no baseline file at \
+                 {old_path}; seed it with `scope bench ... --json {old_path}` on the \
+                 reference machine"
+            );
             return Ok(());
         }
     };
@@ -722,6 +793,12 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
     println!("{t}");
     if matches!(old_map.get("provisional"), Some(Json::Bool(true))) {
         println!("bench-diff: baseline {old_path} is provisional; recording only (no gate)");
+        eprintln!(
+            "bench-diff: WARNING: performance gating is DISARMED — baseline {old_path} is \
+             marked \"provisional\": true; arm the gate by re-recording it with \
+             `scope bench ... --json {old_path}` on the reference machine (CI's bench-arm \
+             step does this on main)"
+        );
         return Ok(());
     }
     let o = old
@@ -768,6 +845,7 @@ fn main() -> Result<()> {
         Some("space") => cmd_space(&args),
         Some("multi") => cmd_multi(&args),
         Some("serve") => cmd_serve(&args),
+        Some("hetero") => cmd_hetero(&args),
         Some("pipeline") => cmd_pipeline(&args),
         Some("sensitivity") => cmd_sensitivity(&args),
         Some("bench-diff") => cmd_bench_diff(&args),

@@ -70,6 +70,35 @@ pub fn emit() -> std::io::Result<()> {
     Ok(())
 }
 
+/// Fold per-class busy chiplet-cycles into `reg` — one stable gauge
+/// `scope_class_busy_cycles_<name>` per chiplet class, attributing each
+/// cluster's per-sample busy cycles × batch × slot count to the classes
+/// occupying its region. A no-op on uniform packages (nothing is
+/// registered), so the `--metrics-out` document of a uniform run stays
+/// byte-identical with and without this call.
+pub fn class_busy_metrics(
+    reg: &Registry,
+    mcm: &crate::arch::McmConfig,
+    schedule: &crate::pipeline::schedule::Schedule,
+    eval: &crate::pipeline::timeline::ScheduleEval,
+    m: u64,
+) {
+    let Some(h) = mcm.hetero_classes() else {
+        return;
+    };
+    let mut busy = vec![0.0f64; h.classes().len()];
+    for (seg, ev) in schedule.segments.iter().zip(&eval.segments) {
+        for (j, cl) in ev.clusters.iter().enumerate() {
+            for (c, cnt) in h.classes_in(seg.region_start(j), seg.regions[j]) {
+                busy[c] += cl.cycles * m as f64 * cnt as f64;
+            }
+        }
+    }
+    for (c, cycles) in busy.iter().enumerate() {
+        reg.gauge(&format!("scope_class_busy_cycles_{}", h.class(c).name)).set(*cycles);
+    }
+}
+
 /// Human-readable summary of a `SCOPE_PRUNE_AUDIT=1` run, read from the
 /// registry — `None` when no span was audited (audit off, or pruning
 /// produced no bounds to check).
@@ -84,4 +113,60 @@ pub fn prune_audit_summary() -> Option<String> {
         "prune audit: {spans} spans re-verified, every bound admissible \
          (max relative slack {slack:.3e})"
     ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{apply_hetero, McmConfig};
+    use crate::pipeline::schedule::{ExecMode, Partition, Schedule, SegmentSchedule};
+    use crate::pipeline::timeline::{ClusterEval, ScheduleEval, SegmentEval};
+
+    #[test]
+    fn class_busy_attributes_cycles_by_slot_count() {
+        let mut mcm = McmConfig::paper_default(8);
+        apply_hetero(&mut mcm, "big4little4").unwrap();
+        let schedule = Schedule {
+            method: "scope".into(),
+            segments: vec![SegmentSchedule {
+                lo: 0,
+                hi: 2,
+                bounds: vec![0, 1, 2],
+                regions: vec![6, 2],
+                partitions: vec![Partition::Wsp, Partition::Wsp],
+                exec_mode: ExecMode::Pipeline,
+            }],
+        };
+        let eval = ScheduleEval {
+            segments: vec![SegmentEval {
+                clusters: vec![
+                    ClusterEval { cycles: 10.0, ..Default::default() },
+                    ClusterEval { cycles: 4.0, ..Default::default() },
+                ],
+                ..Default::default()
+            }],
+            ..Default::default()
+        };
+        let reg = Registry::new();
+        class_busy_metrics(&reg, &mcm, &schedule, &eval, 2);
+        // cluster 0 spans slots [0,6) = 4 big + 2 little at 10 cyc/sample;
+        // cluster 1 spans [6,8) = 2 little at 4 cyc/sample; batch 2.
+        assert_eq!(reg.gauge("scope_class_busy_cycles_big").get(), 10.0 * 2.0 * 4.0);
+        assert_eq!(
+            reg.gauge("scope_class_busy_cycles_little").get(),
+            10.0 * 2.0 * 2.0 + 4.0 * 2.0 * 2.0
+        );
+    }
+
+    #[test]
+    fn class_busy_registers_nothing_on_uniform_packages() {
+        let reg = Registry::new();
+        let mcm = McmConfig::paper_default(8);
+        let schedule = Schedule { method: "scope".into(), segments: vec![] };
+        class_busy_metrics(&reg, &mcm, &schedule, &ScheduleEval::default(), 2);
+        assert_eq!(
+            reg.to_json().to_string_compact(),
+            Registry::new().to_json().to_string_compact()
+        );
+    }
 }

@@ -27,7 +27,8 @@
 
 use crate::arch::McmConfig;
 use crate::cost::{
-    comp_cycles, compute_energy, dram_transfer, ring_all_gather, NopCost, RegionGeom,
+    comp_cycles, comp_cycles_region, compute_energy_region, dram_transfer, ring_all_gather,
+    NopCost, RegionGeom,
 };
 use crate::model::tile::{lower_segment, TileGraph};
 use crate::model::Network;
@@ -110,7 +111,13 @@ pub fn eval_cluster_fused(ctx: &EvalContext, seg: &SegmentSchedule, j: usize) ->
     let r = seg.regions[j] as u64;
     let region = RegionGeom { start: seg.region_start(j), n: seg.regions[j] };
     let freq = ctx.mcm.chiplet.freq_hz;
-    let plan = plan_cluster(layers, parts, r, ctx.policy, ctx.mcm.chiplet.weight_capacity());
+    let plan = plan_cluster(
+        layers,
+        parts,
+        r,
+        ctx.policy,
+        ctx.mcm.region_weight_capacity(region.start, region.n),
+    );
     let mut out = ClusterEval::default();
     for (i, layer) in layers.iter().enumerate() {
         // preparation phase — identical residency handling to the
@@ -132,8 +139,8 @@ pub fn eval_cluster_fused(ctx: &EvalContext, seg: &SegmentSchedule, j: usize) ->
                 NopCost { cycles: d.cycles, energy_pj: 0.0, volume: d.bytes }
             }
         };
-        let comp = comp_cycles(layer, parts[i], r, &ctx.mcm.chiplet);
-        let mut energy = compute_energy(layer, parts[i], r, &ctx.mcm.chiplet);
+        let comp = comp_cycles_region(layer, parts[i], region, ctx.mcm);
+        let mut energy = compute_energy_region(layer, parts[i], region, ctx.mcm);
         energy.nop_pj += pre.energy_pj;
         energy.dram_pj += dram_pre_pj;
         out.cycles += pre.cycles + comp;
@@ -142,7 +149,7 @@ pub fn eval_cluster_fused(ctx: &EvalContext, seg: &SegmentSchedule, j: usize) ->
     }
     // depth-first tile walk: activation overflow beyond the SRAM share
     let g = lower_segment(ctx.net, lo, hi, ctx.opts.tile_rows);
-    let share = r * ctx.mcm.chiplet.global_buf;
+    let share = ctx.mcm.region_global_buf(region.start, region.n);
     let over = overflow_bytes(&g, share);
     if over > 0 {
         let d = dram_transfer((2 * over) as f64, &ctx.mcm.dram, freq, 1.0);
@@ -162,9 +169,8 @@ pub fn eval_cluster_fused(ctx: &EvalContext, seg: &SegmentSchedule, j: usize) ->
 pub fn overflow_round_trip(ctx: &EvalContext, seg: &SegmentSchedule, j: usize) -> (u64, f64) {
     debug_assert_eq!(seg.exec_mode, ExecMode::Fused);
     let (lo, hi) = seg.cluster_range(j);
-    let r = seg.regions[j] as u64;
     let g = lower_segment(ctx.net, lo, hi, ctx.opts.tile_rows);
-    let share = r * ctx.mcm.chiplet.global_buf;
+    let share = ctx.mcm.region_global_buf(seg.region_start(j), seg.regions[j]);
     let over = overflow_bytes(&g, share);
     if over == 0 {
         return (0, 0.0);
@@ -184,12 +190,14 @@ pub fn fused_candidate(
     hi: usize,
     chiplets: usize,
 ) -> SegmentSchedule {
-    let r = chiplets as u64;
+    // Fused segments own the whole region from slot 0, so the partition
+    // choice sees the placed (possibly mixed-class) compute time.
+    let region = RegionGeom { start: 0, n: chiplets };
     let partitions = net.layers[lo..hi]
         .iter()
         .map(|l| {
-            let w = comp_cycles(l, Partition::Wsp, r, &mcm.chiplet);
-            let i = comp_cycles(l, Partition::Isp, r, &mcm.chiplet);
+            let w = comp_cycles_region(l, Partition::Wsp, region, mcm);
+            let i = comp_cycles_region(l, Partition::Isp, region, mcm);
             if i < w {
                 Partition::Isp
             } else {

@@ -13,7 +13,7 @@
 use crate::arch::McmConfig;
 use crate::config::SimOptions;
 use crate::cost::{
-    comm_phase, comp_cycles, compute_energy, dram_transfer, ring_all_gather,
+    comm_phase, comp_cycles_region, compute_energy_region, dram_transfer, ring_all_gather,
     DramCost, EnergyBreakdown, NopCost, RegionGeom,
 };
 use crate::model::Network;
@@ -148,8 +148,8 @@ pub fn eval_layer(
         }
     };
 
-    // ---- computation phase (Equ. 5) ----
-    let comp = comp_cycles(layer, p, r, &ctx.mcm.chiplet);
+    // ---- computation phase (Equ. 5, slowest class in the region) ----
+    let comp = comp_cycles_region(layer, p, region, ctx.mcm);
 
     // ---- communication phase (Equ. 6 / Table II) ----
     // Branch layers merge locally (element-wise add inside the block); the
@@ -178,7 +178,7 @@ pub fn eval_layer(
     } else {
         comm.cycles + comp
     };
-    let mut energy = compute_energy(layer, p, r, &ctx.mcm.chiplet);
+    let mut energy = compute_energy_region(layer, p, region, ctx.mcm);
     energy.nop_pj += comm.energy_pj + pre_cost.energy_pj;
     energy.dram_pj += dram_pre_pj;
     LayerPhases {
@@ -204,12 +204,15 @@ pub fn eval_cluster(ctx: &EvalContext, seg: &SegmentSchedule, j: usize) -> Clust
     let (lo, hi) = seg.cluster_range(j);
     let layers = &ctx.net.layers[lo..hi];
     let parts = &seg.partitions[lo - seg.lo..hi - seg.lo];
+    // On a hetero package the smallest class's buffer binds (distributed
+    // storage hands every chiplet an equal 1/R shard); uniform packages
+    // resolve to the old `chiplet.weight_capacity()` exactly.
     let plan = plan_cluster(
         layers,
         parts,
         seg.regions[j] as u64,
         ctx.policy,
-        ctx.mcm.chiplet.weight_capacity(),
+        ctx.mcm.region_weight_capacity(seg.region_start(j), seg.regions[j]),
     );
     let mut out = ClusterEval::default();
     for k in lo..hi {
@@ -426,15 +429,17 @@ pub fn trace_schedule(net: &Network, mcm: &McmConfig, opts: &SimOptions, sched: 
             let tid = track + j as u32;
             let (lo, hi) = seg.cluster_range(j);
             let cl = &ev.clusters[j];
-            sink.name_thread(
-                PID_PACKAGE,
-                tid,
-                &format!(
-                    "seg {si} cluster {j} — layers [{lo},{hi}) on {} chiplets ({})",
-                    seg.regions[j],
-                    seg.exec_mode.name()
-                ),
+            // mixed packages annotate each track with its class mix, e.g.
+            // "[big×3+little×1]"; uniform traces stay byte-identical
+            let mut name = format!(
+                "seg {si} cluster {j} — layers [{lo},{hi}) on {} chiplets ({})",
+                seg.regions[j],
+                seg.exec_mode.name()
             );
+            if let Some(h) = mcm.hetero_classes() {
+                name.push_str(&format!(" [{}]", h.label(seg.region_start(j), seg.regions[j])));
+            }
+            sink.name_thread(PID_PACKAGE, tid, &name);
             if preload > 0 {
                 sink.complete(
                     PID_PACKAGE,

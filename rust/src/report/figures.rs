@@ -575,6 +575,67 @@ pub fn space_table(net_name: &str, chiplets: usize) -> Result<Table> {
     Ok(t)
 }
 
+/// Heterogeneous-package comparison: schedule the same workload on each
+/// `--hetero` spec (the first row is conventionally the all-big uniform
+/// package) and report throughput side by side, normalized to the best.
+/// Every spec is validated against the package geometry before any
+/// scheduling runs, so a typo in spec 3 fails fast.
+pub fn hetero_table(
+    net_name: &str,
+    chiplets: usize,
+    specs: &[&str],
+    sim: &SimOptions,
+) -> Result<Table> {
+    let net = zoo::by_name(net_name).ok_or_else(|| anyhow!("unknown net {net_name}"))?;
+    if specs.is_empty() {
+        return Err(anyhow!("hetero_table needs at least one package spec"));
+    }
+    let mut platforms = Vec::with_capacity(specs.len());
+    for spec in specs {
+        let mut mcm = McmConfig::paper_default(chiplets);
+        crate::arch::apply_hetero(&mut mcm, spec).map_err(|e| anyhow!(e))?;
+        platforms.push((spec.to_string(), mcm));
+    }
+    let results: Vec<MethodResult> = platforms
+        .iter()
+        .map(|(_, mcm)| schedule_scope(&net, mcm, sim))
+        .collect();
+    let best = results.iter().map(|r| r.throughput()).fold(0.0, f64::max).max(1e-30);
+    let title = format!(
+        "heterogeneous packages — scope on {net_name}, {chiplets} chiplets, m={}",
+        sim.samples
+    );
+    let cols = [
+        "package",
+        "classes",
+        "peak MACs/cyc",
+        "throughput (samples/s)",
+        "normalized",
+        "energy (J/batch)",
+        "segments",
+    ];
+    let mut t = Table::new(&title, &cols);
+    for ((spec, mcm), r) in platforms.iter().zip(&results) {
+        let classes = match mcm.hetero_classes() {
+            Some(h) => h.label(0, mcm.chiplets),
+            None => format!("uniform ×{}", mcm.chiplets),
+        };
+        t.row(vec![
+            spec.clone(),
+            classes,
+            eng(mcm.package_macs_per_cycle() as f64),
+            if r.eval.is_valid() { f3(r.throughput()) } else { "invalid".into() },
+            if r.eval.is_valid() { f3(r.throughput() / best) } else { "-".into() },
+            if r.eval.is_valid() { f3(r.eval.energy.total_pj() * 1e-12) } else { "-".into() },
+            r.schedule
+                .as_ref()
+                .map(|s| s.segments.len().to_string())
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    Ok(t)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -601,6 +662,20 @@ mod tests {
         let s = t.render();
         assert!(s.contains("dp/balanced"), "{s}");
         assert!(!s.contains("invalid"), "{s}");
+    }
+
+    #[test]
+    fn hetero_table_compares_uniform_and_mixed() {
+        let sim = SimOptions { samples: 8, ..Default::default() };
+        let specs = ["big8", "big4little4", "big4little4/xcol0=0.5"];
+        let t = hetero_table("scopenet", 8, &specs, &sim).unwrap();
+        let s = t.render();
+        assert!(s.contains("uniform ×8"), "{s}");
+        assert!(s.contains("big×4+little×4"), "{s}");
+        assert!(!s.contains("invalid"), "{s}");
+        // a bad spec fails fast with the offender named
+        let err = hetero_table("scopenet", 8, &["huge8"], &sim).unwrap_err().to_string();
+        assert!(err.contains("huge"), "{err}");
     }
 
     #[test]

@@ -81,7 +81,9 @@
 //! assert!(r.used_chiplets <= 8);
 //! ```
 
-use crate::arch::{McmConfig, Mesh};
+use std::collections::HashMap;
+
+use crate::arch::{HeteroSpec, McmConfig, Mesh};
 use crate::baselines::{run_method, METHOD_NAMES};
 use crate::config::SimOptions;
 use crate::cost::bound::share_rate_ub;
@@ -197,6 +199,28 @@ pub struct MultiModelResult {
 impl MultiModelResult {
     pub fn is_valid(&self) -> bool {
         self.error.is_none()
+    }
+
+    /// An empty result carrying only an error (both allocator paths).
+    fn invalid_on(
+        total_chiplets: usize,
+        allocator: AllocatorKind,
+        msg: String,
+    ) -> MultiModelResult {
+        MultiModelResult {
+            outcomes: Vec::new(),
+            rate: 0.0,
+            total_throughput: 0.0,
+            tm_rate: 0.0,
+            tm_total: 0.0,
+            used_chiplets: 0,
+            total_chiplets,
+            allocator,
+            evals: 0,
+            pruned_pairs: 0,
+            store: None,
+            error: Some(msg),
+        }
     }
 
     /// Co-scheduling gain over time multiplexing (`None` when either side
@@ -384,13 +408,40 @@ pub fn parse_quantum(v: &str) -> Result<usize, String> {
 /// channel, exactly as a standalone package of that size would) — a
 /// documented limitation, same on both sides of the TM comparison.
 pub(crate) fn sub_package(mcm: &McmConfig, chiplets: usize) -> McmConfig {
-    McmConfig {
+    sub_package_at(mcm, 0, chiplets)
+}
+
+/// [`sub_package`] *placed*: the share occupies zigzag slots
+/// `[offset, offset+chiplets)` of the parent package. On a mixed-class
+/// package the share inherits the parent class-map slice, remapped onto
+/// the sub-mesh's own zigzag order 0..chiplets — the same
+/// positionless-geometry approximation the uniform sub-package already
+/// makes for the mesh shape. A slice that lands on a single class runs as
+/// a plain uniform package of that class (the degenerate-spec rule).
+/// Parent link-scale overrides are *not* inherited: the sub-mesh has its
+/// own geometry, so slow-link effects inside shares are out of model
+/// (documented limitation, same on both sides of the TM comparison).
+pub(crate) fn sub_package_at(mcm: &McmConfig, offset: usize, chiplets: usize) -> McmConfig {
+    debug_assert!(offset + chiplets <= mcm.chiplets);
+    let mut sub = McmConfig {
         chiplets,
         mesh: Mesh::for_chiplets(chiplets),
         chiplet: mcm.chiplet.clone(),
         nop: mcm.nop.clone(),
         dram: mcm.dram.clone(),
+        hetero: None,
+    };
+    if let Some(h) = mcm.hetero_classes() {
+        let map: Vec<u8> = (0..chiplets).map(|i| h.class_of(offset + i) as u8).collect();
+        let spec = format!("{}[{}..{}]", h.spec(), offset, offset + chiplets);
+        let sliced = HeteroSpec::new(h.classes().to_vec(), map, spec)
+            .expect("a slice of a valid hetero spec is valid");
+        if !sliced.mixed() {
+            sub.chiplet = sliced.class(sliced.class_of(0)).chip.clone();
+        }
+        sub.hetero = Some(sliced);
     }
+    sub
 }
 
 /// Candidate share sizes for a package of `total` chiplets: multiples of
@@ -410,29 +461,50 @@ pub fn share_grid(total: usize, quantum: usize) -> Vec<usize> {
 }
 
 /// Exhaustive split search over the grid (ground truth): maximize the mix
-/// rate, ties → fewer chiplets → first in lexicographic order.
+/// rate, ties → fewer chiplets → first in lexicographic order. Positionless
+/// view of [`exhaustive_alloc_at`] — shares are packed in model order, so
+/// the rate-table lookup just ignores the placement offset.
 fn exhaustive_alloc(
     models: usize,
     sizes: &[usize],
     budget: usize,
     rate: &[Vec<Option<f64>>],
 ) -> Option<(Vec<usize>, f64)> {
+    exhaustive_alloc_at(models, sizes, budget, &mut |i, _offset, j| rate[i][j])
+}
+
+/// Position-aware exhaustive split search: `rate(i, offset, j)` is model
+/// `i`'s weighted rate on `sizes[j]` chiplets placed at zigzag offset
+/// `offset`. Shares are packed contiguously in model order, so each
+/// model's offset is the prefix sum of the split — on heterogeneous
+/// packages the *same* share size rates differently at different offsets.
+fn exhaustive_alloc_at<F>(
+    models: usize,
+    sizes: &[usize],
+    budget: usize,
+    rate: &mut F,
+) -> Option<(Vec<usize>, f64)>
+where
+    F: FnMut(usize, usize, usize) -> Option<f64>,
+{
     let mut best: Option<(Vec<usize>, f64, usize)> = None;
     for_each_share_split(models, sizes, budget, &mut |split| {
         let mut r = f64::INFINITY;
         let mut feasible = true;
+        let mut offset = 0usize;
         for (i, &share) in split.iter().enumerate() {
             let j = sizes
                 .iter()
                 .position(|&x| x == share)
                 .expect("split shares come from sizes");
-            match rate[i][j] {
+            match rate(i, offset, j) {
                 Some(v) => r = r.min(v),
                 None => {
                     feasible = false;
                     break;
                 }
             }
+            offset += share;
         }
         if feasible {
             let used: usize = split.iter().sum();
@@ -461,6 +533,25 @@ fn dp_alloc(
     budget: usize,
     rate: &[Vec<Option<f64>>],
 ) -> Option<(Vec<usize>, f64)> {
+    dp_alloc_at(models, sizes, budget, &mut |i, _offset, j| rate[i][j])
+}
+
+/// Position-aware DP: the `(model prefix, chiplets used)` state already
+/// *is* the placement — shares pack contiguously in model order, so model
+/// `i` transitioning out of state `val[i][u]` sits at zigzag offset `u`.
+/// `rate(i, u, j)` therefore sees exactly the placed sub-package the
+/// exhaustive scan's prefix sums produce, and the two allocators stay
+/// bit-identical on heterogeneous packages (validated against
+/// [`for_each_share_split`] ground truth in `tests/hetero.rs`).
+fn dp_alloc_at<F>(
+    models: usize,
+    sizes: &[usize],
+    budget: usize,
+    rate: &mut F,
+) -> Option<(Vec<usize>, f64)>
+where
+    F: FnMut(usize, usize, usize) -> Option<f64>,
+{
     let mut val: Vec<Vec<Option<f64>>> = vec![vec![None; budget + 1]; models + 1];
     let mut pick: Vec<Vec<usize>> = vec![vec![usize::MAX; budget + 1]; models + 1];
     val[0][0] = Some(f64::INFINITY);
@@ -472,7 +563,7 @@ fn dp_alloc(
                 if next_used > budget {
                     break; // ascending sizes
                 }
-                let Some(r) = rate[i][j] else { continue };
+                let Some(r) = rate(i, used, j) else { continue };
                 let v = base.min(r);
                 if val[i + 1][next_used].map(|cur| v > cur).unwrap_or(true) {
                     val[i + 1][next_used] = Some(v);
@@ -617,20 +708,7 @@ pub fn co_schedule(
     mopts: &MultiOptions,
 ) -> MultiModelResult {
     let total_chiplets = mcm.chiplets;
-    let invalid = |msg: String| MultiModelResult {
-        outcomes: Vec::new(),
-        rate: 0.0,
-        total_throughput: 0.0,
-        tm_rate: 0.0,
-        tm_total: 0.0,
-        used_chiplets: 0,
-        total_chiplets,
-        allocator: mopts.allocator,
-        evals: 0,
-        pruned_pairs: 0,
-        store: None,
-        error: Some(msg),
-    };
+    let invalid = |msg: String| MultiModelResult::invalid_on(total_chiplets, mopts.allocator, msg);
     let k = set.models.len();
     if k == 0 {
         return invalid("empty workload set".to_string());
@@ -647,6 +725,12 @@ pub fn co_schedule(
     }
     let sizes = share_grid(total_chiplets, mopts.share_quantum);
     let full_j = sizes.len() - 1;
+    if mcm.hetero_classes().is_some() {
+        // Mixed-class package: share position changes cost, so the flat
+        // (model, share) table no longer describes the frontier — route
+        // to the placed co-scheduler.
+        return co_schedule_hetero(set, mcm, sim, mopts, &sizes);
+    }
     // Every (model, share) evaluation is independent: fan across the
     // worker pool with each job's method running serially (threads = 1),
     // so results are bit-identical at every outer thread count.
@@ -807,6 +891,127 @@ pub fn co_schedule(
         allocator: mopts.allocator,
         evals,
         pruned_pairs,
+        store,
+        error: None,
+    }
+}
+
+/// Placed co-scheduling for mixed-class packages. Shares pack
+/// contiguously in model order (model `i` starts at the prefix sum of the
+/// earlier shares), so a share's cost depends on *where* it lands — the
+/// flat (model, share) table of the uniform path becomes a
+/// (model, offset, share) surface. Evaluations are memoized and run
+/// serially in the allocator's deterministic demand order, so results are
+/// bit-identical at every `--threads` setting by construction. The
+/// uniform path's analytic table filter does not apply (its keep-mask is
+/// positionless), so `pruned_pairs` is always 0 here; `evals` counts the
+/// distinct placed sub-packages actually scheduled.
+fn co_schedule_hetero(
+    set: &WorkloadSet,
+    mcm: &McmConfig,
+    sim: &SimOptions,
+    mopts: &MultiOptions,
+    sizes: &[usize],
+) -> MultiModelResult {
+    let total_chiplets = mcm.chiplets;
+    let k = set.models.len();
+    let full_j = sizes.len() - 1;
+    let inner = SimOptions { threads: 1, ..sim.clone() };
+    let mut memo: HashMap<(usize, usize, usize), MethodResult> = HashMap::new();
+    let mut rate_at = |i: usize, offset: usize, j: usize| -> Option<f64> {
+        let r = memo.entry((i, offset, j)).or_insert_with(|| {
+            run_method(
+                &mopts.method,
+                &set.models[i].net,
+                &sub_package_at(mcm, offset, sizes[j]),
+                &inner,
+            )
+        });
+        if r.eval.is_valid() && r.throughput() > 0.0 {
+            Some(r.throughput() / set.models[i].weight)
+        } else {
+            None
+        }
+    };
+    let chosen = match mopts.allocator {
+        AllocatorKind::Exhaustive => exhaustive_alloc_at(k, sizes, total_chiplets, &mut rate_at),
+        AllocatorKind::Dp => dp_alloc_at(k, sizes, total_chiplets, &mut rate_at),
+    };
+    // full-package throughputs for the TM baseline (offset 0 by definition)
+    for i in 0..k {
+        rate_at(i, 0, full_j);
+    }
+    let Some((split, rate)) = chosen else {
+        return MultiModelResult::invalid_on(
+            total_chiplets,
+            mopts.allocator,
+            format!(
+                "no feasible chiplet split for {k} models on {total_chiplets} chiplets \
+                 (grid {sizes:?}, hetero {})",
+                mcm.hetero.as_ref().map_or("?", |h| h.spec()),
+            ),
+        );
+    };
+    let tput_full = |i: usize| -> Option<f64> {
+        let r = memo.get(&(i, 0, full_j))?;
+        if r.eval.is_valid() && r.throughput() > 0.0 {
+            Some(r.throughput())
+        } else {
+            None
+        }
+    };
+    let mut tm_denominator = 0.0f64;
+    let mut tm_feasible = true;
+    let mut outcomes = Vec::with_capacity(k);
+    let mut offset = 0usize;
+    for (i, spec) in set.models.iter().enumerate() {
+        let share = split[i];
+        let j = sizes
+            .iter()
+            .position(|&x| x == share)
+            .expect("chosen shares come from the grid");
+        let full = tput_full(i);
+        match full {
+            Some(t) => tm_denominator += spec.weight / t,
+            None => tm_feasible = false,
+        }
+        outcomes.push(ModelOutcome {
+            name: spec.net.name.clone(),
+            weight: spec.weight,
+            share,
+            result: memo[&(i, offset, j)].clone(),
+            full_package: full.unwrap_or(0.0),
+        });
+        offset += share;
+    }
+    let tm_rate = if tm_feasible && tm_denominator > 0.0 {
+        1.0 / tm_denominator
+    } else {
+        0.0
+    };
+    let total_weight = set.total_weight();
+    let evals = memo.len();
+    let store = if sim.cache_store {
+        Some(CacheStore::global().snapshot())
+    } else {
+        None
+    };
+    let reg = crate::obs::Registry::global();
+    reg.counter("scope_multi_evals").add(evals as u64);
+    if let Some(snap) = &store {
+        crate::obs::absorb_store_snapshot(reg, snap);
+    }
+    MultiModelResult {
+        outcomes,
+        rate,
+        total_throughput: rate * total_weight,
+        tm_rate,
+        tm_total: tm_rate * total_weight,
+        used_chiplets: split.iter().sum(),
+        total_chiplets,
+        allocator: mopts.allocator,
+        evals,
+        pruned_pairs: 0,
         store,
         error: None,
     }
@@ -1057,6 +1262,56 @@ mod tests {
         assert!(err.contains(">= 1") && err.contains("auto"), "{err}");
         assert!(parse_quantum("-2").is_err());
         assert!(parse_quantum("lots").is_err());
+    }
+
+    #[test]
+    fn sub_package_at_slices_the_class_map() {
+        use crate::arch::apply_hetero;
+        let mut mcm = McmConfig::paper_default(16);
+        apply_hetero(&mut mcm, "big8little8").unwrap();
+        // [4, 12) spans both classes: still mixed, remapped to slots 0..8
+        let mixed = sub_package_at(&mcm, 4, 8);
+        let h = mixed.hetero_classes().expect("mixed slice stays hetero");
+        assert_eq!(h.count_in(0, 0, 8), 4);
+        assert_eq!(h.count_in(1, 0, 8), 4);
+        assert_eq!(h.class_of(0), 0, "slot 4 of the parent was big");
+        assert_eq!(h.class_of(7), 1);
+        // [8, 16) is all-little: a plain uniform little sub-package
+        let little = sub_package_at(&mcm, 8, 8);
+        assert!(little.hetero_classes().is_none());
+        assert_eq!(little.chiplet.macs_per_cycle(), 512);
+        // [0, 8) is all-big: the same platform as a plain sub-package
+        let big = sub_package_at(&mcm, 0, 8);
+        assert!(big.hetero_classes().is_none());
+        assert_eq!(big.chiplet, McmConfig::paper_default(8).chiplet);
+    }
+
+    #[test]
+    fn hetero_co_schedule_dp_matches_exhaustive() {
+        use crate::arch::apply_hetero;
+        let set = WorkloadSet::parse("scopenet,scopenet").unwrap();
+        let mut mcm = McmConfig::paper_default(8);
+        apply_hetero(&mut mcm, "big4little4").unwrap();
+        let sim = SimOptions { samples: 4, ..Default::default() };
+        let mopts = MultiOptions { share_quantum: 2, ..Default::default() };
+        let dp = co_schedule(&set, &mcm, &sim, &mopts);
+        let ex = co_schedule(
+            &set,
+            &mcm,
+            &sim,
+            &MultiOptions { allocator: AllocatorKind::Exhaustive, ..mopts },
+        );
+        assert!(dp.is_valid() && ex.is_valid(), "{:?} / {:?}", dp.error, ex.error);
+        assert_eq!(dp.rate.to_bits(), ex.rate.to_bits());
+        assert_eq!(dp.used_chiplets, ex.used_chiplets);
+        assert_eq!(dp.pruned_pairs, 0, "no positionless pruning on hetero packages");
+        for (a, b) in dp.outcomes.iter().zip(ex.outcomes.iter()) {
+            assert_eq!(a.share, b.share);
+            let (ac, bc) = (a.result.eval.total_cycles, b.result.eval.total_cycles);
+            assert_eq!(ac.to_bits(), bc.to_bits());
+            assert_eq!(a.full_package.to_bits(), b.full_package.to_bits());
+        }
+        assert!(dp.rate > 0.0 && dp.tm_rate > 0.0);
     }
 
     #[test]

@@ -35,6 +35,17 @@
 //! §III-B distributed-weight reload through `cost/dram.rs`) whenever the
 //! resident model changes — the cost that makes time-multiplexing a real
 //! trade instead of a free lunch.
+//!
+//! ## Heterogeneous packages
+//!
+//! Service tables are keyed by (model, share *size*): on a mixed-class
+//! package every share of size `s` is priced at the class mix of zigzag
+//! slots `[0, s)` (first-fit placement), not at each hybrid group's actual
+//! offset — pricing `Bell(k)` allocations at per-group offsets would
+//! multiply the table by the offset count. The rate-question allocator
+//! ([`crate::scope::multi_model`]) *is* fully placed; a degenerate
+//! single-class spec routes through the uniform paths bit-identically
+//! here as everywhere (`tests/hetero.rs`).
 
 pub mod batcher;
 pub mod events;

@@ -68,3 +68,61 @@ fn warm_from_binary_cli_reschedules_zero_spans_and_clusters() {
     assert_eq!(strip(&cold), strip(&warm), "warm results must be bit-identical");
     let _ = std::fs::remove_file(&path);
 }
+
+#[test]
+fn store_keys_fingerprint_class_maps_and_link_scales() {
+    use scope::arch::{apply_hetero, McmConfig};
+    use scope::config::SimOptions;
+    use scope::model::zoo;
+    use scope::pipeline::cache_store::StoreKey;
+
+    let net = zoo::by_name("scopenet").unwrap();
+    let sim = SimOptions::default();
+    let uni = StoreKey::new(&net, &McmConfig::paper_default(8), "scope", &sim);
+
+    let mut mixed = McmConfig::paper_default(8);
+    apply_hetero(&mut mixed, "big4little4").unwrap();
+    assert_ne!(uni, StoreKey::new(&net, &mixed, "scope", &sim), "class map must key");
+
+    let mut swapped = McmConfig::paper_default(8);
+    apply_hetero(&mut swapped, "little4big4").unwrap();
+    assert_ne!(
+        StoreKey::new(&net, &mixed, "scope", &sim),
+        StoreKey::new(&net, &swapped, "scope", &sim),
+        "slot order matters: big4little4 and little4big4 are different packages"
+    );
+
+    let mut slow = McmConfig::paper_default(8);
+    apply_hetero(&mut slow, "big8/xcol0=0.5").unwrap();
+    assert_ne!(uni, StoreKey::new(&net, &slow, "scope", &sim), "link scales must key");
+}
+
+#[test]
+fn warm_uniform_cache_misses_on_hetero_packages() {
+    let path = std::env::temp_dir()
+        .join(format!("scope-cache-v3-hetero-{}.bin", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let p = path.to_str().unwrap();
+    let base = [
+        "multi",
+        "--models",
+        "scopenet,scopenet:2",
+        "--chiplets",
+        "8",
+        "--quantum",
+        "4",
+        "--samples",
+        "4",
+        "--cache-file",
+        p,
+    ];
+    let cold = run_cli(&base);
+    assert!(cluster_misses(&cold) > 0, "cold uniform run must cost clusters: {cold}");
+    // a mixed-package run against the warmed uniform cache must not reuse
+    // any of it — the class map is part of every store key
+    let mut hetero = base.to_vec();
+    hetero.extend_from_slice(&["--hetero", "big4little4"]);
+    let h = run_cli(&hetero);
+    assert!(cluster_misses(&h) > 0, "hetero run must re-cost its clusters: {h}");
+    let _ = std::fs::remove_file(&path);
+}

@@ -1,0 +1,332 @@
+//! Heterogeneous-package acceptance: the two properties that lock the
+//! feature down.
+//!
+//! 1. **Degenerate equivalence** — a single-class spec (`big16`, with or
+//!    without all-unit link overrides) is *bit-identical* to the uniform
+//!    package everywhere: all four §V-A methods across the zoo, every
+//!    `--threads` setting, the multi-model co-scheduler, and the CLI
+//!    byte-for-byte (stdout, `--metrics-out`, `--trace-out`).
+//! 2. **Exhaustive-placement ground truth** — on genuinely mixed
+//!    packages the placed DP allocator returns the same split, rate, and
+//!    per-model schedules as full enumeration over seeded random
+//!    class/link maps, the span bound stays admissible against the real
+//!    scheduler, and branch-and-bound pruning changes nothing.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use scope::arch::{apply_hetero, McmConfig};
+use scope::baselines::run_all;
+use scope::config::SimOptions;
+use scope::cost::{batch1_latency_lb_ns, share_rate_ub, SpanBound};
+use scope::model::zoo;
+use scope::model::WorkloadSet;
+use scope::pipeline::{eval_segment_cached, EvalCache, EvalContext};
+use scope::scope::{
+    co_schedule, schedule_scope, search_segment, AllocatorKind, MultiModelResult,
+    MultiOptions, SearchOptions,
+};
+use scope::storage::StoragePolicy;
+use scope::util::rng::Rng;
+
+fn run_cli(args: &[&str]) -> String {
+    let out = Command::new(env!("CARGO_BIN_EXE_scope"))
+        .args(args)
+        .output()
+        .expect("scope binary runs");
+    assert!(
+        out.status.success(),
+        "scope {:?} failed: {}",
+        args,
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8(out.stdout).expect("utf8 stdout")
+}
+
+/// Unique temp path per (process, label) so parallel tests never collide.
+fn tmp(label: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("scope_hetero_{}_{label}", std::process::id()))
+}
+
+/// Stdout with the `trace:`/`metrics: wrote ...` lines removed — their
+/// paths differ per invocation; everything else must match byte for byte.
+fn strip_obs_lines(out: &str) -> String {
+    out.lines()
+        .filter(|l| !l.starts_with("trace: wrote") && !l.starts_with("metrics: wrote"))
+        .map(|l| format!("{l}\n"))
+        .collect()
+}
+
+/// A degenerate 16-chiplet package: the `big` preset is the base chiplet
+/// unchanged, so this must behave as `paper_default(16)` bit for bit.
+fn degenerate16(spec: &str) -> McmConfig {
+    let mut mcm = McmConfig::paper_default(16);
+    apply_hetero(&mut mcm, spec).unwrap();
+    assert!(!mcm.is_hetero(), "{spec} must be degenerate (single class, unit links)");
+    mcm
+}
+
+// ---------------------------------------------------------------------------
+// 1. Degenerate equivalence
+// ---------------------------------------------------------------------------
+
+#[test]
+fn degenerate_single_class_matches_uniform_across_the_zoo() {
+    // Debug formatting of f64 is shortest-roundtrip, so equal Debug
+    // strings of two MethodResults mean bit-equal schedules and evals.
+    let sim = SimOptions { samples: 8, threads: 1, ..Default::default() };
+    let uni = McmConfig::paper_default(16);
+    let het = degenerate16("big16");
+    for name in zoo::NAMES {
+        let net = zoo::by_name(name).unwrap();
+        let want = format!("{:?}", run_all(&net, &uni, &sim));
+        let got = format!("{:?}", run_all(&net, &het, &sim));
+        assert_eq!(want, got, "{name}: big16 drifted from the uniform package");
+    }
+}
+
+#[test]
+fn all_unit_link_overrides_are_dropped_and_equivalent() {
+    // Scales of exactly 1.0 are the uniform mesh — the spec parser drops
+    // the whole override list rather than storing a no-op that would
+    // perturb cache keys.
+    let het = degenerate16("big16/xcol1=1.0,xrow0=1.0");
+    let net = zoo::by_name("alexnet").unwrap();
+    let sim = SimOptions { samples: 8, threads: 1, ..Default::default() };
+    let want = format!("{:?}", run_all(&net, &McmConfig::paper_default(16), &sim));
+    assert_eq!(want, format!("{:?}", run_all(&net, &het, &sim)));
+}
+
+#[test]
+fn degenerate_equivalence_holds_at_every_thread_count() {
+    let net = zoo::by_name("resnet50").unwrap();
+    let uni = McmConfig::paper_default(16);
+    let het = degenerate16("big16");
+    let mut first: Option<String> = None;
+    for threads in [1usize, 2, 8] {
+        let sim = SimOptions { samples: 8, threads, ..Default::default() };
+        let want = format!("{:?}", schedule_scope(&net, &uni, &sim));
+        let got = format!("{:?}", schedule_scope(&net, &het, &sim));
+        assert_eq!(want, got, "threads={threads}: big16 drifted from uniform");
+        // the engine's own guarantee: bit-identical at every thread count
+        match &first {
+            None => first = Some(got),
+            Some(f) => assert_eq!(*f, got, "threads={threads} drifted from threads=1"),
+        }
+    }
+}
+
+#[test]
+fn degenerate_multi_model_matches_uniform_for_both_allocators() {
+    let set = WorkloadSet::parse("alexnet:2,scopenet").unwrap();
+    let sim = SimOptions { samples: 4, threads: 1, ..Default::default() };
+    let uni = McmConfig::paper_default(8);
+    let mut het = McmConfig::paper_default(8);
+    apply_hetero(&mut het, "big8").unwrap();
+    for allocator in [AllocatorKind::Dp, AllocatorKind::Exhaustive] {
+        let mopts = MultiOptions { allocator, share_quantum: 4, ..Default::default() };
+        let want = format!("{:?}", co_schedule(&set, &uni, &sim, &mopts));
+        let got = format!("{:?}", co_schedule(&set, &het, &sim, &mopts));
+        assert_eq!(want, got, "{allocator:?}: big8 co-schedule drifted from uniform");
+    }
+}
+
+#[test]
+fn cli_search_is_byte_identical_with_artifacts() {
+    // The acceptance bar: stdout AND both artifact files byte-identical
+    // between the uniform package and `--hetero big16`.
+    let base: &[&str] =
+        &["search", "--net", "alexnet", "--chiplets", "16", "--samples", "4"];
+    let mut outs: Vec<(String, String, String)> = Vec::new();
+    for (label, hetero) in [("uni", None), ("het", Some("big16"))] {
+        let t_path = tmp(&format!("search_{label}_t.json"));
+        let m_path = tmp(&format!("search_{label}_m.json"));
+        let (t_s, m_s) = (t_path.display().to_string(), m_path.display().to_string());
+        let mut args = base.to_vec();
+        args.extend(["--trace-out", &t_s, "--metrics-out", &m_s]);
+        if let Some(spec) = hetero {
+            args.extend(["--hetero", spec]);
+        }
+        let out = run_cli(&args);
+        outs.push((
+            strip_obs_lines(&out),
+            std::fs::read_to_string(&t_path).expect("trace file"),
+            std::fs::read_to_string(&m_path).expect("metrics file"),
+        ));
+        let _ = std::fs::remove_file(&t_path);
+        let _ = std::fs::remove_file(&m_path);
+    }
+    assert_eq!(outs[0].0, outs[1].0, "--hetero big16 changed search stdout");
+    assert_eq!(outs[0].1, outs[1].1, "--hetero big16 changed the trace file");
+    assert_eq!(outs[0].2, outs[1].2, "--hetero big16 changed the metrics file");
+}
+
+#[test]
+fn cli_multi_and_serve_are_byte_identical_on_degenerate_specs() {
+    let multi: &[&str] = &[
+        "multi", "--models", "scopenet,scopenet:2", "--chiplets", "8", "--quantum",
+        "4", "--samples", "4",
+    ];
+    let serve: &[&str] = &[
+        "serve", "--models", "serving_mix", "--seed", "7", "--chiplets", "16",
+        "--quantum", "8", "--samples", "4", "--batch", "2", "--arrival-rate", "40",
+        "--horizon", "0.05",
+    ];
+    for (cmd, spec) in [(multi, "big8"), (serve, "big16")] {
+        let want = run_cli(cmd);
+        let mut args = cmd.to_vec();
+        args.extend(["--hetero", spec]);
+        assert_eq!(want, run_cli(&args), "--hetero {spec} changed {} stdout", cmd[0]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Mixed packages: ground truth, admissibility, pruning
+// ---------------------------------------------------------------------------
+
+/// A seeded random *mixed* 8-chiplet spec: two or three classes in random
+/// order, sometimes with a slow cross-reticle column link.
+fn random_mixed_spec8(rng: &mut Rng) -> String {
+    let mut names = ["big", "little", "micro"];
+    rng.shuffle(&mut names);
+    let a = rng.usize_in(1, 7); // 1..=6, so b = 8 - a >= 2
+    let mut spec = if rng.bool_with(0.5) || a >= 6 {
+        format!("{}{}{}{}", names[0], a, names[1], 8 - a)
+    } else {
+        let c = rng.usize_in(1, 8 - a); // leaves the middle class >= 1
+        format!("{}{}{}{}{}{}", names[0], a, names[1], 8 - a - c, names[2], c)
+    };
+    match rng.gen_range(3) {
+        0 => spec.push_str("/xcol0=0.5"),
+        1 => spec.push_str("/xcol0=0.25"),
+        _ => {}
+    }
+    spec
+}
+
+/// The fields a DP-vs-exhaustive comparison may look at: everything except
+/// `allocator` (which records the kind) and `evals` (the two allocators
+/// demand the (model, offset, share) surface in different orders).
+fn placement_signature(r: &MultiModelResult) -> String {
+    let outcomes: Vec<String> = r
+        .outcomes
+        .iter()
+        .map(|o| format!("{}:{} {:?}", o.name, o.share, o.result))
+        .collect();
+    format!(
+        "rate={:016x} total={:016x} tm={:016x} used={} err={:?} outcomes={outcomes:?}",
+        r.rate.to_bits(),
+        r.total_throughput.to_bits(),
+        r.tm_rate.to_bits(),
+        r.used_chiplets,
+        r.error,
+    )
+}
+
+#[test]
+fn placed_dp_matches_exhaustive_ground_truth_on_random_packages() {
+    let set = WorkloadSet::parse("alexnet:2,scopenet").unwrap();
+    let sim = SimOptions { samples: 4, threads: 1, ..Default::default() };
+    let mut rng = Rng::new(9);
+    for trial in 0..6 {
+        let spec = random_mixed_spec8(&mut rng);
+        let mut mcm = McmConfig::paper_default(8);
+        apply_hetero(&mut mcm, &spec).unwrap();
+        assert!(mcm.is_hetero(), "trial {trial}: {spec} must be mixed");
+        let run = |allocator: AllocatorKind| {
+            let mopts =
+                MultiOptions { allocator, share_quantum: 2, ..Default::default() };
+            co_schedule(&set, &mcm, &sim, &mopts)
+        };
+        let dp = run(AllocatorKind::Dp);
+        let ex = run(AllocatorKind::Exhaustive);
+        assert!(dp.error.is_none(), "trial {trial} ({spec}): {:?}", dp.error);
+        assert_eq!(
+            placement_signature(&dp),
+            placement_signature(&ex),
+            "trial {trial}: DP placement drifted from exhaustive on {spec}"
+        );
+        assert_eq!(dp.pruned_pairs, 0, "placed tables are never pre-filtered");
+    }
+}
+
+#[test]
+fn span_bound_stays_admissible_on_mixed_packages() {
+    // The hetero analogue of cost/bound.rs's load-bearing property: over
+    // every schedulable alexnet span on a mixed slow-linked package, the
+    // lower bound never exceeds the exact evaluated latency.
+    let net = zoo::by_name("alexnet").unwrap();
+    let mut mcm = McmConfig::paper_default(16);
+    apply_hetero(&mut mcm, "big8little8/xcol1=0.5").unwrap();
+    assert!(mcm.is_hetero());
+    let sim = SimOptions { samples: 16, threads: 1, ..Default::default() };
+    let b = SpanBound::new(&net, &mcm, sim.samples);
+    let ctx = EvalContext {
+        net: &net,
+        mcm: &mcm,
+        opts: &sim,
+        policy: StoragePolicy::Distributed,
+        dram_fallback: true,
+    };
+    let cache = EvalCache::new();
+    let mut checked = 0usize;
+    for lo in 0..net.len() {
+        for hi in (lo + 1)..=net.len() {
+            let Some(found) =
+                search_segment(&ctx, lo, hi, sim.samples, SearchOptions::default())
+            else {
+                continue;
+            };
+            let ev =
+                eval_segment_cached(&ctx, &found.schedule, sim.samples, Some(&cache));
+            if ev.error.is_some() {
+                continue;
+            }
+            let exact = ev.preload_cycles + ev.pipeline_cycles;
+            let lb = b.lower_bound(lo, hi);
+            assert!(
+                lb <= exact * (1.0 + 1e-9),
+                "span [{lo},{hi}): hetero bound {lb} > exact {exact}"
+            );
+            checked += 1;
+        }
+    }
+    assert!(checked > 0, "no schedulable span on the mixed package");
+}
+
+#[test]
+fn share_bounds_assume_the_fastest_class() {
+    // A share's slots are chosen by placement, so the analytic share
+    // bounds must price the best case. `big` is the base chiplet, so on a
+    // big/little mix they coincide bit-for-bit with the uniform bounds.
+    let uni = McmConfig::paper_default(16);
+    let mut mix = McmConfig::paper_default(16);
+    apply_hetero(&mut mix, "little8big8").unwrap();
+    let macs = 1e9;
+    for share in [1usize, 4, 16] {
+        assert_eq!(
+            share_rate_ub(macs, share, &mix).to_bits(),
+            share_rate_ub(macs, share, &uni).to_bits()
+        );
+        assert_eq!(
+            batch1_latency_lb_ns(macs, share, &mix).to_bits(),
+            batch1_latency_lb_ns(macs, share, &uni).to_bits()
+        );
+    }
+}
+
+#[test]
+fn pruning_changes_nothing_on_mixed_packages() {
+    // Branch-and-bound rests on bound admissibility; on a mixed package
+    // with a slow link the pruned and unpruned searches must still pick
+    // bit-identical schedules (only the sweep statistics may differ).
+    let net = zoo::by_name("alexnet").unwrap();
+    let mut mcm = McmConfig::paper_default(16);
+    apply_hetero(&mut mcm, "big8little8/xcol1=0.5").unwrap();
+    let run = |prune: bool| {
+        let sim = SimOptions { samples: 8, threads: 1, prune, ..Default::default() };
+        let r = schedule_scope(&net, &mcm, &sim);
+        format!("{:?} {:?}", r.schedule, r.eval)
+    };
+    assert_eq!(run(true), run(false), "pruning altered a mixed-package schedule");
+}
