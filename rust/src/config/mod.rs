@@ -108,6 +108,13 @@ pub struct SimOptions {
     /// across `--threads` and runs); `full` adds wall-clock DSE phase
     /// spans, which are inherently not bit-stable.
     pub trace_level: TraceLevel,
+    /// Serving time-series output path (config key `timeseries_out`, CLI
+    /// `--timeseries-out`): the winner's windowed series
+    /// ([`crate::obs::timeseries`]) is written on exit as the versioned
+    /// `scope-timeseries-v1` JSON plus a CSV twin sharing the stem. The
+    /// path must end in `.json` or `.csv` (either twin may be named);
+    /// empty = no time-series files.
+    pub timeseries_out: String,
 }
 
 impl Default for SimOptions {
@@ -128,8 +135,25 @@ impl Default for SimOptions {
             trace_out: String::new(),
             metrics_out: String::new(),
             trace_level: TraceLevel::Sim,
+            timeseries_out: String::new(),
         }
     }
+}
+
+/// Validate a `timeseries_out` path: the export writes a JSON + CSV twin
+/// pair sharing the stem, so the flag must name one of them. Errors name
+/// the offending path (shared by the config key and the CLI flag).
+pub fn validate_timeseries_out(path: &str) -> Result<()> {
+    if path.is_empty() {
+        return Err(anyhow!("timeseries_out expects a path"));
+    }
+    if !(path.ends_with(".json") || path.ends_with(".csv")) {
+        return Err(anyhow!(
+            "timeseries_out: unknown extension on {path:?} — the export writes a \
+             .json + .csv twin pair, name either one"
+        ));
+    }
+    Ok(())
 }
 
 /// A full experiment configuration.
@@ -238,6 +262,10 @@ impl Config {
                 }
                 "trace_level" => {
                     cfg.sim.trace_level = TraceLevel::parse(value).map_err(|e| anyhow!("{e}"))?
+                }
+                "timeseries_out" => {
+                    validate_timeseries_out(value)?;
+                    cfg.sim.timeseries_out = value.clone();
                 }
                 "models" => cfg.models = parse_models(value)?,
                 "dp_window" => {
@@ -511,6 +539,14 @@ pub const KNOBS: &[KnobDoc] = &[
         doc: "sim = simulated-time events only (bit-identical); full adds wall-clock DSE spans",
     },
     KnobDoc {
+        config_key: "timeseries_out",
+        cli_flag: "--timeseries-out <path>",
+        bench_env: "",
+        sim_field: "timeseries_out",
+        default_value: "(none)",
+        doc: "serve: write the winner's windowed series on exit as scope-timeseries-v1 JSON + CSV twins (.json/.csv)",
+    },
+    KnobDoc {
         config_key: "models",
         cli_flag: "--models a[:w],b,..",
         bench_env: "",
@@ -533,6 +569,30 @@ pub const KNOBS: &[KnobDoc] = &[
         sim_field: "",
         default_value: "(none)",
         doc: "serve: absolute per-model arrival-rate overrides (requests/s)",
+    },
+    KnobDoc {
+        config_key: "",
+        cli_flag: "--rate-schedule <spec>",
+        bench_env: "",
+        sim_field: "",
+        default_value: "(stationary)",
+        doc: "serve: piecewise-constant mix-rate schedule 0s:R,30s:R',.. or a preset (flash, diurnal)",
+    },
+    KnobDoc {
+        config_key: "",
+        cli_flag: "--window <dur>",
+        bench_env: "",
+        sim_field: "",
+        default_value: "auto",
+        doc: "serve: time-series window (ms, or with s/ms/us/ns unit); auto = makespan / 50",
+    },
+    KnobDoc {
+        config_key: "",
+        cli_flag: "--drift <K/N>",
+        bench_env: "",
+        sim_field: "",
+        default_value: "3/5",
+        doc: "serve: SLO drift trigger — K breaching of the trailing N windows open an event",
     },
     KnobDoc {
         config_key: "",
@@ -876,6 +936,24 @@ mod tests {
             assert!(!cfg.sim.cache_store, "{text}");
             assert_eq!(cfg.sim.cache_file, "f.json");
         }
+    }
+
+    #[test]
+    fn timeseries_out_key_validates_extension() {
+        let cfg =
+            Config::from_kv(&parse_kv("timeseries_out = /tmp/ts.json\n").unwrap(), 16).unwrap();
+        assert_eq!(cfg.sim.timeseries_out, "/tmp/ts.json");
+        let csv = Config::from_kv(&parse_kv("timeseries_out = ts.csv\n").unwrap(), 16).unwrap();
+        assert_eq!(csv.sim.timeseries_out, "ts.csv");
+        assert!(SimOptions::default().timeseries_out.is_empty());
+        assert!(Config::from_kv(&parse_kv("timeseries_out =\n").unwrap(), 16).is_err());
+        // unknown extension names the offending path
+        let err = Config::from_kv(&parse_kv("timeseries_out = ts.parquet\n").unwrap(), 16)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("ts.parquet") && err.contains(".json"), "{err}");
+        assert!(validate_timeseries_out("ts.yaml").is_err());
+        assert!(validate_timeseries_out("ts.json").is_ok());
     }
 
     #[test]

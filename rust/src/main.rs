@@ -18,18 +18,19 @@ use anyhow::{anyhow, bail, Result};
 
 use scope::arch::McmConfig;
 use scope::baselines::{run_all, METHOD_NAMES};
-use scope::config::{knob_table, Config, SimOptions};
+use scope::config::{knob_table, validate_timeseries_out, Config, SimOptions};
 use scope::coordinator::{run_pipeline, PipelineMode};
 use scope::dse::{ExhaustiveOptions, PartitionSpace};
 use scope::model::zoo;
 use scope::model::WorkloadSet;
+use scope::obs::timeseries::{parse_window, DriftConfig, MAX_WINDOWS};
 use scope::pipeline::cache_store::CacheStore;
 use scope::pipeline::ExecModeChoice;
 use scope::report::figures;
 use scope::runtime::Manifest;
 use scope::scope::multi_model::parse_quantum;
 use scope::scope::{co_schedule, schedule_scope, AllocatorKind, MultiOptions, SegmenterKind};
-use scope::serve::trace::RequestStream;
+use scope::serve::trace::{RateSchedule, RequestStream};
 use scope::serve::{self, ServeOptions};
 use scope::util::cli::Args;
 use scope::util::json::Json;
@@ -59,12 +60,19 @@ SUBCOMMANDS
               the shared span/cluster cache store is on here by default)
   serve       [--models a[:w],b,.. | serving_mix] [--chiplets C] [--seed S]
               [--arrival-rate R | --trace file] [--rates a:r,..]
-              [--slo ms|a:ms,..] [--batch B] [--max-wait ms] [--horizon s]
-              [--method scope] [--quantum Q]   replay a request stream
-              against every hybrid spatial/temporal allocation of the
-              share grid; batch latencies from the scheduled pipelines,
-              temporal shares charged the DRAM weight-swap; allocations
-              whose simulated p99 breaks a --slo bound are pruned.
+              [--rate-schedule spec|flash|diurnal] [--slo ms|a:ms,..]
+              [--batch B] [--max-wait ms] [--horizon s] [--method scope]
+              [--quantum Q] [--window dur] [--drift K/N]   replay a
+              request stream against every hybrid spatial/temporal
+              allocation of the share grid; batch latencies from the
+              scheduled pipelines, temporal shares charged the DRAM
+              weight-swap; allocations whose simulated p99 breaks a --slo
+              bound are pruned. --rate-schedule drives non-stationary
+              traffic (piecewise-constant '0s:1000,30s:5000,45s:1000', or
+              the flash/diurnal presets scaled from --arrival-rate); the
+              winner's replay folds into fixed --window slices of
+              simulated time and a K-of-N SLO drift detector (--drift)
+              flags windows whose p99 burns through a declared --slo.
               Deterministic: one seed = one bit-identical report.
   hetero      [--net resnet50] [--chiplets 16] [--specs 's1;s2;..'] [--samples M]
               schedule the same workload on a uniform package and on each
@@ -124,6 +132,11 @@ COMMON FLAGS
   --trace-level <L> 'sim' (default): simulated-time events only, output
                     bit-identical across runs. 'full': also record wall-
                     clock DSE phase spans (where search time goes).
+  --timeseries-out <f>  serve: write the winner's windowed time series on
+                    exit as versioned scope-timeseries-v1 JSON plus a CSV
+                    twin sharing the stem (<f> ends in .json or .csv).
+                    Keyed off simulated ns: byte-identical at every
+                    --threads setting and across repeat runs.
   --hetero <spec>   heterogeneous package: <class><count> runs filling the
                     zigzag mesh slots, plus optional /xcol<J>=<S>,xrow<J>=<S>
                     per-crossing NoP link scales — e.g. big8little8/xcol1=0.5.
@@ -223,6 +236,16 @@ fn load_config(args: &Args, chiplets: usize) -> Result<Config> {
     match args.str_or("metrics-out", "").as_str() {
         "" => {}
         path => sim.metrics_out = path.to_string(),
+    }
+    match args.str_or("timeseries-out", "").as_str() {
+        "" => {}
+        path => {
+            // config-key errors say `timeseries_out`; rename to the flag
+            validate_timeseries_out(path).map_err(|e| {
+                anyhow!("--{}", e.to_string().replacen("timeseries_out", "timeseries-out", 1))
+            })?;
+            sim.timeseries_out = path.to_string();
+        }
     }
     match args.str_or("trace-level", "").as_str() {
         "" => {}
@@ -590,12 +613,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         method: args.str_choice_or("method", "scope", METHOD_NAMES)?,
         share_quantum: parse_quantum(&args.str_or("quantum", "auto"))
             .map_err(|e| anyhow!("--quantum: {e}"))?,
+        rate_schedule: args.str_or("rate-schedule", ""),
+        window_ns: match args.str_or("window", "").as_str() {
+            "" | "auto" => 0,
+            spec => parse_window(spec).map_err(|e| anyhow!("{e}"))?,
+        },
+        drift: match args.str_or("drift", "").as_str() {
+            "" => DriftConfig::default(),
+            spec => DriftConfig::parse(spec).map_err(|e| anyhow!("{e}"))?,
+        },
     };
     let trace_path = args.str_or("trace", "");
     if !trace_path.is_empty() {
         // the trace determines every arrival — explicit stream-generation
         // flags would be silently ignored, so reject the conflict instead
-        for flag in ["arrival-rate", "rates", "horizon", "seed"] {
+        for flag in ["arrival-rate", "rates", "rate-schedule", "horizon", "seed"] {
             if !args.str_or(flag, "").is_empty() {
                 bail!("--{flag} has no effect with --trace (the trace determines every arrival)");
             }
@@ -603,7 +635,35 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     // the full knob surface is validated before any scheduling runs
     sopts.validate(!trace_path.is_empty()).map_err(|e| anyhow!("{e}"))?;
-    let stream = if trace_path.is_empty() {
+    if trace_path.is_empty()
+        && sopts.window_ns > 0
+        && sopts.horizon_ns() / sopts.window_ns + 1 > MAX_WINDOWS as u64
+    {
+        bail!(
+            "--window {spec} slices --horizon {h} s into more than {MAX_WINDOWS} windows; \
+             widen the window or shorten the horizon",
+            spec = args.str_or("window", ""),
+            h = sopts.horizon_secs,
+        );
+    }
+    let schedule = if trace_path.is_empty() && !sopts.rate_schedule.is_empty() {
+        Some(RateSchedule::parse(&sopts.rate_schedule, sopts.arrival_rate, sopts.horizon_ns())?)
+    } else {
+        None
+    };
+    let stream = if !trace_path.is_empty() {
+        RequestStream::load(std::path::Path::new(&trace_path), &set)?
+    } else if let Some(schedule) = &schedule {
+        let expected = serve::trace::expected_arrivals_scheduled(&set, schedule, sopts.horizon_ns());
+        if expected > serve::trace::MAX_ARRIVALS as f64 {
+            bail!(
+                "--rate-schedule x --horizon would generate ~{expected:.0} requests (cap {}); \
+                 lower the rates or shorten the horizon",
+                serve::trace::MAX_ARRIVALS
+            );
+        }
+        RequestStream::scheduled(&set, schedule, sopts.horizon_ns(), sopts.seed)
+    } else {
         let expected =
             serve::trace::expected_arrivals(&set, sopts.arrival_rate, sopts.horizon_ns());
         if expected > serve::trace::MAX_ARRIVALS as f64 {
@@ -614,16 +674,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
             );
         }
         RequestStream::poisson(&set, sopts.arrival_rate, sopts.horizon_ns(), sopts.seed)
-    } else {
-        RequestStream::load(std::path::Path::new(&trace_path), &set)?
     };
-    let source = if trace_path.is_empty() {
+    let source = if !trace_path.is_empty() {
+        format!("trace {trace_path}")
+    } else if let Some(schedule) = &schedule {
+        format!(
+            "scheduled poisson {} over {} s, seed {}",
+            schedule.label(),
+            sopts.horizon_secs,
+            sopts.seed
+        )
+    } else {
         format!(
             "poisson {} mix/s over {} s, seed {}",
             sopts.arrival_rate, sopts.horizon_secs, sopts.seed
         )
-    } else {
-        format!("trace {trace_path}")
     };
     println!(
         "serving set: {} on {} chiplets | {} arrivals ({source})\n",
@@ -663,6 +728,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         hybrid.sim.events,
         f3(hybrid.sim.makespan_ns as f64 / 1e6),
     );
+    if let Some(ts) = &r.timeseries {
+        // the drift summary only means something against a declared SLO —
+        // stdout of SLO-less runs stays byte-identical to earlier releases
+        if set.models.iter().any(|m| m.slo_ns().is_some()) {
+            println!("{}", ts.summary_line());
+            if !ts.drift_events.is_empty() {
+                println!("{}", figures::drift_table(&r)?);
+            }
+        }
+        if !sim.timeseries_out.is_empty() {
+            scope::obs::publish_timeseries(ts.to_json().to_string_compact() + "\n", ts.to_csv());
+        }
+    }
     Ok(())
 }
 

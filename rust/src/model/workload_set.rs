@@ -54,6 +54,16 @@ impl ModelSpec {
     pub fn slo_ns(&self) -> Option<u64> {
         self.slo_ms.map(|ms| (ms * 1e6).round() as u64)
     }
+
+    /// Effective arrival rate (requests/s) at a given mix rate: the
+    /// absolute `--rates` override when set, else `mix rate × weight`.
+    /// The one rate-resolution rule shared by the constant Poisson
+    /// stream, the piecewise-constant schedules, and the
+    /// expected-arrival caps — an absolute override stays constant
+    /// across schedule segments by construction.
+    pub fn rate_at(&self, mix_rate: f64) -> f64 {
+        self.rate.unwrap_or(mix_rate * self.weight).max(0.0)
+    }
 }
 
 /// A set of networks co-served from one package.
@@ -316,5 +326,16 @@ mod tests {
         assert!(set.models.iter().all(|m| m.rate == Some(8.0)));
         assert!(set.apply_rate_spec("scopenet:0").is_err());
         assert!(set.apply_rate_spec("nosuchnet:1").is_err());
+    }
+
+    #[test]
+    fn rate_at_resolves_override_then_weight() {
+        let mut set = WorkloadSet::parse("alexnet, scopenet:2").unwrap();
+        assert_eq!(set.models[0].rate_at(100.0), 100.0, "weight 1 × mix rate");
+        assert_eq!(set.models[1].rate_at(100.0), 200.0, "weight 2 × mix rate");
+        set.apply_rate_spec("scopenet:7").unwrap();
+        assert_eq!(set.models[1].rate_at(100.0), 7.0, "absolute override wins");
+        assert_eq!(set.models[1].rate_at(0.0), 7.0, "override ignores mix rate");
+        assert_eq!(set.models[0].rate_at(0.0), 0.0);
     }
 }

@@ -7,14 +7,19 @@
 //! * [`trace`] — simulated-time (integer ns) and wall-clock events,
 //!   exported as Chrome trace-event JSON (`--trace-out t.json`,
 //!   viewable in Perfetto / `chrome://tracing`).
+//! * [`timeseries`] — windowed serving metrics (per-window percentiles,
+//!   goodput, busy fractions) and the deterministic SLO drift detector,
+//!   exported as `scope-timeseries-v1` JSON + CSV
+//!   (`--timeseries-out ts.json`).
 //!
-//! Both are armed by the CLI from `SimOptions` ([`configure`]) and
+//! All are armed by the CLI from `SimOptions` ([`configure`]) and
 //! flushed once at process exit ([`emit`]). Everything stays a cheap
 //! no-op when the flags are absent: recording checks one relaxed atomic
 //! and returns, so hot loops keep their allocation budget
 //! (`tests/alloc_count.rs`).
 
 pub mod metrics;
+pub mod timeseries;
 pub mod trace;
 
 use std::sync::{Mutex, OnceLock};
@@ -26,11 +31,26 @@ pub use trace::{TraceLevel, TraceSink, PID_PACKAGE, PID_SEARCH, PID_SERVE};
 struct OutputPaths {
     trace_out: String,
     metrics_out: String,
+    timeseries_out: String,
 }
 
 fn outputs() -> &'static Mutex<OutputPaths> {
     static OUT: OnceLock<Mutex<OutputPaths>> = OnceLock::new();
     OUT.get_or_init(|| Mutex::new(OutputPaths::default()))
+}
+
+/// The rendered time-series artifacts (JSON, CSV) published by the last
+/// serve run; written by [`emit`] when `--timeseries-out` is set.
+fn published_timeseries() -> &'static Mutex<Option<(String, String)>> {
+    static TS: OnceLock<Mutex<Option<(String, String)>>> = OnceLock::new();
+    TS.get_or_init(|| Mutex::new(None))
+}
+
+/// Stash a serve run's rendered time-series exports for [`emit`]. The
+/// strings are deterministic (the series keys off simulated ns), so the
+/// written artifacts are byte-identical across `--threads` and runs.
+pub fn publish_timeseries(json: String, csv: String) {
+    *published_timeseries().lock().unwrap() = Some((json, csv));
 }
 
 /// Arm the global sink and remember the output paths. Called by the CLI
@@ -42,6 +62,7 @@ pub fn configure(sim: &crate::config::SimOptions) {
     let mut out = outputs().lock().unwrap();
     out.trace_out = sim.trace_out.clone();
     out.metrics_out = sim.metrics_out.clone();
+    out.timeseries_out = sim.timeseries_out.clone();
 }
 
 /// Flush the configured outputs: the Chrome trace to `--trace-out` and
@@ -67,7 +88,29 @@ pub fn emit() -> std::io::Result<()> {
         std::fs::write(&paths.metrics_out, body)?;
         println!("metrics: wrote {}", paths.metrics_out);
     }
+    if !paths.timeseries_out.is_empty() {
+        if let Some((json, csv)) = published_timeseries().lock().unwrap().clone() {
+            let (json_path, csv_path) = timeseries_paths(&paths.timeseries_out);
+            std::fs::write(&json_path, json)?;
+            println!("timeseries: wrote {json_path}");
+            std::fs::write(&csv_path, csv)?;
+            println!("timeseries: wrote {csv_path}");
+        }
+    }
     Ok(())
+}
+
+/// Sibling artifact paths of a `--timeseries-out` flag: the JSON and CSV
+/// twins share the flag's stem (`ts.json` ⇒ `ts.json` + `ts.csv`; the
+/// flag may name either). The config layer rejects other extensions.
+pub fn timeseries_paths(path: &str) -> (String, String) {
+    if let Some(stem) = path.strip_suffix(".csv") {
+        (format!("{stem}.json"), path.to_string())
+    } else if let Some(stem) = path.strip_suffix(".json") {
+        (path.to_string(), format!("{stem}.csv"))
+    } else {
+        (format!("{path}.json"), format!("{path}.csv"))
+    }
 }
 
 /// Fold per-class busy chiplet-cycles into `reg` — one stable gauge

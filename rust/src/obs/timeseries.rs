@@ -1,0 +1,638 @@
+//! Windowed time-series observability over the serving simulator.
+//!
+//! Whole-run aggregates hide transients: a flash crowd that blows a
+//! model's SLO for ten seconds can vanish inside an end-of-run p99. This
+//! sink replays the winning allocation's event log into fixed
+//! simulated-nanosecond windows and reports, per window and per model,
+//! nearest-rank p50/p95/p99, completions, goodput (completions meeting
+//! the declared SLO), queue high-water, dispatched batches, and
+//! per-share busy time — then runs a deterministic **SLO burn-rate
+//! detector** over the window p99s (K-of-N trigger with hysteresis,
+//! [`DriftConfig`]) whose [`DriftEvent`]s are the signal a future online
+//! re-allocator will consume.
+//!
+//! Everything keys off the simulation's integer-nanosecond clock and the
+//! replay log (itself bit-identical across `--threads` and repeat runs),
+//! so the exported `scope-timeseries-v1` JSON and CSV artifacts are
+//! byte-stable — `tests/timeseries.rs` pins this.
+
+use crate::serve::{LogEntry, LogKind};
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::stats::PercentileScratch;
+
+/// Schema tag of the JSON export.
+pub const SCHEMA: &str = "scope-timeseries-v1";
+
+/// Ceiling on windows per run: an auto window targets [`AUTO_WINDOWS`],
+/// and the CLI rejects an explicit `--window` that would slice the
+/// horizon into more than this many (naming the flag) instead of
+/// ballooning the export.
+pub const MAX_WINDOWS: usize = 100_000;
+
+/// Auto window count: `--window` unset divides the winner's makespan
+/// into this many windows.
+pub const AUTO_WINDOWS: u64 = 50;
+
+/// K-of-N drift trigger: an SLO drift event opens when at least `k` of
+/// the trailing `n` windows breach the model's declared p99 bound, and
+/// clears (hysteresis) only when the trailing `n` windows are all clean.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DriftConfig {
+    pub k: usize,
+    pub n: usize,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        DriftConfig { k: 3, n: 5 }
+    }
+}
+
+impl DriftConfig {
+    /// Parse the `--drift K/N` grammar (`3/5`): K breaching of the last
+    /// N windows open an event. Errors name the offending token.
+    pub fn parse(spec: &str) -> Result<DriftConfig, String> {
+        let (k_s, n_s) = spec
+            .split_once('/')
+            .ok_or_else(|| format!("--drift: expected K/N (e.g. 3/5), got {spec:?}"))?;
+        let parse = |what: &str, v: &str| -> Result<usize, String> {
+            v.trim()
+                .parse::<usize>()
+                .map_err(|_| format!("--drift: {what} expects an integer, got {v:?}"))
+        };
+        let (k, n) = (parse("K", k_s)?, parse("N", n_s)?);
+        if k == 0 {
+            return Err(format!("--drift: K must be >= 1, got {spec:?}"));
+        }
+        if n < k {
+            return Err(format!("--drift: N must be >= K, got {spec:?}"));
+        }
+        Ok(DriftConfig { k, n })
+    }
+}
+
+/// Parse a `--window` duration to integer nanoseconds: a plain number is
+/// milliseconds; `s`, `ms`, `us`, `ns` suffixes are accepted. Zero and
+/// negative windows are rejected naming the flag.
+pub fn parse_window(spec: &str) -> Result<u64, String> {
+    let t = spec.trim();
+    let (digits, scale) = if let Some(d) = t.strip_suffix("ms") {
+        (d, 1e6)
+    } else if let Some(d) = t.strip_suffix("us") {
+        (d, 1e3)
+    } else if let Some(d) = t.strip_suffix("ns") {
+        (d, 1.0)
+    } else if let Some(d) = t.strip_suffix('s') {
+        (d, 1e9)
+    } else {
+        (t, 1e6) // bare number = milliseconds
+    };
+    let v: f64 = digits
+        .trim()
+        .parse()
+        .map_err(|_| format!("--window: expects a duration (ms, or with s/ms/us/ns unit), got {spec:?}"))?;
+    if !(v.is_finite() && v > 0.0) {
+        return Err(format!("--window: must be a positive duration, got {spec:?}"));
+    }
+    let ns = (v * scale).round() as u64;
+    if ns == 0 {
+        return Err(format!("--window: {spec:?} rounds to 0 ns; windows must be positive"));
+    }
+    Ok(ns)
+}
+
+/// One model's statistics over one window.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct WindowModelStats {
+    pub arrivals: u64,
+    pub completions: u64,
+    /// Completions whose end-to-end latency met the declared SLO
+    /// (== `completions` for models without one).
+    pub goodput: u64,
+    /// Batches completed in this window.
+    pub batches: u64,
+    /// Deepest the model's queue got inside the window.
+    pub queue_high_water: usize,
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+    pub p99_ns: u64,
+    /// Declared SLO present, completions observed, and window p99 over
+    /// the bound — the drift detector's per-window input.
+    pub slo_breach: bool,
+}
+
+impl WindowModelStats {
+    /// Mean requests per completed batch in the window (0 with none).
+    pub fn batch_occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.completions as f64 / self.batches as f64
+        }
+    }
+}
+
+/// One fixed simulated-ns window.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Window {
+    pub start_ns: u64,
+    /// Busy nanoseconds per share (Dispatch→Complete spans clipped to
+    /// the window).
+    pub share_busy_ns: Vec<u64>,
+    pub models: Vec<WindowModelStats>,
+}
+
+/// One SLO drift episode: the K-of-N trigger fired at `start_window` and
+/// cleared (all trailing windows clean) at `clear_window`, or ran to the
+/// end of the horizon (`None`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DriftEvent {
+    pub model: usize,
+    pub start_window: usize,
+    pub clear_window: Option<usize>,
+    /// Breaching windows inside the episode (trailing trigger span
+    /// included).
+    pub breach_windows: u64,
+    pub worst_p99_ns: u64,
+    pub slo_ns: u64,
+}
+
+/// The windowed time series of one serve run's winning allocation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TimeSeries {
+    pub window_ns: u64,
+    pub model_names: Vec<String>,
+    pub slo_ns: Vec<Option<u64>>,
+    pub shares: usize,
+    pub windows: Vec<Window>,
+    pub drift: DriftConfig,
+    pub drift_events: Vec<DriftEvent>,
+}
+
+impl TimeSeries {
+    /// Replay a winner's event log into fixed windows and run the drift
+    /// detector. `window_ns = 0` picks the auto window (the makespan
+    /// split into [`AUTO_WINDOWS`]). Pure function of its inputs: the
+    /// log is already deterministic, so the result is bit-identical
+    /// across threads and repeat runs.
+    pub fn build(
+        log: &[LogEntry],
+        model_names: &[String],
+        slo_ns: &[Option<u64>],
+        shares: usize,
+        makespan_ns: u64,
+        window_ns: u64,
+        drift: DriftConfig,
+    ) -> TimeSeries {
+        let span = makespan_ns.max(1);
+        let window_ns = if window_ns == 0 { span.div_ceil(AUTO_WINDOWS).max(1) } else { window_ns };
+        let count = ((span - 1) / window_ns + 1).min(MAX_WINDOWS as u64) as usize;
+        let k = model_names.len();
+        let mut windows: Vec<Window> = (0..count)
+            .map(|w| Window {
+                start_ns: w as u64 * window_ns,
+                share_busy_ns: vec![0; shares],
+                models: vec![WindowModelStats::default(); k],
+            })
+            .collect();
+        // window index of a timestamp; the last window absorbs the tail
+        // (only reachable when the MAX_WINDOWS clamp bit)
+        let widx = |t: u64| ((t / window_ns) as usize).min(count - 1);
+        // per-(window, model) latency samples, percentiled after the walk
+        let mut lats: Vec<Vec<u64>> = vec![Vec::new(); count * k];
+        // FIFO arrival times per model: queues are strictly FIFO, so the
+        // n completions of a batch are exactly the n oldest arrivals
+        let mut fifo: Vec<std::collections::VecDeque<u64>> =
+            vec![std::collections::VecDeque::new(); k];
+        // one open batch per share (a share serves one batch at a time)
+        let mut open: Vec<Option<(u64, Vec<u64>)>> = vec![None; shares];
+        for e in log {
+            match e.kind {
+                LogKind::Arrival => {
+                    fifo[e.model].push_back(e.t_ns);
+                    let stats = &mut windows[widx(e.t_ns)].models[e.model];
+                    stats.arrivals += 1;
+                    stats.queue_high_water = stats.queue_high_water.max(e.n);
+                }
+                LogKind::Dispatch => {
+                    let batch: Vec<u64> =
+                        (0..e.n).filter_map(|_| fifo[e.model].pop_front()).collect();
+                    if let Some(slot) = open.get_mut(e.share) {
+                        *slot = Some((e.t_ns, batch));
+                    }
+                }
+                LogKind::Complete => {
+                    let Some((t0, batch)) = open.get_mut(e.share).and_then(Option::take) else {
+                        continue;
+                    };
+                    let w = widx(e.t_ns);
+                    let stats = &mut windows[w].models[e.model];
+                    stats.batches += 1;
+                    for &a in &batch {
+                        let lat = e.t_ns.saturating_sub(a);
+                        stats.completions += 1;
+                        if slo_ns[e.model].map(|slo| lat <= slo).unwrap_or(true) {
+                            stats.goodput += 1;
+                        }
+                        lats[w * k + e.model].push(lat);
+                    }
+                    // split the busy span across the windows it covers
+                    let (mut lo, hi) = (t0, e.t_ns);
+                    while lo < hi {
+                        let w = widx(lo);
+                        let w_end = windows[w].start_ns.saturating_add(window_ns);
+                        let edge = if w + 1 < count { hi.min(w_end) } else { hi };
+                        windows[w].share_busy_ns[e.share] += edge - lo;
+                        lo = edge;
+                    }
+                }
+            }
+        }
+        let mut scratch = PercentileScratch::new();
+        for (w, win) in windows.iter_mut().enumerate() {
+            for (m, stats) in win.models.iter_mut().enumerate() {
+                scratch.load(&lats[w * k + m]);
+                stats.p50_ns = scratch.percentile(0.50);
+                stats.p95_ns = scratch.percentile(0.95);
+                stats.p99_ns = scratch.percentile(0.99);
+                stats.slo_breach = stats.completions > 0
+                    && slo_ns[m].map(|slo| stats.p99_ns > slo).unwrap_or(false);
+            }
+        }
+        let mut ts = TimeSeries {
+            window_ns,
+            model_names: model_names.to_vec(),
+            slo_ns: slo_ns.to_vec(),
+            shares,
+            windows,
+            drift,
+            drift_events: Vec::new(),
+        };
+        ts.drift_events = ts.detect_drift();
+        ts
+    }
+
+    /// K-of-N burn-rate detection over the per-window breach flags, per
+    /// model with a declared SLO. An event opens at the first window
+    /// where ≥ K of the trailing N windows breach; hysteresis holds it
+    /// open until the trailing N windows are all clean. Events sort by
+    /// (start window, model) — deterministic.
+    fn detect_drift(&self) -> Vec<DriftEvent> {
+        let mut events = Vec::new();
+        let DriftConfig { k, n } = self.drift;
+        for (m, slo) in self.slo_ns.iter().enumerate() {
+            let Some(slo) = *slo else { continue };
+            let breach: Vec<bool> = self.windows.iter().map(|w| w.models[m].slo_breach).collect();
+            let mut open: Option<DriftEvent> = None;
+            for w in 0..breach.len() {
+                let tail_start = w.saturating_sub(n - 1);
+                let tail_breaches = breach[tail_start..=w].iter().filter(|&&b| b).count();
+                match &mut open {
+                    None if tail_breaches >= k => {
+                        // fold the trailing windows that tripped the
+                        // trigger into the event's stats
+                        let mut ev = DriftEvent {
+                            model: m,
+                            start_window: w,
+                            clear_window: None,
+                            breach_windows: 0,
+                            worst_p99_ns: 0,
+                            slo_ns: slo,
+                        };
+                        for t in tail_start..=w {
+                            if breach[t] {
+                                ev.breach_windows += 1;
+                                ev.worst_p99_ns =
+                                    ev.worst_p99_ns.max(self.windows[t].models[m].p99_ns);
+                            }
+                        }
+                        open = Some(ev);
+                    }
+                    Some(ev) if tail_breaches == 0 => {
+                        ev.clear_window = Some(w);
+                        events.push(open.take().unwrap());
+                    }
+                    Some(ev) => {
+                        if breach[w] && w > ev.start_window {
+                            ev.breach_windows += 1;
+                            ev.worst_p99_ns =
+                                ev.worst_p99_ns.max(self.windows[w].models[m].p99_ns);
+                        }
+                    }
+                    None => {}
+                }
+            }
+            if let Some(ev) = open {
+                events.push(ev); // still burning at the end of the run
+            }
+        }
+        events.sort_by_key(|e| (e.start_window, e.model));
+        events
+    }
+
+    /// Simulated time (ns) at which an event's trigger window closed —
+    /// where its Chrome-trace instant lands.
+    pub fn trigger_ns(&self, ev: &DriftEvent) -> u64 {
+        (ev.start_window as u64 + 1) * self.window_ns
+    }
+
+    /// The one-line end-of-run summary (`slo drift: ...`) the CLI prints
+    /// and CI greps for.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "slo drift: {} event{} (window {:.3} ms, trigger {}-of-{})",
+            self.drift_events.len(),
+            if self.drift_events.len() == 1 { "" } else { "s" },
+            self.window_ns as f64 / 1e6,
+            self.drift.k,
+            self.drift.n,
+        )
+    }
+
+    /// The versioned `scope-timeseries-v1` JSON document.
+    pub fn to_json(&self) -> Json {
+        let series = self
+            .windows
+            .iter()
+            .enumerate()
+            .map(|(w, win)| {
+                let models = win
+                    .models
+                    .iter()
+                    .enumerate()
+                    .map(|(m, st)| {
+                        obj(vec![
+                            ("model", s(&self.model_names[m])),
+                            ("arrivals", num(st.arrivals as f64)),
+                            ("completions", num(st.completions as f64)),
+                            ("goodput", num(st.goodput as f64)),
+                            ("batches", num(st.batches as f64)),
+                            ("queue_high_water", num(st.queue_high_water as f64)),
+                            ("p50_ns", num(st.p50_ns as f64)),
+                            ("p95_ns", num(st.p95_ns as f64)),
+                            ("p99_ns", num(st.p99_ns as f64)),
+                            ("slo_breach", Json::Bool(st.slo_breach)),
+                        ])
+                    })
+                    .collect();
+                obj(vec![
+                    ("window", num(w as f64)),
+                    ("start_ns", num(win.start_ns as f64)),
+                    (
+                        "share_busy_ns",
+                        arr(win.share_busy_ns.iter().map(|&b| num(b as f64)).collect()),
+                    ),
+                    ("models", arr(models)),
+                ])
+            })
+            .collect();
+        let drift_events = self
+            .drift_events
+            .iter()
+            .map(|e| {
+                obj(vec![
+                    ("model", s(&self.model_names[e.model])),
+                    ("start_window", num(e.start_window as f64)),
+                    (
+                        "clear_window",
+                        e.clear_window.map(|w| num(w as f64)).unwrap_or(Json::Null),
+                    ),
+                    ("breach_windows", num(e.breach_windows as f64)),
+                    ("worst_p99_ns", num(e.worst_p99_ns as f64)),
+                    ("slo_ns", num(e.slo_ns as f64)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("schema", s(SCHEMA)),
+            ("window_ns", num(self.window_ns as f64)),
+            ("windows", num(self.windows.len() as f64)),
+            ("shares", num(self.shares as f64)),
+            ("models", arr(self.model_names.iter().map(|n| s(n)).collect())),
+            (
+                "slo_ns",
+                arr(self
+                    .slo_ns
+                    .iter()
+                    .map(|s| s.map(|v| num(v as f64)).unwrap_or(Json::Null))
+                    .collect()),
+            ),
+            (
+                "drift_trigger",
+                obj(vec![("k", num(self.drift.k as f64)), ("n", num(self.drift.n as f64))]),
+            ),
+            ("series", arr(series)),
+            ("drift_events", arr(drift_events)),
+        ])
+    }
+
+    /// Long-format CSV twin of the JSON export: one `kind=model` row per
+    /// (window, model) with the windowed stats, one `kind=share` row per
+    /// (window, share) with busy nanoseconds.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "window,start_ns,kind,name,arrivals,completions,goodput,batches,\
+             queue_high_water,p50_ns,p95_ns,p99_ns,slo_breach,busy_ns\n",
+        );
+        use std::fmt::Write as _;
+        for (w, win) in self.windows.iter().enumerate() {
+            for (m, st) in win.models.iter().enumerate() {
+                let _ = writeln!(
+                    out,
+                    "{w},{},model,{},{},{},{},{},{},{},{},{},{},",
+                    win.start_ns,
+                    self.model_names[m],
+                    st.arrivals,
+                    st.completions,
+                    st.goodput,
+                    st.batches,
+                    st.queue_high_water,
+                    st.p50_ns,
+                    st.p95_ns,
+                    st.p99_ns,
+                    st.slo_breach as u8,
+                );
+            }
+            for (g, busy) in win.share_busy_ns.iter().enumerate() {
+                let _ = writeln!(out, "{w},{},share,share{g},,,,,,,,,,{busy}", win.start_ns);
+            }
+        }
+        out
+    }
+
+    /// Worst per-window p99 (ns) over all models and windows — the bench
+    /// headline (`serving_windowed_p99_worst_ms`).
+    pub fn worst_window_p99_ns(&self) -> u64 {
+        self.windows
+            .iter()
+            .flat_map(|w| w.models.iter().map(|m| m.p99_ns))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::LogKind::{Arrival, Complete, Dispatch};
+
+    fn entry(t_ns: u64, kind: LogKind, model: usize, share: usize, n: usize) -> LogEntry {
+        LogEntry { t_ns, kind, model, share, n }
+    }
+
+    fn names(k: usize) -> Vec<String> {
+        (0..k).map(|i| format!("m{i}")).collect()
+    }
+
+    #[test]
+    fn windows_accumulate_latencies_goodput_and_busy_time() {
+        // one model, one share, window 100 ns: a fast batch in window 0,
+        // a slow SLO-blowing batch in window 1
+        let log = vec![
+            entry(0, Arrival, 0, 0, 1),
+            entry(0, Dispatch, 0, 0, 1),
+            entry(40, Complete, 0, 0, 1), // latency 40, within slo 50
+            entry(100, Arrival, 0, 0, 1),
+            entry(110, Arrival, 0, 0, 2),
+            entry(110, Dispatch, 0, 0, 2),
+            entry(260, Complete, 0, 0, 2), // latencies 160 and 150: breach
+        ];
+        let ts =
+            TimeSeries::build(&log, &names(1), &[Some(50)], 1, 260, 100, DriftConfig::default());
+        assert_eq!(ts.window_ns, 100);
+        assert_eq!(ts.windows.len(), 3);
+        let w0 = &ts.windows[0].models[0];
+        assert_eq!((w0.arrivals, w0.completions, w0.goodput, w0.batches), (1, 1, 1, 1));
+        assert_eq!(w0.p99_ns, 40);
+        assert!(!w0.slo_breach);
+        let w1 = &ts.windows[1].models[0];
+        assert_eq!((w1.arrivals, w1.completions, w1.goodput), (2, 0, 0));
+        assert_eq!(w1.queue_high_water, 2);
+        let w2 = &ts.windows[2].models[0];
+        // the batch completes at 260: both latencies land in window 2
+        assert_eq!((w2.completions, w2.goodput, w2.batches), (2, 0, 1));
+        assert_eq!(w2.p50_ns, 150);
+        assert_eq!(w2.p99_ns, 160);
+        assert!(w2.slo_breach);
+        assert_eq!(w2.batch_occupancy(), 2.0);
+        // busy time: [0,40) in w0; [110,260) splits 90 + 60
+        assert_eq!(ts.windows[0].share_busy_ns[0], 40);
+        assert_eq!(ts.windows[1].share_busy_ns[0], 90);
+        assert_eq!(ts.windows[2].share_busy_ns[0], 60);
+        assert_eq!(ts.worst_window_p99_ns(), 160);
+        // identical inputs ⇒ identical series, exports included
+        let again =
+            TimeSeries::build(&log, &names(1), &[Some(50)], 1, 260, 100, DriftConfig::default());
+        assert_eq!(ts, again);
+        assert_eq!(ts.to_json().to_string_compact(), again.to_json().to_string_compact());
+        assert_eq!(ts.to_csv(), again.to_csv());
+    }
+
+    /// A log with `breaches[w]` controlling whether window `w` (width
+    /// 100 ns) breaches a 50 ns SLO.
+    fn breach_log(breaches: &[bool]) -> Vec<LogEntry> {
+        let mut log = Vec::new();
+        for (w, &breach) in breaches.iter().enumerate() {
+            let t0 = w as u64 * 100;
+            let lat = if breach { 80 } else { 10 };
+            log.push(entry(t0, Arrival, 0, 0, 1));
+            log.push(entry(t0, Dispatch, 0, 0, 1));
+            log.push(entry(t0 + lat, Complete, 0, 0, 1));
+        }
+        log
+    }
+
+    #[test]
+    fn drift_triggers_k_of_n_with_hysteresis() {
+        // windows: clean, then 3 breaches in 5 → trigger; clear only
+        // after 5 clean windows
+        let pattern = [
+            false, true, false, true, true, // trigger at w4 (3 of last 5)
+            false, true, false, false, false, // still open (w6 breach)
+            false, false, false, false, false, // w10: last 5 clean → clear
+            false,
+        ];
+        let makespan = pattern.len() as u64 * 100;
+        let ts = TimeSeries::build(
+            &breach_log(&pattern),
+            &names(1),
+            &[Some(50)],
+            1,
+            makespan,
+            100,
+            DriftConfig { k: 3, n: 5 },
+        );
+        assert_eq!(ts.drift_events.len(), 1, "{:?}", ts.drift_events);
+        let ev = &ts.drift_events[0];
+        assert_eq!(ev.model, 0);
+        assert_eq!(ev.start_window, 4);
+        assert_eq!(ev.clear_window, Some(11), "5 clean windows after w6 clear at w11");
+        assert_eq!(ev.breach_windows, 4, "w1, w3, w4 from the trigger tail, then w6");
+        assert_eq!(ev.worst_p99_ns, 80);
+        assert_eq!(ev.slo_ns, 50);
+        assert_eq!(ts.trigger_ns(ev), 500);
+        assert!(ts.summary_line().contains("slo drift: 1 event ("), "{}", ts.summary_line());
+        // an event still burning at the end stays open
+        let open_ts = TimeSeries::build(
+            &breach_log(&[false, true, true, true]),
+            &names(1),
+            &[Some(50)],
+            1,
+            400,
+            100,
+            DriftConfig { k: 3, n: 5 },
+        );
+        assert_eq!(open_ts.drift_events.len(), 1);
+        assert_eq!(open_ts.drift_events[0].clear_window, None);
+        // no SLO declared ⇒ no breaches, no events
+        let calm = TimeSeries::build(
+            &breach_log(&[true, true, true, true]),
+            &names(1),
+            &[None],
+            1,
+            400,
+            100,
+            DriftConfig { k: 3, n: 5 },
+        );
+        assert!(calm.drift_events.is_empty());
+        assert!(calm.windows.iter().all(|w| !w.models[0].slo_breach));
+    }
+
+    #[test]
+    fn auto_window_targets_auto_windows_and_exports_are_versioned() {
+        let log = breach_log(&[true, false, true]);
+        let ts = TimeSeries::build(&log, &names(1), &[Some(50)], 1, 300, 0, DriftConfig::default());
+        assert_eq!(ts.window_ns, 6, "300 ns makespan / 50 auto windows");
+        assert_eq!(ts.windows.len(), 50);
+        let doc = ts.to_json();
+        assert_eq!(doc.get("schema").unwrap().as_str().unwrap(), SCHEMA);
+        assert_eq!(doc.get("windows").unwrap().as_f64().unwrap(), 50.0);
+        assert_eq!(doc.get("series").unwrap().as_arr().unwrap().len(), 50);
+        let csv = ts.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert!(lines[0].starts_with("window,start_ns,kind,name,"), "{}", lines[0]);
+        // one model row + one share row per window, plus the header
+        assert_eq!(lines.len(), 1 + 50 * 2);
+        assert!(lines[1].contains(",model,m0,"));
+        assert!(lines[2].contains(",share,share0,"));
+    }
+
+    #[test]
+    fn drift_and_window_specs_name_the_offender() {
+        assert_eq!(DriftConfig::parse("3/5"), Ok(DriftConfig { k: 3, n: 5 }));
+        assert_eq!(DriftConfig::parse("1/1"), Ok(DriftConfig { k: 1, n: 1 }));
+        for bad in ["", "3", "0/5", "5/3", "a/5", "3/b", "3:5"] {
+            let err = DriftConfig::parse(bad).unwrap_err();
+            assert!(err.contains("--drift"), "{bad:?}: {err}");
+        }
+        assert_eq!(parse_window("5"), Ok(5_000_000));
+        assert_eq!(parse_window("5ms"), Ok(5_000_000));
+        assert_eq!(parse_window("0.5s"), Ok(500_000_000));
+        assert_eq!(parse_window("250us"), Ok(250_000));
+        assert_eq!(parse_window("40ns"), Ok(40));
+        for bad in ["0", "0ms", "-1", "soon", "", "0.0000001ns"] {
+            let err = parse_window(bad).unwrap_err();
+            assert!(err.contains("--window"), "{bad:?}: {err}");
+        }
+    }
+}

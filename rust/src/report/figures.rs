@@ -444,6 +444,52 @@ pub fn serving_table(r: &crate::serve::ServingReport) -> Result<Table> {
     Ok(t)
 }
 
+/// End-of-run SLO drift summary (the `serve` subcommand prints it when
+/// the detector fired): one row per [`DriftEvent`] of the winner's
+/// windowed time series, with trigger/clear times in simulated ms.
+/// Errors when the report carries no time series (no winner).
+///
+/// [`DriftEvent`]: crate::obs::timeseries::DriftEvent
+pub fn drift_table(r: &crate::serve::ServingReport) -> Result<Table> {
+    let ts = r
+        .timeseries
+        .as_ref()
+        .ok_or_else(|| anyhow!("serving report carries no time series (no winner)"))?;
+    let ms = |ns: u64| f3(ns as f64 / 1e6);
+    let mut t = Table::new(
+        &format!(
+            "SLO drift events — window {} ms, trigger {}-of-{}",
+            f3(ts.window_ns as f64 / 1e6),
+            ts.drift.k,
+            ts.drift.n,
+        ),
+        &[
+            "model",
+            "trigger (ms)",
+            "clear (ms)",
+            "breach windows",
+            "worst p99 (ms)",
+            "SLO (ms)",
+            "worst/SLO",
+        ],
+    );
+    for ev in &ts.drift_events {
+        t.row(vec![
+            ts.model_names[ev.model].clone(),
+            ms(ts.trigger_ns(ev)),
+            match ev.clear_window {
+                Some(w) => ms((w as u64 + 1) * ts.window_ns),
+                None => "open".to_string(),
+            },
+            ev.breach_windows.to_string(),
+            ms(ev.worst_p99_ns),
+            ms(ev.slo_ns),
+            f3(ev.worst_p99_ns as f64 / ev.slo_ns as f64),
+        ]);
+    }
+    Ok(t)
+}
+
 /// DAG condensation summary: the supernodes (branch bundles between clean
 /// cuts) the segmenters place boundaries around, with each boundary's
 /// spilled cut-edge traffic. Errors on plain chain workloads.

@@ -58,6 +58,7 @@ use crate::config::SimOptions;
 use crate::cost::bound::batch1_latency_lb_ns;
 use crate::dse::parallel::par_map;
 use crate::model::workload_set::WorkloadSet;
+use crate::obs::timeseries::{DriftConfig, TimeSeries};
 use crate::obs::{Registry, TraceSink, PID_SERVE};
 use crate::scope::multi_model::{
     for_each_hybrid_allocation, share_grid, sub_package, weight_swap_ns, HybridAllocation,
@@ -98,6 +99,16 @@ pub struct ServeOptions {
     pub method: String,
     /// Chiplet-share granularity (0 = auto: `total / 16`, floor 1).
     pub share_quantum: usize,
+    /// Piecewise-constant mix-rate schedule spec (`--rate-schedule`);
+    /// empty = stationary Poisson at `arrival_rate`. Parsed by
+    /// [`trace::RateSchedule::parse`]; ignored when a trace is replayed.
+    pub rate_schedule: String,
+    /// Time-series window width in integer ns (`--window`); 0 = auto
+    /// (the winner's makespan split into
+    /// [`AUTO_WINDOWS`](crate::obs::timeseries::AUTO_WINDOWS)).
+    pub window_ns: u64,
+    /// K-of-N SLO drift trigger (`--drift K/N`).
+    pub drift: DriftConfig,
 }
 
 impl Default for ServeOptions {
@@ -110,6 +121,9 @@ impl Default for ServeOptions {
             seed: 7,
             method: "scope".to_string(),
             share_quantum: 0,
+            rate_schedule: String::new(),
+            window_ns: 0,
+            drift: DriftConfig::default(),
         }
     }
 }
@@ -154,6 +168,15 @@ impl ServeOptions {
                 "--method: unknown method {:?}; options: {}",
                 self.method,
                 METHOD_NAMES.join(" ")
+            ));
+        }
+        if self.drift.k == 0 {
+            return Err("--drift: K must be >= 1, got 0".to_string());
+        }
+        if self.drift.n < self.drift.k {
+            return Err(format!(
+                "--drift: N must be >= K, got {}/{}",
+                self.drift.k, self.drift.n
             ));
         }
         Ok(())
@@ -616,6 +639,9 @@ pub struct ServingReport {
     pub spatial: Option<ServingOutcome>,
     pub tm: Option<ServingOutcome>,
     pub hybrid: Option<ServingOutcome>,
+    /// Windowed time series + drift events of the hybrid winner's logged
+    /// replay (`Some` whenever `hybrid` is).
+    pub timeseries: Option<TimeSeries>,
     pub error: Option<String>,
 }
 
@@ -664,6 +690,7 @@ pub fn serve(
         spatial: None,
         tm: None,
         hybrid: None,
+        timeseries: None,
         error: Some(msg),
     };
     if let Err(e) = sopts.validate(true) {
@@ -814,6 +841,20 @@ pub fn serve(
         })
     };
     let (best_spatial, best_tm, best) = (with_log(best_spatial), with_log(best_tm), with_log(best));
+    // windowed time series + drift detection over the hybrid winner's
+    // logged replay — deterministic because the log is
+    let model_names: Vec<String> = set.models.iter().map(|m| m.net.name.clone()).collect();
+    let timeseries = best.as_ref().map(|w| {
+        TimeSeries::build(
+            &w.sim.log,
+            &model_names,
+            &prepared.slo_ns,
+            w.alloc.groups.len(),
+            w.sim.makespan_ns,
+            sopts.window_ns,
+            sopts.drift,
+        )
+    });
     let report = ServingReport {
         set: set.clone(),
         total_chiplets: mcm.chiplets,
@@ -827,6 +868,7 @@ pub fn serve(
         spatial: best_spatial,
         tm: best_tm,
         hybrid: best,
+        timeseries,
         error: None,
     };
     absorb_serve_metrics(&report);
@@ -861,6 +903,19 @@ fn absorb_serve_metrics(report: &ServingReport) {
             // mean requests served per dispatched batch on the winner
             reg.gauge(&format!("scope_serve_batch_occupancy_{name}"))
                 .set_max(stats.completed as f64 / stats.batches as f64);
+        }
+    }
+    // drift counters register whenever a winner exists (0 included), so
+    // a run's metrics document carries the same keys with or without
+    // drift — byte-stability across repeat runs
+    if let Some(ts) = &report.timeseries {
+        reg.counter("scope_slo_drift_events").add(ts.drift_events.len() as u64);
+        for (m, slo) in ts.slo_ns.iter().enumerate() {
+            if slo.is_some() {
+                let events = ts.drift_events.iter().filter(|e| e.model == m).count();
+                reg.counter(&format!("scope_slo_drift_events_{}", ts.model_names[m]))
+                    .add(events as u64);
+            }
         }
     }
 }
@@ -928,6 +983,36 @@ fn trace_winner(report: &ServingReport, prepared: &Prepared) {
                         ("swapped", if swapped { 1.0 } else { 0.0 }),
                         ("swap_ns", if swapped { prepared.swap_ns[entry.model] as f64 } else { 0.0 }),
                     ],
+                );
+            }
+        }
+    }
+    // named drift instants on the model's arrivals track: the trigger
+    // (end of the K-of-N window) and, when the episode closed, the clear
+    if let Some(ts) = &report.timeseries {
+        for ev in &ts.drift_events {
+            let name = set.models[ev.model].net.name.as_str();
+            sink.instant(
+                PID_SERVE,
+                arrivals_tid(ev.model),
+                format!("{name} slo drift"),
+                "drift",
+                ts.trigger_ns(ev),
+                vec![
+                    ("start_window", ev.start_window as f64),
+                    ("breach_windows", ev.breach_windows as f64),
+                    ("worst_p99_ns", ev.worst_p99_ns as f64),
+                    ("slo_ns", ev.slo_ns as f64),
+                ],
+            );
+            if let Some(clear) = ev.clear_window {
+                sink.instant(
+                    PID_SERVE,
+                    arrivals_tid(ev.model),
+                    format!("{name} slo drift clear"),
+                    "drift",
+                    (clear as u64 + 1) * ts.window_ns,
+                    vec![("clear_window", clear as f64)],
                 );
             }
         }
@@ -1104,6 +1189,49 @@ mod tests {
             ServeOptions { method: "warp".to_string(), ..ServeOptions::default() };
         let err = bad_method.validate(true).unwrap_err();
         assert!(err.contains("--method") && err.contains("scope"), "{err}");
+        let bad_k = ServeOptions {
+            drift: DriftConfig { k: 0, n: 5 },
+            ..ServeOptions::default()
+        };
+        assert!(bad_k.validate(true).unwrap_err().contains("--drift"));
+        let bad_n = ServeOptions {
+            drift: DriftConfig { k: 4, n: 2 },
+            ..ServeOptions::default()
+        };
+        assert!(bad_n.validate(true).unwrap_err().contains("--drift"));
+    }
+
+    #[test]
+    fn serve_report_carries_a_deterministic_timeseries_with_drift() {
+        let mut set = WorkloadSet::parse("scopenet").unwrap();
+        set.apply_slo_spec("0.001").unwrap(); // 1 µs p99: hopeless — every window breaches
+        let mcm = McmConfig::paper_default(8);
+        let sim = SimOptions { samples: 4, ..SimOptions::default() };
+        let sopts = ServeOptions { share_quantum: 4, ..ServeOptions::default() };
+        let stream = RequestStream::poisson(&set, 500.0, 50_000_000, 3);
+        assert!(!stream.is_empty());
+        let r = serve(&set, &mcm, &sim, &sopts, &stream);
+        assert!(r.is_valid(), "{:?}", r.error);
+        let winner = r.hybrid.as_ref().expect("winner");
+        let ts = r.timeseries.as_ref().expect("a winner implies a timeseries");
+        assert!(!ts.windows.is_empty() && ts.windows.len() <= 50);
+        assert_eq!(ts.shares, winner.alloc.groups.len());
+        // the windows partition the whole-run totals exactly
+        let windowed: u64 =
+            ts.windows.iter().map(|w| w.models[0].completions).sum();
+        assert_eq!(windowed, winner.sim.completed);
+        let arrivals: u64 = ts.windows.iter().map(|w| w.models[0].arrivals).sum();
+        assert_eq!(arrivals, r.arrival_counts[0]);
+        // a hopeless SLO burns from the start: the detector must fire
+        assert!(!ts.drift_events.is_empty(), "1 µs SLO must drift");
+        assert_eq!(ts.drift_events[0].slo_ns, 1_000);
+        // repeat run: the series (and its exports) are bit-identical
+        let again = serve(&set, &mcm, &sim, &sopts, &stream);
+        assert_eq!(again.timeseries.as_ref(), Some(ts));
+        assert_eq!(
+            ts.to_json().to_string_compact(),
+            again.timeseries.as_ref().unwrap().to_json().to_string_compact()
+        );
     }
 
     #[test]

@@ -1,11 +1,16 @@
-//! Request streams: seeded Poisson arrivals or a replayable JSON trace.
+//! Request streams: seeded Poisson arrivals (stationary or scheduled)
+//! or a replayable JSON trace.
 //!
 //! A stream is the serving simulator's input — a time-sorted list of
 //! `(model, arrival time)` pairs with integer-nanosecond timestamps.
 //! Synthetic streams draw per-model Poisson processes from the
 //! deterministic in-crate PRNG ([`util::rng`](crate::util::rng)), so the
-//! same `--seed` always produces the identical stream; recorded traffic
-//! replays through the JSON substrate of [`util::json`](crate::util::json):
+//! same `--seed` always produces the identical stream. Non-stationary
+//! traffic comes from a [`RateSchedule`] — a piecewise-constant mix-rate
+//! profile (`--rate-schedule "0s:1000,30s:5000,45s:1000"`, or the
+//! `flash`/`diurnal` presets) driving the same per-model generators
+//! segment by segment; recorded traffic replays through the JSON
+//! substrate of [`util::json`](crate::util::json):
 //!
 //! ```text
 //! { "arrivals": [ { "model": "alexnet", "t_ns": 0 },
@@ -38,11 +43,222 @@ pub const MAX_EXACT_T_NS: f64 = (1u64 << 53) as f64;
 /// generator resolves it.
 pub fn expected_arrivals(set: &WorkloadSet, mix_rate: f64, horizon_ns: u64) -> f64 {
     let secs = horizon_ns as f64 / 1e9;
-    set.models
-        .iter()
-        .map(|m| m.rate.unwrap_or(mix_rate * m.weight).max(0.0))
-        .sum::<f64>()
-        * secs
+    set.models.iter().map(|m| m.rate_at(mix_rate)).sum::<f64>() * secs
+}
+
+/// Expected arrival count of [`RequestStream::scheduled`]: the
+/// [`expected_arrivals`] integral evaluated segment by segment over the
+/// schedule, clipped to the horizon.
+pub fn expected_arrivals_scheduled(
+    set: &WorkloadSet,
+    schedule: &RateSchedule,
+    horizon_ns: u64,
+) -> f64 {
+    let mut total = 0.0;
+    for (k, &(start, mix)) in schedule.points.iter().enumerate() {
+        let end = schedule.points.get(k + 1).map(|p| p.0).unwrap_or(u64::MAX).min(horizon_ns);
+        if end <= start {
+            continue;
+        }
+        let secs = (end - start) as f64 / 1e9;
+        total += set.models.iter().map(|m| m.rate_at(mix)).sum::<f64>() * secs;
+    }
+    total
+}
+
+/// A piecewise-constant mix-rate profile: `(start_ns, mix rate)`
+/// breakpoints, strictly increasing in time with the first at 0 ns. Each
+/// segment holds its mix rate until the next breakpoint (the last runs to
+/// the horizon); per-model rates resolve inside each segment exactly as
+/// the stationary stream resolves them
+/// ([`ModelSpec::rate_at`](crate::model::workload_set::ModelSpec::rate_at)
+/// — so an absolute `--rates` override stays constant across segments).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RateSchedule {
+    pub points: Vec<(u64, f64)>,
+}
+
+impl RateSchedule {
+    /// The degenerate single-segment schedule: `"0s:rate"`. Drives
+    /// [`RequestStream::scheduled`] to a stream bit-identical to
+    /// [`RequestStream::poisson`] at the same rate (unit-tested).
+    pub fn constant(rate: f64) -> RateSchedule {
+        RateSchedule { points: vec![(0, rate)] }
+    }
+
+    /// Parse a `--rate-schedule` spec: either a preset (`flash`,
+    /// `diurnal` — both scaled from `base_rate` over `horizon_ns`) or the
+    /// explicit grammar `offset:rate[,offset:rate...]` with offsets in
+    /// seconds or milliseconds (`0s:1000,30s:5000,45s:1000`). Errors name
+    /// the offending token: malformed pairs, offsets without an `s`/`ms`
+    /// unit, non-positive rates, a first breakpoint not at `0s`,
+    /// unsorted or duplicate breakpoints, and breakpoints at or beyond
+    /// the horizon are all rejected.
+    pub fn parse(spec: &str, base_rate: f64, horizon_ns: u64) -> Result<RateSchedule> {
+        match spec.trim() {
+            "" => Err(anyhow!("--rate-schedule: empty spec")),
+            "flash" => RateSchedule::preset(
+                "flash",
+                base_rate,
+                horizon_ns,
+                // baseline, then an 8× crowd over the 40–55% slice
+                &[(0.0, 1.0), (0.40, 8.0), (0.55, 1.0)],
+            ),
+            "diurnal" => RateSchedule::preset(
+                "diurnal",
+                base_rate,
+                horizon_ns,
+                // a stepped day: trough, two shoulders, peak, and back
+                &[
+                    (0.0, 0.5),
+                    (0.125, 0.75),
+                    (0.25, 1.0),
+                    (0.375, 1.5),
+                    (0.5, 2.0),
+                    (0.625, 1.5),
+                    (0.75, 1.0),
+                    (0.875, 0.75),
+                ],
+            ),
+            explicit => RateSchedule::parse_points(explicit, horizon_ns),
+        }
+    }
+
+    /// Scale a preset profile (`(horizon fraction, rate multiplier)`)
+    /// into absolute breakpoints.
+    fn preset(
+        name: &str,
+        base_rate: f64,
+        horizon_ns: u64,
+        profile: &[(f64, f64)],
+    ) -> Result<RateSchedule> {
+        if !(base_rate.is_finite() && base_rate > 0.0) {
+            return Err(anyhow!(
+                "--rate-schedule {name}: preset scales --arrival-rate, which must be \
+                 positive, got {base_rate}"
+            ));
+        }
+        let mut points = Vec::with_capacity(profile.len());
+        for &(frac, mult) in profile {
+            points.push(((horizon_ns as f64 * frac).round() as u64, base_rate * mult));
+        }
+        let distinct = points.windows(2).all(|w| w[0].0 < w[1].0);
+        if !distinct {
+            return Err(anyhow!(
+                "--rate-schedule {name}: --horizon too short for the preset's \
+                 {} breakpoints",
+                points.len()
+            ));
+        }
+        Ok(RateSchedule { points })
+    }
+
+    /// Parse the explicit `offset:rate,...` grammar.
+    fn parse_points(spec: &str, horizon_ns: u64) -> Result<RateSchedule> {
+        let mut points: Vec<(u64, f64)> = Vec::new();
+        let mut tokens: Vec<&str> = Vec::new();
+        for token in spec.split(',') {
+            let token = token.trim();
+            if token.is_empty() {
+                continue;
+            }
+            let (off_s, rate_s) = token.split_once(':').ok_or_else(|| {
+                anyhow!(
+                    "--rate-schedule {token:?}: expected offset:rate (e.g. 30s:5000) \
+                     or a preset (flash, diurnal)"
+                )
+            })?;
+            let offset_ns = parse_offset_ns(off_s.trim())
+                .map_err(|e| anyhow!("--rate-schedule {token:?}: {e}"))?;
+            let rate: f64 = rate_s.trim().parse().map_err(|_| {
+                anyhow!("--rate-schedule {token:?}: rate expects a number, got {rate_s:?}")
+            })?;
+            if !(rate.is_finite() && rate > 0.0) {
+                return Err(anyhow!(
+                    "--rate-schedule {token:?}: rate must be positive, got {rate}"
+                ));
+            }
+            if let Some(&(prev_ns, _)) = points.last() {
+                if offset_ns <= prev_ns {
+                    let prev_tok = tokens.last().copied().unwrap_or("?");
+                    return Err(anyhow!(
+                        "--rate-schedule: breakpoints must be strictly increasing, \
+                         but {token:?} does not come after {prev_tok:?}"
+                    ));
+                }
+            } else if offset_ns != 0 {
+                return Err(anyhow!(
+                    "--rate-schedule {token:?}: the first breakpoint must start at 0s"
+                ));
+            }
+            if horizon_ns > 0 && offset_ns >= horizon_ns {
+                return Err(anyhow!(
+                    "--rate-schedule {token:?}: breakpoint at or beyond the \
+                     {horizon_ns} ns horizon would never take effect"
+                ));
+            }
+            points.push((offset_ns, rate));
+            tokens.push(token);
+        }
+        if points.is_empty() {
+            return Err(anyhow!("--rate-schedule: empty spec"));
+        }
+        Ok(RateSchedule { points })
+    }
+
+    /// Display form: `0s:1000 → 30s:5000 → 45s:1000` (offsets printed in
+    /// the coarsest unit that stays exact).
+    pub fn label(&self) -> String {
+        self.points
+            .iter()
+            .map(|&(ns, rate)| format!("{}:{rate}", fmt_offset(ns)))
+            .collect::<Vec<_>>()
+            .join(" → ")
+    }
+
+    /// Peak mix rate over all segments.
+    pub fn peak_rate(&self) -> f64 {
+        self.points.iter().map(|p| p.1).fold(0.0, f64::max)
+    }
+}
+
+/// Parse a schedule offset: a non-negative number with an `s` or `ms`
+/// unit (`0s`, `30s`, `500ms`, `0.25s`) to integer nanoseconds.
+fn parse_offset_ns(tok: &str) -> Result<u64> {
+    let (digits, scale) = if let Some(d) = tok.strip_suffix("ms") {
+        (d, 1e6)
+    } else if let Some(d) = tok.strip_suffix('s') {
+        (d, 1e9)
+    } else {
+        return Err(anyhow!("offset needs an s or ms unit, got {tok:?}"));
+    };
+    let v: f64 = digits
+        .trim()
+        .parse()
+        .map_err(|_| anyhow!("offset expects a number with unit, got {tok:?}"))?;
+    if !(v.is_finite() && v >= 0.0 && v * scale < MAX_EXACT_T_NS) {
+        return Err(anyhow!("offset out of range: {tok:?}"));
+    }
+    Ok((v * scale).round() as u64)
+}
+
+/// Render integer nanoseconds in the coarsest exact unit (`s`, `ms`, or
+/// `ns`) for schedule labels.
+fn fmt_offset(ns: u64) -> String {
+    if ns % 1_000_000_000 == 0 {
+        format!("{}s", ns / 1_000_000_000)
+    } else if ns % 1_000_000 == 0 {
+        format!("{}ms", ns / 1_000_000)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+/// Per-model PRNG seed derivation shared by the stationary and scheduled
+/// generators: each model draws from its own seed-derived stream, so
+/// adding a model never perturbs the others' arrival times.
+fn model_seed(seed: u64, model: usize) -> u64 {
+    seed.wrapping_add((model as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
 }
 
 /// One request: the serving-set model index and its arrival time.
@@ -68,12 +284,11 @@ impl RequestStream {
     pub fn poisson(set: &WorkloadSet, mix_rate: f64, horizon_ns: u64, seed: u64) -> RequestStream {
         let mut arrivals = Vec::new();
         for (i, spec) in set.models.iter().enumerate() {
-            let rate = spec.rate.unwrap_or(mix_rate * spec.weight);
+            let rate = spec.rate_at(mix_rate);
             if !(rate.is_finite() && rate > 0.0) {
                 continue;
             }
-            let mut rng =
-                Rng::new(seed.wrapping_add((i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)));
+            let mut rng = Rng::new(model_seed(seed, i));
             let mut t = 0u64;
             loop {
                 // exponential inter-arrival; 1 − u ∈ (0, 1] keeps ln finite
@@ -88,6 +303,57 @@ impl RequestStream {
         }
         // stable merge: equal-time arrivals keep model order, per-model
         // streams are already time-sorted
+        arrivals.sort_by_key(|r| (r.t_ns, r.model));
+        RequestStream { arrivals }
+    }
+
+    /// Seeded non-homogeneous Poisson arrivals over a piecewise-constant
+    /// [`RateSchedule`]. Exact by memorylessness: within each segment the
+    /// generator draws the same exponential gaps as
+    /// [`RequestStream::poisson`] at that segment's rate, and on crossing
+    /// a breakpoint the clock restarts at the boundary at the new rate —
+    /// so the single-segment schedule `0s:R` reproduces the stationary
+    /// stream bit for bit (unit-tested). Per-model PRNG derivation and
+    /// the stable `(t_ns, model)` sort match the stationary path.
+    pub fn scheduled(
+        set: &WorkloadSet,
+        schedule: &RateSchedule,
+        horizon_ns: u64,
+        seed: u64,
+    ) -> RequestStream {
+        let mut arrivals = Vec::new();
+        for (i, spec) in set.models.iter().enumerate() {
+            let mut rng = Rng::new(model_seed(seed, i));
+            let mut t = 0u64;
+            'segments: for (k, &(seg_start, mix)) in schedule.points.iter().enumerate() {
+                let seg_end = schedule.points.get(k + 1).map(|p| p.0).unwrap_or(u64::MAX);
+                let rate = spec.rate_at(mix);
+                if !(rate.is_finite() && rate > 0.0) {
+                    t = seg_end;
+                    continue;
+                }
+                t = t.max(seg_start);
+                loop {
+                    let gap_secs = -(1.0 - rng.f64()).ln() / rate;
+                    let gap_ns = (gap_secs * 1e9).min(u64::MAX as f64 / 2.0) as u64;
+                    let next = t.saturating_add(gap_ns.max(1));
+                    if next >= seg_end {
+                        // crossed the breakpoint: restart the exponential
+                        // clock there at the next segment's rate
+                        t = seg_end;
+                        break;
+                    }
+                    if next > horizon_ns {
+                        break 'segments;
+                    }
+                    t = next;
+                    arrivals.push(Request { model: i, t_ns: next });
+                }
+                if t > horizon_ns {
+                    break;
+                }
+            }
+        }
         arrivals.sort_by_key(|r| (r.t_ns, r.model));
         RequestStream { arrivals }
     }
@@ -246,6 +512,105 @@ mod tests {
         let s = RequestStream::poisson(&set, 100.0, 500_000_000, 9);
         let expected = expected_arrivals(&set, 100.0, 500_000_000);
         assert!((s.len() as f64 - expected).abs() < expected * 0.5 + 10.0);
+    }
+
+    #[test]
+    fn single_segment_schedule_is_bit_identical_to_stationary_poisson() {
+        let set = two_model_set();
+        let sched = RateSchedule::parse("0s:1000", 0.0, 50_000_000).unwrap();
+        assert_eq!(sched, RateSchedule::constant(1000.0));
+        let scheduled = RequestStream::scheduled(&set, &sched, 50_000_000, 7);
+        let stationary = RequestStream::poisson(&set, 1000.0, 50_000_000, 7);
+        assert!(!stationary.is_empty());
+        assert_eq!(scheduled, stationary, "0s:R must reproduce the stationary stream");
+        // and the expected-arrival integrals agree
+        assert_eq!(
+            expected_arrivals_scheduled(&set, &sched, 50_000_000),
+            expected_arrivals(&set, 1000.0, 50_000_000)
+        );
+    }
+
+    #[test]
+    fn scheduled_stream_is_deterministic_sorted_and_rate_follows_segments() {
+        let set = two_model_set();
+        let h = 300_000_000u64; // 0.3 s
+        let sched = RateSchedule::parse("0s:500,100ms:4000,200ms:500", 0.0, h).unwrap();
+        let a = RequestStream::scheduled(&set, &sched, h, 11);
+        let b = RequestStream::scheduled(&set, &sched, h, 11);
+        assert_eq!(a, b, "same seed ⇒ identical stream");
+        assert!(a.arrivals.windows(2).all(|w| w[0].t_ns <= w[1].t_ns), "time-sorted");
+        assert!(a.arrivals.iter().all(|r| r.t_ns <= h));
+        assert_ne!(a, RequestStream::scheduled(&set, &sched, h, 12));
+        // the middle segment runs 8× hotter: count arrivals per segment
+        let seg = |lo: u64, hi: u64| a.arrivals.iter().filter(|r| r.t_ns > lo && r.t_ns <= hi).count();
+        let (head, spike, tail) = (seg(0, 100_000_000), seg(100_000_000, 200_000_000), seg(200_000_000, h));
+        assert!(spike > 3 * head, "spike segment must out-arrive the head: {spike} vs {head}");
+        assert!(spike > 3 * tail, "spike segment must out-arrive the tail: {spike} vs {tail}");
+        // the expected-count integral tracks the generator
+        let expected = expected_arrivals_scheduled(&set, &sched, h);
+        assert!((a.len() as f64 - expected).abs() < expected * 0.5 + 10.0, "{} vs {expected}", a.len());
+        // an absolute --rates override holds across segments
+        let mut pinned = two_model_set();
+        pinned.models[0].rate = Some(100.0);
+        pinned.models[1].rate = Some(0.0);
+        let p = RequestStream::scheduled(&pinned, &sched, h, 11);
+        assert_eq!(p.counts(2)[1], 0, "zero override silences the model in every segment");
+        let pc = p.counts(2)[0] as f64;
+        assert!((pc - 30.0).abs() < 25.0, "pinned 100/s over 0.3 s ≈ 30, got {pc}");
+    }
+
+    #[test]
+    fn schedule_presets_scale_from_base_rate() {
+        let h = 1_000_000_000u64;
+        let flash = RateSchedule::parse("flash", 200.0, h).unwrap();
+        assert_eq!(flash.points.len(), 3);
+        assert_eq!(flash.points[0], (0, 200.0));
+        assert_eq!(flash.points[1], (400_000_000, 1600.0), "8× spike at 40%");
+        assert_eq!(flash.points[2], (550_000_000, 200.0));
+        assert_eq!(flash.peak_rate(), 1600.0);
+        let diurnal = RateSchedule::parse("diurnal", 100.0, h).unwrap();
+        assert_eq!(diurnal.points.len(), 8);
+        assert_eq!(diurnal.points[0], (0, 50.0));
+        assert_eq!(diurnal.points[4], (500_000_000, 200.0), "peak at midday");
+        assert!(diurnal.points.windows(2).all(|w| w[0].0 < w[1].0));
+        // presets need a positive base rate and enough horizon to spread
+        let err = RateSchedule::parse("flash", 0.0, h).unwrap_err().to_string();
+        assert!(err.contains("flash") && err.contains("arrival-rate"), "{err}");
+        let short = RateSchedule::parse("diurnal", 100.0, 4).unwrap_err().to_string();
+        assert!(short.contains("diurnal") && short.contains("horizon"), "{short}");
+        assert_eq!(flash.label(), "0s:200 → 400ms:1600 → 550ms:200");
+    }
+
+    #[test]
+    fn schedule_grammar_names_the_offending_token() {
+        let h = 100_000_000_000u64; // 100 s
+        let ok = RateSchedule::parse("0s:1000, 30s:5000, 45s:1000", 0.0, h).unwrap();
+        assert_eq!(
+            ok.points,
+            vec![(0, 1000.0), (30_000_000_000, 5000.0), (45_000_000_000, 1000.0)]
+        );
+        assert_eq!(ok.label(), "0s:1000 → 30s:5000 → 45s:1000");
+        // each rejection names the offending token
+        for (spec, offender) in [
+            ("0s:1000, 45s:5000, 30s:2000", "30s:2000"),   // unsorted
+            ("0s:1000, 30s:5000, 30s:2000", "30s:2000"),   // duplicate
+            ("0s:1000, 30s:0", "30s:0"),                   // zero rate
+            ("0s:1000, 30s:-5", "30s:-5"),                 // negative rate
+            ("0s:1000, 30s:fast", "30s:fast"),             // bad rate
+            ("0s:1000, 30:5000", "30:5000"),               // missing unit
+            ("0s:1000, soon:5000", "soon:5000"),           // bad offset
+            ("5s:1000, 30s:5000", "5s:1000"),              // must start at 0s
+            ("0s", "0s"),                                  // not offset:rate
+            ("0s:1000, 200s:5000", "200s:5000"),           // beyond horizon
+        ] {
+            let err = RateSchedule::parse(spec, 0.0, h).unwrap_err().to_string();
+            assert!(err.contains(offender), "spec {spec:?} must name {offender:?}: {err}");
+        }
+        assert!(RateSchedule::parse("", 0.0, h).is_err());
+        assert!(RateSchedule::parse(" , ", 0.0, h).is_err());
+        // ms offsets and fractional seconds parse exactly
+        let fine = RateSchedule::parse("0ms:10, 500ms:20, 2.5s:30", 0.0, h).unwrap();
+        assert_eq!(fine.points, vec![(0, 10.0), (500_000_000, 20.0), (2_500_000_000, 30.0)]);
     }
 
     #[test]

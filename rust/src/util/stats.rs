@@ -60,6 +60,48 @@ pub fn percentile_nearest_rank(sorted: &[f64], q: f64) -> f64 {
     sorted[rank.clamp(1, sorted.len()) - 1]
 }
 
+/// Reusable sorted scratch buffer for windowed percentiles: load one
+/// window's (unsorted) samples, then query any number of quantiles
+/// against the same sort. The time-series sink (`obs::timeseries`)
+/// computes p50/p95/p99 per window per model; reloading one scratch
+/// buffer per window avoids an allocation + sort per quantile while
+/// keeping every answer bit-identical to calling
+/// [`percentile_nearest_rank_u64`] on a freshly sorted copy of the
+/// window slice — the equivalence the unit tests pin.
+#[derive(Clone, Debug, Default)]
+pub struct PercentileScratch {
+    sorted: Vec<u64>,
+}
+
+impl PercentileScratch {
+    pub fn new() -> Self {
+        PercentileScratch::default()
+    }
+
+    /// Replace the scratch contents with `samples`, sorted ascending.
+    /// The previous window's capacity is reused.
+    pub fn load(&mut self, samples: &[u64]) {
+        self.sorted.clear();
+        self.sorted.extend_from_slice(samples);
+        self.sorted.sort_unstable();
+    }
+
+    /// Number of samples currently loaded.
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    /// Nearest-rank percentile of the loaded window; 0 when empty —
+    /// exactly [`percentile_nearest_rank_u64`] on the sorted window.
+    pub fn percentile(&self, q: f64) -> u64 {
+        percentile_nearest_rank_u64(&self.sorted, q)
+    }
+}
+
 /// Fixed-width histogram over `[lo, hi)` with `bins` buckets; values outside
 /// the range are clamped into the edge buckets (Fig. 8 processing-time
 /// distribution plot).
@@ -158,6 +200,41 @@ mod tests {
         assert_eq!(percentile_nearest_rank(&f, 0.99), 99.0);
         assert_eq!(percentile_nearest_rank(&f, 0.50), 50.0);
         assert_eq!(percentile_nearest_rank(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn percentile_scratch_matches_batch_helper_on_every_window_slice() {
+        // a deliberately unsorted, duplicate-heavy latency-like stream
+        let stream: Vec<u64> =
+            (0..257u64).map(|i| i.wrapping_mul(0x9E37_79B9).rotate_left(7) % 5_000).collect();
+        let mut scratch = PercentileScratch::new();
+        // every window size × every window offset: the scratch answer must
+        // be bit-identical to sorting the slice and calling the batch helper
+        for window in [1usize, 2, 3, 7, 16, 64, 257] {
+            for start in (0..stream.len()).step_by(window) {
+                let slice = &stream[start..(start + window).min(stream.len())];
+                scratch.load(slice);
+                let mut sorted = slice.to_vec();
+                sorted.sort_unstable();
+                for q in [0.5, 0.95, 0.99, 1.0] {
+                    assert_eq!(
+                        scratch.percentile(q),
+                        percentile_nearest_rank_u64(&sorted, q),
+                        "window {window} start {start} q {q}"
+                    );
+                }
+            }
+        }
+        // empty window: 0, like the batch helper
+        scratch.load(&[]);
+        assert!(scratch.is_empty());
+        assert_eq!(scratch.len(), 0);
+        assert_eq!(scratch.percentile(0.99), 0);
+        // reloading reuses the buffer and fully replaces the contents
+        scratch.load(&[30, 10, 20]);
+        assert_eq!(scratch.len(), 3);
+        assert_eq!(scratch.percentile(0.5), 20);
+        assert_eq!(scratch.percentile(1.0), 30);
     }
 
     #[test]

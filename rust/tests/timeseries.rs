@@ -1,0 +1,282 @@
+//! Time-series acceptance tests: `--timeseries-out` writes byte-identical
+//! `scope-timeseries-v1` JSON + CSV twins at every `--threads` setting and
+//! across repeat runs while leaving the rest of stdout untouched, a seeded
+//! flash crowd produces a windowed SLO drift event even though the
+//! whole-run p99 stays inside the declared bound, and every malformed
+//! time-series flag is rejected naming the offender.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use scope::util::json::Json;
+
+fn run_cli(args: &[&str]) -> String {
+    let out = Command::new(env!("CARGO_BIN_EXE_scope"))
+        .args(args)
+        .output()
+        .expect("scope binary runs");
+    assert!(
+        out.status.success(),
+        "scope {:?} failed: {}",
+        args,
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8(out.stdout).expect("utf8 stdout")
+}
+
+/// Run the CLI expecting a failure; returns stderr for error-text checks.
+fn run_cli_err(args: &[&str]) -> String {
+    let out = Command::new(env!("CARGO_BIN_EXE_scope"))
+        .args(args)
+        .output()
+        .expect("scope binary runs");
+    assert!(!out.status.success(), "scope {args:?} unexpectedly succeeded");
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+/// Unique temp path per (process, label) so parallel tests never collide.
+fn tmp(label: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("scope_ts_{}_{label}", std::process::id()))
+}
+
+/// Stdout with the `timeseries: wrote ...` lines removed (their paths
+/// differ per invocation); everything else must be unaffected.
+fn strip_ts_lines(out: &str) -> String {
+    out.lines()
+        .filter(|l| !l.starts_with("timeseries: wrote"))
+        .map(|l| format!("{l}\n"))
+        .collect()
+}
+
+/// The schedule-driven serving run the determinism suite replays: a flash
+/// crowd on the standard mix with a declared (generous) SLO, so the drift
+/// summary line and the windowed series are both on the printed surface.
+const SERVE_ARGS: &[&str] = &[
+    "serve",
+    "--models",
+    "serving_mix",
+    "--seed",
+    "7",
+    "--chiplets",
+    "16",
+    "--quantum",
+    "8",
+    "--samples",
+    "4",
+    "--batch",
+    "2",
+    "--arrival-rate",
+    "40",
+    "--horizon",
+    "0.05",
+    "--rate-schedule",
+    "flash",
+    "--slo",
+    "5000",
+    "--window",
+    "2ms",
+];
+
+#[test]
+fn timeseries_artifacts_are_bit_identical_and_leave_results_unchanged() {
+    let base = run_cli(SERVE_ARGS);
+    assert!(base.contains("serving simulation"), "{base}");
+    assert!(base.contains("scheduled poisson"), "{base}");
+    assert!(base.contains("slo drift:"), "{base}");
+
+    let mut jsons: Vec<String> = Vec::new();
+    let mut csvs: Vec<String> = Vec::new();
+    // threads 1/2/8 plus a plain repeat of threads 1: both exported twins
+    // must match byte for byte, and the report must not notice the export
+    for (i, threads) in ["1", "2", "8", "1"].iter().enumerate() {
+        let j_path = tmp(&format!("serve_{i}.json"));
+        let j_s = j_path.display().to_string();
+        let c_s = j_s.strip_suffix(".json").unwrap().to_string() + ".csv";
+        let mut args = SERVE_ARGS.to_vec();
+        args.extend(["--threads", threads, "--timeseries-out", &j_s]);
+        let out = run_cli(&args);
+        assert!(out.contains("timeseries: wrote"), "{out}");
+        assert_eq!(
+            strip_ts_lines(&out),
+            base,
+            "--threads {threads} with --timeseries-out drifted from the plain run"
+        );
+        jsons.push(std::fs::read_to_string(&j_path).expect("json twin"));
+        csvs.push(std::fs::read_to_string(&c_s).expect("csv twin"));
+        let _ = std::fs::remove_file(&j_path);
+        let _ = std::fs::remove_file(&c_s);
+    }
+    for i in 1..jsons.len() {
+        assert_eq!(jsons[0], jsons[i], "json artifact {i} differs from the first");
+        assert_eq!(csvs[0], csvs[i], "csv artifact {i} differs from the first");
+    }
+
+    // versioned schema: window metadata, per-model series, drift trigger
+    let doc = Json::parse(&jsons[0]).expect("timeseries parses as JSON");
+    assert_eq!(doc.get("schema").unwrap().as_str().unwrap(), "scope-timeseries-v1");
+    let windows = doc.get("windows").unwrap().as_f64().unwrap() as usize;
+    let series = doc.get("series").unwrap().as_arr().expect("series array");
+    assert!(windows > 0, "no windows in the export");
+    assert_eq!(series.len(), windows);
+    assert_eq!(doc.get("window_ns").unwrap().as_f64().unwrap(), 2e6, "--window 2ms");
+    let models = doc.get("models").unwrap().as_arr().expect("models array");
+    let shares = doc.get("shares").unwrap().as_f64().unwrap() as usize;
+    assert!(!models.is_empty() && shares > 0);
+    assert_eq!(doc.get("drift_trigger").unwrap().get("k").unwrap().as_f64().unwrap(), 3.0);
+    assert_eq!(doc.get("drift_trigger").unwrap().get("n").unwrap().as_f64().unwrap(), 5.0);
+    for win in series {
+        assert_eq!(win.get("models").unwrap().as_arr().unwrap().len(), models.len());
+        assert_eq!(win.get("share_busy_ns").unwrap().as_arr().unwrap().len(), shares);
+    }
+
+    // the CSV twin is the long format of the same data: a header plus one
+    // model row and one share row per (window, name)
+    let lines: Vec<&str> = csvs[0].lines().collect();
+    assert!(
+        lines[0].starts_with("window,start_ns,kind,name,arrivals,"),
+        "unexpected csv header {:?}",
+        lines[0]
+    );
+    assert_eq!(lines.len(), 1 + windows * (models.len() + shares));
+    assert!(lines[1].contains(",model,"), "{:?}", lines[1]);
+}
+
+/// A flash crowd on a single model: every arrival is drained, so the run
+/// is self-calibrating — the first (SLO-less) run reports the worst
+/// windowed p99, and a second identical run declares an SLO 1 ns under
+/// it. The whole-run p99 (nearest-rank, so strictly below the maximum
+/// with enough samples) meets that bound while the spike's window does
+/// not: the windowed detector fires where the whole-run aggregate stays
+/// quiet.
+const FLASH_ARGS: &[&str] = &[
+    "serve",
+    "--models",
+    "scopenet",
+    "--chiplets",
+    "8",
+    "--quantum",
+    "4",
+    "--samples",
+    "4",
+    "--batch",
+    "4",
+    "--seed",
+    "3",
+    "--arrival-rate",
+    "2000",
+    "--horizon",
+    "0.05",
+    "--rate-schedule",
+    "flash",
+    "--window",
+    "1ms",
+];
+
+fn window_p99s(doc: &Json) -> Vec<f64> {
+    doc.get("series")
+        .unwrap()
+        .as_arr()
+        .expect("series array")
+        .iter()
+        .map(|w| w.get("models").unwrap().as_arr().unwrap()[0].get("p99_ns").unwrap())
+        .map(|p| p.as_f64().unwrap())
+        .collect()
+}
+
+#[test]
+fn flash_crowd_drifts_in_a_window_while_the_whole_run_meets_the_slo() {
+    // calibration run: no SLO declared, read the windowed p99 profile
+    let cal_path = tmp("flash_cal.json");
+    let cal_s = cal_path.display().to_string();
+    let mut args = FLASH_ARGS.to_vec();
+    args.extend(["--timeseries-out", &cal_s]);
+    run_cli(&args);
+    let cal = Json::parse(&std::fs::read_to_string(&cal_path).expect("calibration json"))
+        .expect("calibration parse");
+    let _ = std::fs::remove_file(&cal_path);
+    let _ = std::fs::remove_file(cal_s.strip_suffix(".json").unwrap().to_string() + ".csv");
+    let completions: f64 = cal
+        .get("series")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|w| {
+            w.get("models").unwrap().as_arr().unwrap()[0]
+                .get("completions")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        })
+        .sum();
+    assert!(completions >= 100.0, "flash run too small to calibrate ({completions} completions)");
+    let cal_p99s = window_p99s(&cal);
+    let worst = cal_p99s.iter().cloned().fold(0.0, f64::max);
+    assert!(worst >= 2.0, "degenerate windowed p99 {worst}");
+
+    // drifting run: same seed and schedule, SLO 1 ns under the worst
+    // window p99 — with one-window K-of-N sensitivity the spike's window
+    // must trigger, yet the whole-run p99 must still meet the bound
+    let slo_ms = format!("{}", (worst - 1.0) / 1e6);
+    let ts_path = tmp("flash_slo.json");
+    let ts_s = ts_path.display().to_string();
+    let mut args = FLASH_ARGS.to_vec();
+    args.extend(["--slo", &slo_ms, "--drift", "1/1", "--timeseries-out", &ts_s]);
+    let out = run_cli(&args);
+    assert!(out.contains("slo drift:"), "{out}");
+    assert!(!out.contains("slo drift: 0 event"), "no drift detected:\n{out}");
+    assert!(out.contains("SLO drift events"), "drift table missing:\n{out}");
+    let hybrid = out
+        .lines()
+        .find(|l| l.trim_start().starts_with("hybrid ->"))
+        .unwrap_or_else(|| panic!("no hybrid verdict line:\n{out}"));
+    assert!(
+        hybrid.contains("meets every declared SLO"),
+        "whole-run p99 broke the calibrated SLO: {hybrid}"
+    );
+
+    let ts = Json::parse(&std::fs::read_to_string(&ts_path).expect("drift json"))
+        .expect("drift parse");
+    let _ = std::fs::remove_file(&ts_path);
+    let _ = std::fs::remove_file(ts_s.strip_suffix(".json").unwrap().to_string() + ".csv");
+    // the declared SLO changes nothing about the replay: the windowed
+    // p99 profile is identical to the calibration run's
+    assert_eq!(window_p99s(&ts), cal_p99s, "series drifted between calibration and SLO runs");
+    let events = ts.get("drift_events").unwrap().as_arr().expect("drift_events array");
+    assert!(!events.is_empty(), "no drift events in the export");
+    for e in events {
+        assert_eq!(e.get("slo_ns").unwrap().as_f64().unwrap(), worst - 1.0);
+        assert!(e.get("worst_p99_ns").unwrap().as_f64().unwrap() > worst - 1.0);
+    }
+    let worst_event = events
+        .iter()
+        .map(|e| e.get("worst_p99_ns").unwrap().as_f64().unwrap())
+        .fold(0.0, f64::max);
+    assert_eq!(worst_event, worst, "the spike's window must carry the worst p99");
+}
+
+#[test]
+fn malformed_timeseries_flags_name_the_offender() {
+    let base = ["serve", "--models", "scopenet", "--chiplets", "8", "--samples", "4"];
+    let cases: &[(&[&str], &[&str])] = &[
+        (&["--rate-schedule", "30s:5000"], &["--rate-schedule", "30s:5000"]),
+        (&["--rate-schedule", "0s:100,10ms:abc"], &["--rate-schedule", "10ms:abc"]),
+        (&["--window", "0"], &["--window"]),
+        (&["--window", "soon"], &["--window"]),
+        (&["--drift", "5/3"], &["--drift", "N must be >= K"]),
+        (&["--drift", "0/5"], &["--drift", "K must be >= 1"]),
+        (&["--timeseries-out", "ts.parquet"], &["--timeseries-out", "twin"]),
+        (
+            &["--trace", "never_read.json", "--rate-schedule", "flash"],
+            &["--rate-schedule has no effect with --trace"],
+        ),
+    ];
+    for (extra, needles) in cases {
+        let mut args = base.to_vec();
+        args.extend_from_slice(extra);
+        let err = run_cli_err(&args);
+        for needle in *needles {
+            assert!(err.contains(needle), "{extra:?}: {needle:?} not in {err:?}");
+        }
+    }
+}
